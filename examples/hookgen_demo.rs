@@ -1,0 +1,66 @@
+//! COOK toolchain demo (Figure 4 + Table II): generate hook libraries for
+//! every strategy, show what got hooked vs trampolined vs blocked, emit
+//! the source tree to disk, and measure the Table II LoC breakdown.
+//!
+//! Run with: `cargo run --release --example hookgen_demo`
+
+use cook::config::StrategyKind;
+use cook::cudart::SymbolTable;
+use cook::hooks::{
+    count_c, generate_standard, loc_report, standard_conditions, HookClass,
+};
+
+fn main() -> anyhow::Result<()> {
+    let table = SymbolTable::cuda_runtime_11_4();
+    println!(
+        "hooked library: {} — {} exported symbols ({} without findable declarations)\n",
+        table.library,
+        table.len(),
+        table.symbols.iter().filter(|s| !s.has_declaration).count()
+    );
+
+    for strategy in [StrategyKind::Callback, StrategyKind::Synced, StrategyKind::Worker] {
+        let conditions = standard_conditions(strategy);
+        let lib = generate_standard(strategy);
+        let mut by_class = std::collections::BTreeMap::new();
+        for class in lib.bindings.values() {
+            *by_class.entry(format!("{class:?}")).or_insert(0usize) += 1;
+        }
+        println!("== strategy {strategy} ({} condition rules) ==", conditions.rules.len());
+        println!("   bindings: {by_class:?}");
+        println!(
+            "   intercepts {} methods (paper: <70); e.g. {:?}",
+            lib.hooked_symbols().len(),
+            &lib.hooked_symbols()[..4.min(lib.hooked_symbols().len())]
+        );
+        let r = loc_report(strategy);
+        println!(
+            "   LoC: configuration={} templates={} generated={}",
+            r.configuration, r.templates, r.generated
+        );
+        for f in &lib.files {
+            println!(
+                "     {:<22} {:>6} lines ({} code)",
+                f.name,
+                f.contents.lines().count(),
+                count_c(&f.contents).code
+            );
+        }
+        let dir = std::env::temp_dir().join(format!("cook_hooks_{strategy}"));
+        lib.write_to(&dir)?;
+        println!("   source tree written to {dir:?}\n");
+    }
+
+    // The sample hook the paper shows (Alg. 4): synced cudaLaunchKernel.
+    let synced = generate_standard(StrategyKind::Synced);
+    let hooks_c = &synced.files.iter().find(|f| f.name == "cook_hooks.c").unwrap().contents;
+    let start = hooks_c.find("/* synced hook: cudaLaunchKernel ").unwrap();
+    let end = hooks_c[start..].find("\n}\n").unwrap() + start + 3;
+    println!("generated synced hook for cudaLaunchKernel:\n{}", &hooks_c[start..end]);
+
+    // Error containment: unmanaged GPU routines are blocked.
+    assert_eq!(synced.bindings["cudaGraphAddKernelNode"], HookClass::Error);
+    println!("\nunmanaged routines (e.g. cudaGraphAddKernelNode) raise cookErrorUnhookedSymbol");
+    println!("hookgen_demo OK");
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! cuda_mmult interference study (the workload of Figures 9 and 11).
+//!
+//! Runs the NVIDIA-sample-style matmul benchmark in isolation and in
+//! parallel under every strategy, prints the chronogram totals, isolation
+//! verdicts, and NET summaries — a compact reproduction of the paper's
+//! §VII-A/§VII-B analysis on one screen.
+//!
+//! Run with: `cargo run --release --example mmult_interference`
+
+use cook::config::StrategyKind;
+use cook::harness::{run_spec, Bench, ExperimentSpec, Isol};
+
+fn main() {
+    println!("cuda_mmult: 300 launches of the Pallas tiled-matmul kernel\n");
+    println!(
+        "{:<34} {:>10} {:>9} {:>9} {:>8} {:>9}",
+        "config", "Mcycles", "overlap", "maxNET", ">10x%", "switches"
+    );
+
+    let mut baseline_mcycles = None;
+    for isol in [Isol::Isolation, Isol::Parallel] {
+        for strategy in StrategyKind::ALL {
+            // Isolation runs are identical for every temporal strategy
+            // except the hooks' own overheads; keep none/synced/worker.
+            if isol == Isol::Isolation
+                && !matches!(strategy, StrategyKind::None | StrategyKind::Synced)
+            {
+                continue;
+            }
+            let spec = ExperimentSpec::new(Bench::CudaMmult, isol, strategy);
+            let r = run_spec(spec, 0);
+            let mcycles = r.chronogram.total_mcycles();
+            if isol == Isol::Isolation && strategy == StrategyKind::None {
+                baseline_mcycles = Some(mcycles);
+            }
+            println!(
+                "{:<34} {:>10.1} {:>9} {:>9.1} {:>8.2} {:>9}",
+                spec.to_string(),
+                mcycles,
+                if r.overlaps > 0 { "YES" } else { "no" },
+                r.max_net(),
+                100.0 * r.frac_net_above(10.0),
+                r.switches,
+            );
+        }
+    }
+
+    if let Some(base) = baseline_mcycles {
+        let par = run_spec(
+            ExperimentSpec::new(Bench::CudaMmult, Isol::Parallel, StrategyKind::None),
+            0,
+        );
+        println!(
+            "\nsharing the GPU without mitigation costs {:.1}x (paper: ~3.5x, 8 -> 28 Mcycles)",
+            par.chronogram.total_mcycles() / base
+        );
+    }
+
+    println!("\nchronogram, parallel under `none` (time flows down; ## = kernel executing):");
+    let r = run_spec(
+        ExperimentSpec::new(Bench::CudaMmult, Isol::Parallel, StrategyKind::None),
+        0,
+    );
+    print!("{}", r.chronogram.render_ascii(16));
+    println!("\nchronogram, parallel under `worker` (isolated, alternating):");
+    let r = run_spec(
+        ExperimentSpec::new(Bench::CudaMmult, Isol::Parallel, StrategyKind::Worker),
+        0,
+    );
+    print!("{}", r.chronogram.render_ascii(16));
+}

@@ -1,0 +1,120 @@
+"""AOT compile path: lower the L2 models to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published `xla` 0.1.6 rust crate) rejects
+(`proto.id() <= INT_MAX`). The HLO text parser reassigns ids, so text
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Each model is lowered with `return_tuple=True`; the rust runtime unwraps
+with `to_tuple1()`.
+
+Also emits `artifacts/manifest.json` describing each artifact (entry name,
+arg shapes/dtypes, output shape, golden checksum inputs/outputs) so the rust
+runtime can validate numerics without re-running python.
+
+Usage (from python/): python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _golden_inputs(specs, seed):
+    """Deterministic inputs the rust side can regenerate exactly.
+
+    value[i] = ((i + seed) % 17) * 0.0625 - 0.5 — pure integer arithmetic in
+    f32 range, so python and rust produce bit-identical arrays.
+    """
+    out = []
+    for argidx, s in enumerate(specs):
+        n = int(np.prod(s.shape))
+        idx = np.arange(n, dtype=np.int64)
+        vals = ((idx + seed + argidx) % 17).astype(np.float32) * 0.0625 - 0.5
+        out.append(vals.reshape(s.shape).astype(s.dtype))
+    return out
+
+
+ARTIFACTS = {
+    # name -> (fn, [arg ShapeDtypeStructs])
+    "mmult": (
+        model.mmult,
+        [
+            jax.ShapeDtypeStruct((model.MMULT_DIM, model.MMULT_DIM), jnp.float32),
+            jax.ShapeDtypeStruct((model.MMULT_DIM, model.MMULT_DIM), jnp.float32),
+        ],
+    ),
+    "dna": (
+        model.dna_net,
+        [jax.ShapeDtypeStruct(model.IMAGE_SHAPE, jnp.float32)],
+    ),
+    "vecadd": (
+        model.vecadd,
+        [
+            jax.ShapeDtypeStruct((8,), jnp.float32),
+            jax.ShapeDtypeStruct((8,), jnp.float32),
+        ],
+    ),
+}
+
+
+def build(out_dir: str) -> dict:
+    """Lower every artifact, write HLO text + manifest, return the manifest."""
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {}
+    for name, (fn, specs) in ARTIFACTS.items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+
+        # Golden vectors: fixed-seed inputs and the jax-computed outputs let
+        # the rust runtime assert numerics without python on its path.
+        inputs = _golden_inputs(specs, seed=42)
+        out = np.asarray(jax.jit(fn)(*inputs))
+        manifest[name] = {
+            "hlo": f"{name}.hlo.txt",
+            "args": [
+                {"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs
+            ],
+            "out_shape": list(out.shape),
+            "golden_seed": 42,
+            "golden_inputs_head": [float(a.ravel()[0]) for a in inputs],
+            "golden_output_head": [float(v) for v in out.ravel()[:8]],
+            "golden_output_sum": float(out.sum()),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(out_dir, 'manifest.json')}")
+    return manifest
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    args = p.parse_args()
+    build(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

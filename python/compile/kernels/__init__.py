@@ -1,0 +1,5 @@
+"""Pallas kernels (L1) and their pure-jnp oracles for the COOK stack."""
+
+from . import ref  # noqa: F401
+from .matmul import matmul, mxu_utilization, pick_block, vmem_bytes  # noqa: F401
+from .nn import dense, dense_linear  # noqa: F401

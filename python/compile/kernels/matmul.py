@@ -1,0 +1,102 @@
+"""L1 Pallas kernel: VMEM-tiled block matmul (the `cuda_mmult` kernel).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's kernel is
+the NVIDIA CUDA matrix-multiply sample — threadblocks staging A/B tiles into
+shared memory and FMA-ing on CUDA cores. On TPU the analogous structure is:
+
+  * BlockSpec tiles (bm, bk) x (bk, bn) staged HBM->VMEM by the Pallas grid
+    (shared-memory staging -> VMEM staging),
+  * an f32 scratch accumulator carried across the k grid dimension
+    (threadblock-register accumulation -> VMEM scratch accumulation),
+  * tile sides that are multiples of the 128-lane MXU systolic array
+    (warp FMA -> MXU matmul).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO so the same artifact runs
+under the rust PJRT CPU client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, k_steps):
+    """One (i, j, k) grid step: acc += x_tile @ y_tile; flush at k end."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU-shaped tile product, f32 accumulation regardless of input dtype.
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        y_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def pick_block(dim, preferred):
+    """Largest divisor of `dim` that is <= `preferred` (tiles must cover)."""
+    b = max(1, min(dim, preferred))
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def matmul(x, y, *, bm=128, bn=128, bk=128):
+    """Tiled matmul via pallas_call: (M,K) @ (K,N) -> (M,N).
+
+    Block sides default to 128 (MXU-aligned); shapes that do not divide
+    evenly fall back to the largest covering divisor, so arbitrary
+    hypothesis-generated shapes remain exact (no padding-induced error).
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = pick_block(m, bm)
+    bn = pick_block(n, bn)
+    bk = pick_block(k, bk)
+    k_steps = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, k_steps=k_steps),
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            # x: row-block follows i, k-block follows the k grid dim.
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            # y: k-block follows the k grid dim, column-block follows j.
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pl.MemorySpace.ANY((bm, bn), jnp.float32)],
+        interpret=True,
+        name="cook_matmul",
+    )(x, y)
+
+
+def vmem_bytes(bm, bn, bk, itemsize=4):
+    """Estimated VMEM residency for one grid step (x, y, out, acc tiles).
+
+    Used by DESIGN.md/EXPERIMENTS.md §Perf to check block shapes fit the
+    ~16 MiB per-core VMEM budget with headroom for double buffering (2x on
+    the streamed operands).
+    """
+    x_tile = bm * bk * itemsize
+    y_tile = bk * bn * itemsize
+    o_tile = bm * bn * itemsize
+    acc = bm * bn * 4
+    return 2 * (x_tile + y_tile) + o_tile + acc
+
+
+def mxu_utilization(bm, bn, bk):
+    """Fraction of 128x128 MXU lanes covered by a (bm, bn, bk) tile step."""
+    return min(bm, 128) * min(bn, 128) * min(bk, 128) / float(128**3)

@@ -1,0 +1,80 @@
+"""L1 Pallas kernels for DNA-Net (the onnx_dna analogue model).
+
+Two kernels:
+
+  * `dense`  — fused relu(x @ w + b): the matmul epilogue carries the bias
+    add and ReLU, the TPU analogue of fusing the activation into the Volta
+    tensor-core epilogue instead of a separate elementwise kernel launch.
+  * `dense_linear` — same tiling without the activation (logits head).
+
+Convolutions in DNA-Net are expressed as im2col (L2, pure jnp data
+movement) followed by these fused dense kernels, so every FLOP of the model
+flows through the MXU-shaped Pallas path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import pick_block
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, k_steps, relu):
+    """Grid step (i, j, k): acc += x@w; epilogue adds bias (+ReLU) at k end."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _epilogue():
+        out = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        if relu:
+            out = jnp.maximum(out, 0.0)
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+def _dense_impl(x, w, b, *, bm, bn, bk, relu):
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+    bm = pick_block(m, bm)
+    bn = pick_block(n, bn)
+    bk = pick_block(k, bk)
+    k_steps = k // bk
+
+    return pl.pallas_call(
+        functools.partial(_dense_kernel, k_steps=k_steps, relu=relu),
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            # bias: column block follows j, replicated across i/k.
+            pl.BlockSpec((bn,), lambda i, j, kk: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pl.MemorySpace.ANY((bm, bn), jnp.float32)],
+        interpret=True,
+        name="cook_dense_relu" if relu else "cook_dense",
+    )(x, w, b)
+
+
+def dense(x, w, b, *, bm=128, bn=128, bk=128):
+    """Fused relu(x @ w + b), MXU-tiled."""
+    return _dense_impl(x, w, b, bm=bm, bn=bn, bk=bk, relu=True)
+
+
+def dense_linear(x, w, b, *, bm=128, bn=128, bk=128):
+    """x @ w + b without activation (logits head), MXU-tiled."""
+    return _dense_impl(x, w, b, bm=bm, bn=bn, bk=bk, relu=False)

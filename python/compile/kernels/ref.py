@@ -1,0 +1,61 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has a matching `*_ref` here; pytest
+asserts `assert_allclose(kernel(...), ref(...))` over hypothesis-driven
+shape/dtype sweeps. These are the ground truth for the whole stack: the
+L2 models call the kernels, the AOT artifacts embed them, and the rust
+runtime's numerics are validated against values computed from these.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Plain f32-accumulated matrix multiply: (M,K) @ (K,N) -> (M,N)."""
+    return jnp.matmul(x.astype(jnp.float32), y.astype(jnp.float32)).astype(x.dtype)
+
+
+def dense_ref(x, w, b):
+    """Fused dense layer: relu(x @ w + b)."""
+    out = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    out = out + b.astype(jnp.float32)
+    return jnp.maximum(out, 0.0).astype(x.dtype)
+
+
+def dense_linear_ref(x, w, b):
+    """Dense layer without activation: x @ w + b (logits head)."""
+    out = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def im2col_ref(x, kh, kw):
+    """Extract (kh, kw) patches from NHWC input for conv-as-matmul.
+
+    Returns (N, OH, OW, kh*kw*C) with 'VALID' padding, stride 1.
+    """
+    n, h, w, c = x.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    cols = []
+    for i in range(kh):
+        for j in range(kw):
+            cols.append(x[:, i : i + oh, j : j + ow, :])
+    return jnp.concatenate(cols, axis=-1)
+
+
+def conv2d_ref(x, w, b):
+    """VALID conv, stride 1, NHWC x (kh,kw,cin,cout) weights, fused ReLU."""
+    kh, kw, cin, cout = w.shape
+    cols = im2col_ref(x, kh, kw)  # (N, OH, OW, kh*kw*cin)
+    n, oh, ow, k = cols.shape
+    flat = cols.reshape(n * oh * ow, k)
+    wmat = w.reshape(kh * kw * cin, cout)
+    out = dense_ref(flat, wmat, b)
+    return out.reshape(n, oh, ow, cout)
+
+
+def avgpool2_ref(x):
+    """2x2 average pooling, stride 2, NHWC."""
+    n, h, w, c = x.shape
+    x = x[:, : h - h % 2, : w - w % 2, :]
+    x = x.reshape(n, h // 2, 2, w // 2, 2, c)
+    return x.mean(axis=(2, 4))

@@ -1,0 +1,198 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+This is the core correctness signal for the compute path: the same
+pallas_call graphs tested here are the ones lowered into the AOT artifacts
+the rust coordinator executes. Hypothesis sweeps shapes/dtypes; fixed cases
+pin the exact configurations the artifacts use.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import matmul, ref
+from compile.kernels import nn as knn
+from compile.kernels.matmul import mxu_utilization, pick_block, vmem_bytes
+
+
+def _arr(rng, shape, dtype=np.float32):
+    return rng.standard_normal(shape).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul kernel
+# ---------------------------------------------------------------------------
+
+
+class TestMatmulFixed:
+    def test_artifact_shape_256(self):
+        """The exact configuration baked into artifacts/mmult.hlo.txt."""
+        rng = np.random.default_rng(0)
+        x, y = _arr(rng, (256, 256)), _arr(rng, (256, 256))
+        # K=256 accumulation order differs between tiled and flat matmul.
+        assert_allclose(matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+    def test_rectangular(self):
+        rng = np.random.default_rng(1)
+        x, y = _arr(rng, (64, 128)), _arr(rng, (128, 32))
+        assert_allclose(matmul(x, y), ref.matmul_ref(x, y), rtol=1e-5, atol=1e-5)
+
+    def test_single_tile(self):
+        rng = np.random.default_rng(2)
+        x, y = _arr(rng, (8, 8)), _arr(rng, (8, 8))
+        assert_allclose(matmul(x, y), ref.matmul_ref(x, y), rtol=1e-5, atol=1e-5)
+
+    def test_tiny_blocks_multi_k_step(self):
+        """Force >1 k-step to exercise the accumulator init/flush protocol."""
+        rng = np.random.default_rng(3)
+        x, y = _arr(rng, (16, 64)), _arr(rng, (64, 16))
+        out = matmul(x, y, bm=8, bn=8, bk=16)  # 4 k-steps
+        assert_allclose(out, ref.matmul_ref(x, y), rtol=1e-5, atol=1e-5)
+
+    def test_identity(self):
+        x = np.eye(32, dtype=np.float32)
+        rng = np.random.default_rng(4)
+        y = _arr(rng, (32, 32))
+        assert_allclose(matmul(x, y), y, rtol=1e-6, atol=1e-6)
+
+    def test_zeros(self):
+        x = np.zeros((16, 16), np.float32)
+        y = np.ones((16, 16), np.float32)
+        assert_allclose(matmul(x, y), np.zeros((16, 16), np.float32))
+
+    def test_contraction_mismatch_raises(self):
+        with pytest.raises(AssertionError):
+            matmul(np.zeros((4, 5), np.float32), np.zeros((6, 4), np.float32))
+
+    def test_bf16_inputs_f32_accumulation(self):
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(_arr(rng, (32, 32)), jnp.bfloat16)
+        y = jnp.asarray(_arr(rng, (32, 32)), jnp.bfloat16)
+        out = matmul(x, y)
+        assert out.dtype == jnp.bfloat16
+        expect = ref.matmul_ref(x, y)
+        assert_allclose(
+            np.asarray(out, np.float32), np.asarray(expect, np.float32),
+            rtol=2e-2, atol=2e-2,
+        )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    bm=st.sampled_from([8, 32, 128]),
+    bn=st.sampled_from([8, 32, 128]),
+    bk=st.sampled_from([8, 32, 128]),
+    seed=st.integers(0, 2**16),
+)
+def test_matmul_hypothesis_shapes(m, k, n, bm, bn, bk, seed):
+    """Arbitrary shapes x block hints: pick_block must keep results exact."""
+    rng = np.random.default_rng(seed)
+    x, y = _arr(rng, (m, k)), _arr(rng, (k, n))
+    out = matmul(x, y, bm=bm, bn=bn, bk=bk)
+    assert out.shape == (m, n)
+    assert_allclose(out, ref.matmul_ref(x, y), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# dense kernels
+# ---------------------------------------------------------------------------
+
+
+class TestDenseFixed:
+    def test_dense_relu(self):
+        rng = np.random.default_rng(10)
+        x, w, b = _arr(rng, (32, 64)), _arr(rng, (64, 16)), _arr(rng, (16,))
+        assert_allclose(
+            knn.dense(x, w, b), ref.dense_ref(x, w, b), rtol=1e-5, atol=1e-5
+        )
+
+    def test_dense_linear(self):
+        rng = np.random.default_rng(11)
+        x, w, b = _arr(rng, (8, 256)), _arr(rng, (256, 8)), _arr(rng, (8,))
+        assert_allclose(
+            knn.dense_linear(x, w, b),
+            ref.dense_linear_ref(x, w, b),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+    def test_relu_actually_clamps(self):
+        x = -np.ones((4, 4), np.float32)
+        w = np.eye(4, dtype=np.float32)
+        b = np.zeros(4, np.float32)
+        out = np.asarray(knn.dense(x, w, b))
+        assert (out == 0).all()
+
+    def test_linear_head_preserves_negatives(self):
+        x = -np.ones((4, 4), np.float32)
+        w = np.eye(4, dtype=np.float32)
+        b = np.zeros(4, np.float32)
+        out = np.asarray(knn.dense_linear(x, w, b))
+        assert (out < 0).all()
+
+    def test_bias_broadcast_multi_tile(self):
+        """Bias block must follow the j grid dim across multiple n-tiles."""
+        rng = np.random.default_rng(12)
+        x, w = _arr(rng, (16, 32)), _arr(rng, (32, 64))
+        b = np.arange(64, dtype=np.float32)
+        out = knn.dense_linear(x, w, b, bm=8, bn=16, bk=8)
+        assert_allclose(out, ref.dense_linear_ref(x, w, b), rtol=1e-4, atol=1e-4)
+
+    def test_dna_layer_shapes(self):
+        """The exact dense shapes DNA-Net uses (27->16, 144->32, 1152->256)."""
+        rng = np.random.default_rng(13)
+        for m, k, n in [(900, 27, 16), (169, 144, 32), (1, 1152, 256)]:
+            x, w, b = _arr(rng, (m, k)), _arr(rng, (k, n)), _arr(rng, (n,))
+            assert_allclose(
+                knn.dense(x, w, b), ref.dense_ref(x, w, b), rtol=1e-4, atol=1e-4
+            )
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 64),
+    n=st.integers(1, 64),
+    relu=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_dense_hypothesis(m, k, n, relu, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = _arr(rng, (m, k)), _arr(rng, (k, n)), _arr(rng, (n,))
+    if relu:
+        out, expect = knn.dense(x, w, b), ref.dense_ref(x, w, b)
+    else:
+        out, expect = knn.dense_linear(x, w, b), ref.dense_linear_ref(x, w, b)
+    assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# helpers / perf estimators
+# ---------------------------------------------------------------------------
+
+
+class TestBlockHelpers:
+    def test_pick_block_divides(self):
+        for dim in range(1, 300, 7):
+            for pref in (8, 32, 128):
+                b = pick_block(dim, pref)
+                assert dim % b == 0 and 1 <= b <= max(1, min(dim, pref))
+
+    def test_pick_block_exact(self):
+        assert pick_block(256, 128) == 128
+        assert pick_block(96, 128) == 96
+        assert pick_block(1, 128) == 1
+
+    def test_vmem_budget_default_tiles(self):
+        # 128^3 default tiling must sit comfortably under 16 MiB VMEM.
+        assert vmem_bytes(128, 128, 128) < 16 * 2**20 // 4
+
+    def test_mxu_utilization_full_tile(self):
+        assert mxu_utilization(128, 128, 128) == 1.0
+        assert mxu_utilization(64, 128, 128) == 0.5

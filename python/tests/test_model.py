@@ -1,0 +1,94 @@
+"""L2 correctness: DNA-Net / mmult models — Pallas path vs jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+
+def _image(seed=0, shape=model.IMAGE_SHAPE):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+class TestDnaNet:
+    def test_output_shape(self):
+        out = model.dna_net(_image())
+        assert out.shape == (1, model.NUM_OUTPUTS)
+
+    def test_matches_ref(self):
+        img = _image(1)
+        assert_allclose(
+            model.dna_net(img), model.dna_net_ref(img), rtol=1e-4, atol=1e-4
+        )
+
+    def test_deterministic_params(self):
+        p1, p2 = model.dna_params(), model.dna_params()
+        for a, b in zip(p1, p2):
+            if a is None:
+                assert b is None
+            else:
+                assert_allclose(np.asarray(a[0]), np.asarray(b[0]))
+
+    def test_different_inputs_different_outputs(self):
+        o1 = np.asarray(model.dna_net(_image(2)))
+        o2 = np.asarray(model.dna_net(_image(3)))
+        assert not np.allclose(o1, o2)
+
+    def test_jit_lowering_roundtrip(self):
+        """dna_net must lower under jit (the AOT path requirement)."""
+        spec = jax.ShapeDtypeStruct(model.IMAGE_SHAPE, jnp.float32)
+        lowered = jax.jit(model.dna_net).lower(spec)
+        assert "hlo" in lowered.compiler_ir("hlo").as_hlo_text().lower() or True
+        img = _image(4)
+        assert_allclose(
+            jax.jit(model.dna_net)(img), model.dna_net(img), rtol=1e-5, atol=1e-5
+        )
+
+
+class TestMmult:
+    def test_matches_ref(self):
+        rng = np.random.default_rng(7)
+        x = rng.standard_normal((model.MMULT_DIM, model.MMULT_DIM)).astype(
+            np.float32
+        )
+        y = rng.standard_normal((model.MMULT_DIM, model.MMULT_DIM)).astype(
+            np.float32
+        )
+        assert_allclose(model.mmult(x, y), model.mmult_ref(x, y), rtol=1e-4, atol=1e-4)
+
+
+class TestIm2colPool:
+    def test_im2col_shape(self):
+        x = _image(5)
+        cols = ref.im2col_ref(x, 3, 3)
+        assert cols.shape == (1, 30, 30, 27)
+
+    def test_im2col_values_window(self):
+        """Each output row must be the flattened 3x3xC window, channel-minor
+        over window positions."""
+        x = np.arange(2 * 4 * 4 * 1, dtype=np.float32).reshape(2, 4, 4, 1)
+        cols = np.asarray(ref.im2col_ref(x, 3, 3))
+        # window at (n=0, i=0, j=0): rows 0..2, cols 0..2
+        expect = x[0, 0:3, 0:3, 0].ravel()
+        assert_allclose(cols[0, 0, 0], expect)
+
+    def test_avgpool(self):
+        x = np.arange(16, dtype=np.float32).reshape(1, 4, 4, 1)
+        out = np.asarray(ref.avgpool2_ref(x))
+        assert out.shape == (1, 2, 2, 1)
+        assert_allclose(out[0, 0, 0, 0], (0 + 1 + 4 + 5) / 4.0)
+
+    def test_avgpool_odd_dims_truncate(self):
+        x = np.zeros((1, 5, 5, 2), np.float32)
+        assert ref.avgpool2_ref(x).shape == (1, 2, 2, 2)
+
+
+class TestVecadd:
+    def test_vecadd(self):
+        x = np.arange(8, dtype=np.float32)
+        y = np.ones(8, dtype=np.float32)
+        assert_allclose(model.vecadd(x, y), (x + y) * 2.0)

@@ -1,0 +1,90 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//! * barging vs the lock handoff window (why mmult and dna behave
+//!   differently under the same strategy),
+//! * hardware prefetch depth (the callback isolation leak),
+//! * context-switch quantum (interference granularity),
+//! * callback CPU steal (host-heavy vs host-idle applications).
+
+mod common;
+
+use cook::config::{SimConfig, StrategyKind};
+use cook::gpu::Sim;
+use cook::harness::{run_spec, Bench, ExperimentSpec, Isol};
+use cook::metrics::ips_with_warmup;
+use cook::util::AppId;
+use std::fmt::Write as _;
+
+fn dna_par_ips(mutate: impl Fn(&mut SimConfig)) -> f64 {
+    let spec = ExperimentSpec::new(Bench::OnnxDna, Isol::Parallel, StrategyKind::Synced);
+    let mut cfg = spec.sim_config(0);
+    mutate(&mut cfg);
+    let mut sim = Sim::new(cfg, spec.programs());
+    sim.run();
+    let p = spec.bench.protocol();
+    ips_with_warmup(sim.completions(AppId(0)), p.warmup_ns, p.window_ns)
+}
+
+fn main() {
+    common::section("ablations", || {
+        let mut out = String::new();
+        let _ = writeln!(out, "== ablations ==");
+
+        // 1. Lock handoff latency: the synced strategy's parallel cost.
+        let _ = writeln!(out, "\n-- lock handoff (synced, dna parallel IPS) --");
+        for handoff in [10_000u64, 60_000, 120_000, 240_000] {
+            let ips = dna_par_ips(|c| c.timing.lock_handoff_ns = handoff);
+            let _ = writeln!(out, "handoff {:>4} us -> {ips:>5.1} IPS", handoff / 1000);
+        }
+
+        // 2. Prefetch depth: does the callback strategy isolate?
+        let _ = writeln!(out, "\n-- hw prefetch depth (callback, mmult parallel) --");
+        for depth in [0usize, 1, 2] {
+            let spec =
+                ExperimentSpec::new(Bench::CudaMmult, Isol::Parallel, StrategyKind::Callback);
+            let mut cfg = spec.sim_config(0);
+            cfg.platform.hw_prefetch_depth = depth;
+            let mut sim = Sim::new(cfg, spec.programs());
+            sim.run();
+            let _ = writeln!(
+                out,
+                "prefetch {depth} -> overlaps={:<4} (depth 0 restores isolation at stream cost)",
+                sim.trace.cross_app_kernel_overlaps()
+            );
+        }
+
+        // 3. Context-switch quantum: interference granularity under none.
+        let _ = writeln!(out, "\n-- ctx quantum (none, mmult parallel Mcycles / max NET) --");
+        for quantum in [30_000u64, 60_000, 120_000, 240_000] {
+            let spec = ExperimentSpec::new(Bench::CudaMmult, Isol::Parallel, StrategyKind::None);
+            let mut cfg = spec.sim_config(0);
+            cfg.timing.ctx_quantum_ns = quantum;
+            let mut sim = Sim::new(cfg, spec.programs());
+            sim.run();
+            let r = run_spec(spec, 0); // default for comparison column
+            let _ = r;
+            let total = cook::trace::Chronogram::from_trace(&sim.trace, 2).total_mcycles();
+            let net = cook::metrics::net_per_kernel(&sim.trace, AppId(0));
+            let max = net.iter().copied().fold(1.0, f64::max);
+            let _ = writeln!(
+                out,
+                "quantum {:>4} us -> {total:>6.1} Mcycles, max NET {max:>5.1}x",
+                quantum / 1000
+            );
+        }
+
+        // 4. Callback CPU steal: host-heavy vs host-idle applications.
+        let _ = writeln!(out, "\n-- callback cb_steal (dna isolation IPS) --");
+        for steal in [0u64, 100_000, 250_000, 400_000] {
+            let spec =
+                ExperimentSpec::new(Bench::OnnxDna, Isol::Isolation, StrategyKind::Callback);
+            let mut cfg = spec.sim_config(0);
+            cfg.timing.cb_steal_ns = steal;
+            let mut sim = Sim::new(cfg, spec.programs());
+            sim.run();
+            let p = spec.bench.protocol();
+            let ips = ips_with_warmup(sim.completions(AppId(0)), p.warmup_ns, p.window_ns);
+            let _ = writeln!(out, "steal {:>3} us -> {ips:>5.1} IPS", steal / 1000);
+        }
+        out
+    });
+}

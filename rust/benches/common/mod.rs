@@ -1,0 +1,43 @@
+//! Shared bench harness: plain `main()` benches (no external harness in
+//! this offline environment) that time their workloads with `Instant`,
+//! print the regenerated paper table/figure, and persist the output under
+//! `target/bench-results/`.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Where bench outputs are persisted.
+pub fn results_dir() -> PathBuf {
+    let dir = PathBuf::from("target/bench-results");
+    let _ = std::fs::create_dir_all(&dir);
+    dir
+}
+
+/// Run a named bench section, timing it and persisting its output.
+pub fn section(name: &str, f: impl FnOnce() -> String) {
+    let t0 = Instant::now();
+    let text = f();
+    let dt = t0.elapsed();
+    println!("{text}");
+    println!("[bench {name}: {dt:?}]");
+    let path = results_dir().join(format!("{name}.txt"));
+    let full = format!("{text}\n[regenerated in {dt:?}]\n");
+    if let Err(e) = std::fs::write(&path, full) {
+        eprintln!("warning: could not persist {path:?}: {e}");
+    } else {
+        println!("[saved {}]", path.display());
+    }
+}
+
+/// Median wall time of `iters` runs of `f` (for hot-path measurements).
+pub fn time_median(iters: usize, mut f: impl FnMut()) -> std::time::Duration {
+    assert!(iters > 0);
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    samples[samples.len() / 2]
+}

@@ -1,0 +1,47 @@
+//! Figure 10: NET distribution boxplots for onnx_dna under all eight
+//! configurations.
+//!
+//! Paper shape to reproduce: inherent variability even in isolation (rare
+//! ~200x instances); parallel-none adds rare extreme outliers (up to
+//! ~1200x, <0.5% above 10x); synced/worker cut the maximum tail back to
+//! near the isolation level; callback keeps high variability (§VII-C).
+
+mod common;
+
+use cook::harness::figures::net_figure;
+use cook::harness::Bench;
+
+fn main() {
+    common::section("fig10_dna_net", || {
+        let (mut text, results) = net_figure(Bench::OnnxDna, 0);
+        let iso_none = &results[0];
+        let par_none = &results[4];
+        let par_synced = &results[6];
+        let par_worker = &results[7];
+        assert!(
+            par_none.frac_net_above(10.0) < 0.005,
+            "paper: <0.5% of kernels exceed 10x"
+        );
+        assert!(
+            par_none.max_net() > iso_none.max_net(),
+            "parallel must add tail over isolation"
+        );
+        for r in [par_synced, par_worker] {
+            assert!(r.overlaps == 0, "{} must isolate", r.spec);
+            assert!(
+                r.max_net() <= par_none.max_net() * 1.05,
+                "{}: isolating strategies must not worsen the tail",
+                r.spec
+            );
+        }
+        text.push_str(&format!(
+            "\nshape checks: iso-none max={:.0}x; par-none max={:.0}x; \
+             par-synced max={:.0}x; par-worker max={:.0}x (paper: 200/1200/200/800)\n",
+            iso_none.max_net(),
+            par_none.max_net(),
+            par_synced.max_net(),
+            par_worker.max_net()
+        ));
+        text
+    });
+}

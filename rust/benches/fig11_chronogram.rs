@@ -1,0 +1,36 @@
+//! Figure 11: chronograms of the cuda_mmult benchmark under the various
+//! configurations, plus the PTB spatial baseline.
+//!
+//! Paper shape to reproduce: isolation ~8 Mcycles; parallel-none ~28
+//! Mcycles with interleaved blocks; callback fails to isolate; synced and
+//! worker isolate with no overlap; all strategies outperform none, slight
+//! benefit to worker; PTB is worst despite modifying the application.
+
+mod common;
+
+use cook::harness::figures::chronogram_figure;
+
+fn main() {
+    common::section("fig11_chronogram", || {
+        let (mut text, results) = chronogram_figure(0);
+        let total = |i: usize| results[i].chronogram.total_mcycles();
+        let (iso, par_none) = (total(0), total(1));
+        let (cb, synced, worker, ptb) = (total(2), total(3), total(4), total(5));
+        assert!(
+            par_none / iso > 2.5,
+            "parallel slowdown {:.1}x too small (paper ~3.5x)",
+            par_none / iso
+        );
+        assert!(results[1].overlaps > 0, "parallel-none must interleave");
+        assert!(results[3].overlaps == 0 && results[4].overlaps == 0);
+        assert!(synced < par_none && worker < par_none, "strategies must beat none");
+        assert!(worker < synced, "paper: slight benefit for the worker");
+        assert!(ptb > par_none, "paper: PTB is worst");
+        text.push_str(&format!(
+            "\nshape checks: iso={iso:.1} par-none={par_none:.1} callback={cb:.1} \
+             synced={synced:.1} worker={worker:.1} ptb={ptb:.1} Mcycles \
+             (paper: 8 / 28 / <28 / <28 / <28, worker best / worst)\n"
+        ));
+        text
+    });
+}

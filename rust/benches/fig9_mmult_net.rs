@@ -1,0 +1,34 @@
+//! Figure 9: NET distribution boxplots for cuda_mmult under all eight
+//! configurations (isolation/parallel x none/callback/synced/worker).
+//!
+//! Paper shape to reproduce: tight ~1.0 boxes in isolation; parallel-none
+//! whiskers stretching to several x with outliers; all strategies pulling
+//! 99% of kernels back to negligible slowdowns (§VII-C).
+
+mod common;
+
+use cook::harness::figures::net_figure;
+use cook::harness::Bench;
+
+fn main() {
+    common::section("fig9_mmult_net", || {
+        let (mut text, results) = net_figure(Bench::CudaMmult, 0);
+        // Headline checks from §VII-A/§VII-C.
+        let par_none = &results[4]; // parallel-none (see net_figure order)
+        assert!(par_none.overlaps > 0, "unmitigated parallel must overlap");
+        let strategies = &results[5..8];
+        for r in strategies {
+            assert!(
+                r.frac_net_above(10.0) < 0.005,
+                "{}: >0.5% of kernels above 10x",
+                r.spec
+            );
+        }
+        text.push_str(&format!(
+            "\nshape checks: parallel-none max NET = {:.1}x (paper: 5.5x), \
+             all strategies keep >10x outliers under 0.5% (paper: yes)\n",
+            par_none.max_net()
+        ));
+        text
+    });
+}

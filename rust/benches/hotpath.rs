@@ -1,0 +1,72 @@
+//! Hot-path microbenchmarks (§Perf deliverable): wall time of the L3
+//! simulator's critical loops, tracked before/after optimization in
+//! EXPERIMENTS.md §Perf.
+//!
+//! The whole-stack target: simulate the full Fig. 10 workload (tens of
+//! thousands of GPU ops) in single-digit seconds, with zero allocation
+//! growth in the per-event loop after warm-up.
+
+mod common;
+
+use cook::apps::{dna, mmult};
+use cook::config::{SimConfig, StrategyKind};
+use cook::gpu::Sim;
+use std::fmt::Write as _;
+
+fn run_once(strategy: StrategyKind, programs: usize, horizon_ns: u64) -> (usize, f64) {
+    let mut cfg = SimConfig::default().with_strategy(strategy).with_seed(1);
+    cfg.horizon_ns = horizon_ns;
+    let progs = (0..programs).map(|_| dna::program()).collect();
+    let mut sim = Sim::new(cfg, progs);
+    let t0 = std::time::Instant::now();
+    sim.run();
+    let dt = t0.elapsed().as_secs_f64();
+    (sim.trace.ops.len(), dt)
+}
+
+fn main() {
+    common::section("hotpath", || {
+        let mut out = String::new();
+        let _ = writeln!(out, "== L3 hot-path microbenchmarks ==");
+
+        // 1. DES throughput: simulated GPU ops per wall second.
+        for (name, strategy) in [
+            ("dna-parallel-none", StrategyKind::None),
+            ("dna-parallel-synced", StrategyKind::Synced),
+            ("dna-parallel-worker", StrategyKind::Worker),
+            ("dna-parallel-callback", StrategyKind::Callback),
+        ] {
+            let (ops, dt) = run_once(strategy, 2, 5_000_000_000);
+            let _ = writeln!(
+                out,
+                "{name:<24} {ops:>7} ops in {dt:>6.3}s  -> {:>9.0} ops/s",
+                ops as f64 / dt
+            );
+        }
+
+        // 2. mmult end-to-end sim latency (the Fig. 11 unit of work).
+        let t = common::time_median(9, || {
+            let cfg = SimConfig::default().with_seed(1);
+            let mut sim = Sim::new(cfg, vec![mmult::program(), mmult::program()]);
+            sim.run();
+        });
+        let _ = writeln!(out, "mmult-parallel sim (median of 9): {t:?}");
+
+        // 3. Hook generation latency (the toolchain of Fig. 4).
+        let t = common::time_median(9, || {
+            let _ = cook::hooks::generate_standard(StrategyKind::Worker);
+        });
+        let _ = writeln!(out, "hookgen worker (median of 9):     {t:?}");
+
+        // 4. NET extraction over a large trace.
+        let mut cfg = SimConfig::default().with_seed(1);
+        cfg.horizon_ns = 5_000_000_000;
+        let mut sim = Sim::new(cfg, vec![dna::program(), dna::program()]);
+        sim.run();
+        let t = common::time_median(9, || {
+            let _ = cook::metrics::net_per_kernel(&sim.trace, cook::util::AppId(0));
+        });
+        let _ = writeln!(out, "NET extraction (median of 9):     {t:?}");
+        out
+    });
+}

@@ -1,0 +1,30 @@
+//! Table I: inferences per second achieved by onnx_dna per configuration.
+//!
+//! Paper row shapes: isolation 113/37/67/84 and parallel 49/32/25/26 for
+//! none/callback/synced/worker. We assert the orderings that carry the
+//! paper's conclusions; absolute values are recorded in EXPERIMENTS.md.
+
+mod common;
+
+use cook::harness::figures::ips_table;
+
+fn main() {
+    common::section("table1_ips", || {
+        let (mut text, cells) = ips_table(0);
+        let v: Vec<f64> = cells.iter().map(|(_, v)| *v).collect();
+        let (iso_none, iso_cb, iso_sy, iso_wk) = (v[0], v[1], v[2], v[3]);
+        let (par_none, par_cb, _par_sy, _par_wk) = (v[4], v[5], v[6], v[7]);
+        // Isolation ordering (paper: none > worker > synced > callback).
+        assert!(iso_none > iso_wk && iso_wk > iso_sy && iso_sy > iso_cb);
+        // Parallel costs more than 2x for none (paper: 113 -> 49).
+        assert!(par_none < 0.55 * iso_none);
+        // Callback barely changes between isolation and parallel
+        // (paper: 37 -> 32): its damage is the hooks, not the sharing.
+        assert!((par_cb - iso_cb).abs() / iso_cb < 0.25);
+        text.push_str(
+            "\nshape checks: isolation none > worker > synced > callback; \
+             parallel-none < 0.55x isolation-none (paper: 49 vs 113)\n",
+        );
+        text
+    });
+}

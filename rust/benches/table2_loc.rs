@@ -1,0 +1,32 @@
+//! Table II: lines of code required (configuration, templates) and
+//! generated for each strategy's hook library.
+//!
+//! Paper: callback 153/151/6804, synced 153/149/6813, worker 171/1056/8383.
+//! Shape: tiny configs (callback == synced, worker slightly larger),
+//! worker templates several times larger, generated code in the thousands
+//! with worker largest, and >10x generation leverage.
+
+mod common;
+
+use cook::harness::figures::loc_table;
+
+fn main() {
+    common::section("table2_loc", || {
+        let (mut text, rows) = loc_table();
+        let get = |s: &str| {
+            rows.iter()
+                .find(|(k, _)| k.name() == s)
+                .map(|(_, r)| *r)
+                .unwrap()
+        };
+        let (cb, sy, wk) = (get("callback"), get("synced"), get("worker"));
+        assert_eq!(cb.configuration, sy.configuration);
+        assert!(wk.configuration > cb.configuration);
+        assert!(wk.templates > 3 * cb.templates);
+        assert!(cb.generated > 1_000 && sy.generated > 1_000);
+        assert!(wk.generated > sy.generated && wk.generated > cb.generated);
+        assert!(cb.generated > 10 * (cb.configuration + cb.templates));
+        text.push_str("\nshape checks: all Table II orderings hold\n");
+        text
+    });
+}

@@ -1,0 +1,169 @@
+//! The `onnx_dna` benchmark (§VI-C): an industrial drone detect-and-avoid
+//! DNN served by the ONNX runtime.
+//!
+//! Modelled as DNA-Net: each inference is a few long bursts of
+//! heterogeneous kernels (convolutions, dense layers, elementwise ops) and
+//! copies, with few synchronisation points and host pre/post-processing
+//! around them — the structure the paper describes (long bursts, CPU and
+//! GPU working in tandem). Real numerics for the model live in
+//! `artifacts/dna.hlo.txt` (L2 JAX model over the L1 Pallas kernels);
+//! the timing shape below is calibrated to land the isolated run near the
+//! paper's 113 inferences/s.
+
+use super::program::{Program, RepeatMode};
+use crate::cudart::{Grid, KernelDesc};
+use crate::runtime::PAYLOAD_DNA;
+
+/// Convolution-layer kernel: many blocks, big L2 footprint.
+pub fn conv_kernel(idx: usize) -> KernelDesc {
+    KernelDesc::compute(
+        format!("dna_conv{idx}"),
+        Grid::new(96, 256),
+        125_000, // 2 waves on 8 SMs at 8 blocks/SM -> ~250 us
+    )
+    .with_l2_footprint(320 * 1024)
+    .with_payload(PAYLOAD_DNA)
+}
+
+/// Dense-layer kernel (the Pallas fused dense).
+pub fn dense_kernel(idx: usize) -> KernelDesc {
+    KernelDesc::compute(format!("dna_dense{idx}"), Grid::new(32, 256), 150_000)
+        .with_l2_footprint(200 * 1024)
+        .with_payload(PAYLOAD_DNA)
+}
+
+/// Elementwise / activation / pooling kernel.
+pub fn elem_kernel(idx: usize) -> KernelDesc {
+    KernelDesc::compute(format!("dna_elem{idx}"), Grid::new(48, 256), 60_000)
+        .with_l2_footprint(96 * 1024)
+        .with_payload(PAYLOAD_DNA)
+}
+
+/// Input frame size (camera image, bytes).
+pub const INPUT_BYTES: u64 = 640 * 480 * 3;
+
+/// One full inference: three bursts, ~50 GPU operations.
+fn add_inference(mut p: Program) -> Program {
+    // Host: frame acquisition + preprocessing, then upload.
+    p = p.compute(600_000).memcpy_h2d(INPUT_BYTES);
+
+    // Burst 1: backbone convolutions, interleaved with activations.
+    for i in 0..4 {
+        p = p.compute(150_000).launch(conv_kernel(i));
+        p = p.compute(70_000).launch(elem_kernel(i));
+    }
+    p = p.sync();
+
+    // Burst 2: deeper layers — the long burst with no sync points.
+    for i in 0..8 {
+        p = p.compute(150_000).launch(conv_kernel(4 + i));
+        if i % 2 == 0 {
+            p = p.compute(70_000).launch(elem_kernel(4 + i));
+        }
+    }
+    for i in 0..6 {
+        p = p.compute(100_000).launch(dense_kernel(i));
+    }
+    // An ONNX-runtime internal host callback rides the stream here (the
+    // "other ordered operation" the worker strategy must order, Alg. 7).
+    p = p.host_func(12_000);
+    for i in 0..6 {
+        p = p.compute(70_000).launch(elem_kernel(12 + i));
+    }
+    p = p.sync();
+
+    // Burst 3: detection head + result download.
+    for i in 0..4 {
+        p = p.compute(100_000).launch(dense_kernel(6 + i));
+    }
+    p = p.launch(elem_kernel(20)).memcpy_d2h(64 * 1024).sync();
+
+    // Host postprocessing (NMS, track update) closes the iteration.
+    p.compute(900_000).mark_completion()
+}
+
+/// The looping benchmark application (measured over a sampling window).
+pub fn program() -> Program {
+    add_inference(Program::new("onnx_dna", RepeatMode::LoopUntilHorizon))
+}
+
+/// A single-inference variant (useful in tests and examples).
+pub fn single_inference() -> Program {
+    add_inference(Program::new("onnx_dna_single", RepeatMode::Once))
+}
+
+/// GPU operations per inference (kernels + copies; excludes host funcs).
+pub fn ops_per_inference() -> usize {
+    single_inference()
+        .steps
+        .iter()
+        .filter(|s| {
+            matches!(
+                s,
+                super::program::HostStep::Launch(_) | super::program::HostStep::Memcpy(_)
+            )
+        })
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SimConfig, StrategyKind};
+    use crate::gpu::Sim;
+    use crate::metrics::ips::ips;
+    use crate::util::AppId;
+
+    #[test]
+    fn program_shape_long_bursts_few_syncs() {
+        let p = single_inference();
+        assert_eq!(p.bursts(), 3, "three bursts per inference");
+        assert!(p.gpu_routines() > 35, "long bursts: {}", p.gpu_routines());
+    }
+
+    #[test]
+    fn single_inference_completes() {
+        let mut sim = Sim::new(SimConfig::default().with_seed(3), vec![single_inference()]);
+        sim.run();
+        assert_eq!(sim.completions(AppId(0)).len(), 1);
+    }
+
+    #[test]
+    fn isolation_ips_in_paper_band() {
+        let mut cfg = SimConfig::default().with_seed(4);
+        cfg.horizon_ns = 3_000_000_000; // 3 s window
+        let mut sim = Sim::new(cfg, vec![program()]);
+        sim.run();
+        let v = ips(sim.completions(AppId(0)), 0, 3_000_000_000);
+        // Paper Table I: 113 IPS in isolation-none. Wide acceptance band
+        // here; the exact measured value goes to EXPERIMENTS.md.
+        assert!((60.0..220.0).contains(&v), "isolation IPS {v:.1}, expected ~113");
+    }
+
+    #[test]
+    fn parallel_halves_throughput_or_worse() {
+        let mut cfg = SimConfig::default().with_seed(5);
+        cfg.horizon_ns = 2_000_000_000;
+        let mut iso = Sim::new(cfg.clone(), vec![program()]);
+        iso.run();
+        let mut par = Sim::new(cfg, vec![program(), program()]);
+        par.run();
+        let iso_ips = ips(iso.completions(AppId(0)), 0, 2_000_000_000);
+        let par_ips = ips(par.completions(AppId(0)), 0, 2_000_000_000);
+        assert!(
+            par_ips < 0.55 * iso_ips,
+            "paper: >2x IPS drop in parallel (iso {iso_ips:.0}, par {par_ips:.0})"
+        );
+    }
+
+    #[test]
+    fn worker_isolates_dna() {
+        let mut cfg = SimConfig::default()
+            .with_strategy(StrategyKind::Worker)
+            .with_seed(6);
+        cfg.horizon_ns = 1_000_000_000;
+        let mut sim = Sim::new(cfg, vec![program(), program()]);
+        sim.run();
+        assert_eq!(sim.trace.cross_app_kernel_overlaps(), 0);
+    }
+}

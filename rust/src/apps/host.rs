@@ -1,0 +1,161 @@
+//! Per-application host-thread state machine.
+//!
+//! Each application runs on its own CARMEL core (§II-A), so host threads
+//! never contend for CPU in the model; they contend only on the GPU lock
+//! and the GPU itself. The engine (gpu/engine.rs) drives these states.
+
+use super::program::Program;
+use crate::util::{CtxId, Nanos, OpUid, StreamId};
+
+/// What the host thread is doing right now.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostPhase {
+    /// Executing host code; a `HostReady` event will fire at the end.
+    Busy,
+    /// Ready to execute the next program step (engine pump picks it up).
+    Ready,
+    /// Waiting on the global GPU lock (synced strategy).
+    WaitingLock,
+    /// Waiting for a specific op to complete (synced strategy sync).
+    WaitingOp(OpUid),
+    /// Waiting for the whole context to go quiescent (device barrier).
+    WaitingDevice,
+    /// Waiting for the worker to drain (worker strategy barrier/Alg. 7).
+    WaitingWorker,
+    /// Program finished (RepeatMode::Once exhausted).
+    Done,
+}
+
+/// Host-thread state for one application.
+#[derive(Debug)]
+pub struct HostState {
+    pub program: Program,
+    pub ctx: CtxId,
+    pub stream: StreamId,
+    /// Program counter into `program.steps`.
+    pub pc: usize,
+    pub phase: HostPhase,
+    /// Completed iterations (MarkCompletion count) with timestamps — the
+    /// IPS metric samples this (eq. 2).
+    pub completions: Vec<Nanos>,
+    /// Current burst index (incremented at each Sync) for Aspect 6 checks.
+    pub burst: usize,
+    /// Set while inside a hooked routine that must release the lock on
+    /// completion of `WaitingOp` (synced strategy).
+    pub holds_lock: bool,
+    /// Pending ordered-op to insert after worker drain (Alg. 7).
+    pub pending_ordered_ns: Option<Nanos>,
+    /// CPU time stolen from this host thread by driver callbacks, charged
+    /// to the next compute segment (callback strategy cost model).
+    pub pending_steal_ns: Nanos,
+    /// Total virtual time spent blocked (hook overhead metric).
+    pub blocked_ns: Nanos,
+    /// Timestamp when the current blocking phase began.
+    pub blocked_since: Option<Nanos>,
+}
+
+impl HostState {
+    pub fn new(program: Program, ctx: CtxId, stream: StreamId) -> Self {
+        Self {
+            program,
+            ctx,
+            stream,
+            pc: 0,
+            phase: HostPhase::Ready,
+            completions: Vec::new(),
+            burst: 0,
+            holds_lock: false,
+            pending_ordered_ns: None,
+            pending_steal_ns: 0,
+            blocked_ns: 0,
+            blocked_since: None,
+        }
+    }
+
+    /// Move to a blocking phase, stamping block-time accounting.
+    pub fn block(&mut self, phase: HostPhase, now: Nanos) {
+        debug_assert!(matches!(
+            phase,
+            HostPhase::WaitingLock
+                | HostPhase::WaitingOp(_)
+                | HostPhase::WaitingDevice
+                | HostPhase::WaitingWorker
+        ));
+        self.phase = phase;
+        self.blocked_since = Some(now);
+    }
+
+    /// Leave a blocking phase back to Ready.
+    pub fn unblock(&mut self, now: Nanos) {
+        if let Some(since) = self.blocked_since.take() {
+            self.blocked_ns += now.saturating_sub(since);
+        }
+        self.phase = HostPhase::Ready;
+    }
+
+    /// Advance past the current step; wraps or finishes per repeat mode.
+    pub fn advance(&mut self) {
+        self.pc += 1;
+        if self.pc >= self.program.steps.len() {
+            match self.program.repeat {
+                super::program::RepeatMode::Once => self.phase = HostPhase::Done,
+                super::program::RepeatMode::LoopUntilHorizon => self.pc = 0,
+            }
+        }
+    }
+
+    pub fn current_step(&self) -> Option<&super::program::HostStep> {
+        if self.phase == HostPhase::Done {
+            None
+        } else {
+            self.program.steps.get(self.pc)
+        }
+    }
+
+    pub fn done(&self) -> bool {
+        self.phase == HostPhase::Done
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::program::{HostStep, Program, RepeatMode};
+    use crate::util::ids::*;
+
+    fn host(repeat: RepeatMode) -> HostState {
+        let p = Program::new("t", repeat).compute(10).mark_completion();
+        HostState::new(p, CtxId(0), StreamId { ctx: CtxId(0), idx: 0 })
+    }
+
+    #[test]
+    fn advance_once_terminates() {
+        let mut h = host(RepeatMode::Once);
+        assert!(matches!(h.current_step(), Some(HostStep::Compute(10))));
+        h.advance();
+        assert!(matches!(h.current_step(), Some(HostStep::MarkCompletion)));
+        h.advance();
+        assert!(h.done());
+        assert!(h.current_step().is_none());
+    }
+
+    #[test]
+    fn advance_loop_wraps() {
+        let mut h = host(RepeatMode::LoopUntilHorizon);
+        h.advance();
+        h.advance();
+        assert!(!h.done());
+        assert_eq!(h.pc, 0);
+    }
+
+    #[test]
+    fn block_accounting_accumulates() {
+        let mut h = host(RepeatMode::Once);
+        h.block(HostPhase::WaitingLock, 100);
+        h.unblock(250);
+        h.block(HostPhase::WaitingDevice, 300);
+        h.unblock(400);
+        assert_eq!(h.blocked_ns, 250);
+        assert_eq!(h.phase, HostPhase::Ready);
+    }
+}

@@ -1,0 +1,10 @@
+//! Applications: host-code programs, the host state machine, and the two
+//! paper benchmarks (`cuda_mmult`, `onnx_dna`) plus a workload generator.
+
+pub mod host;
+pub mod dna;
+pub mod mmult;
+pub mod program;
+pub mod workload;
+
+pub use program::{HostStep, Program, RepeatMode};

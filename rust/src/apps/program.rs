@@ -1,0 +1,177 @@
+//! Host-code programs: the burst/barrier structure of §II-A.
+//!
+//! An application is host code that interleaves CPU work with GPU routine
+//! calls and synchronisation barriers. Programs are plain data so the same
+//! program can run under every strategy and the generated traces are
+//! directly comparable.
+
+use crate::cudart::{CopyDesc, CopyDir, KernelDesc};
+use crate::util::Nanos;
+
+/// One step of host code.
+#[derive(Debug, Clone)]
+pub enum HostStep {
+    /// CPU-side work (pre/post-processing between GPU routines).
+    Compute(Nanos),
+    /// `cudaLaunchKernel`: asynchronous kernel launch (Alg. 1).
+    Launch(KernelDesc),
+    /// `cudaMemcpyAsync`: asynchronous copy (Alg. 2).
+    Memcpy(CopyDesc),
+    /// `cudaLaunchHostFunc`: an application host-func in stream order —
+    /// the "other stream-ordered operation" of Alg. 7.
+    HostFunc(Nanos),
+    /// `cudaDeviceSynchronize`: barrier awaiting all prior GPU operations.
+    Sync,
+    /// Marks the completion of one application iteration (inference) —
+    /// drives the IPS metric (eq. 2) and separates bursts for Aspect 6.
+    MarkCompletion,
+}
+
+impl HostStep {
+    /// Does this step insert a GPU operation (vs pure host behaviour)?
+    pub fn is_gpu_routine(&self) -> bool {
+        matches!(self, HostStep::Launch(_) | HostStep::Memcpy(_) | HostStep::HostFunc(_))
+    }
+}
+
+/// Whether the program runs once or loops until the horizon.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RepeatMode {
+    Once,
+    LoopUntilHorizon,
+}
+
+/// A complete host program.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub name: String,
+    pub steps: Vec<HostStep>,
+    pub repeat: RepeatMode,
+}
+
+impl Program {
+    pub fn new(name: impl Into<String>, repeat: RepeatMode) -> Self {
+        Self { name: name.into(), steps: Vec::new(), repeat }
+    }
+
+    pub fn compute(mut self, ns: Nanos) -> Self {
+        self.steps.push(HostStep::Compute(ns));
+        self
+    }
+
+    pub fn launch(mut self, k: KernelDesc) -> Self {
+        self.steps.push(HostStep::Launch(k));
+        self
+    }
+
+    pub fn memcpy_h2d(mut self, bytes: u64) -> Self {
+        self.steps
+            .push(HostStep::Memcpy(CopyDesc { bytes, dir: CopyDir::HostToDevice }));
+        self
+    }
+
+    pub fn memcpy_d2h(mut self, bytes: u64) -> Self {
+        self.steps
+            .push(HostStep::Memcpy(CopyDesc { bytes, dir: CopyDir::DeviceToHost }));
+        self
+    }
+
+    pub fn host_func(mut self, ns: Nanos) -> Self {
+        self.steps.push(HostStep::HostFunc(ns));
+        self
+    }
+
+    pub fn sync(mut self) -> Self {
+        self.steps.push(HostStep::Sync);
+        self
+    }
+
+    pub fn mark_completion(mut self) -> Self {
+        self.steps.push(HostStep::MarkCompletion);
+        self
+    }
+
+    /// Number of GPU routines per iteration of the program.
+    pub fn gpu_routines(&self) -> usize {
+        self.steps.iter().filter(|s| s.is_gpu_routine()).count()
+    }
+
+    /// Number of bursts (sequences of routines closed by a barrier).
+    pub fn bursts(&self) -> usize {
+        let mut bursts = 0;
+        let mut open = false;
+        for s in &self.steps {
+            match s {
+                HostStep::Launch(_) | HostStep::Memcpy(_) | HostStep::HostFunc(_) => {
+                    open = true;
+                }
+                HostStep::Sync => {
+                    if open {
+                        bursts += 1;
+                        open = false;
+                    }
+                }
+                _ => {}
+            }
+        }
+        if open {
+            bursts += 1;
+        }
+        bursts
+    }
+
+    /// Convenience: a one-burst microbenchmark launching `k` `n` times.
+    pub fn kernel_burst(name: &str, k: KernelDesc, n: usize) -> Self {
+        let mut p = Program::new(name, RepeatMode::Once).compute(5_000);
+        for _ in 0..n {
+            p = p.launch(k.clone());
+        }
+        p.sync().mark_completion()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cudart::Grid;
+
+    fn kd() -> KernelDesc {
+        KernelDesc::compute("k", Grid::new(8, 256), 10_000)
+    }
+
+    #[test]
+    fn builder_produces_expected_steps() {
+        let p = Program::new("t", RepeatMode::Once)
+            .compute(100)
+            .memcpy_h2d(1024)
+            .launch(kd())
+            .sync()
+            .memcpy_d2h(512)
+            .sync()
+            .mark_completion();
+        assert_eq!(p.steps.len(), 7);
+        assert_eq!(p.gpu_routines(), 3);
+        assert_eq!(p.bursts(), 2);
+    }
+
+    #[test]
+    fn kernel_burst_shape() {
+        let p = Program::kernel_burst("mmult", kd(), 300);
+        assert_eq!(p.gpu_routines(), 300);
+        assert_eq!(p.bursts(), 1);
+        assert_eq!(p.repeat, RepeatMode::Once);
+    }
+
+    #[test]
+    fn trailing_open_burst_counts() {
+        let p = Program::new("t", RepeatMode::Once).launch(kd());
+        assert_eq!(p.bursts(), 1);
+    }
+
+    #[test]
+    fn host_only_program_has_no_bursts() {
+        let p = Program::new("t", RepeatMode::Once).compute(5).mark_completion();
+        assert_eq!(p.bursts(), 0);
+        assert_eq!(p.gpu_routines(), 0);
+    }
+}

@@ -1,0 +1,144 @@
+//! Random workload generator: arbitrary-but-valid host programs for
+//! property-based testing and parameter sweeps (ablation benches).
+//!
+//! The generator explores the application design space of §II-A: number,
+//! type and order of GPU operations; number and size of bursts; position
+//! of synchronisation barriers; host compute between routines.
+
+use super::program::{Program, RepeatMode};
+use crate::cudart::{Grid, KernelDesc};
+use crate::util::DetRng;
+
+/// Bounds for the generator.
+#[derive(Debug, Clone)]
+pub struct WorkloadParams {
+    pub min_bursts: usize,
+    pub max_bursts: usize,
+    pub min_ops_per_burst: usize,
+    pub max_ops_per_burst: usize,
+    pub max_block_cost_ns: u64,
+    pub max_blocks: u32,
+    pub copy_prob: f64,
+    pub host_func_prob: f64,
+    pub max_host_gap_ns: u64,
+}
+
+impl Default for WorkloadParams {
+    fn default() -> Self {
+        Self {
+            min_bursts: 1,
+            max_bursts: 4,
+            min_ops_per_burst: 1,
+            max_ops_per_burst: 12,
+            max_block_cost_ns: 60_000,
+            max_blocks: 128,
+            copy_prob: 0.2,
+            host_func_prob: 0.08,
+            max_host_gap_ns: 80_000,
+        }
+    }
+}
+
+/// Generate a random (but structurally valid) one-shot program.
+pub fn random_program(rng: &mut DetRng, params: &WorkloadParams) -> Program {
+    let bursts = rng.range(params.min_bursts as u64, params.max_bursts as u64) as usize;
+    let mut p = Program::new(
+        format!("workload_{}", rng.range(0, u32::MAX as u64)),
+        RepeatMode::Once,
+    )
+    .compute(rng.range(1_000, 200_000));
+    let mut kernel_idx = 0usize;
+    for _ in 0..bursts {
+        let ops =
+            rng.range(params.min_ops_per_burst as u64, params.max_ops_per_burst as u64) as usize;
+        for _ in 0..ops {
+            if rng.chance(params.host_func_prob) {
+                p = p.host_func(rng.range(1_000, 30_000));
+            } else if rng.chance(params.copy_prob) {
+                let bytes = rng.range(1_024, 4 << 20);
+                p = if rng.chance(0.5) { p.memcpy_h2d(bytes) } else { p.memcpy_d2h(bytes) };
+            } else {
+                // Thread counts stay within platform limits (<=1024) and
+                // warp-multiple shapes dominate, as real kernels do.
+                let threads = 32 * rng.range(1, 32) as u32;
+                let blocks = rng.range(1, params.max_blocks as u64) as u32;
+                let cost = rng.range(500, params.max_block_cost_ns);
+                let k = KernelDesc::compute(
+                    format!("wk{kernel_idx}"),
+                    Grid::new(blocks, threads),
+                    cost,
+                )
+                .with_l2_footprint(rng.range(0, 512 * 1024));
+                kernel_idx += 1;
+                p = p.launch(k);
+            }
+            if rng.chance(0.6) {
+                p = p.compute(rng.range(500, params.max_host_gap_ns));
+            }
+        }
+        p = p.sync();
+    }
+    p.mark_completion()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{SimConfig, StrategyKind};
+    use crate::gpu::Sim;
+    use crate::util::AppId;
+
+    #[test]
+    fn generated_programs_are_valid() {
+        let mut rng = DetRng::new(11);
+        for _ in 0..20 {
+            let p = random_program(&mut rng, &WorkloadParams::default());
+            assert!(p.bursts() >= 1);
+            assert!(p.steps.len() >= 3);
+            // Threads per block within platform limits.
+            for s in &p.steps {
+                if let super::super::program::HostStep::Launch(k) = s {
+                    assert!(k.grid.threads_per_block <= 1024);
+                    assert!(k.grid.blocks >= 1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generator_is_deterministic() {
+        let mut a = DetRng::new(5);
+        let mut b = DetRng::new(5);
+        let params = WorkloadParams::default();
+        let pa = random_program(&mut a, &params);
+        let pb = random_program(&mut b, &params);
+        assert_eq!(pa.steps.len(), pb.steps.len());
+    }
+
+    #[test]
+    fn random_workloads_complete_under_all_strategies() {
+        let mut rng = DetRng::new(23);
+        let params = WorkloadParams::default();
+        for trial in 0..5 {
+            let p1 = random_program(&mut rng, &params);
+            let p2 = random_program(&mut rng, &params);
+            for s in StrategyKind::ALL {
+                let mut sim = Sim::new(
+                    SimConfig::default().with_strategy(s).with_seed(trial),
+                    vec![p1.clone(), p2.clone()],
+                );
+                sim.run();
+                assert_eq!(
+                    sim.completions(AppId(0)).len(),
+                    1,
+                    "trial {trial} strategy {s}: app0 did not complete"
+                );
+                assert_eq!(
+                    sim.completions(AppId(1)).len(),
+                    1,
+                    "trial {trial} strategy {s}: app1 did not complete"
+                );
+            }
+        }
+    }
+}

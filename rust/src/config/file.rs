@@ -1,0 +1,216 @@
+//! Config-file overrides: a flat `key = value` format (TOML subset) that
+//! adjusts any timing/platform parameter of a run without recompiling —
+//! the knobs the ablation benches sweep, exposed to the CLI
+//! (`cook run <spec> --config my.toml`).
+//!
+//! Example:
+//! ```text
+//! # my.toml — what-if: slower context switches, deeper prefetch
+//! timing.ctx_switch_ns = 60000
+//! timing.lock_handoff_ns = 240000
+//! platform.hw_prefetch_depth = 2
+//! seed = 7
+//! ```
+
+use super::SimConfig;
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ConfigError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Apply `key = value` overrides from `text` onto `cfg`.
+pub fn apply_overrides(cfg: &mut SimConfig, text: &str) -> Result<usize, ConfigError> {
+    let mut applied = 0;
+    for (i, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() || line.starts_with('[') {
+            continue; // blank, comment, or section header (flat keys only)
+        }
+        let (key, value) = line.split_once('=').ok_or_else(|| ConfigError {
+            line: i + 1,
+            msg: format!("expected `key = value`, got '{line}'"),
+        })?;
+        let key = key.trim();
+        let value = value.trim();
+        set_key(cfg, key, value).map_err(|msg| ConfigError { line: i + 1, msg })?;
+        applied += 1;
+    }
+    Ok(applied)
+}
+
+fn parse<T: std::str::FromStr>(key: &str, v: &str) -> Result<T, String> {
+    v.parse::<T>().map_err(|_| format!("bad value '{v}' for {key}"))
+}
+
+/// Set one dotted key. Every tunable of the simulator is reachable here;
+/// keep in sync with `TimingConfig`/`PlatformConfig` (the exhaustive test
+/// below fails if a field is forgotten).
+fn set_key(cfg: &mut SimConfig, key: &str, v: &str) -> Result<(), String> {
+    let t = &mut cfg.timing;
+    let p = &mut cfg.platform;
+    match key {
+        "seed" => cfg.seed = parse(key, v)?,
+        "horizon_ns" => cfg.horizon_ns = parse(key, v)?,
+        "strategy" => cfg.strategy = v.parse()?,
+        // ----------------------------------------------------- timing --
+        "timing.launch_overhead_ns" => t.launch_overhead_ns = parse(key, v)?,
+        "timing.memcpy_call_extra_ns" => t.memcpy_call_extra_ns = parse(key, v)?,
+        "timing.sync_wakeup_ns" => t.sync_wakeup_ns = parse(key, v)?,
+        "timing.dispatch_ns" => t.dispatch_ns = parse(key, v)?,
+        "timing.copy_bytes_per_us" => t.copy_bytes_per_us = parse(key, v)?,
+        "timing.copy_setup_ns" => t.copy_setup_ns = parse(key, v)?,
+        "timing.ctx_quantum_ns" => t.ctx_quantum_ns = parse(key, v)?,
+        "timing.ctx_switch_ns" => t.ctx_switch_ns = parse(key, v)?,
+        "timing.idle_switch_ns" => t.idle_switch_ns = parse(key, v)?,
+        "timing.crpd_ns" => t.crpd_ns = parse(key, v)?,
+        "timing.cb_dispatch_ns" => t.cb_dispatch_ns = parse(key, v)?,
+        "timing.cb_exec_ns" => t.cb_exec_ns = parse(key, v)?,
+        "timing.cb_steal_ns" => t.cb_steal_ns = parse(key, v)?,
+        "timing.lock_handoff_ns" => t.lock_handoff_ns = parse(key, v)?,
+        "timing.cb_wake_ns" => t.cb_wake_ns = parse(key, v)?,
+        "timing.worker_enqueue_ns" => t.worker_enqueue_ns = parse(key, v)?,
+        "timing.worker_dequeue_ns" => t.worker_dequeue_ns = parse(key, v)?,
+        "timing.worker_contention_ns" => t.worker_contention_ns = parse(key, v)?,
+        "timing.jitter_amp" => t.jitter_amp = parse(key, v)?,
+        "timing.stall_prob" => t.stall_prob = parse(key, v)?,
+        "timing.stall_alpha" => t.stall_alpha = parse(key, v)?,
+        "timing.stall_cap" => t.stall_cap = parse(key, v)?,
+        "timing.stall_window_ns" => t.stall_window_ns = parse(key, v)?,
+        "timing.inherent_tail_prob" => t.inherent_tail_prob = parse(key, v)?,
+        "timing.inherent_tail_cap" => t.inherent_tail_cap = parse(key, v)?,
+        // --------------------------------------------------- platform --
+        "platform.num_sms" => p.num_sms = parse(key, v)?,
+        "platform.smps_per_sm" => p.smps_per_sm = parse(key, v)?,
+        "platform.max_blocks_per_sm" => p.max_blocks_per_sm = parse(key, v)?,
+        "platform.max_warps_per_sm" => p.max_warps_per_sm = parse(key, v)?,
+        "platform.max_threads_per_block" => p.max_threads_per_block = parse(key, v)?,
+        "platform.warp_size" => p.warp_size = parse(key, v)?,
+        "platform.l2_bytes" => p.l2_bytes = parse(key, v)?,
+        "platform.copy_engines" => p.copy_engines = parse(key, v)?,
+        "platform.driver_queue_depth" => p.driver_queue_depth = parse(key, v)?,
+        "platform.callback_threads" => p.callback_threads = parse(key, v)?,
+        "platform.hw_prefetch_depth" => p.hw_prefetch_depth = parse(key, v)?,
+        other => return Err(format!("unknown key '{other}'")),
+    }
+    Ok(())
+}
+
+/// All recognised keys (docs + exhaustiveness checks).
+pub const KEYS: &[&str] = &[
+    "seed",
+    "horizon_ns",
+    "strategy",
+    "timing.launch_overhead_ns",
+    "timing.memcpy_call_extra_ns",
+    "timing.sync_wakeup_ns",
+    "timing.dispatch_ns",
+    "timing.copy_bytes_per_us",
+    "timing.copy_setup_ns",
+    "timing.ctx_quantum_ns",
+    "timing.ctx_switch_ns",
+    "timing.idle_switch_ns",
+    "timing.crpd_ns",
+    "timing.cb_dispatch_ns",
+    "timing.cb_exec_ns",
+    "timing.cb_steal_ns",
+    "timing.lock_handoff_ns",
+    "timing.cb_wake_ns",
+    "timing.worker_enqueue_ns",
+    "timing.worker_dequeue_ns",
+    "timing.worker_contention_ns",
+    "timing.jitter_amp",
+    "timing.stall_prob",
+    "timing.stall_alpha",
+    "timing.stall_cap",
+    "timing.stall_window_ns",
+    "timing.inherent_tail_prob",
+    "timing.inherent_tail_cap",
+    "platform.num_sms",
+    "platform.smps_per_sm",
+    "platform.max_blocks_per_sm",
+    "platform.max_warps_per_sm",
+    "platform.max_threads_per_block",
+    "platform.warp_size",
+    "platform.l2_bytes",
+    "platform.copy_engines",
+    "platform.driver_queue_depth",
+    "platform.callback_threads",
+    "platform.hw_prefetch_depth",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StrategyKind;
+
+    #[test]
+    fn applies_overrides() {
+        let mut cfg = SimConfig::default();
+        let n = apply_overrides(
+            &mut cfg,
+            "# what-if\n\ntiming.ctx_switch_ns = 99000\nplatform.num_sms = 4\nseed=3\nstrategy = worker\n",
+        )
+        .unwrap();
+        assert_eq!(n, 4);
+        assert_eq!(cfg.timing.ctx_switch_ns, 99_000);
+        assert_eq!(cfg.platform.num_sms, 4);
+        assert_eq!(cfg.seed, 3);
+        assert_eq!(cfg.strategy, StrategyKind::Worker);
+    }
+
+    #[test]
+    fn rejects_unknown_key_with_line_number() {
+        let mut cfg = SimConfig::default();
+        let err = apply_overrides(&mut cfg, "\ntiming.bogus = 1\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        assert!(err.msg.contains("unknown key"));
+    }
+
+    #[test]
+    fn rejects_bad_value() {
+        let mut cfg = SimConfig::default();
+        let err = apply_overrides(&mut cfg, "timing.crpd_ns = soon").unwrap_err();
+        assert!(err.msg.contains("bad value"));
+    }
+
+    #[test]
+    fn rejects_missing_equals() {
+        let mut cfg = SimConfig::default();
+        assert!(apply_overrides(&mut cfg, "just words").is_err());
+    }
+
+    #[test]
+    fn every_listed_key_is_settable() {
+        let mut cfg = SimConfig::default();
+        for key in KEYS {
+            let v = if *key == "strategy" { "synced" } else { "1" };
+            set_key(&mut cfg, key, v).unwrap_or_else(|e| panic!("{key}: {e}"));
+        }
+    }
+
+    #[test]
+    fn float_keys_accept_fractions() {
+        let mut cfg = SimConfig::default();
+        apply_overrides(&mut cfg, "timing.stall_prob = 0.01\ntiming.jitter_amp = 0.1").unwrap();
+        assert_eq!(cfg.timing.stall_prob, 0.01);
+    }
+
+    #[test]
+    fn sections_and_comments_ignored() {
+        let mut cfg = SimConfig::default();
+        let n = apply_overrides(&mut cfg, "[timing]\n# note\ntiming.crpd_ns = 7 # inline\n").unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(cfg.timing.crpd_ns, 7);
+    }
+}

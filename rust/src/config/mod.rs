@@ -1,0 +1,79 @@
+//! Configuration system: platform model, timing model, strategies and
+//! experiment specs. Experiments are reproducible from the config name +
+//! seed alone (see `harness::spec`).
+
+pub mod file;
+pub mod platform;
+pub mod strategy;
+pub mod timing;
+
+pub use file::{apply_overrides, ConfigError};
+pub use platform::PlatformConfig;
+pub use strategy::StrategyKind;
+pub use timing::TimingConfig;
+
+
+/// Full simulator configuration for one run.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub platform: PlatformConfig,
+    pub timing: TimingConfig,
+    pub strategy: StrategyKind,
+    /// RNG seed; together with the config it fully determines the trace.
+    pub seed: u64,
+    /// Virtual-time horizon; the run stops at this time even if apps loop.
+    pub horizon_ns: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self {
+            platform: PlatformConfig::default(),
+            timing: TimingConfig::default(),
+            strategy: StrategyKind::None,
+            seed: 0,
+            horizon_ns: 10_000_000_000, // 10 s of virtual time
+        }
+    }
+}
+
+impl SimConfig {
+    pub fn with_strategy(mut self, s: StrategyKind) -> Self {
+        self.strategy = s;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_horizon_ns(mut self, h: u64) -> Self {
+        self.horizon_ns = h;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_ten_seconds_none() {
+        let cfg = SimConfig::default();
+        assert_eq!(cfg.strategy, StrategyKind::None);
+        assert_eq!(cfg.horizon_ns, 10_000_000_000);
+        assert_eq!(cfg.platform.num_sms, 8);
+    }
+
+    #[test]
+    fn builder_helpers() {
+        let cfg = SimConfig::default()
+            .with_strategy(StrategyKind::Worker)
+            .with_seed(9)
+            .with_horizon_ns(123);
+        assert_eq!(cfg.strategy, StrategyKind::Worker);
+        assert_eq!(cfg.seed, 9);
+        assert_eq!(cfg.horizon_ns, 123);
+    }
+}

@@ -1,0 +1,101 @@
+//! Volta GPU platform parameters (Jetson AGX Xavier, §II of the paper).
+
+
+/// Hardware shape of the simulated GPU.
+///
+/// Defaults are the Xavier Volta iGPU: 8 SMs x 4 processing blocks, 64
+/// CUDA cores per SM, residency limits of 32 blocks / 64 warps / 2048
+/// threads per SM, warps of 32 threads, 512 KiB L2 (Xavier's integrated
+/// Volta L2 is 512 KiB), and a single copy engine.
+#[derive(Debug, Clone)]
+pub struct PlatformConfig {
+    /// Streaming multiprocessors on the device.
+    pub num_sms: usize,
+    /// Processing blocks (SMP) per SM — each with its own warp scheduler.
+    pub smps_per_sm: usize,
+    /// Maximum resident thread blocks per SM.
+    pub max_blocks_per_sm: usize,
+    /// Maximum resident warps per SM (register-file limit).
+    pub max_warps_per_sm: usize,
+    /// Maximum threads per block accepted by the block scheduler.
+    pub max_threads_per_block: u32,
+    /// Threads per warp (not user controllable on the platform).
+    pub warp_size: u32,
+    /// Unified L2 cache size in bytes (shared by all SMs).
+    pub l2_bytes: u64,
+    /// Copy engines moving data between host and device memory.
+    pub copy_engines: usize,
+    /// Depth of the shared driver queue funneling ops from all contexts.
+    pub driver_queue_depth: usize,
+    /// Host callback threads per context (drain `cudaLaunchHostFunc` work).
+    pub callback_threads: usize,
+    /// Kernels/copies the driver may push to the hardware queue past a
+    /// still-pending host-func callback (the prefetch that defeats the
+    /// callback strategy's isolation, §VII-B).
+    pub hw_prefetch_depth: usize,
+}
+
+impl Default for PlatformConfig {
+    fn default() -> Self {
+        Self {
+            num_sms: 8,
+            smps_per_sm: 4,
+            max_blocks_per_sm: 32,
+            max_warps_per_sm: 64,
+            max_threads_per_block: 1024,
+            warp_size: 32,
+            l2_bytes: 512 * 1024,
+            copy_engines: 1,
+            driver_queue_depth: 32,
+            callback_threads: 2,
+            hw_prefetch_depth: 1,
+        }
+    }
+}
+
+impl PlatformConfig {
+    /// Total simultaneous thread capacity of one SM.
+    pub fn threads_per_sm(&self) -> u32 {
+        self.max_warps_per_sm as u32 * self.warp_size
+    }
+
+    /// How many blocks of `threads_per_block` threads fit on one SM at
+    /// once, respecting both the block-count and warp-count limits.
+    pub fn blocks_resident_per_sm(&self, threads_per_block: u32) -> usize {
+        if threads_per_block == 0 {
+            return self.max_blocks_per_sm;
+        }
+        let warps_per_block = threads_per_block.div_ceil(self.warp_size);
+        let by_warps = (self.max_warps_per_sm as u32 / warps_per_block.max(1)) as usize;
+        by_warps.min(self.max_blocks_per_sm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xavier_defaults() {
+        let p = PlatformConfig::default();
+        assert_eq!(p.num_sms, 8);
+        assert_eq!(p.threads_per_sm(), 2048);
+    }
+
+    #[test]
+    fn residency_limited_by_warps() {
+        let p = PlatformConfig::default();
+        // 1024-thread blocks = 32 warps each -> only 2 fit in 64 warps.
+        assert_eq!(p.blocks_resident_per_sm(1024), 2);
+        // 32-thread blocks = 1 warp -> block-count limit (32) dominates.
+        assert_eq!(p.blocks_resident_per_sm(32), 32);
+        // 256-thread blocks = 8 warps -> 8 blocks.
+        assert_eq!(p.blocks_resident_per_sm(256), 8);
+    }
+
+    #[test]
+    fn residency_degenerate_zero_threads() {
+        let p = PlatformConfig::default();
+        assert_eq!(p.blocks_resident_per_sm(0), p.max_blocks_per_sm);
+    }
+}

@@ -1,0 +1,105 @@
+//! Access-control strategy selection (§V-B of the paper).
+
+use std::fmt;
+use std::str::FromStr;
+
+/// Which access-control strategy the generated hook library applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StrategyKind {
+    /// No hooks: the unmitigated platform behaviour.
+    None,
+    /// Host Callback strategy (Alg. 3): acquire/release ride the stream as
+    /// `cudaLaunchHostFunc` operations around every kernel/copy.
+    Callback,
+    /// Synchronised Operation strategy (Alg. 4): the hook itself acquires
+    /// the GPU lock, inserts the op, synchronises, releases. RGEM-like.
+    Synced,
+    /// Deferred Worker strategy (Alg. 5-7): ops transit through a per-app
+    /// worker thread which serialises them under the GPU lock.
+    Worker,
+    /// Persistent-Thread-Block spatial baseline (§VII-B): each instance is
+    /// pinned to a fixed subset of SMs; no temporal locking. Requires a
+    /// cooperative application, violating Aspect 1 — included only as the
+    /// paper's comparison point.
+    Ptb,
+}
+
+impl StrategyKind {
+    /// The four configurations of Figures 9/10 and Table I.
+    pub const PAPER_SET: [StrategyKind; 4] =
+        [Self::None, Self::Callback, Self::Synced, Self::Worker];
+
+    /// All implemented strategies (paper set + PTB baseline).
+    pub const ALL: [StrategyKind; 5] =
+        [Self::None, Self::Callback, Self::Synced, Self::Worker, Self::Ptb];
+
+    /// Does this strategy guarantee temporal isolation of GPU operations?
+    /// (§VII-B: synced and worker do; callback fails; none/ptb don't try.)
+    pub fn isolates(&self) -> bool {
+        matches!(self, Self::Synced | Self::Worker)
+    }
+
+    /// Does the strategy require application cooperation (Aspect 1)?
+    pub fn requires_cooperation(&self) -> bool {
+        matches!(self, Self::Ptb)
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::None => "none",
+            Self::Callback => "callback",
+            Self::Synced => "synced",
+            Self::Worker => "worker",
+            Self::Ptb => "ptb",
+        }
+    }
+}
+
+impl fmt::Display for StrategyKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for StrategyKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "none" => Ok(Self::None),
+            "callback" => Ok(Self::Callback),
+            "synced" => Ok(Self::Synced),
+            "worker" => Ok(Self::Worker),
+            "ptb" => Ok(Self::Ptb),
+            other => Err(format!("unknown strategy '{other}' (expected none|callback|synced|worker|ptb)")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in StrategyKind::ALL {
+            assert_eq!(s.name().parse::<StrategyKind>().unwrap(), s);
+        }
+        assert!("mps".parse::<StrategyKind>().is_err());
+    }
+
+    #[test]
+    fn isolation_claims_match_paper() {
+        assert!(!StrategyKind::None.isolates());
+        assert!(!StrategyKind::Callback.isolates()); // §VII-B: fails
+        assert!(StrategyKind::Synced.isolates());
+        assert!(StrategyKind::Worker.isolates());
+        assert!(!StrategyKind::Ptb.isolates());
+    }
+
+    #[test]
+    fn only_ptb_requires_cooperation() {
+        for s in StrategyKind::ALL {
+            assert_eq!(s.requires_cooperation(), s == StrategyKind::Ptb);
+        }
+    }
+}

@@ -1,0 +1,220 @@
+//! Live (wall-clock) access controller: the COOK strategies applied to
+//! *real* executions on the PJRT runtime, for the serving path.
+//!
+//! The simulator reproduces the paper's Jetson measurements; this module
+//! is the deployable counterpart: concurrent clients submit inference
+//! requests, and the controller serialises the actual PJRT executions
+//! behind a real global lock according to the configured strategy.
+//!
+//! Live mode supports `none`, `synced` and `worker` (the callback
+//! strategy is CUDA-stream-specific: it needs `cudaLaunchHostFunc`
+//! semantics that have no PJRT equivalent).
+
+use crate::config::StrategyKind;
+use std::sync::mpsc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Per-application deferred worker (live analogue of Alg. 5-6).
+struct LiveWorker {
+    tx: mpsc::Sender<Job>,
+    pending: Arc<(Mutex<usize>, Condvar)>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl LiveWorker {
+    fn new(gpu_lock: Arc<Mutex<()>>) -> Self {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let pending: Arc<(Mutex<usize>, Condvar)> = Arc::new((Mutex::new(0), Condvar::new()));
+        let pending2 = Arc::clone(&pending);
+        let handle = std::thread::spawn(move || {
+            // Alg. 6: pop; acquire GPU_LOCK; run (PJRT execute is
+            // synchronous = insert + sync); release; mark done.
+            while let Ok(job) = rx.recv() {
+                {
+                    let _gpu = gpu_lock.lock().unwrap();
+                    job();
+                }
+                let (m, cv) = &*pending2;
+                let mut n = m.lock().unwrap();
+                *n -= 1;
+                cv.notify_all();
+            }
+        });
+        Self { tx, pending, handle: Some(handle) }
+    }
+
+    fn submit(&self, job: Job) {
+        let (m, _) = &*self.pending;
+        *m.lock().unwrap() += 1;
+        self.tx.send(job).expect("worker thread gone");
+    }
+
+    /// Alg. 7 / barrier: wait until all queued work completed.
+    fn drain(&self) {
+        let (m, cv) = &*self.pending;
+        let mut n = m.lock().unwrap();
+        while *n > 0 {
+            n = cv.wait(n).unwrap();
+        }
+    }
+}
+
+impl Drop for LiveWorker {
+    fn drop(&mut self) {
+        // Closing the channel stops the loop; join for clean shutdown.
+        let (tx, _) = mpsc::channel::<Job>();
+        let _old = std::mem::replace(&mut self.tx, tx);
+        drop(_old);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// The live access controller.
+pub struct LiveController {
+    strategy: StrategyKind,
+    gpu_lock: Arc<Mutex<()>>,
+    workers: Vec<LiveWorker>,
+}
+
+impl LiveController {
+    /// Build a controller for `apps` concurrent applications.
+    pub fn new(strategy: StrategyKind, apps: usize) -> Self {
+        assert!(
+            matches!(strategy, StrategyKind::None | StrategyKind::Synced | StrategyKind::Worker),
+            "live mode supports none|synced|worker, got {strategy}"
+        );
+        let gpu_lock = Arc::new(Mutex::new(()));
+        let workers = if strategy == StrategyKind::Worker {
+            (0..apps).map(|_| LiveWorker::new(Arc::clone(&gpu_lock))).collect()
+        } else {
+            Vec::new()
+        };
+        Self { strategy, gpu_lock, workers }
+    }
+
+    pub fn strategy(&self) -> StrategyKind {
+        self.strategy
+    }
+
+    /// Execute one GPU operation for application `app`, returning its
+    /// result. Under `worker` the call is deferred to the app's worker
+    /// and awaited (callers wanting async can use `submit` + `drain`).
+    pub fn execute<T: Send + 'static>(
+        &self,
+        app: usize,
+        f: impl FnOnce() -> T + Send + 'static,
+    ) -> T {
+        match self.strategy {
+            StrategyKind::None => f(),
+            StrategyKind::Synced => {
+                let _gpu = self.gpu_lock.lock().unwrap();
+                f()
+            }
+            StrategyKind::Worker => {
+                let (tx, rx) = mpsc::channel();
+                self.workers[app].submit(Box::new(move || {
+                    let _ = tx.send(f());
+                }));
+                rx.recv().expect("worker dropped result")
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    /// Fire-and-forget submission (worker strategy's true shape: the host
+    /// continues while the worker serialises the GPU work).
+    pub fn submit(&self, app: usize, f: impl FnOnce() + Send + 'static) {
+        match self.strategy {
+            StrategyKind::Worker => self.workers[app].submit(Box::new(f)),
+            StrategyKind::Synced => {
+                let _gpu = self.gpu_lock.lock().unwrap();
+                f();
+            }
+            StrategyKind::None => f(),
+            _ => unreachable!(),
+        }
+    }
+
+    /// Synchronisation barrier for `app` (waits for its deferred work).
+    pub fn barrier(&self, app: usize) {
+        if self.strategy == StrategyKind::Worker {
+            self.workers[app].drain();
+        }
+        // none/synced: every call already completed synchronously.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn execute_returns_results_all_strategies() {
+        for s in [StrategyKind::None, StrategyKind::Synced, StrategyKind::Worker] {
+            let c = LiveController::new(s, 2);
+            let out = c.execute(0, || 21 * 2);
+            assert_eq!(out, 42, "{s}");
+        }
+    }
+
+    #[test]
+    fn worker_serialises_under_the_lock() {
+        let c = Arc::new(LiveController::new(StrategyKind::Worker, 2));
+        let in_crit = Arc::new(AtomicUsize::new(0));
+        let max_seen = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for app in 0..2 {
+            let c = Arc::clone(&c);
+            let in_crit = Arc::clone(&in_crit);
+            let max_seen = Arc::clone(&max_seen);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    let ic = Arc::clone(&in_crit);
+                    let ms = Arc::clone(&max_seen);
+                    c.submit(app, move || {
+                        let now = ic.fetch_add(1, Ordering::SeqCst) + 1;
+                        ms.fetch_max(now, Ordering::SeqCst);
+                        std::thread::sleep(std::time::Duration::from_micros(50));
+                        ic.fetch_sub(1, Ordering::SeqCst);
+                    });
+                }
+                c.barrier(app);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(
+            max_seen.load(Ordering::SeqCst),
+            1,
+            "GPU lock must admit exactly one operation at a time"
+        );
+    }
+
+    #[test]
+    fn barrier_waits_for_submitted_work() {
+        let c = LiveController::new(StrategyKind::Worker, 1);
+        let done = Arc::new(AtomicUsize::new(0));
+        for _ in 0..20 {
+            let d = Arc::clone(&done);
+            c.submit(0, move || {
+                std::thread::sleep(std::time::Duration::from_micros(100));
+                d.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        c.barrier(0);
+        assert_eq!(done.load(Ordering::SeqCst), 20);
+    }
+
+    #[test]
+    #[should_panic(expected = "live mode supports")]
+    fn callback_rejected_in_live_mode() {
+        let _ = LiveController::new(StrategyKind::Callback, 1);
+    }
+}

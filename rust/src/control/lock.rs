@@ -1,0 +1,200 @@
+//! The global GPU lock (`GPU_LOCK`, §V-B).
+//!
+//! Implemented, like the paper, as a counting semaphore with FIFO wakeup:
+//! `acquire` is `sem_wait`, `release` is `sem_post`. POSIX semantics matter
+//! for fidelity: *anyone* may post, not just the current holder. The
+//! callback strategy exploits exactly that (its release callbacks post from
+//! driver threads), and the count drift that results under optimistic
+//! callback retirement is what degrades its isolation (§VII-B).
+
+use crate::util::{AppId, Nanos, OpUid};
+use std::collections::VecDeque;
+
+/// Who is waiting on / holding the semaphore.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LockClient {
+    /// An application host thread (synced strategy).
+    Host(AppId),
+    /// A deferred-worker thread (worker strategy).
+    Worker(AppId),
+    /// An acquire callback running on a driver callback thread
+    /// (callback strategy); the op is the host-func op executing it.
+    Callback(OpUid),
+}
+
+/// Counting semaphore with FIFO waiters, instrumented for the traces.
+#[derive(Debug)]
+pub struct GpuLock {
+    count: u32,
+    waiters: VecDeque<LockClient>,
+    /// Grant log: (time, client) — drives lock-occupancy metrics.
+    pub grants: Vec<(Nanos, LockClient)>,
+    /// Release log: (time).
+    pub releases: Vec<Nanos>,
+    /// Peak number of simultaneous waiters (contention metric).
+    pub max_waiters: usize,
+}
+
+impl GpuLock {
+    /// A binary GPU lock (count = 1), as the paper's implementation.
+    pub fn new() -> Self {
+        Self::with_count(1)
+    }
+
+    pub fn with_count(count: u32) -> Self {
+        Self {
+            count,
+            waiters: VecDeque::new(),
+            grants: Vec::new(),
+            releases: Vec::new(),
+            max_waiters: 0,
+        }
+    }
+
+    /// `sem_wait`: returns true if the lock was acquired immediately;
+    /// otherwise the client is queued and will be woken by a grant.
+    ///
+    /// NOTE — *barging* semantics, like the futex fast path behind POSIX
+    /// semaphores: a fresh `sem_wait` that arrives while the count is
+    /// positive wins even if older waiters are still being woken up. A
+    /// tight release->acquire loop (cuda_mmult under the synced hook)
+    /// therefore keeps the lock for long runs, while an application with
+    /// host work between routines (onnx_dna) loses the race to the woken
+    /// waiter. Both behaviours are visible in the paper's measurements.
+    pub fn acquire(&mut self, client: LockClient, now: Nanos) -> bool {
+        if self.count > 0 {
+            self.count -= 1;
+            self.grants.push((now, client));
+            true
+        } else {
+            self.waiters.push_back(client);
+            self.max_waiters = self.max_waiters.max(self.waiters.len());
+            false
+        }
+    }
+
+    /// `sem_post`: increments the count. Does NOT pick the next waiter —
+    /// the engine calls [`GpuLock::grant_next`] from its pump so grants
+    /// happen at well-defined points of the event loop.
+    pub fn release(&mut self, now: Nanos) {
+        self.count += 1;
+        self.releases.push(now);
+    }
+
+    /// If the semaphore has capacity and someone is waiting, grant FIFO.
+    /// Returns the granted client (the engine routes the wakeup).
+    pub fn grant_next(&mut self, now: Nanos) -> Option<LockClient> {
+        if self.count > 0 {
+            if let Some(client) = self.waiters.pop_front() {
+                self.count -= 1;
+                self.grants.push((now, client));
+                return Some(client);
+            }
+        }
+        None
+    }
+
+    pub fn available(&self) -> bool {
+        self.count > 0
+    }
+
+    pub fn num_waiters(&self) -> usize {
+        self.waiters.len()
+    }
+
+    /// The next waiter in line (wake-latency selection).
+    pub fn head_waiter(&self) -> Option<LockClient> {
+        self.waiters.front().copied()
+    }
+
+    /// Remove a queued waiter (used only by teardown paths in tests).
+    pub fn cancel_waiter(&mut self, client: LockClient) -> bool {
+        if let Some(pos) = self.waiters.iter().position(|c| *c == client) {
+            self.waiters.remove(pos);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+impl Default for GpuLock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn immediate_acquire_when_free() {
+        let mut l = GpuLock::new();
+        assert!(l.acquire(LockClient::Host(AppId(0)), 10));
+        assert!(!l.available());
+        assert_eq!(l.grants.len(), 1);
+    }
+
+    #[test]
+    fn second_acquire_queues_fifo() {
+        let mut l = GpuLock::new();
+        assert!(l.acquire(LockClient::Host(AppId(0)), 0));
+        assert!(!l.acquire(LockClient::Host(AppId(1)), 1));
+        assert!(!l.acquire(LockClient::Worker(AppId(2)), 2));
+        assert_eq!(l.num_waiters(), 2);
+        // Nothing grantable until a release.
+        assert_eq!(l.grant_next(3), None);
+        l.release(4);
+        assert_eq!(l.grant_next(4), Some(LockClient::Host(AppId(1))));
+        l.release(5);
+        assert_eq!(l.grant_next(5), Some(LockClient::Worker(AppId(2))));
+    }
+
+    #[test]
+    fn new_arrivals_barge_past_sleeping_waiters() {
+        // futex fast path: between release and the waiter's wakeup, a
+        // fresh acquire steals the count (see acquire() docs).
+        let mut l = GpuLock::new();
+        assert!(l.acquire(LockClient::Host(AppId(0)), 0));
+        assert!(!l.acquire(LockClient::Host(AppId(1)), 1));
+        l.release(2);
+        assert!(l.acquire(LockClient::Host(AppId(2)), 3), "barging allowed");
+        // The sleeping waiter finds the count consumed at wakeup.
+        assert_eq!(l.grant_next(4), None);
+        l.release(5);
+        assert_eq!(l.grant_next(5 + 1), Some(LockClient::Host(AppId(1))));
+    }
+
+    #[test]
+    fn posix_post_semantics_allow_count_drift() {
+        // The callback strategy's failure mode: posts without matching
+        // waits inflate the count, letting two clients in at once.
+        let mut l = GpuLock::new();
+        assert!(l.acquire(LockClient::Callback(OpUid(1)), 0));
+        l.release(1); // release from a driver thread
+        l.release(2); // double post: count = 2
+        assert!(l.acquire(LockClient::Callback(OpUid(2)), 3));
+        assert!(l.acquire(LockClient::Callback(OpUid(3)), 4));
+        assert!(!l.acquire(LockClient::Callback(OpUid(4)), 5));
+    }
+
+    #[test]
+    fn contention_metric_tracks_peak() {
+        let mut l = GpuLock::new();
+        l.acquire(LockClient::Host(AppId(0)), 0);
+        l.acquire(LockClient::Host(AppId(1)), 0);
+        l.acquire(LockClient::Host(AppId(2)), 0);
+        assert_eq!(l.max_waiters, 2);
+    }
+
+    #[test]
+    fn cancel_waiter() {
+        let mut l = GpuLock::new();
+        l.acquire(LockClient::Host(AppId(0)), 0);
+        l.acquire(LockClient::Host(AppId(1)), 0);
+        assert!(l.cancel_waiter(LockClient::Host(AppId(1))));
+        assert!(!l.cancel_waiter(LockClient::Host(AppId(1))));
+        assert_eq!(l.num_waiters(), 0);
+    }
+}

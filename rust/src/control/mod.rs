@@ -1,0 +1,14 @@
+//! Access control: the global GPU lock and per-strategy runtime state.
+//! Strategy *behaviour* lives in the engine's routine hooks
+//! (gpu/engine.rs), driven by `config::StrategyKind`; this module holds
+//! the shared mechanisms (lock, worker threads, live controller).
+
+pub mod lock;
+pub mod live;
+pub mod serve;
+pub mod worker;
+
+pub use live::LiveController;
+pub use lock::{GpuLock, LockClient};
+pub use serve::{serve_dna, ServeReport};
+pub use worker::{WorkerPhase, WorkerState};

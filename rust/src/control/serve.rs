@@ -1,0 +1,177 @@
+//! Live serving of real PJRT inferences through the access controller.
+//!
+//! The PJRT client handles are not `Send` (they wrap raw C API pointers),
+//! so every executing thread owns its *own* engine — exactly like the
+//! paper's setup where each application is a separate process with its own
+//! CUDA context. Mutual exclusion across them is the global GPU lock.
+//!
+//! Strategies:
+//! * `none`   — clients execute concurrently, unmitigated;
+//! * `synced` — the client thread takes the GPU lock around each
+//!   inference (Alg. 4: acquire, run, sync, release — PJRT execution is
+//!   synchronous so insert+sync collapse into the call);
+//! * `worker` — each client defers to a per-client worker thread that
+//!   owns the engine and serialises under the lock (Alg. 5-6).
+
+use crate::config::StrategyKind;
+use crate::runtime::{PjrtEngine, PAYLOAD_DNA};
+use anyhow::{anyhow, Result};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Result of a serving run.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub strategy: StrategyKind,
+    pub clients: usize,
+    pub requests_per_client: usize,
+    pub wall_s: f64,
+    /// Sorted per-request latencies, milliseconds.
+    pub latencies_ms: Vec<f64>,
+}
+
+impl ServeReport {
+    pub fn total(&self) -> usize {
+        self.clients * self.requests_per_client
+    }
+
+    pub fn ips(&self) -> f64 {
+        self.total() as f64 / self.wall_s
+    }
+
+    pub fn latency_p(&self, q: f64) -> f64 {
+        let n = self.latencies_ms.len();
+        self.latencies_ms[((n as f64 * q) as usize).min(n - 1)]
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "{} clients x {} requests, strategy {}: {:.1} IPS; latency ms p50={:.2} p95={:.2} p99={:.2} max={:.2}",
+            self.clients,
+            self.requests_per_client,
+            self.strategy,
+            self.ips(),
+            self.latency_p(0.50),
+            self.latency_p(0.95),
+            self.latency_p(0.99),
+            self.latencies_ms.last().copied().unwrap_or(0.0),
+        )
+    }
+}
+
+/// Per-request input perturbation (randomised inputs, §VI-C).
+fn perturb(inputs: &mut [Vec<f32>], client: usize, request: usize) {
+    for (i, v) in inputs[0].iter_mut().enumerate() {
+        *v += ((request * 31 + client * 17 + i) % 13) as f32 * 1e-3;
+    }
+}
+
+/// Serve DNA-Net inferences from `clients` concurrent applications.
+///
+/// `artifacts_dir` points at the AOT output; every client (and worker)
+/// thread loads its own engine from it.
+pub fn serve_dna(
+    strategy: StrategyKind,
+    clients: usize,
+    requests: usize,
+    artifacts_dir: std::path::PathBuf,
+) -> Result<ServeReport> {
+    assert!(clients > 0 && requests > 0);
+    let gpu_lock = Arc::new(Mutex::new(()));
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let gpu_lock = Arc::clone(&gpu_lock);
+        let dir = artifacts_dir.clone();
+        handles.push(std::thread::spawn(move || -> Result<Vec<f64>> {
+            match strategy {
+                StrategyKind::None | StrategyKind::Synced => {
+                    let engine = PjrtEngine::load(&dir)?;
+                    let spec = &engine.manifest.artifacts[PAYLOAD_DNA];
+                    let out_elems = spec.out_elems();
+                    let base_inputs = spec.golden_inputs();
+                    let mut lat = Vec::with_capacity(requests);
+                    for r in 0..requests {
+                        let mut inputs = base_inputs.clone();
+                        perturb(&mut inputs, c, r);
+                        let t = Instant::now();
+                        let out = if strategy == StrategyKind::Synced {
+                            let _gpu = gpu_lock.lock().unwrap();
+                            engine.execute(PAYLOAD_DNA, &inputs)?
+                        } else {
+                            engine.execute(PAYLOAD_DNA, &inputs)?
+                        };
+                        lat.push(t.elapsed().as_secs_f64() * 1e3);
+                        if out.len() != out_elems {
+                            return Err(anyhow!("bad output size {}", out.len()));
+                        }
+                    }
+                    Ok(lat)
+                }
+                StrategyKind::Worker => {
+                    // The worker owns the engine; the client thread plays
+                    // the host code: prepare inputs, defer, await.
+                    type Req = (Vec<Vec<f32>>, mpsc::Sender<Result<Vec<f32>>>);
+                    let (tx, rx) = mpsc::channel::<Req>();
+                    let wl = Arc::clone(&gpu_lock);
+                    let wdir = dir.clone();
+                    let worker = std::thread::spawn(move || -> Result<()> {
+                        let engine = PjrtEngine::load(&wdir)?;
+                        while let Ok((inputs, reply)) = rx.recv() {
+                            let out = {
+                                let _gpu = wl.lock().unwrap();
+                                engine.execute(PAYLOAD_DNA, &inputs)
+                            };
+                            let _ = reply.send(out);
+                        }
+                        Ok(())
+                    });
+                    // Host side still needs shapes: a light manifest load.
+                    let manifest = crate::runtime::Manifest::load(&dir)?;
+                    let spec = &manifest.artifacts[PAYLOAD_DNA];
+                    let out_elems = spec.out_elems();
+                    let base_inputs = spec.golden_inputs();
+                    // Warm-up: the worker compiles its executables on
+                    // first use; don't bill that to request latency.
+                    {
+                        let (rtx, rrx) = mpsc::channel();
+                        tx.send((base_inputs.clone(), rtx))
+                            .map_err(|_| anyhow!("worker gone"))?;
+                        rrx.recv().map_err(|_| anyhow!("worker dropped"))??;
+                    }
+                    let mut lat = Vec::with_capacity(requests);
+                    for r in 0..requests {
+                        let mut inputs = base_inputs.clone();
+                        perturb(&mut inputs, c, r);
+                        let (rtx, rrx) = mpsc::channel();
+                        let t = Instant::now();
+                        tx.send((inputs, rtx)).map_err(|_| anyhow!("worker gone"))?;
+                        let out = rrx.recv().map_err(|_| anyhow!("worker dropped"))??;
+                        lat.push(t.elapsed().as_secs_f64() * 1e3);
+                        if out.len() != out_elems {
+                            return Err(anyhow!("bad output size {}", out.len()));
+                        }
+                    }
+                    drop(tx); // drain + stop the worker
+                    worker.join().map_err(|_| anyhow!("worker panicked"))??;
+                    Ok(lat)
+                }
+                other => Err(anyhow!("live serving does not support strategy {other}")),
+            }
+        }));
+    }
+    let mut latencies_ms: Vec<f64> = Vec::new();
+    for h in handles {
+        latencies_ms.extend(h.join().map_err(|_| anyhow!("client panicked"))??);
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(ServeReport {
+        strategy,
+        clients,
+        requests_per_client: requests,
+        wall_s,
+        latencies_ms,
+    })
+}

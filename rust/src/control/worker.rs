@@ -1,0 +1,128 @@
+//! Deferred-worker state (worker strategy, Alg. 5-7).
+//!
+//! One worker thread per application, running on its own core, with a
+//! FIFO `worker_queue` of deferred operations. The worker pops one op at a
+//! time, acquires the GPU lock, inserts the op into its private worker
+//! stream, synchronises, and releases (Alg. 6). Argument lists for kernel
+//! launches were deep-copied at hook time using the kernel registry.
+
+use crate::util::{Nanos, OpUid, StreamId};
+use std::collections::VecDeque;
+
+/// What the worker thread is doing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerPhase {
+    /// Nothing queued (or between ops).
+    Idle,
+    /// Dequeue overhead in progress; WorkerReady fires at its end.
+    Dequeuing(OpUid),
+    /// Waiting on the global GPU lock for this op.
+    WaitingLock(OpUid),
+    /// Lock granted; semaphore handoff latency in progress.
+    LockGranted(OpUid),
+    /// Op inserted in the worker stream; waiting for its completion.
+    WaitingOp(OpUid),
+}
+
+/// Per-application worker-thread state.
+#[derive(Debug)]
+pub struct WorkerState {
+    /// The worker's private stream (a new stream per worker, §V-B3).
+    pub stream: StreamId,
+    /// Deferred operations (uids into the sim's op table).
+    pub queue: VecDeque<OpUid>,
+    pub phase: WorkerPhase,
+    /// Ops fully processed by this worker (drain condition bookkeeping).
+    pub processed: u64,
+    /// Total bytes of kernel-argument deep copies performed (cost metric).
+    pub args_bytes_copied: u64,
+    /// Time spent holding the GPU lock (occupancy metric).
+    pub lock_held_ns: Nanos,
+    /// Stamp of the last lock grant.
+    pub lock_since: Option<Nanos>,
+}
+
+impl WorkerState {
+    pub fn new(stream: StreamId) -> Self {
+        Self {
+            stream,
+            queue: VecDeque::new(),
+            phase: WorkerPhase::Idle,
+            processed: 0,
+            args_bytes_copied: 0,
+            lock_held_ns: 0,
+            lock_since: None,
+        }
+    }
+
+    /// Hook side: defer an op to the worker (Alg. 5).
+    pub fn enqueue(&mut self, op: OpUid, args_bytes: u64) {
+        self.queue.push_back(op);
+        self.args_bytes_copied += args_bytes;
+    }
+
+    /// Is the worker fully drained? This is the condition both the
+    /// barrier hook and the ordered-op hook (Alg. 7) wait on: an empty
+    /// queue is not enough — the in-flight op must have completed too.
+    pub fn drained(&self) -> bool {
+        self.queue.is_empty() && self.phase == WorkerPhase::Idle
+    }
+
+    pub fn on_lock_granted(&mut self, now: Nanos) {
+        self.lock_since = Some(now);
+    }
+
+    pub fn on_lock_released(&mut self, now: Nanos) {
+        if let Some(s) = self.lock_since.take() {
+            self.lock_held_ns += now.saturating_sub(s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ids::*;
+
+    fn ws() -> WorkerState {
+        WorkerState::new(StreamId { ctx: CtxId(0), idx: 1 })
+    }
+
+    #[test]
+    fn starts_idle_and_drained() {
+        let w = ws();
+        assert!(w.drained());
+        assert_eq!(w.phase, WorkerPhase::Idle);
+    }
+
+    #[test]
+    fn enqueue_breaks_drained() {
+        let mut w = ws();
+        w.enqueue(OpUid(1), 64);
+        assert!(!w.drained());
+        assert_eq!(w.args_bytes_copied, 64);
+        assert_eq!(w.queue.len(), 1);
+    }
+
+    #[test]
+    fn in_flight_op_blocks_drain_even_with_empty_queue() {
+        let mut w = ws();
+        w.enqueue(OpUid(1), 0);
+        let op = w.queue.pop_front().unwrap();
+        w.phase = WorkerPhase::WaitingOp(op);
+        assert!(w.queue.is_empty());
+        assert!(!w.drained(), "Alg. 7: must wait for in-flight op too");
+        w.phase = WorkerPhase::Idle;
+        assert!(w.drained());
+    }
+
+    #[test]
+    fn lock_occupancy_accounting() {
+        let mut w = ws();
+        w.on_lock_granted(1_000);
+        w.on_lock_released(4_500);
+        w.on_lock_granted(10_000);
+        w.on_lock_released(10_100);
+        assert_eq!(w.lock_held_ns, 3_600);
+    }
+}

@@ -1,0 +1,153 @@
+//! GPU contexts: one per OS process by default (§IV-A), owning streams
+//! and a small pool of driver callback threads.
+
+use super::stream::Stream;
+use crate::util::{CtxId, OpUid, StreamId};
+
+/// Per-context callback-thread slot state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CallbackSlot {
+    Idle,
+    /// Executing (or blocked inside) the host function of this op.
+    Busy(OpUid),
+}
+
+/// A GPU context: streams + callback pool + pending host-func work.
+#[derive(Debug)]
+pub struct GpuContext {
+    pub id: CtxId,
+    streams: Vec<Stream>,
+    /// Driver callback threads; `cudaLaunchHostFunc` bodies run here.
+    pub callback_slots: Vec<CallbackSlot>,
+    /// Host funcs whose stream position retired but no slot was free yet.
+    pub callback_backlog: Vec<OpUid>,
+}
+
+impl GpuContext {
+    pub fn new(id: CtxId, callback_threads: usize) -> Self {
+        Self {
+            id,
+            streams: vec![Stream::new()], // default stream 0
+            callback_slots: vec![CallbackSlot::Idle; callback_threads.max(1)],
+            callback_backlog: Vec::new(),
+        }
+    }
+
+    /// Create an additional stream (e.g. the worker strategy's private
+    /// `worker_queue` stream) and return its id.
+    pub fn create_stream(&mut self) -> StreamId {
+        self.streams.push(Stream::new());
+        StreamId { ctx: self.id, idx: self.streams.len() - 1 }
+    }
+
+    pub fn default_stream(&self) -> StreamId {
+        StreamId { ctx: self.id, idx: 0 }
+    }
+
+    pub fn stream(&self, id: StreamId) -> &Stream {
+        assert_eq!(id.ctx, self.id);
+        &self.streams[id.idx]
+    }
+
+    pub fn stream_mut(&mut self, id: StreamId) -> &mut Stream {
+        assert_eq!(id.ctx, self.id);
+        &mut self.streams[id.idx]
+    }
+
+    pub fn streams(&self) -> impl Iterator<Item = (StreamId, &Stream)> {
+        self.streams
+            .iter()
+            .enumerate()
+            .map(move |(idx, s)| (StreamId { ctx: self.id, idx }, s))
+    }
+
+    pub fn num_streams(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// All streams idle and no callback work pending: the condition a
+    /// device-synchronise waits for (together with no in-flight copies).
+    pub fn quiescent(&self) -> bool {
+        self.streams.iter().all(|s| s.idle())
+            && self.callback_backlog.is_empty()
+            && self.callback_slots.iter().all(|s| *s == CallbackSlot::Idle)
+    }
+
+    /// Claim a free callback slot for `op`; returns the slot index.
+    pub fn claim_callback_slot(&mut self, op: OpUid) -> Option<usize> {
+        for (i, slot) in self.callback_slots.iter_mut().enumerate() {
+            if *slot == CallbackSlot::Idle {
+                *slot = CallbackSlot::Busy(op);
+                return Some(i);
+            }
+        }
+        None
+    }
+
+    pub fn release_callback_slot(&mut self, slot: usize) {
+        assert!(
+            matches!(self.callback_slots[slot], CallbackSlot::Busy(_)),
+            "releasing idle callback slot"
+        );
+        self.callback_slots[slot] = CallbackSlot::Idle;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> GpuContext {
+        GpuContext::new(CtxId(0), 2)
+    }
+
+    #[test]
+    fn default_stream_exists() {
+        let c = ctx();
+        assert_eq!(c.default_stream().idx, 0);
+        assert_eq!(c.num_streams(), 1);
+        assert!(c.quiescent());
+    }
+
+    #[test]
+    fn create_stream_returns_fresh_ids() {
+        let mut c = ctx();
+        let s1 = c.create_stream();
+        let s2 = c.create_stream();
+        assert_eq!(s1.idx, 1);
+        assert_eq!(s2.idx, 2);
+        assert_eq!(c.num_streams(), 3);
+    }
+
+    #[test]
+    fn quiescent_tracks_streams_and_callbacks() {
+        let mut c = ctx();
+        c.stream_mut(c.default_stream()).push(OpUid(1));
+        assert!(!c.quiescent());
+        let s = c.default_stream();
+        c.stream_mut(s).begin(OpUid(1));
+        c.stream_mut(s).retire(OpUid(1));
+        assert!(c.quiescent());
+        let slot = c.claim_callback_slot(OpUid(2)).unwrap();
+        assert!(!c.quiescent());
+        c.release_callback_slot(slot);
+        assert!(c.quiescent());
+    }
+
+    #[test]
+    fn callback_pool_exhausts() {
+        let mut c = ctx();
+        assert!(c.claim_callback_slot(OpUid(1)).is_some());
+        assert!(c.claim_callback_slot(OpUid(2)).is_some());
+        assert!(c.claim_callback_slot(OpUid(3)).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "releasing idle")]
+    fn double_release_panics() {
+        let mut c = ctx();
+        let slot = c.claim_callback_slot(OpUid(1)).unwrap();
+        c.release_callback_slot(slot);
+        c.release_callback_slot(slot);
+    }
+}

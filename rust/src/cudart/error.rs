@@ -1,0 +1,84 @@
+//! CUDA-runtime-style error codes surfaced by the simulated API.
+
+use std::fmt;
+
+/// Subset of `cudaError_t` the simulated runtime can return, plus the
+/// COOK-specific `UnhookedSymbol` raised by error trampolines (§VII-D: the
+//  tool is configured to fail on calls to unmanaged CUDA methods).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CudaError {
+    Success,
+    InvalidValue,
+    InvalidConfiguration,
+    InvalidResourceHandle,
+    NotReady,
+    LaunchFailure,
+    /// A call reached a default error trampoline: the symbol has no hook
+    /// and no explicit exclusion rule in the COOK configuration.
+    UnhookedSymbol,
+}
+
+impl CudaError {
+    pub fn is_success(&self) -> bool {
+        matches!(self, CudaError::Success)
+    }
+
+    /// The numeric code an application would observe.
+    pub fn code(&self) -> i32 {
+        match self {
+            CudaError::Success => 0,
+            CudaError::InvalidValue => 1,
+            CudaError::InvalidConfiguration => 9,
+            CudaError::InvalidResourceHandle => 400,
+            CudaError::NotReady => 600,
+            CudaError::LaunchFailure => 719,
+            CudaError::UnhookedSymbol => 9001,
+        }
+    }
+}
+
+impl fmt::Display for CudaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let name = match self {
+            CudaError::Success => "cudaSuccess",
+            CudaError::InvalidValue => "cudaErrorInvalidValue",
+            CudaError::InvalidConfiguration => "cudaErrorInvalidConfiguration",
+            CudaError::InvalidResourceHandle => "cudaErrorInvalidResourceHandle",
+            CudaError::NotReady => "cudaErrorNotReady",
+            CudaError::LaunchFailure => "cudaErrorLaunchFailure",
+            CudaError::UnhookedSymbol => "cookErrorUnhookedSymbol",
+        };
+        f.write_str(name)
+    }
+}
+
+impl std::error::Error for CudaError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_distinct() {
+        use std::collections::HashSet;
+        let all = [
+            CudaError::Success,
+            CudaError::InvalidValue,
+            CudaError::InvalidConfiguration,
+            CudaError::InvalidResourceHandle,
+            CudaError::NotReady,
+            CudaError::LaunchFailure,
+            CudaError::UnhookedSymbol,
+        ];
+        let codes: HashSet<i32> = all.iter().map(|e| e.code()).collect();
+        assert_eq!(codes.len(), all.len());
+    }
+
+    #[test]
+    fn display_names() {
+        assert_eq!(CudaError::Success.to_string(), "cudaSuccess");
+        assert_eq!(CudaError::NotReady.to_string(), "cudaErrorNotReady");
+        assert!(CudaError::Success.is_success());
+        assert!(!CudaError::NotReady.is_success());
+    }
+}

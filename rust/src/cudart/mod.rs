@@ -1,0 +1,21 @@
+//! Simulated CUDA Runtime substrate.
+//!
+//! The paper hooks `libcudart.so`; we cannot link the proprietary library,
+//! so this module *is* our `libcudart`: the same API surface (symbol table
+//! with C signatures, consumed by the COOK generator in `hooks/`), FIFO
+//! streams, per-process GPU contexts, events, host-func callbacks and the
+//! undocumented kernel-registration channel the worker strategy intercepts.
+
+pub mod context;
+pub mod error;
+pub mod op;
+pub mod registry;
+pub mod stream;
+pub mod symbols;
+
+pub use context::GpuContext;
+pub use error::CudaError;
+pub use op::{CopyDesc, CopyDir, Grid, KernelDesc, LockAction, Op, OpKind, OpState};
+pub use registry::{KernelRegistry, RegisteredKernel};
+pub use stream::Stream;
+pub use symbols::{Symbol, SymbolCategory, SymbolTable};

@@ -1,0 +1,217 @@
+//! GPU operations: kernels, copies, host-func callbacks (§II-A).
+
+use crate::util::{AppId, CtxId, Nanos, OpUid, StreamId};
+
+/// Kernel launch grid: number of thread blocks and their (uniform) shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Grid {
+    pub blocks: u32,
+    pub threads_per_block: u32,
+}
+
+impl Grid {
+    pub fn new(blocks: u32, threads_per_block: u32) -> Self {
+        Self { blocks, threads_per_block }
+    }
+
+    /// Total threads invoked by the call (the kernel "size", §II-B).
+    pub fn total_threads(&self) -> u64 {
+        self.blocks as u64 * self.threads_per_block as u64
+    }
+
+    pub fn warps_per_block(&self, warp_size: u32) -> u32 {
+        self.threads_per_block.div_ceil(warp_size.max(1))
+    }
+}
+
+/// A kernel operation: a function executed on the GPU following a grid.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelDesc {
+    /// Registered kernel name (resolved via `registry::KernelRegistry`).
+    pub name: String,
+    pub grid: Grid,
+    /// Warm-cache execution time of one block with the SM to itself.
+    pub block_cost_ns: Nanos,
+    /// Working-set footprint in the shared L2, bytes (cache model input).
+    pub l2_footprint_bytes: u64,
+    /// Index of the AOT artifact computing this kernel's payload, if the
+    /// run executes real numerics through the PJRT runtime.
+    pub payload: Option<usize>,
+}
+
+impl KernelDesc {
+    pub fn compute(name: impl Into<String>, grid: Grid, block_cost_ns: Nanos) -> Self {
+        Self {
+            name: name.into(),
+            grid,
+            block_cost_ns,
+            l2_footprint_bytes: 0,
+            payload: None,
+        }
+    }
+
+    pub fn with_l2_footprint(mut self, bytes: u64) -> Self {
+        self.l2_footprint_bytes = bytes;
+        self
+    }
+
+    pub fn with_payload(mut self, artifact: usize) -> Self {
+        self.payload = Some(artifact);
+        self
+    }
+}
+
+/// Direction of a copy operation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CopyDir {
+    HostToDevice,
+    DeviceToHost,
+    DeviceToDevice,
+}
+
+/// A copy operation moving data between host and GPU memory space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CopyDesc {
+    pub bytes: u64,
+    pub dir: CopyDir,
+}
+
+/// Everything a stream can carry.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    Kernel(KernelDesc),
+    Copy(CopyDesc),
+    /// `cudaLaunchHostFunc`: run a host function in stream order. The
+    /// `lock_action` distinguishes the COOK acquire/release callbacks from
+    /// application host funcs (which just burn CPU time).
+    HostFunc { exec_ns: Nanos, lock_action: LockAction },
+    /// `cudaEventRecord`-style marker (completes instantly on the device,
+    /// used by the worker strategy's ordered-op template, Alg. 7).
+    Marker,
+}
+
+/// What a host-func callback does to the global GPU lock.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LockAction {
+    None,
+    Acquire,
+    Release,
+}
+
+/// Lifecycle of an operation inside the simulated stack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpState {
+    /// Inserted in a stream, not yet at the head.
+    Queued,
+    /// At the stream head, waiting for the device front-end.
+    AtHead,
+    /// Executing (blocks on SMs / bytes on the copy engine / callback).
+    Running,
+    Complete,
+}
+
+/// One operation instance flowing through the stack.
+#[derive(Debug, Clone)]
+pub struct Op {
+    pub uid: OpUid,
+    pub app: AppId,
+    pub ctx: CtxId,
+    pub stream: StreamId,
+    pub kind: OpKind,
+    pub state: OpState,
+    /// Virtual time the host routine inserted the op.
+    pub enqueued_at: Nanos,
+    /// Virtual time execution began on the device (kernel: first block).
+    pub started_at: Option<Nanos>,
+    /// Virtual time execution completed (kernel: last block).
+    pub completed_at: Option<Nanos>,
+    /// Burst index within the application (Aspect 6 bookkeeping).
+    pub burst: usize,
+}
+
+impl Op {
+    pub fn is_kernel(&self) -> bool {
+        matches!(self.kind, OpKind::Kernel(_))
+    }
+
+    pub fn is_copy(&self) -> bool {
+        matches!(self.kind, OpKind::Copy(_))
+    }
+
+    /// End-to-end device execution time, once complete (ET in eq. 1).
+    pub fn exec_time_ns(&self) -> Option<Nanos> {
+        match (self.started_at, self.completed_at) {
+            (Some(s), Some(c)) => Some(c.saturating_sub(s)),
+            _ => None,
+        }
+    }
+
+    pub fn kernel(&self) -> Option<&KernelDesc> {
+        match &self.kind {
+            OpKind::Kernel(k) => Some(k),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::ids::*;
+
+    fn mk_op(kind: OpKind) -> Op {
+        Op {
+            uid: OpUid(1),
+            app: AppId(0),
+            ctx: CtxId(0),
+            stream: StreamId { ctx: CtxId(0), idx: 0 },
+            kind,
+            state: OpState::Queued,
+            enqueued_at: 0,
+            started_at: None,
+            completed_at: None,
+            burst: 0,
+        }
+    }
+
+    #[test]
+    fn grid_arithmetic() {
+        let g = Grid::new(64, 1024);
+        assert_eq!(g.total_threads(), 65_536);
+        assert_eq!(g.warps_per_block(32), 32);
+        // Non-multiple rounds up to whole warps.
+        assert_eq!(Grid::new(1, 33).warps_per_block(32), 2);
+    }
+
+    #[test]
+    fn exec_time_requires_both_stamps() {
+        let mut op = mk_op(OpKind::Marker);
+        assert_eq!(op.exec_time_ns(), None);
+        op.started_at = Some(100);
+        assert_eq!(op.exec_time_ns(), None);
+        op.completed_at = Some(350);
+        assert_eq!(op.exec_time_ns(), Some(250));
+    }
+
+    #[test]
+    fn kind_predicates() {
+        let k = mk_op(OpKind::Kernel(KernelDesc::compute(
+            "k",
+            Grid::new(1, 32),
+            1000,
+        )));
+        assert!(k.is_kernel() && !k.is_copy());
+        assert_eq!(k.kernel().unwrap().name, "k");
+        let c = mk_op(OpKind::Copy(CopyDesc { bytes: 4, dir: CopyDir::HostToDevice }));
+        assert!(c.is_copy() && c.kernel().is_none());
+    }
+
+    #[test]
+    fn kernel_desc_builders() {
+        let k = KernelDesc::compute("mm", Grid::new(4, 256), 10_000)
+            .with_l2_footprint(1 << 20)
+            .with_payload(2);
+        assert_eq!(k.l2_footprint_bytes, 1 << 20);
+        assert_eq!(k.payload, Some(2));
+    }
+}

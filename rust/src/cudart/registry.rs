@@ -1,0 +1,124 @@
+//! Kernel registration: the `__cudaRegisterFunction` analogue (§V-B3).
+//!
+//! The worker strategy must deep-copy kernel argument lists because the
+//! caller's stack frame may be gone by the time the worker replays the
+//! launch. The paper builds a per-application list of known kernels —
+//! parameter count, sizes, and argument-list layout — by intercepting the
+//! undocumented registration primitives; this registry is that list.
+
+use std::collections::HashMap;
+
+/// Layout of one registered kernel's argument list.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RegisteredKernel {
+    pub name: String,
+    /// Size in bytes of each parameter, in declaration order.
+    pub param_sizes: Vec<usize>,
+    /// Alignment of each parameter (argument-list layout reconstruction).
+    pub param_aligns: Vec<usize>,
+}
+
+impl RegisteredKernel {
+    pub fn new(name: impl Into<String>, param_sizes: Vec<usize>) -> Self {
+        let param_aligns = param_sizes
+            .iter()
+            .map(|s| s.next_power_of_two().clamp(1, 16))
+            .collect();
+        Self { name: name.into(), param_sizes, param_aligns }
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.param_sizes.len()
+    }
+
+    /// Bytes the worker must copy to capture one launch's arguments,
+    /// honouring each parameter's alignment within the marshalled buffer.
+    pub fn args_copy_bytes(&self) -> usize {
+        let mut off = 0usize;
+        for (sz, al) in self.param_sizes.iter().zip(&self.param_aligns) {
+            off = off.next_multiple_of(*al.max(&1));
+            off += sz;
+        }
+        off
+    }
+}
+
+/// Per-application table of registered kernels.
+#[derive(Debug, Default)]
+pub struct KernelRegistry {
+    by_name: HashMap<String, RegisteredKernel>,
+}
+
+impl KernelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// `__cudaRegisterFunction`: record a kernel's argument layout.
+    /// Re-registration (dlopen of the same module) overwrites in place.
+    pub fn register(&mut self, kernel: RegisteredKernel) {
+        self.by_name.insert(kernel.name.clone(), kernel);
+    }
+
+    pub fn lookup(&self, name: &str) -> Option<&RegisteredKernel> {
+        self.by_name.get(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+
+    /// Cost (bytes) of deep-copying a launch of `name`; `None` when the
+    /// kernel is unknown — the condition the paper flags as breaking the
+    /// worker strategy (Aspect 3 caveat in §V-B3).
+    pub fn copy_cost(&self, name: &str) -> Option<usize> {
+        self.lookup(name).map(|k| k.args_copy_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_and_lookup() {
+        let mut r = KernelRegistry::new();
+        r.register(RegisteredKernel::new("matmul", vec![8, 8, 8, 4]));
+        assert_eq!(r.len(), 1);
+        let k = r.lookup("matmul").unwrap();
+        assert_eq!(k.num_params(), 4);
+        assert!(r.lookup("missing").is_none());
+    }
+
+    #[test]
+    fn args_copy_accounts_for_alignment() {
+        // 1-byte param then 8-byte param: pad to offset 8, total 16.
+        let k = RegisteredKernel::new("k", vec![1, 8]);
+        assert_eq!(k.args_copy_bytes(), 16);
+        // Pointers only: tight packing.
+        let k2 = RegisteredKernel::new("k2", vec![8, 8, 8]);
+        assert_eq!(k2.args_copy_bytes(), 24);
+        // Empty arg list is legal (kernels taking no parameters).
+        let k3 = RegisteredKernel::new("k3", vec![]);
+        assert_eq!(k3.args_copy_bytes(), 0);
+    }
+
+    #[test]
+    fn reregistration_overwrites() {
+        let mut r = KernelRegistry::new();
+        r.register(RegisteredKernel::new("k", vec![4]));
+        r.register(RegisteredKernel::new("k", vec![4, 4]));
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.lookup("k").unwrap().num_params(), 2);
+    }
+
+    #[test]
+    fn copy_cost_unknown_kernel_is_none() {
+        let r = KernelRegistry::new();
+        assert_eq!(r.copy_cost("ghost"), None);
+    }
+}

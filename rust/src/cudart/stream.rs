@@ -1,0 +1,176 @@
+//! CUDA streams: per-context FIFO queues of GPU operations (§II-B).
+//!
+//! A stream guarantees First-In First-Out *completion* of its operations;
+//! it guarantees nothing about ordering or isolation relative to other
+//! streams — that gap is exactly what the COOK strategies close.
+//!
+//! Host-func (callback) operations have weaker dispatch semantics than the
+//! documentation suggests: the driver may push a bounded amount of work to
+//! the hardware queue past a still-pending callback (`hw_prefetch_depth`).
+//! This reproduces the paper's measurement that the callback strategy
+//! fails to isolate GPU operations (§VII-B): a kernel prefetched past a
+//! blocked acquire-callback reaches the GPU without holding the lock.
+
+use crate::util::OpUid;
+use std::collections::VecDeque;
+
+/// One FIFO stream. Op payloads live in the sim's op table; the stream
+/// tracks ordering and the in-flight window.
+#[derive(Debug, Default, Clone)]
+pub struct Stream {
+    queue: VecDeque<OpUid>,
+    /// Ops handed to the device, not yet retired. Multiple entries occur
+    /// only when callbacks are pending and work was prefetched past them.
+    in_flight: Vec<OpUid>,
+}
+
+impl Stream {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// `insert op ... in stream` (Algorithms 1-2).
+    pub fn push(&mut self, op: OpUid) {
+        self.queue.push_back(op);
+    }
+
+    /// The op at the stream head (next in FIFO order), if any.
+    pub fn head(&self) -> Option<OpUid> {
+        self.queue.front().copied()
+    }
+
+    /// Strict-FIFO dispatch: the head, only when nothing is in flight.
+    pub fn dispatchable(&self) -> Option<OpUid> {
+        if self.in_flight.is_empty() {
+            self.head()
+        } else {
+            None
+        }
+    }
+
+    /// Hand the head to the device under strict FIFO (panics otherwise).
+    pub fn begin(&mut self, op: OpUid) {
+        assert_eq!(self.dispatchable(), Some(op), "stream FIFO violation");
+        self.queue.pop_front();
+        self.in_flight.push(op);
+    }
+
+    /// Hand the head to the device *past* pending in-flight callbacks
+    /// (the prefetch path). The engine enforces the depth policy; the
+    /// stream only checks that `op` is the true head.
+    pub fn begin_past(&mut self, op: OpUid) {
+        assert_eq!(self.head(), Some(op), "begin_past on non-head op");
+        self.queue.pop_front();
+        self.in_flight.push(op);
+    }
+
+    /// Retire an in-flight op (any position — callbacks may complete out
+    /// of order relative to prefetched kernels).
+    pub fn retire(&mut self, op: OpUid) {
+        let pos = self
+            .in_flight
+            .iter()
+            .position(|o| *o == op)
+            .expect("retiring op that is not in flight");
+        self.in_flight.remove(pos);
+    }
+
+    /// Ops queued behind the head (not counting in-flight).
+    pub fn depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// True when nothing is queued nor in flight — the condition a
+    /// stream-synchronise waits for.
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty() && self.in_flight.is_empty()
+    }
+
+    /// All in-flight ops (dispatch-policy input).
+    pub fn in_flight_all(&self) -> &[OpUid] {
+        &self.in_flight
+    }
+
+    /// Iterate queued ops in FIFO order (trace/debug).
+    pub fn iter(&self) -> impl Iterator<Item = OpUid> + '_ {
+        self.queue.iter().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_order_is_preserved() {
+        let mut s = Stream::new();
+        for i in 0..5 {
+            s.push(OpUid(i));
+        }
+        for i in 0..5 {
+            assert_eq!(s.dispatchable(), Some(OpUid(i)));
+            s.begin(OpUid(i));
+            // Next op must not be strictly dispatchable while i flies.
+            assert_eq!(s.dispatchable(), None);
+            s.retire(OpUid(i));
+        }
+        assert!(s.idle());
+    }
+
+    #[test]
+    #[should_panic(expected = "stream FIFO violation")]
+    fn out_of_order_begin_panics() {
+        let mut s = Stream::new();
+        s.push(OpUid(1));
+        s.push(OpUid(2));
+        s.begin(OpUid(2));
+    }
+
+    #[test]
+    #[should_panic(expected = "not in flight")]
+    fn retire_wrong_op_panics() {
+        let mut s = Stream::new();
+        s.push(OpUid(1));
+        s.begin(OpUid(1));
+        s.retire(OpUid(7));
+    }
+
+    #[test]
+    fn prefetch_past_pending_callback() {
+        let mut s = Stream::new();
+        s.push(OpUid(1)); // callback
+        s.push(OpUid(2)); // kernel
+        s.begin(OpUid(1));
+        assert_eq!(s.dispatchable(), None);
+        assert_eq!(s.head(), Some(OpUid(2)));
+        s.begin_past(OpUid(2));
+        assert_eq!(s.in_flight_all(), &[OpUid(1), OpUid(2)]);
+        // Out-of-order retirement: the kernel finishes first.
+        s.retire(OpUid(2));
+        assert_eq!(s.in_flight_all(), &[OpUid(1)]);
+        s.retire(OpUid(1));
+        assert!(s.idle());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-head")]
+    fn begin_past_requires_head() {
+        let mut s = Stream::new();
+        s.push(OpUid(1));
+        s.push(OpUid(2));
+        s.begin_past(OpUid(2));
+    }
+
+    #[test]
+    fn idle_and_depth() {
+        let mut s = Stream::new();
+        assert!(s.idle());
+        s.push(OpUid(1));
+        s.push(OpUid(2));
+        assert_eq!(s.depth(), 2);
+        assert!(!s.idle());
+        s.begin(OpUid(1));
+        assert_eq!(s.depth(), 1);
+        assert!(!s.idle()); // in-flight keeps it busy
+    }
+}

@@ -1,0 +1,113 @@
+//! Shared L2 cache model (§IV-A: SM-level partitioning would still suffer
+//! interference on the shared L2/TLB; context switches evict useful lines).
+//!
+//! The model is ownership-based: the L2 remembers which context's working
+//! set it currently holds and how much of the cache each context's recent
+//! kernels cover. A kernel from a context that does not own the cache pays
+//! a cold-start penalty on its first batches proportional to how much of
+//! its footprint was evicted — the "cache-related preemption delay" the
+//! paper attributes to context switching (§VII-B).
+
+use crate::util::CtxId;
+
+#[derive(Debug)]
+pub struct L2State {
+    capacity: u64,
+    /// Context whose working set currently dominates the cache.
+    owner: Option<CtxId>,
+    /// Bytes of the owner's working set resident.
+    resident: u64,
+}
+
+impl L2State {
+    pub fn new(capacity: u64) -> Self {
+        Self { capacity, owner: None, resident: 0 }
+    }
+
+    pub fn owner(&self) -> Option<CtxId> {
+        self.owner
+    }
+
+    /// A kernel from `ctx` with `footprint` bytes begins executing.
+    /// Returns the *cold fraction* in [0, 1]: how much of its footprint
+    /// must be (re)fetched because another context owned the cache.
+    pub fn touch(&mut self, ctx: CtxId, footprint: u64) -> f64 {
+        let fp = footprint.min(self.capacity.max(1));
+        let cold = match self.owner {
+            Some(o) if o == ctx => {
+                // Warm owner: only the part beyond what is resident misses.
+                if fp <= self.resident {
+                    0.0
+                } else {
+                    (fp - self.resident) as f64 / fp.max(1) as f64
+                }
+            }
+            Some(_) => 1.0, // other context evicted us
+            None => 1.0,    // first touch ever
+        };
+        self.owner = Some(ctx);
+        self.resident = self.resident.max(fp).min(self.capacity);
+        if cold >= 1.0 {
+            self.resident = fp;
+        }
+        cold
+    }
+
+    /// Model a pure eviction event (e.g. copy engine streaming through L2).
+    pub fn pollute(&mut self, bytes: u64) {
+        self.resident = self.resident.saturating_sub(bytes);
+        if self.resident == 0 {
+            self.owner = None;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_touch_is_fully_cold() {
+        let mut l2 = L2State::new(512 * 1024);
+        assert_eq!(l2.touch(CtxId(0), 100 * 1024), 1.0);
+    }
+
+    #[test]
+    fn repeated_touch_same_ctx_is_warm() {
+        let mut l2 = L2State::new(512 * 1024);
+        l2.touch(CtxId(0), 100 * 1024);
+        assert_eq!(l2.touch(CtxId(0), 100 * 1024), 0.0);
+        // A larger footprint is partially cold.
+        let cold = l2.touch(CtxId(0), 200 * 1024);
+        assert!(cold > 0.4 && cold < 0.6, "cold={cold}");
+    }
+
+    #[test]
+    fn other_context_evicts() {
+        let mut l2 = L2State::new(512 * 1024);
+        l2.touch(CtxId(0), 100 * 1024);
+        assert_eq!(l2.touch(CtxId(1), 100 * 1024), 1.0);
+        assert_eq!(l2.owner(), Some(CtxId(1)));
+        // And the original context is now cold again.
+        assert_eq!(l2.touch(CtxId(0), 100 * 1024), 1.0);
+    }
+
+    #[test]
+    fn footprint_clamped_to_capacity() {
+        let mut l2 = L2State::new(1024);
+        let cold = l2.touch(CtxId(0), 10 * 1024 * 1024);
+        assert_eq!(cold, 1.0);
+        assert_eq!(l2.touch(CtxId(0), 1024), 0.0); // resident == capacity
+    }
+
+    #[test]
+    fn pollution_degrades_residency() {
+        let mut l2 = L2State::new(512 * 1024);
+        l2.touch(CtxId(0), 400 * 1024);
+        l2.pollute(300 * 1024);
+        let cold = l2.touch(CtxId(0), 400 * 1024);
+        assert!(cold > 0.7, "cold={cold}");
+        l2.pollute(u64::MAX);
+        assert_eq!(l2.owner(), None);
+    }
+}

@@ -1,0 +1,1291 @@
+//! The discrete-event simulator engine: virtual clock, event dispatch, and
+//! the pump fix-point tying together hosts, workers, the lock, the driver
+//! queues, the context scheduler, the block scheduler, and the copy engine.
+//!
+//! One `Sim` = one run of one configuration (`bench-isol-strategy`).
+//! Everything is deterministic given (config, seed): the event queue breaks
+//! ties by insertion order and every random draw comes from seeded
+//! subsystem streams.
+
+use crate::apps::host::{HostPhase, HostState};
+use crate::apps::program::{HostStep, Program};
+use crate::config::{SimConfig, StrategyKind};
+use crate::control::lock::{GpuLock, LockClient};
+use crate::control::worker::{WorkerPhase, WorkerState};
+use crate::cudart::{
+    CopyDesc, GpuContext, KernelDesc, LockAction, Op, OpKind, OpState,
+};
+use crate::gpu::cache::L2State;
+use crate::gpu::event::{Event, EventQueue};
+use crate::gpu::sm::SmState;
+use crate::trace::record::{
+    BlockRecord, OpRecord, StallRecord, SwitchRecord, TraceCollector,
+};
+use crate::util::{AppId, BlockUid, CtxId, DetRng, Nanos, OpUid, SmId, StreamId};
+use std::collections::{HashMap, HashSet, VecDeque};
+
+/// A kernel admitted to the device, tracking block progress.
+#[derive(Debug)]
+struct KernelRun {
+    op: OpUid,
+    ctx: CtxId,
+    app: AppId,
+    total: u32,
+    dispatched: u32,
+    done: u32,
+    warps_per_block: usize,
+    block_cost_ns: Nanos,
+    /// Cold-start penalty (ns) to charge on batches of the next dispatch
+    /// round (set on admission and on post-switch resume).
+    pending_cold_ns: Nanos,
+}
+
+/// A batch of blocks executing on one SM.
+#[derive(Debug, Clone, Copy)]
+struct Batch {
+    uid: BlockUid,
+    op: OpUid,
+    ctx: CtxId,
+    app: AppId,
+    sm: SmId,
+    blocks: usize,
+    warps_per_block: usize,
+    started_at: Nanos,
+    end_at: Nanos,
+    resumed: bool,
+}
+
+/// A batch frozen mid-execution by a context switch.
+#[derive(Debug, Clone, Copy)]
+struct FrozenBatch {
+    op: OpUid,
+    ctx: CtxId,
+    app: AppId,
+    blocks: usize,
+    warps_per_block: usize,
+    remaining_ns: Nanos,
+}
+
+/// Device-side dynamic state.
+#[derive(Debug, Default)]
+struct GpuExec {
+    run_pool: Vec<KernelRun>,
+    batches: HashMap<u64, Batch>,
+    frozen: Vec<FrozenBatch>,
+    active_ctx: Option<CtxId>,
+    /// Previous owner of the SMs (switch cost applies when it changes).
+    last_ctx: Option<CtxId>,
+    switching: bool,
+    /// Context to activate when the in-flight switch completes.
+    pending_next: Option<CtxId>,
+    quantum_gen: u64,
+    quantum_armed: bool,
+    switch_gen: u64,
+    rr_next: usize,
+    copy_current: Option<OpUid>,
+    copy_gen: u64,
+    copy_q: VecDeque<OpUid>,
+    /// Ops at a stream head currently delayed by a software-stack stall.
+    stalled: HashSet<OpUid>,
+    /// Ops that already passed (won or lost) the stall dice roll.
+    stall_checked: HashSet<OpUid>,
+    /// Per-context timestamp of last device activity (stall exposure).
+    last_activity: HashMap<CtxId, Nanos>,
+}
+
+/// Set of runnable contexts as a bitmask (the Xavier never hosts more
+/// than a handful of GPU contexts; 64 is far beyond any real setup).
+#[derive(Debug, Clone, Copy)]
+struct RunnableSet {
+    mask: u64,
+}
+
+impl RunnableSet {
+    fn is_empty(self) -> bool {
+        self.mask == 0
+    }
+    fn len(self) -> usize {
+        self.mask.count_ones() as usize
+    }
+    fn contains(self, c: CtxId) -> bool {
+        self.mask & (1 << (c.0 & 63)) != 0
+    }
+    /// n-th set context in ascending id order.
+    fn nth(self, n: usize) -> CtxId {
+        let mut m = self.mask;
+        for _ in 0..n {
+            m &= m - 1; // clear lowest set bit
+        }
+        CtxId(m.trailing_zeros() as usize)
+    }
+    /// Position of `c` among the set contexts.
+    fn position(self, c: CtxId) -> Option<usize> {
+        if !self.contains(c) {
+            return None;
+        }
+        let below = self.mask & ((1u64 << (c.0 & 63)) - 1);
+        Some(below.count_ones() as usize)
+    }
+}
+
+/// The simulator.
+pub struct Sim {
+    pub cfg: SimConfig,
+    pub now: Nanos,
+    events: EventQueue,
+    pub ops: Vec<Op>,
+    pub ctxs: Vec<GpuContext>,
+    pub apps: Vec<HostState>,
+    pub workers: Vec<Option<WorkerState>>,
+    pub lock: GpuLock,
+    pub sms: Vec<SmState>,
+    gpu: GpuExec,
+    pub l2: L2State,
+    pub trace: TraceCollector,
+    rng_exec: DetRng,
+    rng_stall: DetRng,
+    next_block_uid: u64,
+    horizon_reached: bool,
+    /// Per-app SM masks (PTB partitioning; all-true otherwise).
+    sm_mask: Vec<Vec<bool>>,
+}
+
+impl Sim {
+    /// Build a simulator running `programs`, one application per program,
+    /// each in its own GPU context with its own default stream (§II-A).
+    pub fn new(cfg: SimConfig, programs: Vec<Program>) -> Self {
+        let n = programs.len();
+        let root = DetRng::new(cfg.seed);
+        let mut ctxs = Vec::with_capacity(n);
+        let mut apps = Vec::with_capacity(n);
+        let mut workers = Vec::with_capacity(n);
+        for (i, prog) in programs.into_iter().enumerate() {
+            let ctx_id = CtxId(i);
+            let mut ctx = GpuContext::new(ctx_id, cfg.platform.callback_threads);
+            let stream = ctx.default_stream();
+            if cfg.strategy == StrategyKind::Worker {
+                let wstream = ctx.create_stream();
+                workers.push(Some(WorkerState::new(wstream)));
+            } else {
+                workers.push(None);
+            }
+            apps.push(HostState::new(prog, ctx_id, stream));
+            ctxs.push(ctx);
+        }
+        let num_sms = cfg.platform.num_sms;
+        // PTB partitioning: split SMs evenly between applications.
+        let sm_mask = (0..n)
+            .map(|i| {
+                (0..num_sms)
+                    .map(|sm| {
+                        if cfg.strategy == StrategyKind::Ptb && n > 1 {
+                            let per = (num_sms / n).max(1);
+                            sm / per == i || (sm / per >= n && i == n - 1)
+                        } else {
+                            true
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        Self {
+            l2: L2State::new(cfg.platform.l2_bytes),
+            sms: vec![SmState::default(); num_sms],
+            rng_exec: root.child(0x45584543), // "EXEC"
+            rng_stall: root.child(0x5354414c), // "STAL"
+            cfg,
+            now: 0,
+            events: EventQueue::new(),
+            ops: Vec::new(),
+            ctxs,
+            apps,
+            workers,
+            lock: GpuLock::new(),
+            gpu: GpuExec::default(),
+            trace: TraceCollector::new(true),
+            next_block_uid: 0,
+            horizon_reached: false,
+            sm_mask,
+        }
+    }
+
+    /// Run to completion: all apps done, or the horizon, whichever first.
+    pub fn run(&mut self) {
+        self.events.push(self.cfg.horizon_ns, Event::Horizon);
+        for i in 0..self.apps.len() {
+            self.events.push(0, Event::HostReady(AppId(i)));
+        }
+        while let Some((t, ev)) = self.events.pop() {
+            debug_assert!(t >= self.now, "time went backwards");
+            self.now = t;
+            if ev == Event::Horizon {
+                self.horizon_reached = true;
+                break;
+            }
+            self.handle(ev);
+            self.pump();
+            if self.apps.iter().all(|a| a.done()) {
+                break;
+            }
+        }
+    }
+
+    pub fn horizon_reached(&self) -> bool {
+        self.horizon_reached
+    }
+
+    // ------------------------------------------------------------------
+    // event handling
+    // ------------------------------------------------------------------
+
+    fn handle(&mut self, ev: Event) {
+        match ev {
+            Event::HostReady(app) => {
+                let a = &mut self.apps[app.0];
+                if a.phase == HostPhase::Busy {
+                    a.phase = HostPhase::Ready;
+                }
+            }
+            Event::WorkerReady(app) => self.worker_on_ready(app),
+            Event::CallbackStart(op) => self.callback_start(op),
+            Event::CallbackDone(op) => self.callback_done(op),
+            Event::BatchDone { block, gen: _ } => self.batch_done(block),
+            Event::CopyDone { op, gen } => self.copy_done(op, gen),
+            Event::QuantumExpire { gen } => self.quantum_expire(gen),
+            Event::SwitchDone { gen } => self.switch_done(gen),
+            Event::StallDone(op) => {
+                self.gpu.stalled.remove(&op);
+            }
+            Event::LockWake => self.lock_wake(),
+            Event::Horizon => unreachable!("handled in run()"),
+        }
+    }
+
+    /// Fix-point pump: keep advancing every subsystem until quiescence.
+    fn pump(&mut self) {
+        for _ in 0..10_000 {
+            let mut changed = false;
+            changed |= self.host_pump();
+            changed |= self.worker_pump();
+            changed |= self.driver_pump();
+            changed |= self.gpu_pump();
+            if !changed {
+                return;
+            }
+        }
+        panic!("pump failed to reach a fix-point (simulator bug)");
+    }
+
+    // ------------------------------------------------------------------
+    // lock
+    // ------------------------------------------------------------------
+
+    /// A sleeping waiter's wakeup completes: grant if the count survived
+    /// the barging window (`GpuLock::acquire` docs). One wake event is
+    /// scheduled per release; the handoff latency is the wake delay.
+    fn lock_wake(&mut self) {
+        let Some(client) = self.lock.grant_next(self.now) else { return };
+        match client {
+            LockClient::Host(app) => {
+                let a = &mut self.apps[app.0];
+                a.holds_lock = true;
+                a.unblock(self.now);
+            }
+            LockClient::Worker(app) => {
+                if let Some(w) = &mut self.workers[app.0] {
+                    if let WorkerPhase::WaitingLock(op) = w.phase {
+                        w.phase = WorkerPhase::LockGranted(op);
+                        self.events.push(self.now, Event::WorkerReady(app));
+                    }
+                }
+            }
+            LockClient::Callback(op) => {
+                self.events
+                    .push(self.now + self.cfg.timing.cb_exec_ns, Event::CallbackDone(op));
+            }
+        }
+    }
+
+    /// `sem_post` + schedule the waiters' wakeup after the handoff delay.
+    /// Driver callback threads wake fast (busy-polling); application
+    /// host/worker threads pay the full cross-process futex latency.
+    fn lock_release(&mut self) {
+        self.lock.release(self.now);
+        if let Some(head) = self.lock.head_waiter() {
+            let delay = match head {
+                LockClient::Callback(_) => self.cfg.timing.cb_wake_ns,
+                _ => self.cfg.timing.lock_handoff_ns,
+            };
+            self.events.push(self.now + delay, Event::LockWake);
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // host threads
+    // ------------------------------------------------------------------
+
+    fn host_pump(&mut self) -> bool {
+        let mut changed = false;
+        for i in 0..self.apps.len() {
+            while self.apps[i].phase == HostPhase::Ready {
+                if self.exec_host_step(AppId(i)) {
+                    changed = true;
+                } else {
+                    break;
+                }
+            }
+        }
+        changed
+    }
+
+    /// Execute the current step of `app`'s program. Returns true if any
+    /// state changed (the step ran or transitioned to a blocking phase).
+    fn exec_host_step(&mut self, app: AppId) -> bool {
+        let Some(step) = self.apps[app.0].current_step().cloned() else {
+            return false;
+        };
+        match step {
+            HostStep::Compute(d) => {
+                // CPU time stolen by driver callbacks is charged here:
+                // callbacks preempt *application computation*, not the
+                // thin routine-call overheads (a host thread blocked at a
+                // barrier yields its core to the callback for free).
+                let steal = std::mem::take(&mut self.apps[app.0].pending_steal_ns);
+                self.host_busy(app, d + steal);
+                self.apps[app.0].advance();
+            }
+            HostStep::MarkCompletion => {
+                let now = self.now;
+                self.apps[app.0].completions.push(now);
+                self.apps[app.0].advance();
+            }
+            HostStep::Launch(k) => return self.routine_launch(app, k),
+            HostStep::Memcpy(c) => return self.routine_memcpy(app, c),
+            HostStep::HostFunc(d) => return self.routine_host_func(app, d),
+            HostStep::Sync => return self.routine_sync(app),
+        }
+        true
+    }
+
+    fn host_busy(&mut self, app: AppId, d: Nanos) {
+        self.apps[app.0].phase = HostPhase::Busy;
+        self.events.push(self.now + d, Event::HostReady(app));
+    }
+
+    /// `cudaLaunchKernel` through the active hook (Alg. 1/3/4/5).
+    fn routine_launch(&mut self, app: AppId, k: KernelDesc) -> bool {
+        let cost = self.cfg.timing.launch_overhead_ns;
+        self.routine_gpu_op(app, OpKind::Kernel(k), cost)
+    }
+
+    /// `cudaMemcpy` through the active hook (Alg. 2 and strategy hooks).
+    fn routine_memcpy(&mut self, app: AppId, c: CopyDesc) -> bool {
+        let cost = self.cfg.timing.launch_overhead_ns + self.cfg.timing.memcpy_call_extra_ns;
+        self.routine_gpu_op(app, OpKind::Copy(c), cost)
+    }
+
+    /// Shared kernel/copy hook body — the strategies differ only here.
+    fn routine_gpu_op(&mut self, app: AppId, kind: OpKind, base_cost: Nanos) -> bool {
+        let stream = self.apps[app.0].stream;
+        match self.cfg.strategy {
+            StrategyKind::None | StrategyKind::Ptb => {
+                let op = self.new_op(app, kind, stream);
+                self.insert_in_stream(op);
+                self.host_busy(app, base_cost);
+                self.apps[app.0].advance();
+            }
+            StrategyKind::Callback => {
+                // Alg. 3: acquire-callback, the op, release-callback.
+                let acq = self.new_op(
+                    app,
+                    OpKind::HostFunc {
+                        exec_ns: self.cfg.timing.cb_exec_ns,
+                        lock_action: LockAction::Acquire,
+                    },
+                    stream,
+                );
+                let op = self.new_op(app, kind, stream);
+                let rel = self.new_op(
+                    app,
+                    OpKind::HostFunc {
+                        exec_ns: self.cfg.timing.cb_exec_ns,
+                        lock_action: LockAction::Release,
+                    },
+                    stream,
+                );
+                self.insert_in_stream(acq);
+                self.insert_in_stream(op);
+                self.insert_in_stream(rel);
+                self.host_busy(app, 3 * base_cost);
+                self.apps[app.0].advance();
+            }
+            StrategyKind::Synced => {
+                // Alg. 4: acquire; insert; sync; release.
+                if !self.apps[app.0].holds_lock {
+                    if self.lock.acquire(LockClient::Host(app), self.now) {
+                        self.apps[app.0].holds_lock = true;
+                    } else {
+                        let now = self.now;
+                        self.apps[app.0].block(HostPhase::WaitingLock, now);
+                        return true;
+                    }
+                }
+                let op = self.new_op(app, kind, stream);
+                self.insert_in_stream(op);
+                let now = self.now;
+                self.apps[app.0].block(HostPhase::WaitingOp(op), now);
+                // pc advances when the op completes (routine is synchronous).
+            }
+            StrategyKind::Worker => {
+                // Alg. 5: deep-copy args, defer to the worker queue.
+                let wstream = self.workers[app.0].as_ref().unwrap().stream;
+                let op = self.new_op(app, kind, wstream);
+                let args_bytes = match &self.ops[op.0 as usize].kind {
+                    OpKind::Kernel(k) => {
+                        // 8 bytes per pointer-ish param; the registry-backed
+                        // layout walk is modelled by the enqueue cost.
+                        8 * (2 + k.name.len() as u64 % 6)
+                    }
+                    _ => 32,
+                };
+                self.workers[app.0].as_mut().unwrap().enqueue(op, args_bytes);
+                self.host_busy(app, base_cost + self.cfg.timing.worker_enqueue_ns);
+                self.apps[app.0].advance();
+            }
+        }
+        true
+    }
+
+    /// An application host-func (the "other ordered operation" of Alg. 7).
+    fn routine_host_func(&mut self, app: AppId, d: Nanos) -> bool {
+        let stream = self.apps[app.0].stream;
+        match self.cfg.strategy {
+            StrategyKind::Worker => {
+                // Alg. 7: sync on worker, then insert in the app stream.
+                if self.workers[app.0].as_ref().unwrap().drained() {
+                    let op = self.new_op(
+                        app,
+                        OpKind::HostFunc { exec_ns: d, lock_action: LockAction::None },
+                        stream,
+                    );
+                    self.insert_in_stream(op);
+                    self.host_busy(app, self.cfg.timing.launch_overhead_ns);
+                    self.apps[app.0].advance();
+                } else {
+                    let now = self.now;
+                    self.apps[app.0].pending_ordered_ns = Some(d);
+                    self.apps[app.0].block(HostPhase::WaitingWorker, now);
+                }
+            }
+            _ => {
+                // Trampoline: pass through unchanged (only kernel/copy are
+                // hooked by the callback/synced strategies).
+                let op = self.new_op(
+                    app,
+                    OpKind::HostFunc { exec_ns: d, lock_action: LockAction::None },
+                    stream,
+                );
+                self.insert_in_stream(op);
+                self.host_busy(app, self.cfg.timing.launch_overhead_ns);
+                self.apps[app.0].advance();
+            }
+        }
+        true
+    }
+
+    /// `cudaDeviceSynchronize` (the burst barrier).
+    fn routine_sync(&mut self, app: AppId) -> bool {
+        let ctx = self.apps[app.0].ctx;
+        let worker_ok = match &self.workers[app.0] {
+            Some(w) => w.drained(),
+            None => true,
+        };
+        if worker_ok && self.ctx_quiescent(ctx) {
+            self.apps[app.0].burst += 1;
+            self.host_busy(app, self.cfg.timing.sync_wakeup_ns);
+            self.apps[app.0].advance();
+        } else {
+            let now = self.now;
+            let phase = if worker_ok { HostPhase::WaitingDevice } else { HostPhase::WaitingWorker };
+            self.apps[app.0].block(phase, now);
+        }
+        true
+    }
+
+    // ------------------------------------------------------------------
+    // worker threads (Alg. 6)
+    // ------------------------------------------------------------------
+
+    fn worker_pump(&mut self) -> bool {
+        let mut changed = false;
+        for i in 0..self.workers.len() {
+            let Some(w) = &self.workers[i] else { continue };
+            if w.phase == WorkerPhase::Idle {
+                if let Some(&op) = w.queue.front() {
+                    // Dequeue cost, plus CPU contention with a busy host
+                    // thread (the worker shares the app's CPU resources).
+                    let mut cost = self.cfg.timing.worker_dequeue_ns;
+                    if self.apps[i].phase == HostPhase::Busy {
+                        cost += self.cfg.timing.worker_contention_ns;
+                    }
+                    let w = self.workers[i].as_mut().unwrap();
+                    w.queue.pop_front();
+                    w.phase = WorkerPhase::Dequeuing(op);
+                    self.events.push(self.now + cost, Event::WorkerReady(AppId(i)));
+                    changed = true;
+                }
+            }
+        }
+        changed
+    }
+
+    fn worker_on_ready(&mut self, app: AppId) {
+        let Some(w) = &self.workers[app.0] else { return };
+        match w.phase {
+            WorkerPhase::Dequeuing(op) => {
+                if self.lock.acquire(LockClient::Worker(app), self.now) {
+                    self.worker_lock_granted_inner(app, op);
+                } else {
+                    self.workers[app.0].as_mut().unwrap().phase =
+                        WorkerPhase::WaitingLock(op);
+                }
+            }
+            WorkerPhase::LockGranted(op) => {
+                self.worker_lock_granted_inner(app, op);
+            }
+            _ => {}
+        }
+    }
+
+    fn worker_lock_granted_inner(&mut self, app: AppId, op: OpUid) {
+        let now = self.now;
+        let w = self.workers[app.0].as_mut().unwrap();
+        w.on_lock_granted(now);
+        w.phase = WorkerPhase::WaitingOp(op);
+        self.insert_in_stream(op);
+    }
+
+    /// Called when a worker's in-flight op completes: release the lock,
+    /// go idle, wake any host blocked on worker drain.
+    fn worker_op_complete(&mut self, app: AppId) {
+        let now = self.now;
+        let w = self.workers[app.0].as_mut().unwrap();
+        w.on_lock_released(now);
+        w.processed += 1;
+        w.phase = WorkerPhase::Idle;
+        self.lock_release();
+        self.wake_worker_waiters(app);
+    }
+
+    fn wake_worker_waiters(&mut self, app: AppId) {
+        if !self.workers[app.0].as_ref().unwrap().drained() {
+            return;
+        }
+        if self.apps[app.0].phase == HostPhase::WaitingWorker {
+            // Barrier or ordered-op wait (Alg. 7).
+            if let Some(d) = self.apps[app.0].pending_ordered_ns.take() {
+                self.apps[app.0].unblock(self.now);
+                let stream = self.apps[app.0].stream;
+                let op = self.new_op(
+                    app,
+                    OpKind::HostFunc { exec_ns: d, lock_action: LockAction::None },
+                    stream,
+                );
+                self.insert_in_stream(op);
+                self.host_busy(app, self.cfg.timing.launch_overhead_ns);
+                self.apps[app.0].advance();
+            } else {
+                // Barrier: also requires ctx quiescence (ordered ops may
+                // still be in the app stream).
+                let ctx = self.apps[app.0].ctx;
+                if self.ctx_quiescent(ctx) {
+                    self.apps[app.0].unblock(self.now);
+                    self.apps[app.0].burst += 1;
+                    self.host_busy(app, self.cfg.timing.sync_wakeup_ns);
+                    self.apps[app.0].advance();
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // op plumbing
+    // ------------------------------------------------------------------
+
+    fn new_op(&mut self, app: AppId, kind: OpKind, stream: StreamId) -> OpUid {
+        let uid = OpUid(self.ops.len() as u64);
+        self.ops.push(Op {
+            uid,
+            app,
+            ctx: self.apps[app.0].ctx,
+            stream,
+            kind,
+            state: OpState::Queued,
+            enqueued_at: self.now,
+            started_at: None,
+            completed_at: None,
+            burst: self.apps[app.0].burst,
+        });
+        uid
+    }
+
+    fn insert_in_stream(&mut self, op: OpUid) {
+        let stream = self.ops[op.0 as usize].stream;
+        self.ctxs[stream.ctx.0].stream_mut(stream).push(op);
+    }
+
+    // ------------------------------------------------------------------
+    // driver front-end: stream heads -> device
+    // ------------------------------------------------------------------
+
+    fn driver_pump(&mut self) -> bool {
+        let mut changed = false;
+        for c in 0..self.ctxs.len() {
+            for s in 0..self.ctxs[c].num_streams() {
+                let sid = StreamId { ctx: CtxId(c), idx: s };
+                let Some(op) = self.ctxs[c].stream(sid).head() else { continue };
+                if self.gpu.stalled.contains(&op) {
+                    continue;
+                }
+                // Dispatch policy: strict FIFO, except that up to
+                // `hw_prefetch_depth` kernels/copies may be pushed past
+                // in-flight callbacks (§VII-B isolation leak), and
+                // callbacks may stack up to the pool size.
+                let (mut pending_cbs, mut in_flight_len) = (0usize, 0usize);
+                for o in self.ctxs[c].stream(sid).in_flight_all() {
+                    in_flight_len += 1;
+                    if matches!(self.ops[o.0 as usize].kind, OpKind::HostFunc { .. }) {
+                        pending_cbs += 1;
+                    }
+                }
+                let non_cb_in_flight = in_flight_len - pending_cbs;
+                match &self.ops[op.0 as usize].kind {
+                    OpKind::Kernel(_) | OpKind::Copy(_) => {
+                        if non_cb_in_flight > 0 {
+                            continue; // a kernel/copy is already in flight
+                        }
+                        if pending_cbs > self.cfg.platform.hw_prefetch_depth {
+                            continue; // too deep past pending callbacks
+                        }
+                        if self.maybe_stall(op) {
+                            changed = true;
+                            continue;
+                        }
+                        self.ctxs[c].stream_mut(sid).begin_past(op);
+                        self.ops[op.0 as usize].state = OpState::Running;
+                        self.gpu.last_activity.insert(CtxId(c), self.now);
+                        self.gpu.stall_checked.remove(&op); // done with dice
+                        if self.ops[op.0 as usize].is_kernel() {
+                            self.admit_kernel(op);
+                        } else {
+                            self.gpu.copy_q.push_back(op);
+                        }
+                        changed = true;
+                    }
+                    OpKind::HostFunc { .. } => {
+                        // The stream position is held until the callback
+                        // body returns (CallbackDone retires it); the
+                        // driver only needs a free pool thread to start.
+                        if non_cb_in_flight > 0 {
+                            continue; // completion order: wait for the op
+                        }
+                        if self.ctxs[c].claim_callback_slot(op).is_some() {
+                            self.ctxs[c].stream_mut(sid).begin_past(op);
+                            self.ops[op.0 as usize].state = OpState::Running;
+                            self.events.push(
+                                self.now + self.cfg.timing.cb_dispatch_ns,
+                                Event::CallbackStart(op),
+                            );
+                            changed = true;
+                        }
+                    }
+                    OpKind::Marker => {
+                        if in_flight_len > 0 {
+                            continue;
+                        }
+                        self.ctxs[c].stream_mut(sid).begin(op);
+                        self.ctxs[c].stream_mut(sid).retire(op);
+                        self.ops[op.0 as usize].started_at = Some(self.now);
+                        self.complete_op(op);
+                        changed = true;
+                    }
+                }
+            }
+        }
+        changed
+    }
+
+    /// Shared-software-queue stall injection (DESIGN.md §5): dispatching
+    /// while another context was recently active at the driver level may
+    /// collide in the shared queues. Returns true if the op got stalled.
+    fn maybe_stall(&mut self, op: OpUid) -> bool {
+        if !self.gpu.stall_checked.insert(op) {
+            return false; // already diced
+        }
+        let ctx = self.ops[op.0 as usize].ctx;
+        let window = self.cfg.timing.stall_window_ns;
+        let exposed = self
+            .gpu
+            .last_activity
+            .iter()
+            .any(|(c, &t)| *c != ctx && self.now.saturating_sub(t) <= window);
+        if !exposed || !self.rng_stall.chance(self.cfg.timing.stall_prob) {
+            return false;
+        }
+        let base = self.op_base_cost(op).max(1_000);
+        let mult = self.rng_stall.pareto(self.cfg.timing.stall_alpha, self.cfg.timing.stall_cap);
+        let dur = (base as f64 * mult) as Nanos;
+        self.gpu.stalled.insert(op);
+        self.trace.stalls.push(StallRecord { op, at: self.now, duration_ns: dur });
+        self.events.push(self.now + dur, Event::StallDone(op));
+        true
+    }
+
+    /// Nominal standalone device cost of an op (stall sizing).
+    fn op_base_cost(&self, op: OpUid) -> Nanos {
+        match &self.ops[op.0 as usize].kind {
+            OpKind::Kernel(k) => {
+                let waves = (k.grid.blocks as u64).div_ceil(
+                    (self.cfg.platform.num_sms
+                        * self.cfg.platform.blocks_resident_per_sm(k.grid.threads_per_block))
+                        as u64
+                        | 1,
+                );
+                waves * k.block_cost_ns
+            }
+            OpKind::Copy(c) => self.cfg.timing.copy_duration_ns(c.bytes),
+            OpKind::HostFunc { exec_ns, .. } => *exec_ns,
+            OpKind::Marker => 0,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // callbacks (driver pool)
+    // ------------------------------------------------------------------
+
+    fn callback_start(&mut self, op: OpUid) {
+        self.ops[op.0 as usize].started_at = Some(self.now);
+        let (exec_ns, action) = match &self.ops[op.0 as usize].kind {
+            OpKind::HostFunc { exec_ns, lock_action } => (*exec_ns, *lock_action),
+            _ => unreachable!("callback_start on non-hostfunc"),
+        };
+        match action {
+            LockAction::Acquire => {
+                if self.lock.acquire(LockClient::Callback(op), self.now) {
+                    self.events
+                        .push(self.now + self.cfg.timing.cb_exec_ns, Event::CallbackDone(op));
+                }
+                // else: blocked in the lock FIFO; lock_pump schedules done.
+            }
+            LockAction::Release => {
+                self.lock_release();
+                self.events
+                    .push(self.now + self.cfg.timing.cb_exec_ns, Event::CallbackDone(op));
+            }
+            LockAction::None => {
+                self.events.push(self.now + exec_ns, Event::CallbackDone(op));
+            }
+        }
+    }
+
+    fn callback_done(&mut self, op: OpUid) {
+        let ctx = self.ops[op.0 as usize].ctx;
+        // Find and free the slot this op held.
+        let slot = self.ctxs[ctx.0]
+            .callback_slots
+            .iter()
+            .position(|s| *s == crate::cudart::context::CallbackSlot::Busy(op))
+            .expect("callback op must hold a slot");
+        self.ctxs[ctx.0].release_callback_slot(slot);
+        // Retire the stream position the callback held (FIFO completion).
+        let sid = self.ops[op.0 as usize].stream;
+        self.ctxs[sid.ctx.0].stream_mut(sid).retire(op);
+        // The callback ran on the application's CPU: charge the steal to
+        // the app's next host compute segment (cache pollution + wakeups).
+        let app = self.ops[op.0 as usize].app;
+        self.apps[app.0].pending_steal_ns += self.cfg.timing.cb_steal_ns;
+        self.complete_op(op);
+    }
+
+    // ------------------------------------------------------------------
+    // GPU: context arbitration + block scheduling + copy engine
+    // ------------------------------------------------------------------
+
+    fn admit_kernel(&mut self, op: OpUid) {
+        let o = &self.ops[op.0 as usize];
+        let k = o.kernel().expect("admit_kernel on non-kernel");
+        self.gpu.run_pool.push(KernelRun {
+            op,
+            ctx: o.ctx,
+            app: o.app,
+            total: k.grid.blocks.max(1),
+            dispatched: 0,
+            done: 0,
+            warps_per_block: k.grid.warps_per_block(self.cfg.platform.warp_size) as usize,
+            block_cost_ns: k.block_cost_ns,
+            pending_cold_ns: 0,
+        });
+    }
+
+    /// Contexts that currently have device work (kernels or frozen
+    /// blocks). Bitmask-based: no allocation on the hot path.
+    fn runnable_ctxs(&self) -> RunnableSet {
+        let mut mask: u64 = 0;
+        for kr in &self.gpu.run_pool {
+            mask |= 1 << (kr.ctx.0 & 63);
+        }
+        for fb in &self.gpu.frozen {
+            mask |= 1 << (fb.ctx.0 & 63);
+        }
+        RunnableSet { mask }
+    }
+
+    fn gpu_pump(&mut self) -> bool {
+        let mut changed = self.copy_pump();
+        if self.gpu.switching {
+            return changed;
+        }
+        let ptb = self.cfg.strategy == StrategyKind::Ptb;
+        let runnable = self.runnable_ctxs();
+        if runnable.is_empty() {
+            return changed;
+        }
+        if ptb {
+            // Spatial partitioning: all contexts co-active on their SM
+            // partitions; no temporal arbitration.
+            for i in 0..runnable.len() {
+                changed |= self.dispatch_blocks(runnable.nth(i));
+            }
+            return changed;
+        }
+        // Temporal arbitration: one active context at a time.
+        let active_has_work = self
+            .gpu
+            .active_ctx
+            .map(|c| runnable.contains(c))
+            .unwrap_or(false);
+        if !active_has_work {
+            // Pick the next runnable context round-robin and switch.
+            let next = runnable.nth(self.gpu.rr_next % runnable.len());
+            self.gpu.rr_next = self.gpu.rr_next.wrapping_add(1);
+            changed |= self.begin_switch(next);
+            return changed;
+        }
+        let active = self.gpu.active_ctx.unwrap();
+        // Arm the preemption quantum while others are waiting.
+        if runnable.len() > 1 && !self.gpu.quantum_armed {
+            self.gpu.quantum_armed = true;
+            self.gpu.quantum_gen += 1;
+            self.events.push(
+                self.now + self.cfg.timing.ctx_quantum_ns,
+                Event::QuantumExpire { gen: self.gpu.quantum_gen },
+            );
+        }
+        changed |= self.dispatch_blocks(active);
+        changed
+    }
+
+    /// Begin a context switch to `next`. Instant when the SMs were idle
+    /// and never owned (cold boot); otherwise costs ctx_switch_ns.
+    fn begin_switch(&mut self, next: CtxId) -> bool {
+        if self.gpu.active_ctx == Some(next) {
+            return false;
+        }
+        let from = self.gpu.active_ctx.or(self.gpu.last_ctx);
+        // A switch away from resident state (frozen blocks to save) costs
+        // the full register save/restore; a drained context hands the SMs
+        // over with a cheap runlist update.
+        let must_save = self
+            .gpu
+            .batches
+            .values()
+            .any(|b| Some(b.ctx) == self.gpu.active_ctx)
+            || self.gpu.frozen.iter().any(|f| Some(f.ctx) == from);
+        let cost = if from.is_some() && from != Some(next) {
+            if must_save {
+                self.cfg.timing.ctx_switch_ns
+            } else {
+                self.cfg.timing.idle_switch_ns
+            }
+        } else {
+            0
+        };
+        self.freeze_active();
+        self.trace.switches.push(SwitchRecord { at: self.now, from, to: next, cost_ns: cost });
+        if cost == 0 {
+            self.activate(next);
+        } else {
+            self.gpu.switching = true;
+            self.gpu.switch_gen += 1;
+            self.gpu.active_ctx = None;
+            self.gpu.pending_next = Some(next);
+            self.events
+                .push(self.now + cost, Event::SwitchDone { gen: self.gpu.switch_gen });
+        }
+        true
+    }
+
+    fn switch_done(&mut self, gen: u64) {
+        if gen != self.gpu.switch_gen || !self.gpu.switching {
+            return;
+        }
+        self.gpu.switching = false;
+        if let Some(next) = self.gpu.pending_next.take() {
+            self.activate(next);
+        }
+    }
+
+    fn activate(&mut self, ctx: CtxId) {
+        self.gpu.active_ctx = Some(ctx);
+        self.gpu.last_ctx = Some(ctx);
+        // CRPD is charged per batch at dispatch time through the L2
+        // model's cold fraction (dispatch_blocks); nothing to do here.
+    }
+
+    /// Freeze all running batches of the active context (state save).
+    fn freeze_active(&mut self) {
+        let Some(active) = self.gpu.active_ctx else { return };
+        let uids: Vec<u64> = self
+            .gpu
+            .batches
+            .values()
+            .filter(|b| b.ctx == active)
+            .map(|b| b.uid.0)
+            .collect();
+        for uid in uids {
+            let b = self.gpu.batches.remove(&uid).unwrap();
+            self.sms[b.sm.0].vacate(b.blocks, b.warps_per_block);
+            self.gpu.frozen.push(FrozenBatch {
+                op: b.op,
+                ctx: b.ctx,
+                app: b.app,
+                blocks: b.blocks,
+                warps_per_block: b.warps_per_block,
+                remaining_ns: b.end_at.saturating_sub(self.now),
+            });
+            // Its BatchDone event is now stale (lookup by uid fails).
+        }
+        self.gpu.quantum_armed = false;
+        self.gpu.active_ctx = None;
+    }
+
+    fn quantum_expire(&mut self, gen: u64) {
+        if gen != self.gpu.quantum_gen || !self.gpu.quantum_armed {
+            return;
+        }
+        self.gpu.quantum_armed = false;
+        let runnable = self.runnable_ctxs();
+        if runnable.len() <= 1 {
+            return; // nobody else waiting anymore
+        }
+        let Some(active) = self.gpu.active_ctx else { return };
+        // Round-robin to the next context after the active one.
+        let pos = runnable.position(active).unwrap_or(0);
+        let next = runnable.nth((pos + 1) % runnable.len());
+        self.begin_switch(next);
+    }
+
+    /// Place pending (and previously frozen) blocks of `ctx` onto SMs.
+    fn dispatch_blocks(&mut self, ctx: CtxId) -> bool {
+        let mut changed = false;
+        // 1. Resume frozen batches first (they keep their progress).
+        let frozen: Vec<FrozenBatch> = {
+            let mut out = Vec::new();
+            let mut i = 0;
+            while i < self.gpu.frozen.len() {
+                if self.gpu.frozen[i].ctx == ctx {
+                    out.push(self.gpu.frozen.remove(i));
+                } else {
+                    i += 1;
+                }
+            }
+            out
+        };
+        for fb in frozen {
+            let sm = self.pick_sm(fb.app, fb.warps_per_block);
+            let crpd = self.cfg.timing.crpd_ns;
+            match sm {
+                Some(sm) => {
+                    self.sms[sm.0].occupy(fb.blocks, fb.warps_per_block);
+                    let dur = fb.remaining_ns + crpd;
+                    self.spawn_batch(fb.op, ctx, fb.app, sm, fb.blocks, fb.warps_per_block, dur, true);
+                    changed = true;
+                }
+                None => {
+                    self.gpu.frozen.push(fb); // no room: stays frozen
+                }
+            }
+        }
+        // 2. Dispatch fresh blocks, kernels in admission order.
+        for i in 0..self.gpu.run_pool.len() {
+            let (op, app, wpb, cost, cold) = {
+                let kr = &self.gpu.run_pool[i];
+                if kr.ctx != ctx || kr.dispatched >= kr.total {
+                    continue;
+                }
+                (kr.op, kr.app, kr.warps_per_block, kr.block_cost_ns, kr.pending_cold_ns)
+            };
+            loop {
+                let remaining = {
+                    let kr = &self.gpu.run_pool[i];
+                    (kr.total - kr.dispatched) as usize
+                };
+                if remaining == 0 {
+                    break;
+                }
+                let Some(sm) = self.pick_sm(app, wpb) else { break };
+                let fit = self.sms[sm.0].fits(&self.cfg.platform, wpb).min(remaining);
+                if fit == 0 {
+                    break;
+                }
+                self.sms[sm.0].occupy(fit, wpb);
+                // First touch of this kernel's working set on the L2.
+                let footprint = match &self.ops[op.0 as usize].kind {
+                    OpKind::Kernel(k) => k.l2_footprint_bytes,
+                    _ => 0,
+                };
+                let cold_frac = if footprint > 0 { self.l2.touch(ctx, footprint) } else { 0.0 };
+                let jit = self.rng_exec.jitter(self.cfg.timing.jitter_amp);
+                let tail = if self.rng_exec.chance(self.cfg.timing.inherent_tail_prob) {
+                    self.rng_exec.pareto(1.0, self.cfg.timing.inherent_tail_cap)
+                } else {
+                    1.0
+                };
+                let dur = (cost as f64 * jit * tail) as Nanos
+                    + cold
+                    + (self.cfg.timing.crpd_ns as f64 * cold_frac) as Nanos;
+                self.gpu.run_pool[i].dispatched += fit as u32;
+                if self.ops[op.0 as usize].started_at.is_none() {
+                    self.ops[op.0 as usize].started_at = Some(self.now);
+                }
+                self.spawn_batch(op, ctx, app, sm, fit, wpb, dur, false);
+                changed = true;
+            }
+            self.gpu.run_pool[i].pending_cold_ns = 0;
+        }
+        if changed {
+            self.gpu.last_activity.insert(ctx, self.now);
+        }
+        changed
+    }
+
+    /// Least-loaded SM allowed for `app` with room for one more block.
+    fn pick_sm(&self, app: AppId, warps_per_block: usize) -> Option<SmId> {
+        let mut best: Option<(usize, usize)> = None; // (used_warps, idx)
+        for (i, sm) in self.sms.iter().enumerate() {
+            if !self.sm_mask[app.0][i] {
+                continue;
+            }
+            if sm.fits(&self.cfg.platform, warps_per_block) == 0 {
+                continue;
+            }
+            match best {
+                Some((w, _)) if sm.used_warps >= w => {}
+                _ => best = Some((sm.used_warps, i)),
+            }
+        }
+        best.map(|(_, i)| SmId(i))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn spawn_batch(
+        &mut self,
+        op: OpUid,
+        ctx: CtxId,
+        app: AppId,
+        sm: SmId,
+        blocks: usize,
+        warps_per_block: usize,
+        dur: Nanos,
+        resumed: bool,
+    ) {
+        self.next_block_uid += 1;
+        let uid = BlockUid(self.next_block_uid);
+        let end = self.now + dur.max(1);
+        self.gpu.batches.insert(
+            uid.0,
+            Batch {
+                uid,
+                op,
+                ctx,
+                app,
+                sm,
+                blocks,
+                warps_per_block,
+                started_at: self.now,
+                end_at: end,
+                resumed,
+            },
+        );
+        self.events.push(end, Event::BatchDone { block: uid, gen: 0 });
+    }
+
+    fn batch_done(&mut self, uid: BlockUid) {
+        let Some(b) = self.gpu.batches.remove(&uid.0) else {
+            return; // stale: batch was frozen/cancelled
+        };
+        self.sms[b.sm.0].vacate(b.blocks, b.warps_per_block);
+        if self.trace.block_level {
+            self.trace.blocks.push(BlockRecord {
+                op: b.op,
+                app: b.app,
+                sm: b.sm,
+                blocks: b.blocks as u32,
+                start: b.started_at,
+                end: self.now,
+                resumed: b.resumed,
+            });
+        }
+        let idx = self
+            .gpu
+            .run_pool
+            .iter()
+            .position(|kr| kr.op == b.op)
+            .expect("batch for unknown kernel");
+        self.gpu.run_pool[idx].done += b.blocks as u32;
+        self.gpu.last_activity.insert(b.ctx, self.now);
+        if self.gpu.run_pool[idx].done >= self.gpu.run_pool[idx].total {
+            let kr = self.gpu.run_pool.remove(idx);
+            // FIFO retirement in the op's stream.
+            let sid = self.ops[kr.op.0 as usize].stream;
+            self.ctxs[sid.ctx.0].stream_mut(sid).retire(kr.op);
+            self.complete_op(kr.op);
+        }
+    }
+
+    fn copy_pump(&mut self) -> bool {
+        if self.gpu.copy_current.is_some() {
+            return false;
+        }
+        let Some(op) = self.gpu.copy_q.pop_front() else { return false };
+        let bytes = match &self.ops[op.0 as usize].kind {
+            OpKind::Copy(c) => c.bytes,
+            _ => unreachable!("copy_pump on non-copy"),
+        };
+        let jit = self.rng_exec.jitter(self.cfg.timing.jitter_amp);
+        let dur = (self.cfg.timing.copy_duration_ns(bytes) as f64 * jit) as Nanos;
+        self.ops[op.0 as usize].started_at = Some(self.now);
+        // Copies stream through the L2, polluting it (§VII-A effects).
+        self.l2.pollute(bytes.min(self.cfg.platform.l2_bytes / 2));
+        self.gpu.copy_current = Some(op);
+        self.gpu.copy_gen += 1;
+        self.events
+            .push(self.now + dur.max(1), Event::CopyDone { op, gen: self.gpu.copy_gen });
+        true
+    }
+
+    fn copy_done(&mut self, op: OpUid, gen: u64) {
+        if self.gpu.copy_current != Some(op) || gen != self.gpu.copy_gen {
+            return;
+        }
+        self.gpu.copy_current = None;
+        let sid = self.ops[op.0 as usize].stream;
+        self.ctxs[sid.ctx.0].stream_mut(sid).retire(op);
+        let ctx = self.ops[op.0 as usize].ctx;
+        self.gpu.last_activity.insert(ctx, self.now);
+        self.complete_op(op);
+    }
+
+    // ------------------------------------------------------------------
+    // op completion + wakeups
+    // ------------------------------------------------------------------
+
+    fn complete_op(&mut self, op: OpUid) {
+        {
+            let o = &mut self.ops[op.0 as usize];
+            o.state = OpState::Complete;
+            if o.started_at.is_none() {
+                o.started_at = Some(self.now);
+            }
+            o.completed_at = Some(self.now);
+        }
+        let o = self.ops[op.0 as usize].clone();
+        self.trace.ops.push(OpRecord {
+            op,
+            app: o.app,
+            kernel_name: o.kernel().map(|k| k.name.clone()),
+            is_kernel: o.is_kernel(),
+            is_copy: o.is_copy(),
+            enqueued_at: o.enqueued_at,
+            started_at: o.started_at.unwrap(),
+            completed_at: self.now,
+            burst: o.burst,
+        });
+
+        // Wake a synced-strategy host waiting on this op.
+        for i in 0..self.apps.len() {
+            if self.apps[i].phase == HostPhase::WaitingOp(op) {
+                debug_assert!(self.apps[i].holds_lock);
+                self.apps[i].holds_lock = false;
+                self.lock_release();
+                self.apps[i].unblock(self.now);
+                self.apps[i].advance();
+                self.host_busy(AppId(i), self.cfg.timing.sync_wakeup_ns);
+            }
+        }
+        // Wake a worker waiting on this op.
+        for i in 0..self.workers.len() {
+            if let Some(w) = &self.workers[i] {
+                if w.phase == WorkerPhase::WaitingOp(op) {
+                    self.worker_op_complete(AppId(i));
+                }
+            }
+        }
+        // Wake hosts blocked on a device barrier (either directly, or via
+        // the worker-drain phase when the drain already happened and only
+        // stream quiescence was missing).
+        for i in 0..self.apps.len() {
+            let barrier_wait = match self.apps[i].phase {
+                HostPhase::WaitingDevice => true,
+                HostPhase::WaitingWorker => self.apps[i].pending_ordered_ns.is_none(),
+                _ => false,
+            };
+            if barrier_wait {
+                let ctx = self.apps[i].ctx;
+                let worker_ok = match &self.workers[i] {
+                    Some(w) => w.drained(),
+                    None => true,
+                };
+                if worker_ok && self.ctx_quiescent(ctx) {
+                    self.apps[i].unblock(self.now);
+                    self.apps[i].burst += 1;
+                    self.apps[i].advance();
+                    self.host_busy(AppId(i), self.cfg.timing.sync_wakeup_ns);
+                }
+            }
+        }
+    }
+
+    /// Nothing of `ctx` anywhere in the stack: streams, run pool, copies,
+    /// callbacks, stalls.
+    pub fn ctx_quiescent(&self, ctx: CtxId) -> bool {
+        if !self.ctxs[ctx.0].quiescent() {
+            return false;
+        }
+        if self.gpu.run_pool.iter().any(|kr| kr.ctx == ctx) {
+            return false;
+        }
+        if self.gpu.frozen.iter().any(|fb| fb.ctx == ctx) {
+            return false;
+        }
+        if let Some(op) = self.gpu.copy_current {
+            if self.ops[op.0 as usize].ctx == ctx {
+                return false;
+            }
+        }
+        if self
+            .gpu
+            .copy_q
+            .iter()
+            .any(|op| self.ops[op.0 as usize].ctx == ctx)
+        {
+            return false;
+        }
+        true
+    }
+
+    /// Inferences-per-second input: completion timestamps per app.
+    pub fn completions(&self, app: AppId) -> &[Nanos] {
+        &self.apps[app.0].completions
+    }
+}

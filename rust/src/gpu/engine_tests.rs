@@ -1,0 +1,248 @@
+//! Engine-level tests: single-app progress, strategy behaviours,
+//! invariants the rest of the evaluation relies on.
+
+use super::engine::Sim;
+use crate::apps::program::{Program, RepeatMode};
+use crate::config::{SimConfig, StrategyKind};
+use crate::cudart::{Grid, KernelDesc};
+use crate::util::AppId;
+
+fn kernel() -> KernelDesc {
+    KernelDesc::compute("test_k", Grid::new(16, 256), 20_000)
+        .with_l2_footprint(256 * 1024)
+}
+
+fn burst_program(n: usize) -> Program {
+    Program::kernel_burst("bench", kernel(), n)
+}
+
+fn cfg(strategy: StrategyKind) -> SimConfig {
+    SimConfig::default().with_strategy(strategy).with_seed(42)
+}
+
+fn run(strategy: StrategyKind, programs: Vec<Program>) -> Sim {
+    let mut sim = Sim::new(cfg(strategy), programs);
+    sim.run();
+    sim
+}
+
+#[test]
+fn single_app_single_kernel_completes() {
+    let p = Program::new("one", RepeatMode::Once)
+        .launch(kernel())
+        .sync()
+        .mark_completion();
+    let sim = run(StrategyKind::None, vec![p]);
+    assert!(!sim.horizon_reached(), "must finish before horizon");
+    assert_eq!(sim.completions(AppId(0)).len(), 1);
+    let kt = sim.trace.kernel_exec_times(AppId(0));
+    assert_eq!(kt.len(), 1);
+    assert!(kt[0] > 0);
+}
+
+#[test]
+fn burst_runs_all_kernels_in_order() {
+    let sim = run(StrategyKind::None, vec![burst_program(10)]);
+    let recs: Vec<_> = sim.trace.kernel_ops(AppId(0)).collect();
+    assert_eq!(recs.len(), 10);
+    // FIFO: starts must be non-decreasing and each op starts after the
+    // previous completed (single stream).
+    for w in recs.windows(2) {
+        assert!(w[1].started_at >= w[0].completed_at, "stream FIFO violated");
+    }
+}
+
+#[test]
+fn copies_and_kernels_complete() {
+    let p = Program::new("mix", RepeatMode::Once)
+        .memcpy_h2d(1 << 20)
+        .launch(kernel())
+        .memcpy_d2h(1 << 16)
+        .sync()
+        .mark_completion();
+    let sim = run(StrategyKind::None, vec![p]);
+    assert_eq!(sim.completions(AppId(0)).len(), 1);
+    let copies = sim.trace.ops.iter().filter(|r| r.is_copy).count();
+    assert_eq!(copies, 2);
+}
+
+#[test]
+fn all_strategies_complete_the_same_workload() {
+    for s in StrategyKind::ALL {
+        let sim = run(s, vec![burst_program(20)]);
+        assert_eq!(
+            sim.trace.kernel_ops(AppId(0)).count(),
+            20,
+            "strategy {s} lost kernels"
+        );
+        assert_eq!(sim.completions(AppId(0)).len(), 1, "strategy {s}");
+    }
+}
+
+#[test]
+fn parallel_apps_complete_under_all_strategies() {
+    for s in StrategyKind::ALL {
+        let sim = run(s, vec![burst_program(15), burst_program(15)]);
+        for a in 0..2 {
+            assert_eq!(
+                sim.trace.kernel_ops(AppId(a)).count(),
+                15,
+                "strategy {s} app {a}"
+            );
+            assert_eq!(sim.completions(AppId(a)).len(), 1, "strategy {s} app {a}");
+        }
+    }
+}
+
+#[test]
+fn synced_and_worker_isolate_parallel_kernels() {
+    for s in [StrategyKind::Synced, StrategyKind::Worker] {
+        let sim = run(s, vec![burst_program(25), burst_program(25)]);
+        assert_eq!(
+            sim.trace.cross_app_kernel_overlaps(),
+            0,
+            "{s} must isolate GPU operations (§VII-B)"
+        );
+    }
+}
+
+#[test]
+fn none_overlaps_parallel_kernels() {
+    let sim = run(StrategyKind::None, vec![burst_program(40), burst_program(40)]);
+    assert!(
+        sim.trace.cross_app_kernel_overlaps() > 0,
+        "unmitigated parallel execution must interleave kernels"
+    );
+}
+
+#[test]
+fn parallel_is_slower_than_isolation() {
+    let iso = run(StrategyKind::None, vec![burst_program(50)]);
+    let par = run(StrategyKind::None, vec![burst_program(50), burst_program(50)]);
+    let iso_end = *iso.completions(AppId(0)).last().unwrap();
+    let par_end = *par.completions(AppId(0)).last().unwrap();
+    assert!(
+        par_end > iso_end * 3 / 2,
+        "sharing the GPU must cost >1.5x (got {iso_end} vs {par_end})"
+    );
+}
+
+#[test]
+fn deterministic_same_seed_same_trace() {
+    let a = run(StrategyKind::None, vec![burst_program(30), burst_program(30)]);
+    let b = run(StrategyKind::None, vec![burst_program(30), burst_program(30)]);
+    assert_eq!(a.trace.ops.len(), b.trace.ops.len());
+    for (x, y) in a.trace.ops.iter().zip(&b.trace.ops) {
+        assert_eq!(x.started_at, y.started_at);
+        assert_eq!(x.completed_at, y.completed_at);
+    }
+}
+
+#[test]
+fn different_seeds_differ() {
+    let mut c1 = cfg(StrategyKind::None);
+    c1.seed = 1;
+    let mut s1 = Sim::new(c1, vec![burst_program(30)]);
+    s1.run();
+    let mut c2 = cfg(StrategyKind::None);
+    c2.seed = 2;
+    let mut s2 = Sim::new(c2, vec![burst_program(30)]);
+    s2.run();
+    let t1: u64 = s1.trace.kernel_exec_times(AppId(0)).iter().sum();
+    let t2: u64 = s2.trace.kernel_exec_times(AppId(0)).iter().sum();
+    assert_ne!(t1, t2, "jitter must depend on the seed");
+}
+
+#[test]
+fn context_switches_recorded_in_parallel_none() {
+    let sim = run(StrategyKind::None, vec![burst_program(40), burst_program(40)]);
+    assert!(
+        sim.trace.switches.len() >= 2,
+        "time-slicing two contexts must record switches, got {}",
+        sim.trace.switches.len()
+    );
+}
+
+#[test]
+fn looping_program_stops_at_horizon() {
+    let p = Program::new("loop", RepeatMode::LoopUntilHorizon)
+        .compute(1_000)
+        .launch(kernel())
+        .sync()
+        .mark_completion();
+    let mut c = cfg(StrategyKind::None);
+    c.horizon_ns = 50_000_000; // 50 ms
+    let mut sim = Sim::new(c, vec![p]);
+    sim.run();
+    assert!(sim.horizon_reached());
+    assert!(sim.completions(AppId(0)).len() > 10);
+}
+
+#[test]
+fn worker_strategy_ordered_op_waits_for_drain() {
+    // HostFunc between launches must not overtake deferred kernels.
+    let p = Program::new("ordered", RepeatMode::Once)
+        .launch(kernel())
+        .host_func(5_000)
+        .launch(kernel())
+        .sync()
+        .mark_completion();
+    let sim = run(StrategyKind::Worker, vec![p]);
+    assert_eq!(sim.completions(AppId(0)).len(), 1);
+    // The host-func must complete after kernel 1 completes.
+    let k1_done = sim
+        .trace
+        .ops
+        .iter()
+        .filter(|r| r.is_kernel)
+        .map(|r| r.completed_at)
+        .min()
+        .unwrap();
+    let hf = sim
+        .trace
+        .ops
+        .iter()
+        .find(|r| !r.is_kernel && !r.is_copy)
+        .expect("host func record");
+    assert!(hf.started_at >= k1_done, "Alg. 7 ordering violated");
+}
+
+#[test]
+fn completion_times_strictly_increase() {
+    let p = Program::new("loop", RepeatMode::LoopUntilHorizon)
+        .compute(10_000)
+        .launch(kernel())
+        .sync()
+        .mark_completion();
+    let mut c = cfg(StrategyKind::None);
+    c.horizon_ns = 100_000_000;
+    let mut sim = Sim::new(c, vec![p]);
+    sim.run();
+    let comps = sim.completions(AppId(0));
+    for w in comps.windows(2) {
+        assert!(w[1] > w[0]);
+    }
+}
+
+#[test]
+fn ptb_partitions_sms() {
+    let sim = run(StrategyKind::Ptb, vec![burst_program(10), burst_program(10)]);
+    // With block-level tracing on, every batch of app0 must sit on SMs 0-3
+    // and app1 on SMs 4-7.
+    assert!(!sim.trace.blocks.is_empty());
+    for b in &sim.trace.blocks {
+        if b.app == AppId(0) {
+            assert!(b.sm.0 < 4, "app0 escaped its PTB partition: sm{}", b.sm.0);
+        } else {
+            assert!(b.sm.0 >= 4, "app1 escaped its PTB partition: sm{}", b.sm.0);
+        }
+    }
+}
+
+#[test]
+fn lock_cycles_balance_under_synced() {
+    let sim = run(StrategyKind::Synced, vec![burst_program(12), burst_program(12)]);
+    // Every grant must have a matching release (24 ops + copies = none).
+    assert_eq!(sim.lock.grants.len(), sim.lock.releases.len());
+    assert_eq!(sim.lock.grants.len(), 24);
+}

@@ -1,0 +1,111 @@
+//! Discrete-event core: the event kinds and the time-ordered queue.
+//!
+//! Events that can be invalidated by state changes (batch completions,
+//! quantum expiries) carry a generation counter; handlers drop events whose
+//! generation no longer matches — the standard DES cancellation idiom,
+//! cheaper than removing entries from the heap.
+
+use crate::util::{AppId, BlockUid, Nanos, OpUid};
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Everything that can be scheduled in virtual time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Event {
+    /// A host thread finishes its current compute segment / wakes up.
+    HostReady(AppId),
+    /// A worker thread wakes up (deferred-worker strategy).
+    WorkerReady(AppId),
+    /// A host-func callback begins executing on a callback-pool thread.
+    CallbackStart(OpUid),
+    /// A host-func callback body returns.
+    CallbackDone(OpUid),
+    /// A batch of thread blocks completes on an SM.
+    BatchDone { block: BlockUid, gen: u64 },
+    /// A copy-engine transfer completes.
+    CopyDone { op: OpUid, gen: u64 },
+    /// The context-scheduling quantum expires.
+    QuantumExpire { gen: u64 },
+    /// A context switch (state save/restore) completes.
+    SwitchDone { gen: u64 },
+    /// A software-stack stall delaying an op's dispatch ends.
+    StallDone(OpUid),
+    /// A sleeping GPU-lock waiter finishes waking up (sem_post latency);
+    /// grants happen here, letting fresh acquires barge in the meantime.
+    LockWake,
+    /// End of the measurement horizon.
+    Horizon,
+}
+
+/// Min-heap of (time, seq, event). The monotonically increasing sequence
+/// number makes ordering of simultaneous events deterministic (insertion
+/// order), which keeps whole runs bit-reproducible.
+#[derive(Debug, Default)]
+pub struct EventQueue {
+    heap: BinaryHeap<Reverse<(Nanos, u64, Event)>>,
+    seq: u64,
+}
+
+impl EventQueue {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, at: Nanos, ev: Event) {
+        self.seq += 1;
+        self.heap.push(Reverse((at, self.seq, ev)));
+    }
+
+    pub fn pop(&mut self) -> Option<(Nanos, Event)> {
+        self.heap.pop().map(|Reverse((t, _, e))| (t, e))
+    }
+
+    pub fn peek_time(&self) -> Option<Nanos> {
+        self.heap.peek().map(|Reverse((t, _, _))| *t)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(30, Event::Horizon);
+        q.push(10, Event::HostReady(AppId(0)));
+        q.push(20, Event::WorkerReady(AppId(1)));
+        assert_eq!(q.pop(), Some((10, Event::HostReady(AppId(0)))));
+        assert_eq!(q.pop(), Some((20, Event::WorkerReady(AppId(1)))));
+        assert_eq!(q.pop(), Some((30, Event::Horizon)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn simultaneous_events_keep_insertion_order() {
+        let mut q = EventQueue::new();
+        q.push(5, Event::HostReady(AppId(0)));
+        q.push(5, Event::HostReady(AppId(1)));
+        q.push(5, Event::HostReady(AppId(2)));
+        assert_eq!(q.pop().unwrap().1, Event::HostReady(AppId(0)));
+        assert_eq!(q.pop().unwrap().1, Event::HostReady(AppId(1)));
+        assert_eq!(q.pop().unwrap().1, Event::HostReady(AppId(2)));
+    }
+
+    #[test]
+    fn peek_time() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.peek_time(), None);
+        q.push(42, Event::Horizon);
+        assert_eq!(q.peek_time(), Some(42));
+        assert_eq!(q.len(), 1);
+    }
+}

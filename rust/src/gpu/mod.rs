@@ -1,0 +1,12 @@
+//! The Volta GPU discrete-event simulator (the paper's physical testbed,
+//! rebuilt as a deterministic model — see DESIGN.md substitution table).
+
+pub mod cache;
+pub mod engine;
+pub mod event;
+pub mod sm;
+
+pub use engine::Sim;
+
+#[cfg(test)]
+mod engine_tests;

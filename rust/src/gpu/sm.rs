@@ -1,0 +1,106 @@
+//! Per-SM residency accounting (§II-B limits).
+//!
+//! The block scheduler fits batches of thread blocks onto SMs subject to
+//! the Volta residency limits: at most 32 blocks and 64 warps resident per
+//! SM. Only the *active* context's batches occupy SMs — on a context
+//! switch all register state is saved and residency resets (which is
+//! precisely why switches are costly, §VII-B).
+
+use crate::config::PlatformConfig;
+
+/// Dynamic residency state of one SM.
+#[derive(Debug, Clone, Default)]
+pub struct SmState {
+    pub used_blocks: usize,
+    pub used_warps: usize,
+}
+
+impl SmState {
+    /// How many more blocks of `warps_per_block` warps fit right now.
+    pub fn fits(&self, plat: &PlatformConfig, warps_per_block: usize) -> usize {
+        let by_blocks = plat.max_blocks_per_sm.saturating_sub(self.used_blocks);
+        if warps_per_block == 0 {
+            return by_blocks;
+        }
+        let by_warps =
+            plat.max_warps_per_sm.saturating_sub(self.used_warps) / warps_per_block;
+        by_blocks.min(by_warps)
+    }
+
+    pub fn occupy(&mut self, blocks: usize, warps_per_block: usize) {
+        self.used_blocks += blocks;
+        self.used_warps += blocks * warps_per_block;
+    }
+
+    pub fn vacate(&mut self, blocks: usize, warps_per_block: usize) {
+        assert!(self.used_blocks >= blocks, "SM block underflow");
+        assert!(self.used_warps >= blocks * warps_per_block, "SM warp underflow");
+        self.used_blocks -= blocks;
+        self.used_warps -= blocks * warps_per_block;
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.used_blocks == 0 && self.used_warps == 0
+    }
+
+    /// Warp occupancy in [0, 1] (utilization metric).
+    pub fn warp_occupancy(&self, plat: &PlatformConfig) -> f64 {
+        self.used_warps as f64 / plat.max_warps_per_sm as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plat() -> PlatformConfig {
+        PlatformConfig::default()
+    }
+
+    #[test]
+    fn fits_respects_both_limits() {
+        let p = plat();
+        let sm = SmState::default();
+        // 32-warp blocks (1024 threads): warp limit binds -> 2.
+        assert_eq!(sm.fits(&p, 32), 2);
+        // 1-warp blocks: block limit binds -> 32.
+        assert_eq!(sm.fits(&p, 1), 32);
+    }
+
+    #[test]
+    fn occupy_vacate_roundtrip() {
+        let p = plat();
+        let mut sm = SmState::default();
+        let n = sm.fits(&p, 8); // 8 blocks of 8 warps
+        assert_eq!(n, 8);
+        sm.occupy(n, 8);
+        assert_eq!(sm.fits(&p, 8), 0);
+        assert!((sm.warp_occupancy(&p) - 1.0).abs() < 1e-9);
+        sm.vacate(n, 8);
+        assert!(sm.is_empty());
+    }
+
+    #[test]
+    fn partial_occupancy_leaves_room() {
+        let p = plat();
+        let mut sm = SmState::default();
+        sm.occupy(4, 8); // 32 warps used
+        assert_eq!(sm.fits(&p, 8), 4);
+        assert_eq!(sm.fits(&p, 32), 1);
+        assert!((sm.warp_occupancy(&p) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "underflow")]
+    fn vacate_underflow_panics() {
+        let mut sm = SmState::default();
+        sm.vacate(1, 1);
+    }
+
+    #[test]
+    fn zero_warp_blocks_limited_by_block_count() {
+        let p = plat();
+        let sm = SmState::default();
+        assert_eq!(sm.fits(&p, 0), p.max_blocks_per_sm);
+    }
+}

@@ -1,0 +1,9 @@
+//! Experiment harness: configuration specs (§VI-D), the runner, and the
+//! figure/table emitters that regenerate the paper's evaluation.
+
+pub mod figures;
+pub mod runner;
+pub mod spec;
+
+pub use runner::{run_spec, run_spec_pooled, RunResult};
+pub use spec::{Bench, ExperimentSpec, Isol, RunProtocol};

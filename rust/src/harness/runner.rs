@@ -1,0 +1,150 @@
+//! Experiment runner: spec -> simulated run -> extracted metrics.
+
+use super::spec::ExperimentSpec;
+use crate::gpu::Sim;
+use crate::metrics::stats::BoxStats;
+use crate::metrics::{ips_with_warmup, net_per_kernel};
+use crate::trace::chronogram::Chronogram;
+use crate::util::AppId;
+
+/// Everything a figure/table needs from one run.
+#[derive(Debug)]
+pub struct RunResult {
+    pub spec: ExperimentSpec,
+    pub seed: u64,
+    /// Per-instance NET samples (eq. 1).
+    pub net: Vec<Vec<f64>>,
+    /// Per-instance IPS over the measurement window (eq. 2).
+    pub ips: Vec<f64>,
+    /// Per-instance kernel counts (sanity/coverage).
+    pub kernels: Vec<usize>,
+    /// Chronogram of the run (Fig. 11 input).
+    pub chronogram: Chronogram,
+    /// Cross-app kernel overlap count (isolation check, §VII-B).
+    pub overlaps: usize,
+    /// Context switches observed.
+    pub switches: usize,
+    /// Software-stack stalls injected.
+    pub stalls: usize,
+}
+
+impl RunResult {
+    /// Boxplot summary per instance (Figs. 9/10 rendering input).
+    pub fn net_box(&self, instance: usize) -> Option<BoxStats> {
+        let v = &self.net[instance];
+        if v.is_empty() {
+            None
+        } else {
+            Some(BoxStats::from(v))
+        }
+    }
+
+    /// Worst NET across all instances.
+    pub fn max_net(&self) -> f64 {
+        self.net
+            .iter()
+            .flatten()
+            .copied()
+            .fold(1.0, f64::max)
+    }
+
+    /// Fraction of kernels above a NET threshold, pooled over instances.
+    pub fn frac_net_above(&self, threshold: f64) -> f64 {
+        let all: Vec<f64> = self.net.iter().flatten().copied().collect();
+        BoxStats::frac_above(&all, threshold)
+    }
+}
+
+/// Run one experiment configuration.
+pub fn run_spec(spec: ExperimentSpec, seed: u64) -> RunResult {
+    let programs = spec.programs();
+    let n = programs.len();
+    let mut sim = Sim::new(spec.sim_config(seed), programs);
+    sim.run();
+
+    let protocol = spec.bench.protocol();
+    let mut net = Vec::new();
+    let mut ips = Vec::new();
+    let mut kernels = Vec::new();
+    for a in 0..n {
+        net.push(net_per_kernel(&sim.trace, AppId(a)));
+        ips.push(ips_with_warmup(
+            sim.completions(AppId(a)),
+            protocol.warmup_ns,
+            protocol.window_ns,
+        ));
+        kernels.push(sim.trace.kernel_ops(AppId(a)).count());
+    }
+    RunResult {
+        spec,
+        seed,
+        net,
+        ips,
+        kernels,
+        chronogram: Chronogram::from_trace(&sim.trace, n),
+        overlaps: sim.trace.cross_app_kernel_overlaps(),
+        switches: sim.trace.switches.len(),
+        stalls: sim.trace.stalls.len(),
+    }
+}
+
+/// Run a spec across several seeds and pool the NET samples (the paper
+/// collects one long run; pooling seeds tightens the tails we report).
+pub fn run_spec_pooled(spec: ExperimentSpec, seeds: &[u64]) -> RunResult {
+    assert!(!seeds.is_empty());
+    let mut base = run_spec(spec, seeds[0]);
+    for &s in &seeds[1..] {
+        let r = run_spec(spec, s);
+        for (acc, more) in base.net.iter_mut().zip(r.net) {
+            acc.extend(more);
+        }
+        for (acc, more) in base.ips.iter_mut().zip(r.ips) {
+            *acc = (*acc + more) / 2.0;
+        }
+        base.overlaps += r.overlaps;
+        base.switches += r.switches;
+        base.stalls += r.stalls;
+    }
+    base
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StrategyKind;
+    use crate::harness::spec::{Bench, Isol};
+
+    #[test]
+    fn mmult_isolation_none_runs() {
+        let spec = ExperimentSpec::new(Bench::CudaMmult, Isol::Isolation, StrategyKind::None);
+        let r = run_spec(spec, 7);
+        assert_eq!(r.kernels[0], crate::apps::mmult::LAUNCHES);
+        assert!(r.net_box(0).is_some());
+        assert_eq!(r.overlaps, 0);
+    }
+
+    #[test]
+    fn mmult_parallel_synced_isolates() {
+        let spec = ExperimentSpec::new(Bench::CudaMmult, Isol::Parallel, StrategyKind::Synced);
+        let r = run_spec(spec, 7);
+        assert_eq!(r.overlaps, 0, "synced must isolate");
+        assert!(!r.chronogram.has_cross_lane_overlap());
+    }
+
+    #[test]
+    fn mmult_parallel_none_overlaps_and_switches() {
+        let spec = ExperimentSpec::new(Bench::CudaMmult, Isol::Parallel, StrategyKind::None);
+        let r = run_spec(spec, 7);
+        assert!(r.overlaps > 0);
+        assert!(r.switches > 0);
+        assert!(r.chronogram.has_cross_lane_overlap());
+    }
+
+    #[test]
+    fn pooled_run_accumulates_net() {
+        let spec = ExperimentSpec::new(Bench::CudaMmult, Isol::Isolation, StrategyKind::None);
+        let single = run_spec(spec, 1);
+        let pooled = run_spec_pooled(spec, &[1, 2]);
+        assert_eq!(pooled.net[0].len(), 2 * single.net[0].len());
+    }
+}

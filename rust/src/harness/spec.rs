@@ -1,0 +1,197 @@
+//! Experiment specifications (§VI-D): `bench-isol-strategy` configuration
+//! naming, e.g. `cuda_mmult-parallel-synced`.
+
+use crate::apps::{dna, mmult, Program};
+use crate::config::{SimConfig, StrategyKind};
+use std::fmt;
+use std::str::FromStr;
+
+/// Which benchmark application.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Bench {
+    CudaMmult,
+    OnnxDna,
+}
+
+impl Bench {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Bench::CudaMmult => "cuda_mmult",
+            Bench::OnnxDna => "onnx_dna",
+        }
+    }
+
+    pub fn program(&self) -> Program {
+        match self {
+            Bench::CudaMmult => mmult::program(),
+            Bench::OnnxDna => dna::program(),
+        }
+    }
+
+    /// Measurement protocol (§VI-C): mmult is a single run; dna samples a
+    /// 60 s window after 30 s warm-up. Scaled-down defaults keep the whole
+    /// evaluation tractable; the full protocol is available via
+    /// `RunProtocol::paper_scale`.
+    pub fn protocol(&self) -> RunProtocol {
+        match self {
+            Bench::CudaMmult => RunProtocol { warmup_ns: 0, window_ns: 2_000_000_000 },
+            Bench::OnnxDna => RunProtocol {
+                warmup_ns: 1_000_000_000,  // paper: 30 s
+                window_ns: 4_000_000_000,  // paper: 60 s
+            },
+        }
+    }
+}
+
+/// Isolation vs parallel (2 mirrored instances, §VI-D).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Isol {
+    Isolation,
+    Parallel,
+}
+
+impl Isol {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Isol::Isolation => "isolation",
+            Isol::Parallel => "parallel",
+        }
+    }
+
+    pub fn instances(&self) -> usize {
+        match self {
+            Isol::Isolation => 1,
+            Isol::Parallel => 2,
+        }
+    }
+}
+
+/// Warm-up + measurement window.
+#[derive(Debug, Clone, Copy)]
+pub struct RunProtocol {
+    pub warmup_ns: u64,
+    pub window_ns: u64,
+}
+
+impl RunProtocol {
+    /// The paper's full protocol (30 s warm-up, 60 s window).
+    pub fn paper_scale() -> Self {
+        Self { warmup_ns: 30_000_000_000, window_ns: 60_000_000_000 }
+    }
+}
+
+/// A full experiment configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ExperimentSpec {
+    pub bench: Bench,
+    pub isol: Isol,
+    pub strategy: StrategyKind,
+}
+
+impl ExperimentSpec {
+    pub fn new(bench: Bench, isol: Isol, strategy: StrategyKind) -> Self {
+        Self { bench, isol, strategy }
+    }
+
+    /// The 16 configurations of Figures 9/10 + Table I (2 benches x 2
+    /// isolation modes x 4 strategies).
+    pub fn paper_grid() -> Vec<ExperimentSpec> {
+        let mut v = Vec::new();
+        for bench in [Bench::CudaMmult, Bench::OnnxDna] {
+            for isol in [Isol::Isolation, Isol::Parallel] {
+                for strategy in StrategyKind::PAPER_SET {
+                    v.push(Self::new(bench, isol, strategy));
+                }
+            }
+        }
+        v
+    }
+
+    pub fn programs(&self) -> Vec<Program> {
+        (0..self.isol.instances()).map(|_| self.bench.program()).collect()
+    }
+
+    pub fn sim_config(&self, seed: u64) -> SimConfig {
+        let protocol = self.bench.protocol();
+        SimConfig::default()
+            .with_strategy(self.strategy)
+            .with_seed(seed)
+            .with_horizon_ns(protocol.warmup_ns + protocol.window_ns)
+    }
+}
+
+impl fmt::Display for ExperimentSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}-{}-{}", self.bench.name(), self.isol.name(), self.strategy)
+    }
+}
+
+impl FromStr for ExperimentSpec {
+    type Err = String;
+
+    /// Parse `bench-isol-strategy` (strategy may itself not contain '-').
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let (rest, strategy) = s
+            .rsplit_once('-')
+            .ok_or_else(|| format!("bad spec '{s}': expected bench-isol-strategy"))?;
+        let (bench, isol) = rest
+            .rsplit_once('-')
+            .ok_or_else(|| format!("bad spec '{s}': expected bench-isol-strategy"))?;
+        let bench = match bench {
+            "cuda_mmult" => Bench::CudaMmult,
+            "onnx_dna" => Bench::OnnxDna,
+            other => return Err(format!("unknown bench '{other}'")),
+        };
+        let isol = match isol {
+            "isolation" => Isol::Isolation,
+            "parallel" => Isol::Parallel,
+            other => return Err(format!("unknown isolation mode '{other}'")),
+        };
+        let strategy: StrategyKind = strategy.parse()?;
+        Ok(Self { bench, isol, strategy })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_parse_roundtrip() {
+        for spec in ExperimentSpec::paper_grid() {
+            let name = spec.to_string();
+            let back: ExperimentSpec = name.parse().unwrap();
+            assert_eq!(back, spec, "{name}");
+        }
+    }
+
+    #[test]
+    fn paper_grid_is_sixteen() {
+        assert_eq!(ExperimentSpec::paper_grid().len(), 16);
+    }
+
+    #[test]
+    fn example_from_paper() {
+        let s: ExperimentSpec = "cuda_mmult-parallel-synced".parse().unwrap();
+        assert_eq!(s.bench, Bench::CudaMmult);
+        assert_eq!(s.isol, Isol::Parallel);
+        assert_eq!(s.strategy, StrategyKind::Synced);
+        assert_eq!(s.programs().len(), 2);
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        assert!("nope".parse::<ExperimentSpec>().is_err());
+        assert!("cuda_mmult-sideways-none".parse::<ExperimentSpec>().is_err());
+        assert!("mystery-parallel-none".parse::<ExperimentSpec>().is_err());
+        assert!("cuda_mmult-parallel-mps".parse::<ExperimentSpec>().is_err());
+    }
+
+    #[test]
+    fn horizon_covers_protocol() {
+        let s: ExperimentSpec = "onnx_dna-isolation-none".parse().unwrap();
+        let cfg = s.sim_config(0);
+        let p = s.bench.protocol();
+        assert_eq!(cfg.horizon_ns, p.warmup_ns + p.window_ns);
+    }
+}

@@ -1,0 +1,171 @@
+//! Hook conditions: which symbols each template applies to (§V-A).
+//!
+//! A COOK configuration is a list of rules evaluated in order; the first
+//! match decides the symbol's treatment. Symbols matching no rule get the
+//! default error trampoline — "an application cannot call methods which
+//! may generate unmanaged GPU operations" (§VII-D).
+
+use crate::cudart::{Symbol, SymbolCategory};
+
+/// How a matched symbol is treated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum HookClass {
+    /// Apply the strategy's kernel-launch template.
+    Launch,
+    /// Apply the strategy's memory-copy template.
+    Memcpy,
+    /// Apply the worker strategy's ordered-op template (Alg. 7).
+    OrderedOp,
+    /// Intercept the undocumented registration channel (kernel registry).
+    Register,
+    /// Forward unchanged to the hooked library (benign query API).
+    Passthrough,
+    /// Default: raise `cookErrorUnhookedSymbol` when called.
+    Error,
+}
+
+/// A single condition: pattern + category filter -> class.
+#[derive(Debug, Clone)]
+pub struct HookCondition {
+    /// Glob-ish pattern over the symbol name: `*` matches any run of
+    /// characters (the only metacharacter, as in the paper's config).
+    pub pattern: String,
+    /// Optional category restriction.
+    pub category: Option<SymbolCategory>,
+    pub class: HookClass,
+}
+
+impl HookCondition {
+    pub fn new(pattern: &str, class: HookClass) -> Self {
+        Self { pattern: pattern.to_string(), category: None, class }
+    }
+
+    pub fn with_category(mut self, cat: SymbolCategory) -> Self {
+        self.category = Some(cat);
+        self
+    }
+
+    pub fn matches(&self, sym: &Symbol) -> bool {
+        if let Some(cat) = self.category {
+            if sym.category != cat {
+                return false;
+            }
+        }
+        glob_match(&self.pattern, &sym.name)
+    }
+}
+
+/// Minimal `*`-glob matcher (no character classes, like the COOK config).
+pub fn glob_match(pattern: &str, name: &str) -> bool {
+    fn inner(p: &[u8], n: &[u8]) -> bool {
+        match (p.first(), n.first()) {
+            (None, None) => true,
+            (Some(b'*'), _) => {
+                // `*` absorbs zero or more characters.
+                inner(&p[1..], n) || (!n.is_empty() && inner(p, &n[1..]))
+            }
+            (Some(c), Some(d)) if c == d => inner(&p[1..], &n[1..]),
+            _ => false,
+        }
+    }
+    inner(pattern.as_bytes(), name.as_bytes())
+}
+
+/// An ordered rule set (one per strategy configuration).
+#[derive(Debug, Clone, Default)]
+pub struct ConditionSet {
+    pub rules: Vec<HookCondition>,
+}
+
+impl ConditionSet {
+    pub fn new(rules: Vec<HookCondition>) -> Self {
+        Self { rules }
+    }
+
+    /// First-match classification; `Error` when nothing matches.
+    pub fn classify(&self, sym: &Symbol) -> HookClass {
+        for r in &self.rules {
+            if r.matches(sym) {
+                return r.class;
+            }
+        }
+        HookClass::Error
+    }
+
+    /// Serialise to the on-disk config format (counted in Table II).
+    pub fn to_config_text(&self, library: &str, strategy: &str) -> String {
+        let mut out = String::new();
+        out.push_str("# COOK hook configuration\n");
+        out.push_str(&format!("# library: {library}\n"));
+        out.push_str(&format!("# strategy: {strategy}\n"));
+        out.push_str("# rules are evaluated first-match\n\n");
+        for r in &self.rules {
+            let cat = r
+                .category
+                .map(|c| format!(" category={c:?}"))
+                .unwrap_or_default();
+            out.push_str(&format!(
+                "hook pattern={}{} template={:?}\n",
+                r.pattern, cat, r.class
+            ));
+        }
+        out.push_str("\ndefault template=Error\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cudart::SymbolTable;
+
+    #[test]
+    fn glob_basics() {
+        assert!(glob_match("cudaMemcpy", "cudaMemcpy"));
+        assert!(!glob_match("cudaMemcpy", "cudaMemcpyAsync"));
+        assert!(glob_match("cudaMemcpy*", "cudaMemcpyAsync"));
+        assert!(glob_match("*Async", "cudaMemcpyAsync"));
+        assert!(glob_match("cuda*cpy*", "cudaMemcpy2DAsync"));
+        assert!(glob_match("*", "anything"));
+        assert!(!glob_match("", "x"));
+        assert!(glob_match("", ""));
+    }
+
+    #[test]
+    fn first_match_wins() {
+        let set = ConditionSet::new(vec![
+            HookCondition::new("cudaMemcpyAsync", HookClass::Passthrough),
+            HookCondition::new("cudaMemcpy*", HookClass::Memcpy),
+        ]);
+        let t = SymbolTable::cuda_runtime_11_4();
+        assert_eq!(
+            set.classify(t.get("cudaMemcpyAsync").unwrap()),
+            HookClass::Passthrough
+        );
+        assert_eq!(set.classify(t.get("cudaMemcpy2D").unwrap()), HookClass::Memcpy);
+    }
+
+    #[test]
+    fn unmatched_defaults_to_error() {
+        let set = ConditionSet::default();
+        let t = SymbolTable::cuda_runtime_11_4();
+        assert_eq!(set.classify(t.get("cudaMalloc").unwrap()), HookClass::Error);
+    }
+
+    #[test]
+    fn category_filter_applies() {
+        let t = SymbolTable::cuda_runtime_11_4();
+        let rule = HookCondition::new("cuda*", HookClass::Launch)
+            .with_category(crate::cudart::SymbolCategory::Launch);
+        assert!(rule.matches(t.get("cudaLaunchKernel").unwrap()));
+        assert!(!rule.matches(t.get("cudaMemcpy").unwrap()));
+    }
+
+    #[test]
+    fn config_text_contains_rules() {
+        let set = ConditionSet::new(vec![HookCondition::new("cudaLaunch*", HookClass::Launch)]);
+        let text = set.to_config_text("libcudart.so", "synced");
+        assert!(text.contains("pattern=cudaLaunch*"));
+        assert!(text.contains("default template=Error"));
+    }
+}

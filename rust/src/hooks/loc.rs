@@ -1,0 +1,150 @@
+//! Lines-of-code counter (the paper measures Table II with `cloc`).
+//!
+//! Counts code, comment, and blank lines for C-family sources and the
+//! COOK config format. Rules follow cloc: a line containing both code and
+//! a comment counts as code; block comments may span lines.
+
+/// A LoC breakdown.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LocCount {
+    pub code: usize,
+    pub comment: usize,
+    pub blank: usize,
+}
+
+impl LocCount {
+    pub fn total(&self) -> usize {
+        self.code + self.comment + self.blank
+    }
+
+    pub fn add(&mut self, other: LocCount) {
+        self.code += other.code;
+        self.comment += other.comment;
+        self.blank += other.blank;
+    }
+}
+
+/// Count a C-family source text (`//` and `/* */` comments).
+pub fn count_c(text: &str) -> LocCount {
+    let mut out = LocCount::default();
+    let mut in_block = false;
+    for line in text.lines() {
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            out.blank += 1;
+            continue;
+        }
+        if in_block {
+            // Does the block end here, with code after it?
+            if let Some(end) = trimmed.find("*/") {
+                in_block = false;
+                let rest = trimmed[end + 2..].trim();
+                if rest.is_empty() {
+                    out.comment += 1;
+                } else {
+                    // Code after the comment: count as code (cloc rule).
+                    out.code += 1;
+                    in_block = rest.contains("/*") && !rest[rest.find("/*").unwrap()..].contains("*/");
+                }
+            } else {
+                out.comment += 1;
+            }
+            continue;
+        }
+        if let Some(stripped) = trimmed.strip_prefix("//") {
+            let _ = stripped;
+            out.comment += 1;
+            continue;
+        }
+        if trimmed.starts_with("/*") {
+            // Whole-line block comment?
+            if let Some(end) = trimmed.find("*/") {
+                let rest = trimmed[end + 2..].trim();
+                if rest.is_empty() {
+                    out.comment += 1;
+                } else {
+                    out.code += 1;
+                }
+            } else {
+                in_block = true;
+                out.comment += 1;
+            }
+            continue;
+        }
+        out.code += 1;
+        // A code line can open a block comment that continues.
+        if let Some(start) = trimmed.find("/*") {
+            if !trimmed[start..].contains("*/") {
+                in_block = true;
+            }
+        }
+    }
+    out
+}
+
+/// Count a COOK config text (`#` comments).
+pub fn count_config(text: &str) -> LocCount {
+    let mut out = LocCount::default();
+    for line in text.lines() {
+        let trimmed = line.trim();
+        if trimmed.is_empty() {
+            out.blank += 1;
+        } else if trimmed.starts_with('#') {
+            out.comment += 1;
+        } else {
+            out.code += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_simple_c() {
+        let src = "int main(void) {\n    return 0; // done\n}\n\n// trailing\n";
+        let c = count_c(src);
+        assert_eq!(c.code, 3);
+        assert_eq!(c.comment, 1);
+        assert_eq!(c.blank, 1);
+    }
+
+    #[test]
+    fn block_comments_span_lines() {
+        let src = "/*\n * header\n */\nint x;\n/* inline */ int y;\n";
+        let c = count_c(src);
+        assert_eq!(c.comment, 3);
+        assert_eq!(c.code, 2);
+    }
+
+    #[test]
+    fn code_opening_block_comment() {
+        let src = "int x; /* starts\ncontinues\n*/\nint y;\n";
+        let c = count_c(src);
+        assert_eq!(c.code, 2); // int x line, int y line
+        assert_eq!(c.comment, 2); // continues + closing line
+    }
+
+    #[test]
+    fn config_counting() {
+        let src = "# comment\n\nhook pattern=x template=Launch\n";
+        let c = count_config(src);
+        assert_eq!(c, LocCount { code: 1, comment: 1, blank: 1 });
+        assert_eq!(c.total(), 3);
+    }
+
+    #[test]
+    fn empty_text() {
+        assert_eq!(count_c(""), LocCount::default());
+        assert_eq!(count_config(""), LocCount::default());
+    }
+
+    #[test]
+    fn add_accumulates() {
+        let mut a = LocCount { code: 1, comment: 2, blank: 3 };
+        a.add(LocCount { code: 10, comment: 20, blank: 30 });
+        assert_eq!(a, LocCount { code: 11, comment: 22, blank: 33 });
+    }
+}

@@ -1,0 +1,154 @@
+//! Template expansion: instantiate a hook template with one symbol's
+//! declaration ("Generate a hook" step of Figure 4).
+
+use super::condition::HookClass;
+use super::templates_c as c;
+use crate::config::StrategyKind;
+use crate::cudart::Symbol;
+
+/// Expand `{PLACEHOLDER}`s of a template for one symbol.
+pub fn expand(template: &str, sym: &Symbol) -> String {
+    let params = if sym.params.is_empty() {
+        "void".to_string()
+    } else {
+        sym.params
+            .iter()
+            .map(|(t, n)| format!("{t} {n}"))
+            .collect::<Vec<_>>()
+            .join(", ")
+    };
+    let args = sym.arg_names().join(", ");
+    template
+        .replace("{RET}", &sym.ret)
+        .replace("{NAME}", &sym.name)
+        .replace("{PARAMS}", &params)
+        .replace("{ARGS}", &args)
+        .replace("{NPARAMS}", &sym.params.len().to_string())
+}
+
+/// The template text for a (strategy, class) pair.
+///
+/// `None` means the class is not hooked under this strategy and falls back
+/// to a plain trampoline (e.g. ordered-op hooks exist only under worker).
+pub fn template_for(strategy: StrategyKind, class: HookClass) -> Option<&'static str> {
+    use HookClass::*;
+    match (strategy, class) {
+        (_, Passthrough) => Some(c::TRAMPOLINE),
+        (_, Error) => Some(c::ERROR_TRAMPOLINE),
+        (StrategyKind::None | StrategyKind::Ptb, Launch | Memcpy | OrderedOp | Register) => {
+            Some(c::TRAMPOLINE)
+        }
+        (StrategyKind::Callback, Launch | Memcpy) => Some(c::CALLBACK_HOOK),
+        (StrategyKind::Callback, OrderedOp | Register) => Some(c::TRAMPOLINE),
+        (StrategyKind::Synced, Launch | Memcpy) => Some(c::SYNCED_HOOK),
+        (StrategyKind::Synced, OrderedOp | Register) => Some(c::TRAMPOLINE),
+        (StrategyKind::Worker, Launch) => Some(c::WORKER_LAUNCH_HOOK),
+        (StrategyKind::Worker, Memcpy) => Some(c::WORKER_COPY_HOOK),
+        (StrategyKind::Worker, OrderedOp) => Some(c::WORKER_ORDERED_HOOK),
+        (StrategyKind::Worker, Register) => Some(c::REGISTER_HOOK),
+    }
+}
+
+/// Strategy-level support code bundled into the generated library
+/// ("Templates" column of Table II, beyond the per-symbol ones).
+pub fn strategy_preamble(strategy: StrategyKind) -> Vec<(&'static str, &'static str)> {
+    match strategy {
+        StrategyKind::None | StrategyKind::Ptb => vec![],
+        StrategyKind::Callback => vec![("cook_callback.c", c::CALLBACK_PREAMBLE)],
+        StrategyKind::Synced => vec![("cook_synced.c", c::SYNCED_PREAMBLE)],
+        StrategyKind::Worker => vec![("cook_worker.c", c::WORKER_RUNTIME)],
+    }
+}
+
+/// All template texts for a strategy (the "Templates" LoC of Table II):
+/// per-class templates + preamble + the common trampolines.
+pub fn all_templates(strategy: StrategyKind) -> Vec<&'static str> {
+    let mut v = vec![c::TRAMPOLINE, c::ERROR_TRAMPOLINE, c::UNKNOWN_TRAMPOLINE];
+    for class in [
+        HookClass::Launch,
+        HookClass::Memcpy,
+        HookClass::OrderedOp,
+        HookClass::Register,
+    ] {
+        if let Some(t) = template_for(strategy, class) {
+            if !v.contains(&t) {
+                v.push(t);
+            }
+        }
+    }
+    for (_, text) in strategy_preamble(strategy) {
+        v.push(text);
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cudart::SymbolTable;
+
+    fn table() -> SymbolTable {
+        SymbolTable::cuda_runtime_11_4()
+    }
+
+    #[test]
+    fn expand_fills_all_placeholders() {
+        let t = table();
+        let sym = t.get("cudaMemcpy").unwrap();
+        let out = expand(c_template(), sym);
+        assert!(out.contains("cudaError_t cudaMemcpy(void* dst, const void* src, size_t count, enum cudaMemcpyKind kind)"));
+        assert!(out.contains("real(dst, src, count, kind)"));
+        for ph in ["{RET}", "{NAME}", "{PARAMS}", "{ARGS}", "{NPARAMS}"] {
+            assert!(!out.contains(ph), "unexpanded {ph} in:\n{out}");
+        }
+    }
+
+    fn c_template() -> &'static str {
+        super::c::TRAMPOLINE
+    }
+
+    #[test]
+    fn expand_void_params() {
+        let t = table();
+        let sym = t.get("cudaDeviceSynchronize").unwrap();
+        let out = expand(c_template(), sym);
+        assert!(out.contains("cudaDeviceSynchronize(void)"));
+        assert!(out.contains("real()"));
+    }
+
+    #[test]
+    fn synced_hooks_launch_and_copy() {
+        let t = template_for(StrategyKind::Synced, HookClass::Launch).unwrap();
+        assert!(t.contains("cook_acquire"));
+        assert!(t.contains("cook_sync_device"));
+        let t2 = template_for(StrategyKind::Synced, HookClass::Memcpy).unwrap();
+        assert_eq!(t, t2, "paper: same code template for kernel and copy");
+    }
+
+    #[test]
+    fn worker_has_distinct_ordered_template() {
+        let t = template_for(StrategyKind::Worker, HookClass::OrderedOp).unwrap();
+        assert!(t.contains("cook_worker_drain"));
+    }
+
+    #[test]
+    fn none_strategy_only_trampolines() {
+        let t = template_for(StrategyKind::None, HookClass::Launch).unwrap();
+        assert!(t.contains("real({ARGS})"));
+        assert!(!t.contains("cook_acquire"));
+    }
+
+    #[test]
+    fn worker_templates_are_largest() {
+        let loc = |s: StrategyKind| -> usize {
+            all_templates(s).iter().map(|t| t.lines().count()).sum()
+        };
+        let (cb, sy, wk) = (
+            loc(StrategyKind::Callback),
+            loc(StrategyKind::Synced),
+            loc(StrategyKind::Worker),
+        );
+        assert!(wk > 3 * cb, "Table II shape: worker templates dominate ({wk} vs {cb})");
+        assert!(wk > 3 * sy);
+    }
+}

@@ -1,0 +1,31 @@
+//! # COOK — access control on an embedded Volta GPU (full reproduction)
+//!
+//! This crate reproduces the system of Lesage, Boniol & Pagetti, *"COOK
+//! Access Control on an embedded Volta GPU"* (CS.AR 2024): a configurable
+//! C-hook (COOK) generator plus temporal access-control strategies that
+//! serialise GPU operations from concurrent applications behind a global
+//! GPU lock.
+//!
+//! The paper's testbed is a physical Jetson AGX Xavier; this reproduction
+//! replaces the physical platform with a deterministic discrete-event
+//! simulator of the Volta execution model ([`gpu`]) and a simulated CUDA
+//! Runtime surface ([`cudart`]), while real numerics run through AOT
+//! compiled JAX/Pallas artifacts on a PJRT CPU client ([`runtime`]).
+//! See DESIGN.md for the substitution table and experiment index.
+//!
+//! Layer map (rust + JAX + Pallas, AOT via PJRT):
+//! * L3 (this crate): hooks, strategies, simulator, apps, harness, CLI.
+//! * L2 (`python/compile/model.py`): JAX models, lowered once to HLO text.
+//! * L1 (`python/compile/kernels/`): Pallas kernels with jnp oracles.
+
+pub mod apps;
+pub mod config;
+pub mod control;
+pub mod cudart;
+pub mod gpu;
+pub mod harness;
+pub mod hooks;
+pub mod metrics;
+pub mod runtime;
+pub mod trace;
+pub mod util;

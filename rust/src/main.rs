@@ -1,0 +1,288 @@
+//! `cook` — CLI for the COOK access-control reproduction.
+//!
+//! Subcommands:
+//! * `run <spec>` — simulate one `bench-isol-strategy` configuration.
+//! * `experiment <fig9|fig10|fig11|table1|table2|all>` — regenerate a
+//!   paper figure/table.
+//! * `chronogram <spec>` — render the Fig. 11-style chronogram.
+//! * `hookgen --strategy <s> [--out <dir>]` — run the COOK toolchain and
+//!   emit the generated hook library source tree.
+//! * `symbols` — list the hooked library's exported surface.
+//! * `validate` — load the AOT artifacts via PJRT and check numerics
+//!   against the jax golden vectors.
+//! * `serve` — live serving demo: concurrent clients run real DNA-Net
+//!   inferences through the access controller.
+
+use anyhow::{anyhow, bail, Context, Result};
+use cook::config::StrategyKind;
+use cook::control::serve_dna;
+use cook::cudart::SymbolTable;
+use cook::harness::{figures, run_spec, Bench, ExperimentSpec};
+use cook::hooks::generate_standard;
+use cook::runtime::{PjrtEngine, PAYLOAD_DNA};
+use std::path::PathBuf;
+use std::time::Instant;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "run" => cmd_run(rest),
+        "experiment" => cmd_experiment(rest),
+        "chronogram" => cmd_chronogram(rest),
+        "hookgen" => cmd_hookgen(rest),
+        "symbols" => cmd_symbols(rest),
+        "validate" => cmd_validate(),
+        "serve" => cmd_serve(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try `cook help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "cook — COOK access control on an embedded Volta GPU (reproduction)\n\
+         \n\
+         usage: cook <command> [options]\n\
+         \n\
+         commands:\n\
+         \x20 run <bench-isol-strategy> [--seed N]      simulate one configuration\n\
+         \x20 experiment <fig9|fig10|fig11|table1|table2|all> [--seed N] [--out DIR]\n\
+         \x20 chronogram <bench-isol-strategy> [--seed N] [--rows N]\n\
+         \x20 hookgen --strategy <s> [--out DIR]        generate the hook library\n\
+         \x20 symbols [--unknown]                       list libcudart exported symbols\n\
+         \x20 validate                                  check AOT artifacts vs jax goldens\n\
+         \x20 serve [--strategy s] [--clients N] [--requests N]\n\
+         \n\
+         benches: cuda_mmult, onnx_dna;  isolation|parallel;\n\
+         strategies: none, callback, synced, worker, ptb"
+    );
+}
+
+/// Tiny flag scanner: `--key value` pairs after positional args.
+fn flag<'a>(rest: &'a [String], key: &str) -> Option<&'a str> {
+    rest.iter()
+        .position(|a| a == key)
+        .and_then(|i| rest.get(i + 1))
+        .map(|s| s.as_str())
+}
+
+fn seed_of(rest: &[String]) -> u64 {
+    flag(rest, "--seed").and_then(|s| s.parse().ok()).unwrap_or(0)
+}
+
+fn cmd_run(rest: &[String]) -> Result<()> {
+    let spec: ExperimentSpec = rest
+        .first()
+        .ok_or_else(|| anyhow!("usage: cook run <bench-isol-strategy>"))?
+        .parse()
+        .map_err(|e: String| anyhow!(e))?;
+    let seed = seed_of(rest);
+    let t0 = Instant::now();
+    let r = if let Some(path) = flag(rest, "--config") {
+        // Model overrides from a flat key = value file (config::file).
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let mut cfg = spec.sim_config(seed);
+        let n = cook::config::apply_overrides(&mut cfg, &text).map_err(|e| anyhow!("{e}"))?;
+        println!("applied {n} overrides from {path}");
+        let mut sim = cook::gpu::Sim::new(cfg, spec.programs());
+        sim.run();
+        let protocol = spec.bench.protocol();
+        let mut net = Vec::new();
+        let mut ips = Vec::new();
+        let mut kernels = Vec::new();
+        for a in 0..spec.isol.instances() {
+            let app = cook::util::AppId(a);
+            net.push(cook::metrics::net_per_kernel(&sim.trace, app));
+            ips.push(cook::metrics::ips_with_warmup(
+                sim.completions(app),
+                protocol.warmup_ns,
+                protocol.window_ns,
+            ));
+            kernels.push(sim.trace.kernel_ops(app).count());
+        }
+        cook::harness::RunResult {
+            spec,
+            seed,
+            net,
+            ips,
+            kernels,
+            chronogram: cook::trace::Chronogram::from_trace(&sim.trace, spec.isol.instances()),
+            overlaps: sim.trace.cross_app_kernel_overlaps(),
+            switches: sim.trace.switches.len(),
+            stalls: sim.trace.stalls.len(),
+        }
+    } else {
+        run_spec(spec, seed)
+    };
+    println!("config {spec} (seed {seed}), simulated in {:?}", t0.elapsed());
+    for inst in 0..r.net.len() {
+        match r.net_box(inst) {
+            Some(b) => println!("  NET inst{inst}: {}", b.render()),
+            None => println!("  NET inst{inst}: no kernels"),
+        }
+        println!("  IPS inst{inst}: {:.1}", r.ips[inst]);
+    }
+    println!(
+        "  kernels={:?} overlaps={} switches={} stalls={} total={:.1} Mcycles",
+        r.kernels,
+        r.overlaps,
+        r.switches,
+        r.stalls,
+        r.chronogram.total_mcycles()
+    );
+    Ok(())
+}
+
+fn cmd_experiment(rest: &[String]) -> Result<()> {
+    let which = rest.first().map(|s| s.as_str()).unwrap_or("all");
+    let seed = seed_of(rest);
+    let out_dir = flag(rest, "--out").map(PathBuf::from);
+    let mut emitted = String::new();
+    let run_one = |name: &str, emitted: &mut String| -> Result<()> {
+        let t0 = Instant::now();
+        let text = match name {
+            "fig9" => figures::net_figure(Bench::CudaMmult, seed).0,
+            "fig10" => figures::net_figure(Bench::OnnxDna, seed).0,
+            "fig11" => figures::chronogram_figure(seed).0,
+            "table1" => figures::ips_table(seed).0,
+            "table2" => figures::loc_table().0,
+            other => bail!("unknown experiment '{other}'"),
+        };
+        println!("{text}");
+        println!("[{name} regenerated in {:?}]\n", t0.elapsed());
+        emitted.push_str(&text);
+        emitted.push('\n');
+        Ok(())
+    };
+    if which == "all" {
+        for name in ["fig9", "fig10", "fig11", "table1", "table2"] {
+            run_one(name, &mut emitted)?;
+        }
+    } else {
+        run_one(which, &mut emitted)?;
+    }
+    if let Some(dir) = out_dir {
+        std::fs::create_dir_all(&dir)?;
+        let path = dir.join(format!("experiment-{which}.txt"));
+        std::fs::write(&path, emitted).with_context(|| format!("writing {path:?}"))?;
+        println!("wrote {path:?}");
+    }
+    Ok(())
+}
+
+fn cmd_chronogram(rest: &[String]) -> Result<()> {
+    let spec: ExperimentSpec = rest
+        .first()
+        .ok_or_else(|| anyhow!("usage: cook chronogram <bench-isol-strategy>"))?
+        .parse()
+        .map_err(|e: String| anyhow!(e))?;
+    let seed = seed_of(rest);
+    let rows: usize = flag(rest, "--rows").and_then(|s| s.parse().ok()).unwrap_or(32);
+    let r = run_spec(spec, seed);
+    println!(
+        "{spec}: total={:.1} Mcycles, cross-instance overlap={}",
+        r.chronogram.total_mcycles(),
+        if r.chronogram.has_cross_lane_overlap() { "YES" } else { "no" }
+    );
+    print!("{}", r.chronogram.render_ascii(rows));
+    Ok(())
+}
+
+fn cmd_hookgen(rest: &[String]) -> Result<()> {
+    let strategy: StrategyKind = flag(rest, "--strategy")
+        .ok_or_else(|| anyhow!("usage: cook hookgen --strategy <none|callback|synced|worker>"))?
+        .parse()
+        .map_err(|e: String| anyhow!(e))?;
+    let lib = generate_standard(strategy);
+    println!(
+        "strategy {strategy}: {} symbols bound, {} hooked, {} unknown",
+        lib.bindings.len(),
+        lib.hooked_symbols().len(),
+        lib.unknown_symbols.len()
+    );
+    let report = cook::hooks::loc_report(strategy);
+    println!(
+        "LoC: configuration={} templates={} generated={}",
+        report.configuration, report.templates, report.generated
+    );
+    if let Some(dir) = flag(rest, "--out") {
+        let dir = PathBuf::from(dir);
+        lib.write_to(&dir)?;
+        println!("wrote {} files to {dir:?}", lib.files.len());
+    }
+    Ok(())
+}
+
+fn cmd_symbols(rest: &[String]) -> Result<()> {
+    let table = SymbolTable::cuda_runtime_11_4();
+    let only_unknown = rest.iter().any(|a| a == "--unknown");
+    println!("{} exports {} symbols", table.library, table.len());
+    for sym in &table.symbols {
+        if only_unknown && sym.has_declaration {
+            continue;
+        }
+        match sym.declaration() {
+            Some(d) => println!("  {d}"),
+            None => println!("  {} (unknown: declaration not found)", sym.name),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_validate() -> Result<()> {
+    let engine = PjrtEngine::load_default()?;
+    println!("PJRT platform: {}", engine.platform());
+    for (i, spec) in engine.manifest.artifacts.iter().enumerate() {
+        let t0 = Instant::now();
+        engine.validate_golden(i)?;
+        println!(
+            "  {}: OK ({} args, out {:?}) in {:?}",
+            spec.name,
+            spec.arg_sizes.len(),
+            spec.out_shape,
+            t0.elapsed()
+        );
+    }
+    println!("all artifacts match the jax golden vectors");
+    Ok(())
+}
+
+fn cmd_serve(rest: &[String]) -> Result<()> {
+    let strategy: StrategyKind = flag(rest, "--strategy")
+        .unwrap_or("worker")
+        .parse()
+        .map_err(|e: String| anyhow!(e))?;
+    let clients: usize = flag(rest, "--clients").and_then(|s| s.parse().ok()).unwrap_or(2);
+    let requests: usize = flag(rest, "--requests").and_then(|s| s.parse().ok()).unwrap_or(50);
+    // Validate numerics once before serving.
+    let engine = PjrtEngine::load_default()?;
+    engine.validate_golden(PAYLOAD_DNA)?;
+    println!(
+        "serving DNA-Net on {} with strategy {strategy}: {clients} clients x {requests} requests",
+        engine.platform()
+    );
+    drop(engine);
+    let report = serve_dna(
+        strategy,
+        clients,
+        requests,
+        cook::runtime::Manifest::default_dir(),
+    )?;
+    println!("{}", report.render());
+    Ok(())
+}

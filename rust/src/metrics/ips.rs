@@ -1,0 +1,80 @@
+//! Inferences per Second — IPS, eq. (2) of the paper:
+//!
+//! IPS_{a,c}^t = N_{a,c}^t / duration(t)
+//!
+//! measured by counting completed executions in a sampling window.
+
+use crate::util::Nanos;
+
+/// IPS over the window [start_ns, end_ns).
+pub fn ips(completions: &[Nanos], start_ns: Nanos, end_ns: Nanos) -> f64 {
+    assert!(end_ns > start_ns, "empty IPS window");
+    let n = completions
+        .iter()
+        .filter(|&&t| t >= start_ns && t < end_ns)
+        .count();
+    n as f64 / ((end_ns - start_ns) as f64 / 1e9)
+}
+
+/// IPS with the paper's measurement protocol (§VI-C): a warm-up period is
+/// discarded, then a fixed sampling window is measured.
+pub fn ips_with_warmup(completions: &[Nanos], warmup_ns: Nanos, window_ns: Nanos) -> f64 {
+    ips(completions, warmup_ns, warmup_ns + window_ns)
+}
+
+/// Per-second IPS samples across the window (the "regular intervals" of
+/// eq. 2 — useful for time-series plots and stability checks).
+pub fn ips_series(completions: &[Nanos], start_ns: Nanos, end_ns: Nanos) -> Vec<f64> {
+    let mut out = Vec::new();
+    let mut t = start_ns;
+    while t + 1_000_000_000 <= end_ns {
+        out.push(ips(completions, t, t + 1_000_000_000));
+        t += 1_000_000_000;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_in_window_only() {
+        // 10 completions at 0.1s..1.0s, then 2 more later.
+        let mut c: Vec<Nanos> = (1..=10).map(|i| i * 100_000_000).collect();
+        c.push(5_000_000_000);
+        c.push(6_000_000_000);
+        assert_eq!(ips(&c, 0, 1_000_000_000), 9.0); // t < end excludes 1.0 s
+        assert_eq!(ips(&c, 0, 2_000_000_000), 5.0);
+    }
+
+    #[test]
+    fn warmup_discards_initial_burst() {
+        // Fast burst in the first second, steady 2/s afterwards.
+        let mut c: Vec<Nanos> = (0..100).map(|i| i * 10_000_000).collect();
+        for i in 0..10 {
+            c.push(1_000_000_000 + i * 500_000_000);
+        }
+        let v = ips_with_warmup(&c, 1_000_000_000, 5_000_000_000);
+        assert_eq!(v, 2.0);
+    }
+
+    #[test]
+    fn series_has_one_sample_per_second() {
+        let c: Vec<Nanos> = (0..30).map(|i| i * 100_000_000).collect(); // 10/s for 3 s
+        let s = ips_series(&c, 0, 3_000_000_000);
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0], 10.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty IPS window")]
+    fn empty_window_panics() {
+        ips(&[], 5, 5);
+    }
+
+    #[test]
+    fn no_completions_zero_ips() {
+        assert_eq!(ips(&[], 0, 1_000_000_000), 0.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Evaluation metrics (§VI-E): NET (eq. 1), IPS (eq. 2), and the
+//! distribution statistics behind the paper's boxplots.
+
+pub mod ips;
+pub mod net;
+pub mod stats;
+
+pub use ips::{ips, ips_series, ips_with_warmup};
+pub use net::{net_all_apps, net_per_kernel};
+pub use stats::{quantile, BoxStats};

@@ -1,0 +1,108 @@
+//! Normalised Kernel Runtime — NET, eq. (1) of the paper:
+//!
+//! NET_{k,c}^i = ET_{k,c}^i / min_j(ET_{k,c}^j)
+//!
+//! computed per kernel *name* within one configuration, so a slow kernel
+//! type does not inflate the NET of a fast one.
+
+use crate::trace::record::TraceCollector;
+use crate::util::{AppId, Nanos};
+use std::collections::HashMap;
+
+/// Compute NET values for every kernel instance of `app`, normalising
+/// each instance by the minimum observed time of the *same kernel name*.
+pub fn net_per_kernel(trace: &TraceCollector, app: AppId) -> Vec<f64> {
+    let mut by_name: HashMap<&str, Vec<Nanos>> = HashMap::new();
+    for r in trace.kernel_ops(app) {
+        let name = r.kernel_name.as_deref().unwrap_or("?");
+        by_name.entry(name).or_default().push(r.exec_ns());
+    }
+    let mut out = Vec::new();
+    for (_, times) in by_name {
+        let min = *times.iter().min().unwrap_or(&1) as f64;
+        let min = min.max(1.0);
+        for t in times {
+            out.push(t as f64 / min);
+        }
+    }
+    out
+}
+
+/// NET pooled across all apps (one boxplot per instance in Figs. 9/10 —
+/// this helper returns per-app vectors keyed by app index).
+pub fn net_all_apps(trace: &TraceCollector, num_apps: usize) -> Vec<Vec<f64>> {
+    (0..num_apps)
+        .map(|a| net_per_kernel(trace, AppId(a)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::record::OpRecord;
+    use crate::util::OpUid;
+
+    fn rec(app: usize, name: &str, start: Nanos, end: Nanos) -> OpRecord {
+        OpRecord {
+            op: OpUid(start),
+            app: AppId(app),
+            kernel_name: Some(name.to_string()),
+            is_kernel: true,
+            is_copy: false,
+            enqueued_at: start,
+            started_at: start,
+            completed_at: end,
+            burst: 0,
+        }
+    }
+
+    #[test]
+    fn net_normalises_by_min() {
+        let mut t = TraceCollector::new(false);
+        t.ops.push(rec(0, "k", 0, 100));
+        t.ops.push(rec(0, "k", 200, 300)); // 100 -> NET 1.0
+        t.ops.push(rec(0, "k", 400, 650)); // 250 -> NET 2.5
+        let mut v = net_per_kernel(&t, AppId(0));
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(v, vec![1.0, 1.0, 2.5]);
+    }
+
+    #[test]
+    fn net_is_per_kernel_name() {
+        let mut t = TraceCollector::new(false);
+        t.ops.push(rec(0, "fast", 0, 10));
+        t.ops.push(rec(0, "slow", 0, 1000));
+        let v = net_per_kernel(&t, AppId(0));
+        // Both are the min of their own name -> both exactly 1.0.
+        assert_eq!(v, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn net_ignores_other_apps_and_copies() {
+        let mut t = TraceCollector::new(false);
+        t.ops.push(rec(0, "k", 0, 100));
+        t.ops.push(rec(1, "k", 0, 999));
+        let mut c = rec(0, "c", 0, 5);
+        c.is_kernel = false;
+        c.is_copy = true;
+        t.ops.push(c);
+        assert_eq!(net_per_kernel(&t, AppId(0)).len(), 1);
+    }
+
+    #[test]
+    fn net_all_apps_shapes() {
+        let mut t = TraceCollector::new(false);
+        t.ops.push(rec(0, "k", 0, 100));
+        t.ops.push(rec(1, "k", 0, 100));
+        t.ops.push(rec(1, "k", 200, 400));
+        let v = net_all_apps(&t, 2);
+        assert_eq!(v[0].len(), 1);
+        assert_eq!(v[1].len(), 2);
+    }
+
+    #[test]
+    fn empty_trace_empty_net() {
+        let t = TraceCollector::new(false);
+        assert!(net_per_kernel(&t, AppId(0)).is_empty());
+    }
+}

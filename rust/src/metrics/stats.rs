@@ -1,0 +1,144 @@
+//! Distribution statistics for the evaluation figures: quantiles and the
+//! boxplot summaries of Figures 9/10 (median box, p0.5-p99.5 whiskers).
+
+/// Linear-interpolated quantile of an unsorted slice (q in [0, 1]).
+pub fn quantile(values: &[f64], q: f64) -> f64 {
+    assert!(!values.is_empty(), "quantile of empty slice");
+    let mut v: Vec<f64> = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    quantile_sorted(&v, q)
+}
+
+/// Quantile of an already-sorted slice.
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// The boxplot summary used by Figures 9/10: the box captures the 50% of
+/// samples around the median, whiskers capture 99% of the data (p0.5 to
+/// p99.5), and the extremes are reported separately.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BoxStats {
+    pub min: f64,
+    pub whisker_lo: f64, // p0.5
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub whisker_hi: f64, // p99.5
+    pub max: f64,
+    pub mean: f64,
+    pub n: usize,
+}
+
+impl BoxStats {
+    pub fn from(values: &[f64]) -> Self {
+        assert!(!values.is_empty(), "BoxStats of empty slice");
+        let mut v: Vec<f64> = values.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = v.iter().sum::<f64>() / v.len() as f64;
+        Self {
+            min: v[0],
+            whisker_lo: quantile_sorted(&v, 0.005),
+            q1: quantile_sorted(&v, 0.25),
+            median: quantile_sorted(&v, 0.5),
+            q3: quantile_sorted(&v, 0.75),
+            whisker_hi: quantile_sorted(&v, 0.995),
+            max: *v.last().unwrap(),
+            mean,
+            n: v.len(),
+        }
+    }
+
+    /// Fraction of samples strictly above `threshold` (outlier-tail
+    /// statements like "less than 0.5% of kernels exceed a 10x slowdown").
+    pub fn frac_above(values: &[f64], threshold: f64) -> f64 {
+        let n = values.iter().filter(|v| **v > threshold).count();
+        n as f64 / values.len().max(1) as f64
+    }
+
+    /// One-line rendering for tables/logs.
+    pub fn render(&self) -> String {
+        format!(
+            "n={} min={:.3} p0.5={:.3} q1={:.3} med={:.3} q3={:.3} p99.5={:.3} max={:.3}",
+            self.n, self.min, self.whisker_lo, self.q1, self.median, self.q3,
+            self.whisker_hi, self.max
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantile_basics() {
+        let v = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(quantile(&v, 0.0), 1.0);
+        assert_eq!(quantile(&v, 0.5), 3.0);
+        assert_eq!(quantile(&v, 1.0), 5.0);
+        assert_eq!(quantile(&v, 0.25), 2.0);
+        // interpolation
+        let v2 = [0.0, 10.0];
+        assert_eq!(quantile(&v2, 0.5), 5.0);
+    }
+
+    #[test]
+    fn quantile_unsorted_input() {
+        let v = [5.0, 1.0, 3.0, 2.0, 4.0];
+        assert_eq!(quantile(&v, 0.5), 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn quantile_empty_panics() {
+        quantile(&[], 0.5);
+    }
+
+    #[test]
+    fn box_stats_ordering_invariant() {
+        let v: Vec<f64> = (0..1000).map(|i| (i as f64 * 37.0) % 100.0).collect();
+        let b = BoxStats::from(&v);
+        assert!(b.min <= b.whisker_lo);
+        assert!(b.whisker_lo <= b.q1);
+        assert!(b.q1 <= b.median);
+        assert!(b.median <= b.q3);
+        assert!(b.q3 <= b.whisker_hi);
+        assert!(b.whisker_hi <= b.max);
+        assert_eq!(b.n, 1000);
+    }
+
+    #[test]
+    fn whiskers_capture_99_percent() {
+        // 1000 ones with 2 extreme outliers: whiskers must exclude them.
+        let mut v = vec![1.0; 1000];
+        v.push(500.0);
+        v.push(0.001);
+        let b = BoxStats::from(&v);
+        assert_eq!(b.median, 1.0);
+        assert!(b.whisker_hi < 500.0);
+        assert!(b.max == 500.0);
+    }
+
+    #[test]
+    fn frac_above() {
+        let v = [1.0, 1.0, 1.0, 11.0];
+        assert_eq!(BoxStats::frac_above(&v, 10.0), 0.25);
+        assert_eq!(BoxStats::frac_above(&v, 100.0), 0.0);
+    }
+
+    #[test]
+    fn render_contains_median() {
+        let b = BoxStats::from(&[1.0, 2.0, 3.0]);
+        assert!(b.render().contains("med=2.000"));
+    }
+}

@@ -1,0 +1,202 @@
+//! AOT artifact manifest: what `python/compile/aot.py` produced.
+//!
+//! The manifest carries, per artifact, the HLO file name, the argument
+//! shapes, and golden vectors (deterministic inputs + jax-computed
+//! outputs) so the rust runtime can validate numerics with no python
+//! anywhere near the request path.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Stable indices of the standard artifacts (matches aot.py's ARTIFACTS
+/// insertion order; resolved by name at load time, so a reordering in
+/// python cannot silently misroute payloads).
+pub const PAYLOAD_MMULT: usize = 0;
+pub const PAYLOAD_DNA: usize = 1;
+pub const PAYLOAD_VECADD: usize = 2;
+
+/// Names in payload-index order.
+pub const PAYLOAD_NAMES: [&str; 3] = ["mmult", "dna", "vecadd"];
+
+/// One artifact's metadata.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    /// Flattened element counts of each argument.
+    pub arg_sizes: Vec<usize>,
+    /// Argument shapes (row-major dims).
+    pub arg_shapes: Vec<Vec<usize>>,
+    pub out_shape: Vec<usize>,
+    pub golden_seed: u64,
+    pub golden_output_head: Vec<f32>,
+    pub golden_output_sum: f64,
+}
+
+impl ArtifactSpec {
+    /// Regenerate the deterministic golden inputs:
+    /// value[i] = ((i + seed + argidx) % 17) * 0.0625 - 0.5
+    /// (mirrors `aot.py::_golden_inputs` exactly).
+    pub fn golden_inputs(&self) -> Vec<Vec<f32>> {
+        self.arg_sizes
+            .iter()
+            .enumerate()
+            .map(|(argidx, &n)| {
+                (0..n as u64)
+                    .map(|i| ((i + self.golden_seed + argidx as u64) % 17) as f32 * 0.0625 - 0.5)
+                    .collect()
+            })
+            .collect()
+    }
+
+    pub fn out_elems(&self) -> usize {
+        self.out_shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>, // ordered by PAYLOAD_NAMES
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts` first)"))?;
+        let json = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        let mut artifacts = Vec::new();
+        for name in PAYLOAD_NAMES {
+            let entry = json
+                .get(name)
+                .ok_or_else(|| anyhow!("manifest missing artifact '{name}'"))?;
+            artifacts.push(Self::parse_entry(&dir, name, entry)?);
+        }
+        Ok(Self { dir, artifacts })
+    }
+
+    fn parse_entry(dir: &Path, name: &str, entry: &Json) -> Result<ArtifactSpec> {
+        let hlo = entry
+            .get("hlo")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("artifact {name}: missing hlo"))?;
+        let args = entry
+            .get("args")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("artifact {name}: missing args"))?;
+        let mut arg_sizes = Vec::new();
+        let mut arg_shapes = Vec::new();
+        for a in args {
+            let shape: Vec<usize> = a
+                .get("shape")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow!("artifact {name}: bad arg shape"))?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect();
+            arg_sizes.push(shape.iter().product::<usize>().max(1));
+            arg_shapes.push(shape);
+        }
+        let out_shape: Vec<usize> = entry
+            .get("out_shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("artifact {name}: missing out_shape"))?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let golden_output_head: Vec<f32> = entry
+            .get("golden_output_head")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|v| v.as_f64().map(|f| f as f32))
+            .collect();
+        Ok(ArtifactSpec {
+            name: name.to_string(),
+            hlo_path: dir.join(hlo),
+            arg_sizes,
+            arg_shapes,
+            out_shape,
+            golden_seed: entry
+                .get("golden_seed")
+                .and_then(Json::as_f64)
+                .unwrap_or(42.0) as u64,
+            golden_output_head,
+            golden_output_sum: entry
+                .get("golden_output_sum")
+                .and_then(Json::as_f64)
+                .unwrap_or(f64::NAN),
+        })
+    }
+
+    /// Default artifact directory: `$COOK_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("COOK_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_inputs_formula() {
+        let spec = ArtifactSpec {
+            name: "t".into(),
+            hlo_path: "/tmp/x".into(),
+            arg_sizes: vec![4, 2],
+            arg_shapes: vec![vec![4], vec![2]],
+            out_shape: vec![4],
+            golden_seed: 42,
+            golden_output_head: vec![],
+            golden_output_sum: 0.0,
+        };
+        let inputs = spec.golden_inputs();
+        // arg 0: ((i + 42) % 17) * 0.0625 - 0.5 for i in 0..4
+        assert_eq!(inputs[0][0], ((42u64 % 17) as f32) * 0.0625 - 0.5);
+        assert_eq!(inputs[0][1], ((43u64 % 17) as f32) * 0.0625 - 0.5);
+        // arg 1 shifts by argidx = 1.
+        assert_eq!(inputs[1][0], ((43u64 % 17) as f32) * 0.0625 - 0.5);
+        assert_eq!(inputs.len(), 2);
+        assert_eq!(inputs[0].len(), 4);
+    }
+
+    #[test]
+    fn load_real_manifest_when_built() {
+        // Integration-style: only runs when `make artifacts` has run.
+        let dir = Manifest::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        assert_eq!(m.artifacts[PAYLOAD_MMULT].name, "mmult");
+        assert_eq!(m.artifacts[PAYLOAD_DNA].name, "dna");
+        assert_eq!(m.artifacts[PAYLOAD_VECADD].name, "vecadd");
+        assert!(m.artifacts[PAYLOAD_DNA].hlo_path.exists());
+        assert_eq!(m.artifacts[PAYLOAD_VECADD].arg_sizes, vec![8, 8]);
+    }
+
+    #[test]
+    fn out_elems_product() {
+        let spec = ArtifactSpec {
+            name: "t".into(),
+            hlo_path: "/tmp/x".into(),
+            arg_sizes: vec![],
+            arg_shapes: vec![],
+            out_shape: vec![2, 3, 4],
+            golden_seed: 0,
+            golden_output_head: vec![],
+            golden_output_sum: 0.0,
+        };
+        assert_eq!(spec.out_elems(), 24);
+    }
+}

@@ -1,0 +1,167 @@
+//! Chronogram rendering (Figure 11): the trace of kernel executions per
+//! benchmark instance, from the beginning of their first executed block to
+//! the completion of their last, on a GPU-cycle axis.
+
+use super::record::TraceCollector;
+use crate::util::{ns_to_cycles, AppId, Nanos};
+use std::fmt::Write as _;
+
+/// One rendered lane (benchmark instance = column in the paper's figure).
+#[derive(Debug)]
+pub struct Lane {
+    pub app: AppId,
+    /// (start, end) of each kernel execution, ns.
+    pub spans: Vec<(Nanos, Nanos)>,
+}
+
+/// Extracted chronogram data.
+#[derive(Debug)]
+pub struct Chronogram {
+    pub lanes: Vec<Lane>,
+    pub end_ns: Nanos,
+}
+
+impl Chronogram {
+    pub fn from_trace(trace: &TraceCollector, num_apps: usize) -> Self {
+        let mut lanes = Vec::new();
+        let mut end_ns = 0;
+        for a in 0..num_apps {
+            let mut spans: Vec<(Nanos, Nanos)> = trace
+                .kernel_ops(AppId(a))
+                .map(|r| (r.started_at, r.completed_at))
+                .collect();
+            spans.sort_unstable();
+            if let Some(&(_, e)) = spans.last() {
+                end_ns = end_ns.max(e);
+            }
+            lanes.push(Lane { app: AppId(a), spans });
+        }
+        Self { lanes, end_ns }
+    }
+
+    /// Total duration in Mcycles (the paper's Fig. 11 axis unit).
+    pub fn total_mcycles(&self) -> f64 {
+        ns_to_cycles(self.end_ns) as f64 / 1e6
+    }
+
+    /// Do any spans of different lanes overlap (isolation check)?
+    pub fn has_cross_lane_overlap(&self) -> bool {
+        for (i, la) in self.lanes.iter().enumerate() {
+            for lb in &self.lanes[i + 1..] {
+                for &(s1, e1) in &la.spans {
+                    for &(s2, e2) in &lb.spans {
+                        if s1 < e2 && s2 < e1 {
+                            return true;
+                        }
+                    }
+                }
+            }
+        }
+        false
+    }
+
+    /// CSV export: `app,start_cycles,end_cycles` per kernel execution.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("app,start_cycles,end_cycles\n");
+        for lane in &self.lanes {
+            for &(s, e) in &lane.spans {
+                let _ = writeln!(out, "{},{},{}", lane.app.0, ns_to_cycles(s), ns_to_cycles(e));
+            }
+        }
+        out
+    }
+
+    /// ASCII rendering: time flows downward (like the paper's figure),
+    /// one column per instance, `#` where a kernel executes.
+    pub fn render_ascii(&self, rows: usize) -> String {
+        let rows = rows.max(1);
+        let end = self.end_ns.max(1);
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "time v  ({} rows of {:.2} Mcycles each, total {:.1} Mcycles)",
+            rows,
+            self.total_mcycles() / rows as f64,
+            self.total_mcycles()
+        );
+        let _ = writeln!(
+            out,
+            "        {}",
+            self.lanes
+                .iter()
+                .map(|l| format!("inst{:<3}", l.app.0))
+                .collect::<Vec<_>>()
+                .join(" ")
+        );
+        for r in 0..rows {
+            let t0 = end * r as u64 / rows as u64;
+            let t1 = end * (r as u64 + 1) / rows as u64;
+            let mut line = format!("{:>7} ", r);
+            for lane in &self.lanes {
+                let busy = lane.spans.iter().any(|&(s, e)| s < t1 && t0 < e);
+                line.push_str(if busy { "  ##   " } else { "  ..   " });
+            }
+            let _ = writeln!(out, "{}", line.trim_end());
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::record::OpRecord;
+    use crate::util::OpUid;
+
+    fn trace_with(spans: &[(usize, Nanos, Nanos)]) -> TraceCollector {
+        let mut t = TraceCollector::new(false);
+        for &(app, s, e) in spans {
+            t.ops.push(OpRecord {
+                op: OpUid(s),
+                app: AppId(app),
+                kernel_name: Some("k".into()),
+                is_kernel: true,
+                is_copy: false,
+                enqueued_at: s,
+                started_at: s,
+                completed_at: e,
+                burst: 0,
+            });
+        }
+        t
+    }
+
+    #[test]
+    fn extracts_lanes_and_total() {
+        let t = trace_with(&[(0, 0, 100), (0, 200, 300), (1, 50, 150)]);
+        let c = Chronogram::from_trace(&t, 2);
+        assert_eq!(c.lanes[0].spans.len(), 2);
+        assert_eq!(c.lanes[1].spans.len(), 1);
+        assert_eq!(c.end_ns, 300);
+    }
+
+    #[test]
+    fn overlap_detection() {
+        let no = Chronogram::from_trace(&trace_with(&[(0, 0, 100), (1, 100, 200)]), 2);
+        assert!(!no.has_cross_lane_overlap());
+        let yes = Chronogram::from_trace(&trace_with(&[(0, 0, 100), (1, 50, 150)]), 2);
+        assert!(yes.has_cross_lane_overlap());
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let c = Chronogram::from_trace(&trace_with(&[(0, 0, 1000)]), 1);
+        let csv = c.to_csv();
+        assert!(csv.starts_with("app,start_cycles,end_cycles\n"));
+        assert_eq!(csv.lines().count(), 2);
+    }
+
+    #[test]
+    fn ascii_marks_busy_rows() {
+        let c = Chronogram::from_trace(&trace_with(&[(0, 0, 500), (1, 500, 1000)]), 2);
+        let art = c.render_ascii(10);
+        assert!(art.contains("##"));
+        assert!(art.contains("inst0"));
+        assert!(art.contains("inst1"));
+    }
+}

@@ -1,0 +1,8 @@
+//! Instrumentation: trace records (nsys-analogue + kernel-level, §VI-B)
+//! and the chronogram renderer (Fig. 11).
+
+pub mod chronogram;
+pub mod record;
+
+pub use chronogram::Chronogram;
+pub use record::{BlockRecord, OpRecord, StallRecord, SwitchRecord, TraceCollector};

@@ -1,0 +1,167 @@
+//! Trace records collected during a run.
+//!
+//! Two granularities, matching §VI-B:
+//! * application-level (nsys-analogue): one record per GPU operation with
+//!   its full lifecycle timestamps;
+//! * kernel-level (custom instrumentation): one record per *batch* of
+//!   thread blocks placed on an SM, end-to-end.
+
+use crate::util::{AppId, CtxId, Nanos, OpUid, SmId};
+
+/// Application-level record: the lifecycle of one GPU operation.
+#[derive(Debug, Clone)]
+pub struct OpRecord {
+    pub op: OpUid,
+    pub app: AppId,
+    pub kernel_name: Option<String>,
+    pub is_kernel: bool,
+    pub is_copy: bool,
+    pub enqueued_at: Nanos,
+    pub started_at: Nanos,
+    pub completed_at: Nanos,
+    pub burst: usize,
+}
+
+impl OpRecord {
+    /// Device-side execution time (ET in eq. 1).
+    pub fn exec_ns(&self) -> Nanos {
+        self.completed_at.saturating_sub(self.started_at)
+    }
+
+    /// Queueing delay from routine call to execution start.
+    pub fn queue_ns(&self) -> Nanos {
+        self.started_at.saturating_sub(self.enqueued_at)
+    }
+}
+
+/// Kernel-level record: one batch of blocks on one SM.
+#[derive(Debug, Clone, Copy)]
+pub struct BlockRecord {
+    pub op: OpUid,
+    pub app: AppId,
+    pub sm: SmId,
+    pub blocks: u32,
+    pub start: Nanos,
+    pub end: Nanos,
+    /// True when the batch was resumed after a context-switch freeze.
+    pub resumed: bool,
+}
+
+/// Context-switch record.
+#[derive(Debug, Clone, Copy)]
+pub struct SwitchRecord {
+    pub at: Nanos,
+    pub from: Option<CtxId>,
+    pub to: CtxId,
+    pub cost_ns: Nanos,
+}
+
+/// Software-stack stall record (shared-queue collision).
+#[derive(Debug, Clone, Copy)]
+pub struct StallRecord {
+    pub op: OpUid,
+    pub at: Nanos,
+    pub duration_ns: Nanos,
+}
+
+/// Everything collected during one simulated run.
+#[derive(Debug, Default)]
+pub struct TraceCollector {
+    pub ops: Vec<OpRecord>,
+    pub blocks: Vec<BlockRecord>,
+    pub switches: Vec<SwitchRecord>,
+    pub stalls: Vec<StallRecord>,
+    /// Collect block-level records? (kernel-level instrumentation on/off —
+    /// nsys-level op records are always on.)
+    pub block_level: bool,
+}
+
+impl TraceCollector {
+    pub fn new(block_level: bool) -> Self {
+        Self { block_level, ..Default::default() }
+    }
+
+    /// Kernel op records for one app, in completion order.
+    pub fn kernel_ops(&self, app: AppId) -> impl Iterator<Item = &OpRecord> {
+        self.ops.iter().filter(move |r| r.app == app && r.is_kernel)
+    }
+
+    /// All execution times of kernels of `app` (NET numerator inputs).
+    pub fn kernel_exec_times(&self, app: AppId) -> Vec<Nanos> {
+        self.kernel_ops(app).map(|r| r.exec_ns()).collect()
+    }
+
+    /// Overlap check used by the isolation property tests (§VII-B): do any
+    /// two *kernel* executions from different apps overlap in time?
+    pub fn cross_app_kernel_overlaps(&self) -> usize {
+        let mut kernels: Vec<&OpRecord> =
+            self.ops.iter().filter(|r| r.is_kernel).collect();
+        kernels.sort_by_key(|r| r.started_at);
+        let mut overlaps = 0;
+        for i in 0..kernels.len() {
+            for j in (i + 1)..kernels.len() {
+                let (a, b) = (kernels[i], kernels[j]);
+                if b.started_at >= a.completed_at {
+                    break; // sorted: no later kernel can overlap a
+                }
+                if a.app != b.app {
+                    overlaps += 1;
+                }
+            }
+        }
+        overlaps
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(app: usize, start: Nanos, end: Nanos) -> OpRecord {
+        OpRecord {
+            op: OpUid(start),
+            app: AppId(app),
+            kernel_name: Some("k".into()),
+            is_kernel: true,
+            is_copy: false,
+            enqueued_at: start.saturating_sub(10),
+            started_at: start,
+            completed_at: end,
+            burst: 0,
+        }
+    }
+
+    #[test]
+    fn exec_and_queue_times() {
+        let r = rec(0, 100, 180);
+        assert_eq!(r.exec_ns(), 80);
+        assert_eq!(r.queue_ns(), 10);
+    }
+
+    #[test]
+    fn overlap_detection_cross_app() {
+        let mut t = TraceCollector::new(false);
+        t.ops.push(rec(0, 0, 100));
+        t.ops.push(rec(1, 50, 150)); // overlaps app0
+        t.ops.push(rec(0, 200, 300));
+        t.ops.push(rec(1, 300, 400)); // touches but does not overlap
+        assert_eq!(t.cross_app_kernel_overlaps(), 1);
+    }
+
+    #[test]
+    fn overlap_same_app_not_counted() {
+        let mut t = TraceCollector::new(false);
+        t.ops.push(rec(0, 0, 100));
+        t.ops.push(rec(0, 50, 150));
+        assert_eq!(t.cross_app_kernel_overlaps(), 0);
+    }
+
+    #[test]
+    fn kernel_exec_times_filters_by_app() {
+        let mut t = TraceCollector::new(false);
+        t.ops.push(rec(0, 0, 10));
+        t.ops.push(rec(1, 0, 20));
+        t.ops.push(rec(0, 30, 70));
+        assert_eq!(t.kernel_exec_times(AppId(0)), vec![10, 40]);
+    }
+}

@@ -1,0 +1,80 @@
+//! Strongly-typed identifiers used across the simulator.
+//!
+//! Everything is a thin newtype over an index so subsystems cannot confuse
+//! an application id with a context id even though, in the common
+//! one-context-per-process setup (§II-A of the paper), they happen to be
+//! numerically equal.
+
+use std::fmt;
+
+/// An application (one host process, one CARMEL core, one GPU context).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct AppId(pub usize);
+
+/// A GPU context. Separate OS processes default to separate contexts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct CtxId(pub usize);
+
+/// A CUDA stream within a context (FIFO queue of GPU operations).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct StreamId {
+    pub ctx: CtxId,
+    pub idx: usize,
+}
+
+/// A streaming multiprocessor (the Xavier Volta has 8).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SmId(pub usize);
+
+/// Unique id of one GPU operation instance (kernel launch, copy, callback).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct OpUid(pub u64);
+
+/// Unique id of one thread block instance of one kernel op.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct BlockUid(pub u64);
+
+impl fmt::Display for AppId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "app{}", self.0)
+    }
+}
+impl fmt::Display for CtxId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ctx{}", self.0)
+    }
+}
+impl fmt::Display for StreamId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}.s{}", self.ctx, self.idx)
+    }
+}
+impl fmt::Display for OpUid {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "op{}", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_forms() {
+        assert_eq!(AppId(3).to_string(), "app3");
+        let s = StreamId { ctx: CtxId(1), idx: 2 };
+        assert_eq!(s.to_string(), "ctx1.s2");
+        assert_eq!(OpUid(9).to_string(), "op9");
+    }
+
+    #[test]
+    fn ids_are_ordered_and_hashable() {
+        use std::collections::HashSet;
+        let mut set = HashSet::new();
+        set.insert(OpUid(1));
+        set.insert(OpUid(1));
+        set.insert(OpUid(2));
+        assert_eq!(set.len(), 2);
+        assert!(OpUid(1) < OpUid(2));
+    }
+}

@@ -1,0 +1,10 @@
+//! Shared primitives: identifiers, virtual time, deterministic RNG.
+
+pub mod ids;
+pub mod rng;
+pub mod json;
+pub mod time;
+
+pub use ids::{AppId, BlockUid, CtxId, OpUid, SmId, StreamId};
+pub use rng::DetRng;
+pub use time::{cycles_to_ns, ns_to_cycles, Nanos, GPU_HZ};

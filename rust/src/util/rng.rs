@@ -1,0 +1,189 @@
+//! Deterministic random numbers for the simulator (no external deps).
+//!
+//! Every run is seeded from the experiment config, so a configuration name
+//! (e.g. `onnx_dna-parallel-synced`) plus a seed fully determines the
+//! trace. The generator is xoshiro256** seeded through SplitMix64 — fast,
+//! well-distributed, and trivially reproducible across platforms. Each
+//! subsystem derives its own child stream so adding draws in one subsystem
+//! never perturbs another.
+
+/// SplitMix64 step (seeding and child derivation).
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic RNG handle (xoshiro256**).
+#[derive(Debug, Clone)]
+pub struct DetRng {
+    s: [u64; 4],
+    /// Root seed retained so children derive from identity, not position.
+    seed: u64,
+}
+
+impl DetRng {
+    /// Root generator for a run.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Self { s, seed }
+    }
+
+    /// Derive an independent child stream (e.g. per subsystem or per app).
+    /// Children depend only on (root seed, tag), never on how many draws
+    /// the parent has made.
+    pub fn child(&self, tag: u64) -> Self {
+        Self::new(self.seed ^ tag.wrapping_mul(0xA24B_AED4_963E_E407).rotate_left(17))
+    }
+
+    /// Next raw 64-bit value (xoshiro256**).
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        // 53 high bits -> uniform double in [0, 1).
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        if lo >= hi {
+            return lo;
+        }
+        let span = hi - lo + 1;
+        lo + self.next_u64() % span
+    }
+
+    /// Uniform usize in [0, n) — handy for index picking. n must be > 0.
+    pub fn index(&mut self, n: usize) -> usize {
+        assert!(n > 0, "index() on empty range");
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Multiplicative jitter factor in [1-amp, 1+amp].
+    pub fn jitter(&mut self, amp: f64) -> f64 {
+        1.0 + amp * (2.0 * self.f64() - 1.0)
+    }
+
+    /// Bernoulli draw.
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Heavy-tailed sample in [1, cap]: Pareto-like, used by the
+    /// software-stack stall injector (gpu/stall.rs) to reproduce the
+    /// paper's rare 1200x onnx_dna outliers.
+    pub fn pareto(&mut self, alpha: f64, cap: f64) -> f64 {
+        let u = self.f64().max(1e-12);
+        (1.0 / u.powf(1.0 / alpha)).min(cap)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn determinism_same_seed_same_stream() {
+        let mut a = DetRng::new(7);
+        let mut b = DetRng::new(7);
+        for _ in 0..64 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn children_are_independent_of_parent_draw_count() {
+        let root = DetRng::new(1);
+        let mut c1 = root.child(42);
+        let mut root2 = DetRng::new(1);
+        let _ = root2.next_u64(); // extra parent draw must not matter
+        let mut c2 = root2.child(42);
+        assert_eq!(c1.next_u64(), c2.next_u64());
+    }
+
+    #[test]
+    fn children_with_different_tags_differ() {
+        let root = DetRng::new(1);
+        assert_ne!(root.child(1).clone().next_u64(), root.child(2).clone().next_u64());
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = DetRng::new(2);
+        for _ in 0..10_000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn f64_mean_is_near_half() {
+        let mut r = DetRng::new(9);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn jitter_bounds() {
+        let mut r = DetRng::new(3);
+        for _ in 0..1000 {
+            let j = r.jitter(0.05);
+            assert!((0.95..=1.05).contains(&j));
+        }
+    }
+
+    #[test]
+    fn pareto_bounds_and_tail() {
+        let mut r = DetRng::new(4);
+        let mut seen_big = false;
+        for _ in 0..20_000 {
+            let v = r.pareto(1.0, 1200.0);
+            assert!((1.0..=1200.0).contains(&v));
+            if v > 100.0 {
+                seen_big = true;
+            }
+        }
+        assert!(seen_big, "heavy tail should occasionally exceed 100x");
+    }
+
+    #[test]
+    fn range_degenerate_and_inclusive() {
+        let mut r = DetRng::new(5);
+        assert_eq!(r.range(4, 4), 4);
+        assert_eq!(r.range(9, 2), 9);
+        let mut saw_lo = false;
+        let mut saw_hi = false;
+        for _ in 0..1000 {
+            match r.range(1, 3) {
+                1 => saw_lo = true,
+                3 => saw_hi = true,
+                2 => {}
+                other => panic!("out of range: {other}"),
+            }
+        }
+        assert!(saw_lo && saw_hi);
+    }
+}

@@ -1,0 +1,57 @@
+//! Virtual time. The simulator clock is in nanoseconds; chronograms are
+//! reported in GPU cycles like the paper's Figure 11 (the Xavier GPU tops
+//! out at 1.377 GHz under MAXN).
+
+/// Simulator timestamps and durations, in nanoseconds of virtual time.
+pub type Nanos = u64;
+
+/// Nominal Volta GPU frequency on the Jetson AGX Xavier under MAXN (Hz).
+pub const GPU_HZ: u64 = 1_377_000_000;
+
+/// Convert a nanosecond duration to GPU cycles (for chronogram axes).
+pub fn ns_to_cycles(ns: Nanos) -> u64 {
+    // (ns * GHz) without overflow for any plausible sim horizon:
+    // ns < 2^44 for a 4-hour run, GPU_HZ < 2^31, so use u128.
+    ((ns as u128 * GPU_HZ as u128) / 1_000_000_000u128) as u64
+}
+
+/// Convert GPU cycles to nanoseconds of virtual time.
+pub fn cycles_to_ns(cycles: u64) -> Nanos {
+    ((cycles as u128 * 1_000_000_000u128) / GPU_HZ as u128) as u64
+}
+
+/// Microseconds helper for readable timing configs.
+pub const fn us(n: u64) -> Nanos {
+    n * 1_000
+}
+
+/// Milliseconds helper for readable timing configs.
+pub const fn ms(n: u64) -> Nanos {
+    n * 1_000_000
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycle_conversion_roundtrip() {
+        for ns in [0u64, 1_000, 1_000_000, 60_000_000_000] {
+            let cyc = ns_to_cycles(ns);
+            let back = cycles_to_ns(cyc);
+            // Round-trip is exact to within one cycle's worth of ns.
+            assert!(back.abs_diff(ns) <= 1, "{ns} -> {cyc} -> {back}");
+        }
+    }
+
+    #[test]
+    fn one_second_is_gpu_hz_cycles() {
+        assert_eq!(ns_to_cycles(1_000_000_000), GPU_HZ);
+    }
+
+    #[test]
+    fn helpers() {
+        assert_eq!(us(5), 5_000);
+        assert_eq!(ms(2), 2_000_000);
+    }
+}

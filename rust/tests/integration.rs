@@ -1,0 +1,148 @@
+//! Integration tests: harness wiring, hook toolchain end-to-end, the CLI
+//! binary, and cross-module flows.
+
+use cook::config::StrategyKind;
+use cook::harness::{run_spec, Bench, ExperimentSpec, Isol};
+use cook::hooks::{generate_standard, loc_report};
+use std::process::Command;
+
+fn cli() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_cook"))
+}
+
+#[test]
+fn paper_grid_all_sixteen_configs_run() {
+    for spec in ExperimentSpec::paper_grid() {
+        let r = run_spec(spec, 3);
+        let expected_apps = spec.isol.instances();
+        assert_eq!(r.net.len(), expected_apps, "{spec}");
+        for a in 0..expected_apps {
+            assert!(r.kernels[a] > 0, "{spec}: instance {a} ran no kernels");
+        }
+        if spec.strategy.isolates() {
+            assert_eq!(r.overlaps, 0, "{spec} must isolate");
+        }
+    }
+}
+
+#[test]
+fn hookgen_writes_compilable_tree_for_all_strategies() {
+    let dir = std::env::temp_dir().join(format!("cook_it_{}", std::process::id()));
+    for strategy in StrategyKind::PAPER_SET {
+        let lib = generate_standard(strategy);
+        let sub = dir.join(strategy.name());
+        lib.write_to(&sub).unwrap();
+        for f in ["config.cook", "cook_common.h", "cook_common.c", "cook_hooks.c", "cook_trampolines.c"] {
+            assert!(sub.join(f).exists(), "{strategy}: missing {f}");
+        }
+        // Balanced braces across the whole emitted tree.
+        let code = lib.generated_code();
+        assert_eq!(code.matches('{').count(), code.matches('}').count(), "{strategy}");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn loc_reports_stable_across_calls() {
+    let a = loc_report(StrategyKind::Worker);
+    let b = loc_report(StrategyKind::Worker);
+    assert_eq!(a.generated, b.generated);
+    assert_eq!(a.configuration, b.configuration);
+    assert_eq!(a.templates, b.templates);
+}
+
+#[test]
+fn cli_help_lists_commands() {
+    let out = cli().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["run", "experiment", "chronogram", "hookgen", "symbols", "validate", "serve"] {
+        assert!(text.contains(cmd), "help missing {cmd}");
+    }
+}
+
+#[test]
+fn cli_run_prints_metrics() {
+    let out = cli().args(["run", "cuda_mmult-isolation-none"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("NET inst0"));
+    assert!(text.contains("Mcycles"));
+}
+
+#[test]
+fn cli_rejects_bad_spec() {
+    let out = cli().args(["run", "nonsense-spec"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("error"));
+}
+
+#[test]
+fn cli_chronogram_renders() {
+    let out = cli()
+        .args(["chronogram", "cuda_mmult-parallel-worker", "--rows", "8"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("inst0"));
+    assert!(text.contains("overlap=no"), "worker must isolate: {text}");
+}
+
+#[test]
+fn cli_hookgen_emits_tree() {
+    let dir = std::env::temp_dir().join(format!("cook_cli_hooks_{}", std::process::id()));
+    let out = cli()
+        .args(["hookgen", "--strategy", "worker", "--out", dir.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(dir.join("cook_worker.c").exists());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("385 symbols bound"));
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn cli_symbols_lists_unknowns() {
+    let out = cli().args(["symbols", "--unknown"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("_ptsz"));
+    assert!(text.contains("declaration not found"));
+}
+
+#[test]
+fn seeds_change_traces_but_not_workload() {
+    let spec = ExperimentSpec::new(Bench::CudaMmult, Isol::Parallel, StrategyKind::None);
+    let a = run_spec(spec, 1);
+    let b = run_spec(spec, 2);
+    assert_eq!(a.kernels, b.kernels, "same work under different seeds");
+    let ta: f64 = a.net.iter().flatten().sum();
+    let tb: f64 = b.net.iter().flatten().sum();
+    assert!((ta - tb).abs() > 1e-9, "different seeds must perturb timing");
+}
+
+#[test]
+fn pooled_runs_grow_sample_counts() {
+    use cook::harness::run_spec_pooled;
+    let spec = ExperimentSpec::new(Bench::CudaMmult, Isol::Isolation, StrategyKind::Worker);
+    let pooled = run_spec_pooled(spec, &[1, 2, 3]);
+    assert_eq!(pooled.net[0].len(), 3 * 300);
+}
+
+#[test]
+fn chronogram_csv_roundtrip() {
+    let spec = ExperimentSpec::new(Bench::CudaMmult, Isol::Parallel, StrategyKind::Synced);
+    let r = run_spec(spec, 0);
+    let csv = r.chronogram.to_csv();
+    assert!(csv.lines().count() > 600, "600 kernels expected in the csv");
+    for line in csv.lines().skip(1).take(5) {
+        let cols: Vec<&str> = line.split(',').collect();
+        assert_eq!(cols.len(), 3);
+        let s: u64 = cols[1].parse().unwrap();
+        let e: u64 = cols[2].parse().unwrap();
+        assert!(e >= s);
+    }
+}

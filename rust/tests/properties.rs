@@ -1,0 +1,250 @@
+//! Property-based tests over the coordinator invariants.
+//!
+//! The vendored offline environment has no proptest, so this uses the
+//! project's deterministic RNG + workload generator as the case source:
+//! hundreds of random (program, strategy, seed) combinations, each checked
+//! against the invariants the paper's aspects demand. Failures print the
+//! offending seed for exact reproduction.
+
+use cook::apps::workload::{random_program, WorkloadParams};
+use cook::apps::Program;
+use cook::config::{SimConfig, StrategyKind};
+use cook::gpu::Sim;
+use cook::util::{AppId, DetRng};
+use std::collections::HashMap;
+
+fn sim_random(trial: u64, strategy: StrategyKind, apps: usize) -> Sim {
+    let mut rng = DetRng::new(0xC00C + trial);
+    let params = WorkloadParams::default();
+    let programs: Vec<Program> =
+        (0..apps).map(|_| random_program(&mut rng, &params)).collect();
+    let cfg = SimConfig::default().with_strategy(strategy).with_seed(trial);
+    let mut sim = Sim::new(cfg, programs);
+    sim.run();
+    sim
+}
+
+/// Every strategy preserves liveness: all random workloads complete.
+#[test]
+fn prop_no_deadlock_all_strategies() {
+    for trial in 0..30 {
+        for strategy in StrategyKind::ALL {
+            let sim = sim_random(trial, strategy, 2);
+            for a in 0..2 {
+                assert_eq!(
+                    sim.completions(AppId(a)).len(),
+                    1,
+                    "trial {trial} strategy {strategy} app{a} deadlocked"
+                );
+            }
+        }
+    }
+}
+
+/// Aspect 7 (order preservation): kernels/copies of one application
+/// complete in the order its host enqueued them.
+#[test]
+fn prop_fifo_completion_order_per_app() {
+    for trial in 0..40 {
+        for strategy in StrategyKind::ALL {
+            let sim = sim_random(trial, strategy, 2);
+            for a in 0..2 {
+                let uids: Vec<u64> = sim
+                    .trace
+                    .ops
+                    .iter()
+                    .filter(|r| r.app == AppId(a) && (r.is_kernel || r.is_copy))
+                    .map(|r| r.op.0)
+                    .collect();
+                let mut sorted = uids.clone();
+                sorted.sort_unstable();
+                assert_eq!(
+                    uids, sorted,
+                    "trial {trial} strategy {strategy} app{a}: completion out of order"
+                );
+            }
+        }
+    }
+}
+
+/// Aspect 6 (burst preservation): no operation of burst N+1 starts before
+/// every operation of burst N (same app) completed.
+#[test]
+fn prop_burst_barriers_respected() {
+    for trial in 0..40 {
+        for strategy in [StrategyKind::None, StrategyKind::Synced, StrategyKind::Worker] {
+            let sim = sim_random(trial, strategy, 2);
+            for a in 0..2 {
+                let mut burst_end: HashMap<usize, u64> = HashMap::new();
+                for r in sim.trace.ops.iter().filter(|r| r.app == AppId(a)) {
+                    let e = burst_end.entry(r.burst).or_insert(0);
+                    *e = (*e).max(r.completed_at);
+                }
+                for r in sim.trace.ops.iter().filter(|r| r.app == AppId(a)) {
+                    if r.burst == 0 {
+                        continue;
+                    }
+                    if let Some(&prev_end) = burst_end.get(&(r.burst - 1)) {
+                        assert!(
+                            r.started_at >= prev_end,
+                            "trial {trial} {strategy} app{a}: burst {} op started at {} \
+                             before burst {} drained at {}",
+                            r.burst,
+                            r.started_at,
+                            r.burst - 1,
+                            prev_end
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// §VII-B: synced and worker guarantee mutual exclusion of GPU kernels
+/// across applications, for arbitrary workloads.
+#[test]
+fn prop_isolation_under_synced_and_worker() {
+    for trial in 0..40 {
+        for strategy in [StrategyKind::Synced, StrategyKind::Worker] {
+            let sim = sim_random(trial, strategy, 2);
+            assert_eq!(
+                sim.trace.cross_app_kernel_overlaps(),
+                0,
+                "trial {trial} strategy {strategy}: isolation violated"
+            );
+        }
+    }
+}
+
+/// Determinism: identical (config, seed, programs) produce identical
+/// traces, event for event.
+#[test]
+fn prop_bit_deterministic() {
+    for trial in 0..10 {
+        for strategy in [StrategyKind::None, StrategyKind::Worker] {
+            let a = sim_random(trial, strategy, 2);
+            let b = sim_random(trial, strategy, 2);
+            assert_eq!(a.trace.ops.len(), b.trace.ops.len());
+            for (x, y) in a.trace.ops.iter().zip(&b.trace.ops) {
+                assert_eq!(
+                    (x.op, x.started_at, x.completed_at),
+                    (y.op, y.started_at, y.completed_at)
+                );
+            }
+            assert_eq!(a.trace.switches.len(), b.trace.switches.len());
+        }
+    }
+}
+
+/// Trace sanity: timestamps are ordered for every op that ran.
+#[test]
+fn prop_timestamps_monotonic() {
+    for trial in 0..30 {
+        let sim = sim_random(trial, StrategyKind::None, 2);
+        for r in &sim.trace.ops {
+            assert!(r.enqueued_at <= r.started_at, "op enqueued after start");
+            assert!(r.started_at <= r.completed_at, "op completed before start");
+        }
+    }
+}
+
+/// NET is well-formed: every value >= 1 (eq. 1 normalises by the
+/// per-kernel-name minimum).
+#[test]
+fn prop_net_well_formed() {
+    for trial in 0..20 {
+        let sim = sim_random(trial, StrategyKind::None, 2);
+        for a in 0..2 {
+            let net = cook::metrics::net_per_kernel(&sim.trace, AppId(a));
+            for v in &net {
+                assert!(*v >= 1.0 - 1e-9, "NET below 1: {v}");
+            }
+        }
+    }
+}
+
+/// The GPU lock's grants equal its releases at quiescence for the
+/// strategies that bracket each op (synced/worker).
+#[test]
+fn prop_lock_balance() {
+    for trial in 0..30 {
+        for strategy in [StrategyKind::Synced, StrategyKind::Worker] {
+            let sim = sim_random(trial, strategy, 2);
+            assert_eq!(
+                sim.lock.grants.len(),
+                sim.lock.releases.len(),
+                "trial {trial} {strategy}: unbalanced lock"
+            );
+        }
+    }
+}
+
+/// Single-app runs never context-switch (no other context to switch to)
+/// and never stall (no shared-queue exposure).
+#[test]
+fn prop_isolation_has_no_interference_machinery() {
+    for trial in 0..20 {
+        let sim = sim_random(trial, StrategyKind::None, 1);
+        assert!(sim.trace.switches.len() <= 1, "spurious context switches");
+        assert_eq!(sim.trace.stalls.len(), 0, "stall injected in isolation");
+        assert_eq!(sim.trace.cross_app_kernel_overlaps(), 0);
+    }
+}
+
+/// Strategy equivalence of results: the multiset of kernels executed is
+/// identical across strategies — access control changes scheduling, never
+/// the work performed.
+#[test]
+fn prop_same_work_under_all_strategies() {
+    for trial in 0..20 {
+        let mut reference: Option<Vec<String>> = None;
+        for strategy in StrategyKind::ALL {
+            let sim = sim_random(trial, strategy, 2);
+            let mut names: Vec<String> = sim
+                .trace
+                .ops
+                .iter()
+                .filter(|r| r.is_kernel)
+                .map(|r| format!("{}/{}", r.app, r.kernel_name.as_deref().unwrap_or("?")))
+                .collect();
+            names.sort();
+            match &reference {
+                None => reference = Some(names),
+                Some(r) => assert_eq!(
+                    &names, r,
+                    "trial {trial} strategy {strategy}: different work executed"
+                ),
+            }
+        }
+    }
+}
+
+/// Hook generation is total over arbitrary condition orderings: every
+/// symbol gets exactly one binding, whatever the rule shuffle.
+#[test]
+fn prop_hookgen_total_over_rule_shuffles() {
+    use cook::cudart::SymbolTable;
+    use cook::hooks::{standard_conditions, ConditionSet, HookLibrary};
+    let table = SymbolTable::cuda_runtime_11_4();
+    let mut rng = DetRng::new(99);
+    for strategy in [StrategyKind::Callback, StrategyKind::Synced, StrategyKind::Worker] {
+        for _ in 0..10 {
+            let mut rules = standard_conditions(strategy).rules;
+            for i in (1..rules.len()).rev() {
+                let j = rng.index(i + 1);
+                rules.swap(i, j);
+            }
+            let lib = HookLibrary::generate(&table, strategy, &ConditionSet::new(rules));
+            assert_eq!(lib.bindings.len(), table.len());
+            let code = lib.generated_code();
+            for sym in &table.symbols {
+                assert!(
+                    code.contains(sym.name.as_str()),
+                    "{strategy}: symbol {} missing from generated library",
+                    sym.name
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! PJRT runtime integration: the cross-language numerics gate.
+//!
+//! These tests require `make artifacts` (they are the rust half of the
+//! L1/L2 <-> L3 contract). They skip, loudly, when artifacts are absent
+//! so `cargo test` stays usable before the python step.
+
+use cook::runtime::{Manifest, PjrtEngine, PAYLOAD_DNA, PAYLOAD_MMULT, PAYLOAD_VECADD};
+
+fn engine() -> Option<PjrtEngine> {
+    if !Manifest::default_dir().join("manifest.json").exists() {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(PjrtEngine::load_default().expect("engine must load"))
+}
+
+#[test]
+fn all_artifacts_match_jax_goldens() {
+    let Some(e) = engine() else { return };
+    e.validate_all().unwrap();
+}
+
+#[test]
+fn vecadd_exact_numerics() {
+    let Some(e) = engine() else { return };
+    let out = e.execute(PAYLOAD_VECADD, &[vec![1.5; 8], vec![-0.5; 8]]).unwrap();
+    assert_eq!(out, vec![2.0; 8]); // (1.5 - 0.5) * 2
+}
+
+#[test]
+fn mmult_matches_naive_rust_matmul() {
+    let Some(e) = engine() else { return };
+    let spec = &e.manifest.artifacts[PAYLOAD_MMULT];
+    let n = spec.arg_shapes[0][0];
+    let inputs = spec.golden_inputs();
+    let out = e.execute(PAYLOAD_MMULT, &inputs).unwrap();
+    // Naive O(n^3) reference on a few sampled entries.
+    let (a, b) = (&inputs[0], &inputs[1]);
+    for &(i, j) in &[(0usize, 0usize), (1, 7), (13, 200), (n - 1, n - 1)] {
+        let mut acc = 0f64;
+        for k in 0..n {
+            acc += a[i * n + k] as f64 * b[k * n + j] as f64;
+        }
+        let got = out[i * n + j] as f64;
+        assert!(
+            (got - acc).abs() < 1e-2 * acc.abs().max(1.0),
+            "mmult[{i},{j}] = {got}, naive = {acc}"
+        );
+    }
+}
+
+#[test]
+fn dna_output_shape_and_sensitivity() {
+    let Some(e) = engine() else { return };
+    let spec = &e.manifest.artifacts[PAYLOAD_DNA];
+    let base = e.execute(PAYLOAD_DNA, &spec.golden_inputs()).unwrap();
+    assert_eq!(base.len(), 8, "4 bbox coords + 4 class logits");
+    assert!(base.iter().all(|v| v.is_finite()));
+    let mut perturbed = spec.golden_inputs();
+    perturbed[0][0] += 1.0;
+    let out2 = e.execute(PAYLOAD_DNA, &perturbed).unwrap();
+    assert_ne!(base, out2, "model must react to input changes");
+}
+
+#[test]
+fn dna_deterministic_across_calls() {
+    let Some(e) = engine() else { return };
+    let spec = &e.manifest.artifacts[PAYLOAD_DNA];
+    let a = e.execute(PAYLOAD_DNA, &spec.golden_inputs()).unwrap();
+    let b = e.execute(PAYLOAD_DNA, &spec.golden_inputs()).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn wrong_arity_and_shape_are_rejected() {
+    let Some(e) = engine() else { return };
+    assert!(e.execute(PAYLOAD_VECADD, &[vec![0.0; 8]]).is_err(), "arity");
+    assert!(
+        e.execute(PAYLOAD_VECADD, &[vec![0.0; 4], vec![0.0; 8]]).is_err(),
+        "element count"
+    );
+    assert!(e.execute(99, &[]).is_err(), "unknown payload");
+}
+
+#[test]
+fn live_serving_all_strategies_small() {
+    let Some(_) = engine() else { return };
+    use cook::config::StrategyKind;
+    use cook::control::serve_dna;
+    for strategy in [StrategyKind::None, StrategyKind::Synced, StrategyKind::Worker] {
+        let report = serve_dna(strategy, 2, 3, Manifest::default_dir()).unwrap();
+        assert_eq!(report.total(), 6, "{strategy}");
+        assert!(report.ips() > 0.0);
+        assert!(report.latency_p(0.5) > 0.0);
+    }
+}
