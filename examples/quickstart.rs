@@ -15,7 +15,7 @@ use cook::cudart::{Grid, KernelDesc};
 use cook::gpu::Sim;
 use cook::hooks::generate_standard;
 use cook::metrics::net_per_kernel;
-use cook::runtime::{PjrtEngine, PAYLOAD_VECADD};
+use cook::runtime::{Engine, PAYLOAD_VECADD};
 use cook::util::AppId;
 
 fn main() -> anyhow::Result<()> {
@@ -45,17 +45,23 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    // --- 3. real numerics through the PJRT runtime ----------------------
-    match PjrtEngine::load_default() {
+    // --- 3. real numerics through the runtime engine ---------------------
+    // (PJRT when built with `--features pjrt`, the pure-Rust reference
+    // interpreter otherwise.)
+    match Engine::load_default() {
         Ok(engine) => {
             engine.validate_golden(PAYLOAD_VECADD)?;
             let out = engine.execute(PAYLOAD_VECADD, &[vec![1.0; 8], vec![2.0; 8]])?;
-            println!("vecadd(ones, twos) through PJRT = {:?}", &out[..4]);
+            println!(
+                "vecadd(ones, twos) through {} = {:?}",
+                engine.platform(),
+                &out[..4]
+            );
             assert_eq!(out, vec![6.0; 8]); // (1 + 2) * 2
             println!("quickstart OK");
         }
         Err(e) => {
-            println!("PJRT artifacts not built (run `make artifacts`): {e}");
+            println!("artifacts not built (run `make artifacts`): {e}");
         }
     }
     Ok(())

@@ -1,14 +1,25 @@
-//! Access control: the global GPU lock and per-strategy runtime state.
-//! Strategy *behaviour* lives in the engine's routine hooks
-//! (gpu/engine.rs), driven by `config::StrategyKind`; this module holds
-//! the shared mechanisms (lock, worker threads, live controller).
+//! Access control: the policy layer, the global GPU lock/gate, and the
+//! per-strategy runtime state.
+//!
+//! Strategy *dispatch* lives in exactly one place — [`policy`] — shared
+//! by the simulator (`gpu::engine` interprets the policy's plans with
+//! simulated events) and the live serving subsystem ([`serving`]
+//! interprets the same plans with real threads and the FIFO [`gate`]).
+//! This module also holds the shared mechanisms: the simulated semaphore
+//! ([`lock`]), the live gate ([`gate`]), and worker-thread state
+//! ([`worker`]).
 
+pub mod gate;
 pub mod lock;
-pub mod live;
-pub mod serve;
+pub mod policy;
+pub mod serving;
 pub mod worker;
 
-pub use live::LiveController;
+pub use gate::{GateGrant, GateStats, GpuGate};
 pub use lock::{GpuLock, LockClient};
-pub use serve::{serve_dna, ServeReport};
+pub use policy::{AccessPolicy, Admission, Arbitration, OrderedOpRule};
+pub use serving::{
+    serve, serve_dna, ManifestBackend, PayloadExecutor, ResolvedPayload, ServeBackend,
+    ServeReport, ServeSpec, SyntheticBackend,
+};
 pub use worker::{WorkerPhase, WorkerState};

@@ -1,0 +1,275 @@
+//! The `AccessPolicy` layer: the ONE place that maps a [`StrategyKind`]
+//! to behaviour.
+//!
+//! The paper specifies access control as a four-step state machine —
+//! acquire → insert → sync → release (Algs. 1–7) — realised by
+//! interchangeable strategies. Before this layer existed, each strategy
+//! was implemented twice: once inside the discrete-event simulator
+//! (`gpu::engine`) and once, divergently, in the live serving path. Both
+//! consumers now ask the policy *what* a strategy does and keep only the
+//! *mechanism* (event plumbing, threads, locks) local:
+//!
+//! * the simulator matches on [`Admission`] / [`OrderedOpRule`] /
+//!   [`Arbitration`] plans instead of on `StrategyKind`;
+//! * the live serving subsystem (`control::serving`) interprets the same
+//!   plans with real threads and the FIFO [`GpuGate`](crate::control::gate).
+//!
+//! Adding a strategy means adding a variant here and teaching both
+//! interpreters about any genuinely new plan — not copying a `match`.
+
+use crate::config::StrategyKind;
+
+/// How a kernel/copy submission is admitted to the device (the
+/// acquire/insert/sync/release shape of Algs. 1–5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Insert directly into the submitting context's stream; no lock
+    /// traffic (the `none` baseline and the spatial `ptb` baseline).
+    Direct,
+    /// Alg. 3 (callback strategy): bracket the op with deferred
+    /// acquire/release closures that ride the stream as host funcs. The
+    /// submitter does not block; the closures take/release the GPU lock
+    /// when the stream reaches them.
+    CallbackBracket,
+    /// Alg. 4 (synced strategy): the submitter itself acquires the GPU
+    /// lock, inserts the op, synchronises on its completion, releases.
+    AcquireSyncRelease,
+    /// Alg. 5 (worker strategy): deep-copy the arguments and defer the op
+    /// to the application's worker, which serialises under the lock.
+    DeferToWorker,
+}
+
+/// How an application host-func ("other ordered operation", Alg. 7) is
+/// treated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OrderedOpRule {
+    /// Trampoline: pass through unchanged (only kernels/copies are
+    /// hooked by this strategy).
+    Passthrough,
+    /// Alg. 7: wait for the worker to drain, then insert in the app
+    /// stream (preserves cross-queue ordering).
+    DrainWorkerFirst,
+}
+
+/// Who owns the SMs when several contexts have work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arbitration {
+    /// Hardware temporal arbitration: one context active at a time,
+    /// quantum-based preemptive switching (every temporal strategy).
+    Temporal,
+    /// Spatial partitioning (PTB baseline): all contexts co-active, each
+    /// pinned to its SM share; no context switching.
+    Spatial,
+}
+
+/// The per-strategy access-control policy: a pure, copyable description
+/// of behaviour shared by the simulator and the live serving subsystem.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AccessPolicy {
+    kind: StrategyKind,
+}
+
+impl AccessPolicy {
+    pub fn new(kind: StrategyKind) -> Self {
+        Self { kind }
+    }
+
+    pub fn kind(&self) -> StrategyKind {
+        self.kind
+    }
+
+    /// Admission plan for a kernel or copy submission.
+    pub fn admission(&self) -> Admission {
+        match self.kind {
+            StrategyKind::None | StrategyKind::Ptb => Admission::Direct,
+            StrategyKind::Callback => Admission::CallbackBracket,
+            StrategyKind::Synced => Admission::AcquireSyncRelease,
+            StrategyKind::Worker => Admission::DeferToWorker,
+        }
+    }
+
+    /// Treatment of application host-funcs (Alg. 7).
+    pub fn ordered_op(&self) -> OrderedOpRule {
+        match self.kind {
+            StrategyKind::Worker => OrderedOpRule::DrainWorkerFirst,
+            _ => OrderedOpRule::Passthrough,
+        }
+    }
+
+    /// Does this policy run a per-application deferred worker (Alg. 6)?
+    pub fn uses_worker(&self) -> bool {
+        self.admission() == Admission::DeferToWorker
+    }
+
+    /// SM ownership model while several contexts have device work.
+    pub fn arbitration(&self) -> Arbitration {
+        match self.kind {
+            StrategyKind::Ptb => Arbitration::Spatial,
+            _ => Arbitration::Temporal,
+        }
+    }
+
+    /// May application `app` (of `num_apps`) place blocks on `sm` (of
+    /// `num_sms`)? Temporal policies allow every SM; the spatial PTB
+    /// baseline splits the SMs evenly, giving the last application any
+    /// remainder.
+    pub fn sm_allowed(&self, app: usize, num_apps: usize, sm: usize, num_sms: usize) -> bool {
+        if self.arbitration() != Arbitration::Spatial || num_apps <= 1 {
+            return true;
+        }
+        let per = (num_sms / num_apps).max(1);
+        sm / per == app || (sm / per >= num_apps && app == num_apps - 1)
+    }
+
+    /// The fraction of SMs available to one of `num_apps` applications
+    /// under this policy — 1.0 for temporal policies (full device while
+    /// active), `1/num_apps` under spatial partitioning. The live serving
+    /// subsystem uses this to emulate PTB-style SM shares on platforms
+    /// without real SM pinning.
+    pub fn sm_share(&self, num_apps: usize) -> f64 {
+        match self.arbitration() {
+            Arbitration::Temporal => 1.0,
+            Arbitration::Spatial => 1.0 / num_apps.max(1) as f64,
+        }
+    }
+
+    /// Does admission serialise GPU operations behind the global lock?
+    /// (Drives the serving subsystem's decision to construct a
+    /// [`GpuGate`](crate::control::gate::GpuGate).)
+    pub fn gated(&self) -> bool {
+        !matches!(self.admission(), Admission::Direct)
+    }
+}
+
+impl From<StrategyKind> for AccessPolicy {
+    fn from(kind: StrategyKind) -> Self {
+        Self::new(kind)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The dispatch table exactly as `gpu/engine.rs::routine_gpu_op`
+    /// implemented it before the policy layer was extracted (the
+    /// "legacy oracle"). The refactor is behaviour-preserving iff the
+    /// policy maps every strategy to the same plan the engine's old
+    /// `match` selected.
+    fn legacy_admission(kind: StrategyKind) -> Admission {
+        match kind {
+            StrategyKind::None | StrategyKind::Ptb => Admission::Direct,
+            StrategyKind::Callback => Admission::CallbackBracket,
+            StrategyKind::Synced => Admission::AcquireSyncRelease,
+            StrategyKind::Worker => Admission::DeferToWorker,
+        }
+    }
+
+    fn legacy_ordered_op(kind: StrategyKind) -> OrderedOpRule {
+        if kind == StrategyKind::Worker {
+            OrderedOpRule::DrainWorkerFirst
+        } else {
+            OrderedOpRule::Passthrough
+        }
+    }
+
+    /// The old `Sim::new` PTB SM-mask formula, verbatim.
+    fn legacy_sm_mask(kind: StrategyKind, n: usize, num_sms: usize) -> Vec<Vec<bool>> {
+        (0..n)
+            .map(|i| {
+                (0..num_sms)
+                    .map(|sm| {
+                        if kind == StrategyKind::Ptb && n > 1 {
+                            let per = (num_sms / n).max(1);
+                            sm / per == i || (sm / per >= n && i == n - 1)
+                        } else {
+                            true
+                        }
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn admission_matches_legacy_engine_dispatch() {
+        for kind in StrategyKind::ALL {
+            let p = AccessPolicy::new(kind);
+            assert_eq!(p.admission(), legacy_admission(kind), "{kind}");
+            assert_eq!(p.ordered_op(), legacy_ordered_op(kind), "{kind}");
+        }
+    }
+
+    #[test]
+    fn worker_flag_only_for_worker_strategy() {
+        for kind in StrategyKind::ALL {
+            assert_eq!(
+                AccessPolicy::new(kind).uses_worker(),
+                kind == StrategyKind::Worker,
+                "{kind}"
+            );
+        }
+    }
+
+    #[test]
+    fn only_ptb_is_spatial() {
+        for kind in StrategyKind::ALL {
+            let arb = AccessPolicy::new(kind).arbitration();
+            if kind == StrategyKind::Ptb {
+                assert_eq!(arb, Arbitration::Spatial);
+            } else {
+                assert_eq!(arb, Arbitration::Temporal, "{kind}");
+            }
+        }
+    }
+
+    #[test]
+    fn sm_mask_matches_legacy_formula() {
+        for kind in StrategyKind::ALL {
+            for n in [1usize, 2, 3, 5] {
+                for num_sms in [1usize, 4, 8, 10] {
+                    let legacy = legacy_sm_mask(kind, n, num_sms);
+                    let p = AccessPolicy::new(kind);
+                    for app in 0..n {
+                        for sm in 0..num_sms {
+                            assert_eq!(
+                                p.sm_allowed(app, n, sm, num_sms),
+                                legacy[app][sm],
+                                "{kind} n={n} sms={num_sms} app={app} sm={sm}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spatial_masks_partition_all_sms() {
+        // Every SM belongs to exactly one app under PTB.
+        let p = AccessPolicy::new(StrategyKind::Ptb);
+        for n in [2usize, 3, 4] {
+            for sm in 0..8 {
+                let owners: Vec<usize> =
+                    (0..n).filter(|&a| p.sm_allowed(a, n, sm, 8)).collect();
+                assert_eq!(owners.len(), 1, "n={n} sm={sm} owners={owners:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn gated_matches_lock_usage() {
+        assert!(!AccessPolicy::new(StrategyKind::None).gated());
+        assert!(!AccessPolicy::new(StrategyKind::Ptb).gated());
+        assert!(AccessPolicy::new(StrategyKind::Callback).gated());
+        assert!(AccessPolicy::new(StrategyKind::Synced).gated());
+        assert!(AccessPolicy::new(StrategyKind::Worker).gated());
+    }
+
+    #[test]
+    fn sm_share_is_fractional_only_under_spatial() {
+        assert_eq!(AccessPolicy::new(StrategyKind::Synced).sm_share(4), 1.0);
+        assert_eq!(AccessPolicy::new(StrategyKind::Ptb).sm_share(4), 0.25);
+        assert_eq!(AccessPolicy::new(StrategyKind::Ptb).sm_share(0), 1.0);
+    }
+}

@@ -1,0 +1,818 @@
+//! Live serving subsystem: real payload executions from concurrent
+//! clients, admitted per the configured [`AccessPolicy`].
+//!
+//! This replaces the first-generation `serve_dna` path, which supported
+//! three of the five strategies, hard-coded the DNA payload, and
+//! serialised on a bare `Mutex<()>`. The rebuilt subsystem:
+//!
+//! * serves **any payload in the AOT manifest** (DNA-Net, mmult, vecadd —
+//!   or a mix: client *i* serves `payloads[i % len]`), via a pluggable
+//!   [`ServeBackend`] so tests and artifact-less environments can run the
+//!   full admission machinery against a synthetic executor;
+//! * implements **all five strategies** by interpreting the same
+//!   [`Admission`] plans as the simulator — the callback strategy runs its
+//!   acquire/release as deferred closures riding a per-client stream
+//!   thread (Alg. 3), and the PTB baseline falls back to an SM-share
+//!   *simulation* (each client is slowed to its `1/clients` share, since
+//!   a CPU-side runtime has no real SM pinning);
+//! * admits through the FIFO-fair [`GpuGate`], which records wait/hold
+//!   histograms surfaced in the report;
+//! * supports **request batching** (`batch > 1` amortises one gate
+//!   admission over a burst of requests);
+//! * reports **per-payload** latency/IPS breakdowns in [`ServeReport`].
+//!
+//! Engines may wrap non-`Send` handles (PJRT client pointers), so every
+//! executing thread builds its *own* executor through the backend —
+//! exactly like the paper's setup where each application is a separate
+//! process with its own CUDA context.
+
+use crate::config::StrategyKind;
+use crate::control::gate::{GateStats, GpuGate};
+use crate::control::policy::{AccessPolicy, Admission};
+use anyhow::{anyhow, Result};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------
+// backend abstraction
+// ---------------------------------------------------------------------
+
+/// A per-thread payload executor (may wrap non-`Send` engine handles).
+pub trait PayloadExecutor {
+    /// Execute artifact `payload` with flat f32 inputs.
+    fn execute(&self, payload: usize, inputs: &[Vec<f32>]) -> Result<Vec<f32>>;
+}
+
+/// A payload resolved against the backend: everything a client needs to
+/// generate requests and validate responses.
+#[derive(Debug, Clone)]
+pub struct ResolvedPayload {
+    /// Executor-side payload index.
+    pub index: usize,
+    pub name: String,
+    /// Template inputs (perturbed per request, §VI-C).
+    pub base_inputs: Vec<Vec<f32>>,
+    /// Expected output element count.
+    pub out_elems: usize,
+}
+
+/// Source of executors and payload metadata for a serving run. `Sync`
+/// because every client thread resolves/builds through a shared borrow.
+pub trait ServeBackend: Sync {
+    fn resolve(&self, payload: &str) -> Result<ResolvedPayload>;
+    /// Build a fresh executor owned by the calling thread.
+    fn executor(&self) -> Result<Box<dyn PayloadExecutor>>;
+}
+
+/// The real backend: AOT artifacts under a manifest directory, executed
+/// by the runtime engine (PJRT when built with the `pjrt` feature, the
+/// native interpreter otherwise).
+pub struct ManifestBackend {
+    dir: PathBuf,
+    /// Manifest parsed once on first resolve (not in `new`, so merely
+    /// constructing a backend cannot fail).
+    manifest: std::sync::OnceLock<crate::runtime::Manifest>,
+}
+
+impl ManifestBackend {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        Self { dir: dir.into(), manifest: std::sync::OnceLock::new() }
+    }
+
+    fn manifest(&self) -> Result<&crate::runtime::Manifest> {
+        if self.manifest.get().is_none() {
+            let m = crate::runtime::Manifest::load(&self.dir)?;
+            let _ = self.manifest.set(m);
+        }
+        Ok(self.manifest.get().expect("manifest just set"))
+    }
+}
+
+impl PayloadExecutor for crate::runtime::Engine {
+    fn execute(&self, payload: usize, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        crate::runtime::Engine::execute(self, payload, inputs)
+    }
+}
+
+impl ServeBackend for ManifestBackend {
+    fn resolve(&self, payload: &str) -> Result<ResolvedPayload> {
+        let manifest = self.manifest()?;
+        let index = manifest
+            .artifacts
+            .iter()
+            .position(|a| a.name == payload)
+            .ok_or_else(|| {
+                anyhow!(
+                    "payload '{payload}' not in the AOT manifest (have: {})",
+                    manifest
+                        .artifacts
+                        .iter()
+                        .map(|a| a.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })?;
+        let spec = &manifest.artifacts[index];
+        Ok(ResolvedPayload {
+            index,
+            name: spec.name.clone(),
+            base_inputs: spec.golden_inputs(),
+            out_elems: spec.out_elems(),
+        })
+    }
+
+    fn executor(&self) -> Result<Box<dyn PayloadExecutor>> {
+        Ok(Box::new(crate::runtime::Engine::load(&self.dir)?))
+    }
+}
+
+/// Synthetic backend: deterministic CPU work with a configurable
+/// per-request cost. Lets the whole admission machinery (gate fairness,
+/// batching, all five strategies) run — and be tested — without AOT
+/// artifacts or a PJRT client.
+pub struct SyntheticBackend {
+    /// Busy-spin cost per request, microseconds.
+    pub exec_us: u64,
+    /// Input vector length per argument.
+    pub elems: usize,
+}
+
+impl SyntheticBackend {
+    pub fn new(exec_us: u64) -> Self {
+        Self { exec_us, elems: 64 }
+    }
+}
+
+struct SyntheticExecutor {
+    exec_us: u64,
+}
+
+impl PayloadExecutor for SyntheticExecutor {
+    fn execute(&self, payload: usize, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let t0 = Instant::now();
+        let budget = Duration::from_micros(self.exec_us);
+        // Deterministic reduction over the inputs, re-run until the cost
+        // budget elapses (busy spin models a device-bound kernel).
+        let mut acc = payload as f32;
+        loop {
+            for v in inputs {
+                for (i, x) in v.iter().enumerate() {
+                    acc += x * ((i % 7) as f32 - 3.0);
+                }
+            }
+            if t0.elapsed() >= budget {
+                break;
+            }
+        }
+        Ok(vec![acc; 8])
+    }
+}
+
+impl ServeBackend for SyntheticBackend {
+    fn resolve(&self, payload: &str) -> Result<ResolvedPayload> {
+        // Any name resolves; index is its position in the standard payload
+        // list when known (keeps reports aligned with the real manifest).
+        let index = crate::runtime::PAYLOAD_NAMES
+            .iter()
+            .position(|n| *n == payload)
+            .unwrap_or(0);
+        Ok(ResolvedPayload {
+            index,
+            name: payload.to_string(),
+            base_inputs: vec![vec![0.125; self.elems], vec![0.25; self.elems]],
+            out_elems: 8,
+        })
+    }
+
+    fn executor(&self) -> Result<Box<dyn PayloadExecutor>> {
+        Ok(Box::new(SyntheticExecutor { exec_us: self.exec_us }))
+    }
+}
+
+// ---------------------------------------------------------------------
+// spec + report
+// ---------------------------------------------------------------------
+
+/// Configuration of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServeSpec {
+    pub strategy: StrategyKind,
+    /// Payload names; client `i` serves `payloads[i % payloads.len()]`.
+    pub payloads: Vec<String>,
+    pub clients: usize,
+    /// Requests per client.
+    pub requests: usize,
+    /// Requests admitted per gate grant (1 = per-op admission, the
+    /// paper's shape; >1 amortises admission over a burst).
+    pub batch: usize,
+}
+
+impl ServeSpec {
+    pub fn new(strategy: StrategyKind, payload: impl Into<String>) -> Self {
+        Self {
+            strategy,
+            payloads: vec![payload.into()],
+            clients: 2,
+            requests: 50,
+            batch: 1,
+        }
+    }
+
+    pub fn with_payloads(mut self, payloads: Vec<String>) -> Self {
+        self.payloads = payloads;
+        self
+    }
+
+    pub fn with_clients(mut self, clients: usize) -> Self {
+        self.clients = clients;
+        self
+    }
+
+    pub fn with_requests(mut self, requests: usize) -> Self {
+        self.requests = requests;
+        self
+    }
+
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.clients == 0 || self.requests == 0 {
+            return Err(anyhow!("serve requires clients > 0 and requests > 0"));
+        }
+        if self.batch == 0 {
+            return Err(anyhow!("batch must be >= 1"));
+        }
+        if self.payloads.is_empty() {
+            return Err(anyhow!("at least one payload required"));
+        }
+        Ok(())
+    }
+}
+
+/// Latency breakdown for one payload.
+#[derive(Debug)]
+pub struct PayloadReport {
+    pub payload: String,
+    /// Sorted per-request latencies, milliseconds.
+    pub latencies_ms: Vec<f64>,
+}
+
+impl PayloadReport {
+    pub fn ips(&self, wall_s: f64) -> f64 {
+        self.latencies_ms.len() as f64 / wall_s.max(1e-9)
+    }
+}
+
+/// Result of a serving run.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub strategy: StrategyKind,
+    pub clients: usize,
+    pub requests_per_client: usize,
+    pub batch: usize,
+    pub wall_s: f64,
+    /// Sorted per-request latencies across all payloads, milliseconds.
+    pub latencies_ms: Vec<f64>,
+    /// Per-payload breakdowns (one entry per distinct served payload).
+    pub per_payload: Vec<PayloadReport>,
+    /// Gate wait/hold statistics (None for ungated strategies).
+    pub gate: Option<GateStats>,
+}
+
+impl ServeReport {
+    pub fn total(&self) -> usize {
+        self.clients * self.requests_per_client
+    }
+
+    pub fn ips(&self) -> f64 {
+        self.total() as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// Nearest-rank quantile (rank `ceil(q*n)`) of the pooled latencies;
+    /// 0.0 when no latency was recorded.
+    pub fn latency_p(&self, q: f64) -> f64 {
+        nearest_rank(&self.latencies_ms, q)
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "{} clients x {} requests (batch {}), strategy {}: {:.1} IPS; \
+             latency ms p50={:.2} p95={:.2} p99={:.2} max={:.2}",
+            self.clients,
+            self.requests_per_client,
+            self.batch,
+            self.strategy,
+            self.ips(),
+            self.latency_p(0.50),
+            self.latency_p(0.95),
+            self.latency_p(0.99),
+            self.latencies_ms.last().copied().unwrap_or(0.0),
+        );
+        if self.per_payload.len() > 1 {
+            for p in &self.per_payload {
+                out.push_str(&format!(
+                    "\n  payload {:<8} n={:<5} {:.1} IPS; p50={:.2} p95={:.2} ms",
+                    p.payload,
+                    p.latencies_ms.len(),
+                    p.ips(self.wall_s),
+                    nearest_rank(&p.latencies_ms, 0.50),
+                    nearest_rank(&p.latencies_ms, 0.95),
+                ));
+            }
+        }
+        if let Some(g) = &self.gate {
+            for line in g.render().lines() {
+                out.push_str("\n  ");
+                out.push_str(line);
+            }
+        }
+        out
+    }
+}
+
+/// Nearest-rank quantile of a sorted slice; 0.0 when empty.
+fn nearest_rank(sorted: &[f64], q: f64) -> f64 {
+    let n = sorted.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as usize).clamp(1, n);
+    sorted[rank - 1]
+}
+
+// ---------------------------------------------------------------------
+// the serve loop
+// ---------------------------------------------------------------------
+
+/// Per-request input perturbation (randomised inputs, §VI-C).
+fn perturb(inputs: &mut [Vec<f32>], client: usize, request: usize) {
+    if let Some(first) = inputs.first_mut() {
+        for (i, v) in first.iter_mut().enumerate() {
+            *v += ((request * 31 + client * 17 + i) % 13) as f32 * 1e-3;
+        }
+    }
+}
+
+/// One recorded request: (slot into `spec.payloads`, latency ms).
+type Sample = (usize, f64);
+
+/// A deferred stream operation (callback/worker strategies). The
+/// acquire/release closures of Alg. 3 ride the stream as first-class
+/// jobs, so the grant is held across job boundaries.
+enum StreamJob {
+    Acquire,
+    Exec {
+        payload: usize,
+        slot: usize,
+        inputs: Vec<Vec<f32>>,
+        out_elems: usize,
+        enqueued: Instant,
+        record: bool,
+    },
+    Release,
+}
+
+/// Serve `spec` against `backend`. Spawns one client thread per client
+/// (plus a stream/worker thread per client for the deferred strategies),
+/// all sharing one FIFO [`GpuGate`] when the policy is gated.
+pub fn serve(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<ServeReport> {
+    spec.validate()?;
+    let policy = AccessPolicy::new(spec.strategy);
+    let resolved: Vec<ResolvedPayload> = spec
+        .payloads
+        .iter()
+        .map(|p| backend.resolve(p))
+        .collect::<Result<_>>()?;
+    let gate = if policy.gated() { Some(GpuGate::new()) } else { None };
+
+    let t0 = Instant::now();
+    let joined: Vec<Result<Vec<Sample>>> = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for c in 0..spec.clients {
+            let slot = c % resolved.len();
+            let rp = &resolved[slot];
+            let gate = gate.as_ref();
+            handles.push(s.spawn(move || run_client(spec, backend, policy, c, slot, rp, gate)));
+        }
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                Err(_) => Err(anyhow!("client thread panicked")),
+            })
+            .collect()
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut samples = Vec::new();
+    for r in joined {
+        samples.extend(r?);
+    }
+    let mut by_slot: Vec<Vec<f64>> = vec![Vec::new(); spec.payloads.len()];
+    let mut latencies_ms = Vec::with_capacity(samples.len());
+    for (slot, ms) in samples {
+        by_slot[slot].push(ms);
+        latencies_ms.push(ms);
+    }
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut per_payload = Vec::new();
+    for (slot, mut lats) in by_slot.into_iter().enumerate() {
+        if lats.is_empty() {
+            continue;
+        }
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        per_payload.push(PayloadReport {
+            payload: spec.payloads[slot].clone(),
+            latencies_ms: lats,
+        });
+    }
+    Ok(ServeReport {
+        strategy: spec.strategy,
+        clients: spec.clients,
+        requests_per_client: spec.requests,
+        batch: spec.batch,
+        wall_s,
+        latencies_ms,
+        per_payload,
+        gate: gate.map(|g| g.stats()),
+    })
+}
+
+/// One client: interprets the policy's admission plan with real threads.
+fn run_client(
+    spec: &ServeSpec,
+    backend: &dyn ServeBackend,
+    policy: AccessPolicy,
+    client: usize,
+    slot: usize,
+    rp: &ResolvedPayload,
+    gate: Option<&GpuGate>,
+) -> Result<Vec<Sample>> {
+    match policy.admission() {
+        Admission::Direct => {
+            // Unmitigated (`none`) or spatially-shared (`ptb`) execution
+            // on the client thread itself.
+            let exec = backend.executor()?;
+            let share = policy.sm_share(spec.clients);
+            // Warm-up (first-use compile) outside the recorded window.
+            check_out(rp, &exec.execute(rp.index, &rp.base_inputs)?)?;
+            let mut out = Vec::with_capacity(spec.requests);
+            for r in 0..spec.requests {
+                let mut inputs = rp.base_inputs.clone();
+                perturb(&mut inputs, client, r);
+                let t = Instant::now();
+                let result = exec.execute(rp.index, &inputs)?;
+                let exec_dt = t.elapsed();
+                if share < 1.0 {
+                    // PTB SM-share simulation fallback: with 1/N of the
+                    // SMs, a device-bound request takes ~N times longer.
+                    std::thread::sleep(exec_dt.mul_f64(1.0 / share - 1.0));
+                }
+                check_out(rp, &result)?;
+                out.push((slot, t.elapsed().as_secs_f64() * 1e3));
+            }
+            Ok(out)
+        }
+        Admission::AcquireSyncRelease => {
+            // Alg. 4 on the client thread: acquire, run the batch
+            // (PJRT-style execution is synchronous, so insert + sync
+            // collapse into the call), release.
+            let exec = backend.executor()?;
+            if let Some(g) = gate {
+                g.with(|| check_out(rp, &exec.execute(rp.index, &rp.base_inputs)?))?;
+            }
+            let mut out = Vec::with_capacity(spec.requests);
+            let mut r = 0;
+            while r < spec.requests {
+                let burst = spec.batch.min(spec.requests - r);
+                let tb = Instant::now();
+                let grant = gate.map(|g| g.acquire());
+                // The grant MUST be released even on failure, or every
+                // other client would deadlock in the FIFO gate.
+                let mut burst_result = Ok(());
+                for i in 0..burst {
+                    let mut inputs = rp.base_inputs.clone();
+                    perturb(&mut inputs, client, r + i);
+                    burst_result = exec
+                        .execute(rp.index, &inputs)
+                        .and_then(|result| check_out(rp, &result));
+                    if burst_result.is_err() {
+                        break;
+                    }
+                    out.push((slot, tb.elapsed().as_secs_f64() * 1e3));
+                }
+                if let (Some(g), Some(grant)) = (gate, grant) {
+                    g.release(grant);
+                }
+                burst_result?;
+                r += burst;
+            }
+            Ok(out)
+        }
+        Admission::CallbackBracket => {
+            // Alg. 3: acquire/exec/release ride the client's stream as
+            // deferred jobs; the host thread never blocks per request.
+            stream_client(spec, backend, client, slot, rp, gate, false)
+        }
+        Admission::DeferToWorker => {
+            // Alg. 5-6: the worker owns the engine and serialises under
+            // the gate; the host blocks awaiting each batch (Alg. 7's
+            // drain shape at batch granularity).
+            stream_client(spec, backend, client, slot, rp, gate, true)
+        }
+    }
+}
+
+/// Shared machinery for the deferred strategies: a stream thread that
+/// owns the executor and processes FIFO jobs, holding the gate grant
+/// across the Acquire..Release bracket.
+fn stream_client(
+    spec: &ServeSpec,
+    backend: &dyn ServeBackend,
+    client: usize,
+    slot: usize,
+    rp: &ResolvedPayload,
+    gate: Option<&GpuGate>,
+    blocking: bool,
+) -> Result<Vec<Sample>> {
+    // Bounded pipeline: a real driver stream has finite depth, so the
+    // callback strategy's non-blocking host must not run unboundedly
+    // ahead of the device (that would hold every pending request's
+    // deep-copied inputs in memory and make reported latencies pure
+    // queue time). Two batches of run-ahead models the hw prefetch
+    // window; `send` blocks when the stream is that far behind.
+    let depth = 2 * (spec.batch + 2);
+    let (tx, rx) = mpsc::sync_channel::<StreamJob>(depth);
+    let (done_tx, done_rx) = mpsc::channel::<()>();
+    std::thread::scope(|s| -> Result<Vec<Sample>> {
+        let stream = s.spawn(move || run_stream(backend, gate, rx, done_tx));
+        // Feed the stream; a send/recv failure means the stream thread
+        // died — its own Result (joined below) carries the real cause.
+        let feed = || -> Result<()> {
+            let gone = || anyhow!("stream thread gone");
+            // Warm-up batch (not recorded).
+            tx.send(StreamJob::Acquire).map_err(|_| gone())?;
+            tx.send(StreamJob::Exec {
+                payload: rp.index,
+                slot,
+                inputs: rp.base_inputs.clone(),
+                out_elems: rp.out_elems,
+                enqueued: Instant::now(),
+                record: false,
+            })
+            .map_err(|_| gone())?;
+            tx.send(StreamJob::Release).map_err(|_| gone())?;
+            done_rx.recv().map_err(|_| gone())?;
+
+            let mut r = 0;
+            while r < spec.requests {
+                let burst = spec.batch.min(spec.requests - r);
+                tx.send(StreamJob::Acquire).map_err(|_| gone())?;
+                for i in 0..burst {
+                    let mut inputs = rp.base_inputs.clone();
+                    perturb(&mut inputs, client, r + i);
+                    tx.send(StreamJob::Exec {
+                        payload: rp.index,
+                        slot,
+                        inputs,
+                        out_elems: rp.out_elems,
+                        enqueued: Instant::now(),
+                        record: true,
+                    })
+                    .map_err(|_| gone())?;
+                }
+                tx.send(StreamJob::Release).map_err(|_| gone())?;
+                if blocking {
+                    // Worker strategy: the host awaits the batch (deferred
+                    // execute + drain) before preparing the next one.
+                    done_rx.recv().map_err(|_| gone())?;
+                }
+                r += burst;
+            }
+            Ok(())
+        };
+        let fed = feed();
+        drop(tx); // close the stream; the thread drains and exits
+        let streamed = stream.join().map_err(|_| anyhow!("stream thread panicked"))?;
+        match (fed, streamed) {
+            (Ok(()), r) => r,
+            (Err(_), Err(stream_err)) => Err(stream_err),
+            (Err(feed_err), Ok(_)) => Err(feed_err),
+        }
+    })
+}
+
+/// The stream/worker thread body: FIFO job interpreter.
+///
+/// On a payload failure the thread keeps draining jobs (so the feeding
+/// host never blocks on a full pipeline) and keeps balancing the gate
+/// (so other clients never deadlock on a grant that would otherwise be
+/// dropped unreleased); the first error is reported at the end.
+fn run_stream(
+    backend: &dyn ServeBackend,
+    gate: Option<&GpuGate>,
+    rx: mpsc::Receiver<StreamJob>,
+    done_tx: mpsc::Sender<()>,
+) -> Result<Vec<Sample>> {
+    let exec = backend.executor()?;
+    let mut grant = None;
+    let mut out = Vec::new();
+    let mut failure: Option<anyhow::Error> = None;
+    while let Ok(job) = rx.recv() {
+        match job {
+            StreamJob::Acquire => {
+                if failure.is_none() {
+                    if let Some(g) = gate {
+                        grant = Some(g.acquire());
+                    }
+                }
+            }
+            StreamJob::Exec { payload, slot, inputs, out_elems, enqueued, record } => {
+                if failure.is_some() {
+                    continue;
+                }
+                match exec.execute(payload, &inputs) {
+                    Ok(result) if result.len() != out_elems => {
+                        failure = Some(anyhow!(
+                            "bad output size {} (expected {out_elems})",
+                            result.len()
+                        ));
+                    }
+                    Ok(_) => {
+                        if record {
+                            out.push((slot, enqueued.elapsed().as_secs_f64() * 1e3));
+                        }
+                    }
+                    Err(e) => failure = Some(e),
+                }
+            }
+            StreamJob::Release => {
+                if let (Some(g), Some(grant)) = (gate, grant.take()) {
+                    g.release(grant);
+                }
+                // Batch boundary: signal hosts that block on drain. A
+                // non-blocking host simply never reads past the warm-up.
+                let _ = done_tx.send(());
+            }
+        }
+    }
+    if let (Some(g), Some(grant)) = (gate, grant.take()) {
+        g.release(grant);
+    }
+    match failure {
+        Some(e) => Err(e),
+        None => Ok(out),
+    }
+}
+
+fn check_out(rp: &ResolvedPayload, out: &[f32]) -> Result<()> {
+    if out.len() != rp.out_elems {
+        return Err(anyhow!(
+            "payload {}: bad output size {} (expected {})",
+            rp.name,
+            out.len(),
+            rp.out_elems
+        ));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// compatibility wrapper
+// ---------------------------------------------------------------------
+
+/// Serve DNA-Net inferences from `clients` concurrent applications
+/// (the original serving entry point, kept for callers and tests).
+pub fn serve_dna(
+    strategy: StrategyKind,
+    clients: usize,
+    requests: usize,
+    artifacts_dir: PathBuf,
+) -> Result<ServeReport> {
+    let spec = ServeSpec::new(strategy, "dna")
+        .with_clients(clients)
+        .with_requests(requests);
+    serve(&spec, &ManifestBackend::new(artifacts_dir))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn backend() -> SyntheticBackend {
+        SyntheticBackend::new(50)
+    }
+
+    #[test]
+    fn all_five_strategies_serve_synthetic() {
+        for strategy in StrategyKind::ALL {
+            let spec = ServeSpec::new(strategy, "dna")
+                .with_clients(2)
+                .with_requests(4);
+            let r = serve(&spec, &backend()).unwrap_or_else(|e| panic!("{strategy}: {e}"));
+            assert_eq!(r.total(), 8, "{strategy}");
+            assert_eq!(r.latencies_ms.len(), 8, "{strategy}");
+            assert!(r.ips() > 0.0, "{strategy}");
+            assert!(r.latency_p(0.5) > 0.0, "{strategy}");
+            assert_eq!(r.gate.is_some(), AccessPolicy::new(strategy).gated(), "{strategy}");
+        }
+    }
+
+    #[test]
+    fn gated_strategies_record_wait_and_hold() {
+        for strategy in [StrategyKind::Callback, StrategyKind::Synced, StrategyKind::Worker] {
+            let spec = ServeSpec::new(strategy, "mmult")
+                .with_clients(3)
+                .with_requests(5);
+            let r = serve(&spec, &backend()).unwrap();
+            let g = r.gate.expect("gated strategy must report gate stats");
+            // One warm-up grant per client + one grant per request batch.
+            assert_eq!(g.grants(), 3 + 15, "{strategy}");
+            assert!(g.hold.mean_ns() > 0.0, "{strategy}");
+        }
+    }
+
+    #[test]
+    fn batching_reduces_gate_grants() {
+        let spec = ServeSpec::new(StrategyKind::Synced, "dna")
+            .with_clients(2)
+            .with_requests(6)
+            .with_batch(3);
+        let r = serve(&spec, &backend()).unwrap();
+        // 2 warm-up grants + 2 clients x 2 batches.
+        assert_eq!(r.gate.unwrap().grants(), 2 + 4);
+        assert_eq!(r.total(), 12);
+    }
+
+    #[test]
+    fn multi_payload_reports_per_payload() {
+        let spec = ServeSpec::new(StrategyKind::Worker, "dna")
+            .with_payloads(vec!["dna".into(), "mmult".into()])
+            .with_clients(4)
+            .with_requests(3);
+        let r = serve(&spec, &backend()).unwrap();
+        assert_eq!(r.per_payload.len(), 2);
+        for p in &r.per_payload {
+            assert_eq!(p.latencies_ms.len(), 6, "{}", p.payload);
+            assert!(p.ips(r.wall_s) > 0.0);
+        }
+        assert!(r.render().contains("payload dna"));
+        assert!(r.render().contains("payload mmult"));
+    }
+
+    #[test]
+    fn nearest_rank_quantile_fixed() {
+        // Regression for the original latency_p: it panicked on empty
+        // vectors and was biased one rank high on exact multiples.
+        let empty = ServeReport {
+            strategy: StrategyKind::None,
+            clients: 1,
+            requests_per_client: 1,
+            batch: 1,
+            wall_s: 1.0,
+            latencies_ms: vec![],
+            per_payload: vec![],
+            gate: None,
+        };
+        assert_eq!(empty.latency_p(0.5), 0.0);
+        assert_eq!(empty.latency_p(0.99), 0.0);
+
+        let four = ServeReport {
+            latencies_ms: vec![1.0, 2.0, 3.0, 4.0],
+            ..empty
+        };
+        // Nearest rank: ceil(0.5*4) = 2 -> the 2nd smallest.
+        assert_eq!(four.latency_p(0.50), 2.0);
+        assert_eq!(four.latency_p(0.25), 1.0);
+        assert_eq!(four.latency_p(0.75), 3.0);
+        assert_eq!(four.latency_p(1.00), 4.0);
+        assert_eq!(four.latency_p(0.0), 1.0);
+    }
+
+    #[test]
+    fn invalid_specs_rejected() {
+        let b = backend();
+        assert!(serve(&ServeSpec::new(StrategyKind::None, "x").with_clients(0), &b).is_err());
+        assert!(serve(&ServeSpec::new(StrategyKind::None, "x").with_requests(0), &b).is_err());
+        assert!(serve(&ServeSpec::new(StrategyKind::None, "x").with_batch(0), &b).is_err());
+        assert!(
+            serve(&ServeSpec::new(StrategyKind::None, "x").with_payloads(vec![]), &b).is_err()
+        );
+    }
+
+    #[test]
+    fn report_render_mentions_strategy_and_gate() {
+        let spec = ServeSpec::new(StrategyKind::Synced, "dna")
+            .with_clients(2)
+            .with_requests(3);
+        let r = serve(&spec, &backend()).unwrap();
+        let text = r.render();
+        assert!(text.contains("strategy synced"), "{text}");
+        assert!(text.contains("gate wait"), "{text}");
+        assert!(text.contains("IPS"), "{text}");
+    }
+}

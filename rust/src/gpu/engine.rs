@@ -9,8 +9,9 @@
 
 use crate::apps::host::{HostPhase, HostState};
 use crate::apps::program::{HostStep, Program};
-use crate::config::{SimConfig, StrategyKind};
+use crate::config::SimConfig;
 use crate::control::lock::{GpuLock, LockClient};
+use crate::control::policy::{AccessPolicy, Admission, Arbitration, OrderedOpRule};
 use crate::control::worker::{WorkerPhase, WorkerState};
 use crate::cudart::{
     CopyDesc, GpuContext, KernelDesc, LockAction, Op, OpKind, OpState,
@@ -95,12 +96,21 @@ struct GpuExec {
 
 /// Set of runnable contexts as a bitmask (the Xavier never hosts more
 /// than a handful of GPU contexts; 64 is far beyond any real setup).
+///
+/// The bitmask representation bounds the simulator at
+/// [`RunnableSet::MAX_CTXS`] contexts: a context id ≥ 64 would alias onto
+/// another context's bit (and `nth` would then recover the wrong `CtxId`).
+/// `Sim::new` enforces the bound up front so the hot path can index bits
+/// directly.
 #[derive(Debug, Clone, Copy)]
 struct RunnableSet {
     mask: u64,
 }
 
 impl RunnableSet {
+    /// Hard capacity of the bitmask (one bit per context).
+    const MAX_CTXS: usize = 64;
+
     fn is_empty(self) -> bool {
         self.mask == 0
     }
@@ -108,7 +118,8 @@ impl RunnableSet {
         self.mask.count_ones() as usize
     }
     fn contains(self, c: CtxId) -> bool {
-        self.mask & (1 << (c.0 & 63)) != 0
+        debug_assert!(c.0 < Self::MAX_CTXS, "ctx id {} out of bitmask range", c.0);
+        self.mask & (1u64 << c.0) != 0
     }
     /// n-th set context in ascending id order.
     fn nth(self, n: usize) -> CtxId {
@@ -123,7 +134,7 @@ impl RunnableSet {
         if !self.contains(c) {
             return None;
         }
-        let below = self.mask & ((1u64 << (c.0 & 63)) - 1);
+        let below = self.mask & ((1u64 << c.0) - 1);
         Some(below.count_ones() as usize)
     }
 }
@@ -131,6 +142,8 @@ impl RunnableSet {
 /// The simulator.
 pub struct Sim {
     pub cfg: SimConfig,
+    /// Per-strategy behaviour plans (the only strategy dispatch point).
+    policy: AccessPolicy,
     pub now: Nanos,
     events: EventQueue,
     pub ops: Vec<Op>,
@@ -155,6 +168,13 @@ impl Sim {
     /// each in its own GPU context with its own default stream (§II-A).
     pub fn new(cfg: SimConfig, programs: Vec<Program>) -> Self {
         let n = programs.len();
+        assert!(
+            n <= RunnableSet::MAX_CTXS,
+            "Sim supports at most {} contexts (got {n}): the runnable-set \
+             bitmask carries one bit per context",
+            RunnableSet::MAX_CTXS
+        );
+        let policy = AccessPolicy::new(cfg.strategy);
         let root = DetRng::new(cfg.seed);
         let mut ctxs = Vec::with_capacity(n);
         let mut apps = Vec::with_capacity(n);
@@ -163,7 +183,7 @@ impl Sim {
             let ctx_id = CtxId(i);
             let mut ctx = GpuContext::new(ctx_id, cfg.platform.callback_threads);
             let stream = ctx.default_stream();
-            if cfg.strategy == StrategyKind::Worker {
+            if policy.uses_worker() {
                 let wstream = ctx.create_stream();
                 workers.push(Some(WorkerState::new(wstream)));
             } else {
@@ -173,22 +193,16 @@ impl Sim {
             ctxs.push(ctx);
         }
         let num_sms = cfg.platform.num_sms;
-        // PTB partitioning: split SMs evenly between applications.
+        // Spatial policies (PTB) pin each application to its SM share.
         let sm_mask = (0..n)
             .map(|i| {
                 (0..num_sms)
-                    .map(|sm| {
-                        if cfg.strategy == StrategyKind::Ptb && n > 1 {
-                            let per = (num_sms / n).max(1);
-                            sm / per == i || (sm / per >= n && i == n - 1)
-                        } else {
-                            true
-                        }
-                    })
+                    .map(|sm| policy.sm_allowed(i, n, sm, num_sms))
                     .collect()
             })
             .collect();
         Self {
+            policy,
             l2: L2State::new(cfg.platform.l2_bytes),
             sms: vec![SmState::default(); num_sms],
             rng_exec: root.child(0x45584543), // "EXEC"
@@ -384,17 +398,19 @@ impl Sim {
         self.routine_gpu_op(app, OpKind::Copy(c), cost)
     }
 
-    /// Shared kernel/copy hook body — the strategies differ only here.
+    /// Shared kernel/copy hook body. The per-strategy *decision* lives in
+    /// `control::policy`; this match interprets the returned plan with the
+    /// simulator's mechanisms (ops, events, the lock, the worker queue).
     fn routine_gpu_op(&mut self, app: AppId, kind: OpKind, base_cost: Nanos) -> bool {
         let stream = self.apps[app.0].stream;
-        match self.cfg.strategy {
-            StrategyKind::None | StrategyKind::Ptb => {
+        match self.policy.admission() {
+            Admission::Direct => {
                 let op = self.new_op(app, kind, stream);
                 self.insert_in_stream(op);
                 self.host_busy(app, base_cost);
                 self.apps[app.0].advance();
             }
-            StrategyKind::Callback => {
+            Admission::CallbackBracket => {
                 // Alg. 3: acquire-callback, the op, release-callback.
                 let acq = self.new_op(
                     app,
@@ -419,7 +435,7 @@ impl Sim {
                 self.host_busy(app, 3 * base_cost);
                 self.apps[app.0].advance();
             }
-            StrategyKind::Synced => {
+            Admission::AcquireSyncRelease => {
                 // Alg. 4: acquire; insert; sync; release.
                 if !self.apps[app.0].holds_lock {
                     if self.lock.acquire(LockClient::Host(app), self.now) {
@@ -436,7 +452,7 @@ impl Sim {
                 self.apps[app.0].block(HostPhase::WaitingOp(op), now);
                 // pc advances when the op completes (routine is synchronous).
             }
-            StrategyKind::Worker => {
+            Admission::DeferToWorker => {
                 // Alg. 5: deep-copy args, defer to the worker queue.
                 let wstream = self.workers[app.0].as_ref().unwrap().stream;
                 let op = self.new_op(app, kind, wstream);
@@ -459,8 +475,8 @@ impl Sim {
     /// An application host-func (the "other ordered operation" of Alg. 7).
     fn routine_host_func(&mut self, app: AppId, d: Nanos) -> bool {
         let stream = self.apps[app.0].stream;
-        match self.cfg.strategy {
-            StrategyKind::Worker => {
+        match self.policy.ordered_op() {
+            OrderedOpRule::DrainWorkerFirst => {
                 // Alg. 7: sync on worker, then insert in the app stream.
                 if self.workers[app.0].as_ref().unwrap().drained() {
                     let op = self.new_op(
@@ -477,7 +493,7 @@ impl Sim {
                     self.apps[app.0].block(HostPhase::WaitingWorker, now);
                 }
             }
-            _ => {
+            OrderedOpRule::Passthrough => {
                 // Trampoline: pass through unchanged (only kernel/copy are
                 // hooked by the callback/synced strategies).
                 let op = self.new_op(
@@ -832,10 +848,10 @@ impl Sim {
     fn runnable_ctxs(&self) -> RunnableSet {
         let mut mask: u64 = 0;
         for kr in &self.gpu.run_pool {
-            mask |= 1 << (kr.ctx.0 & 63);
+            mask |= 1u64 << kr.ctx.0;
         }
         for fb in &self.gpu.frozen {
-            mask |= 1 << (fb.ctx.0 & 63);
+            mask |= 1u64 << fb.ctx.0;
         }
         RunnableSet { mask }
     }
@@ -845,12 +861,12 @@ impl Sim {
         if self.gpu.switching {
             return changed;
         }
-        let ptb = self.cfg.strategy == StrategyKind::Ptb;
+        let spatial = self.policy.arbitration() == Arbitration::Spatial;
         let runnable = self.runnable_ctxs();
         if runnable.is_empty() {
             return changed;
         }
-        if ptb {
+        if spatial {
             // Spatial partitioning: all contexts co-active on their SM
             // partitions; no temporal arbitration.
             for i in 0..runnable.len() {

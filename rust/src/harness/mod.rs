@@ -3,7 +3,9 @@
 
 pub mod figures;
 pub mod runner;
+pub mod serving;
 pub mod spec;
 
 pub use runner::{run_spec, run_spec_pooled, RunResult};
+pub use serving::serve_sweep;
 pub use spec::{Bench, ExperimentSpec, Isol, RunProtocol};

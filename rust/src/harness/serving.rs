@@ -1,0 +1,79 @@
+//! Serving sweep: the live-path analogue of the simulator's ablation
+//! benches. Runs one [`ServeSpec`] under every access-control strategy
+//! and tabulates throughput, latency quantiles, and gate occupancy —
+//! the serving counterpart of Table I's IPS comparison.
+
+use crate::config::StrategyKind;
+use crate::control::serving::{serve, ServeBackend, ServeReport, ServeSpec};
+use anyhow::Result;
+use std::fmt::Write as _;
+
+/// Run `base` under every strategy against `backend`; returns the
+/// rendered table and the per-strategy reports (in `StrategyKind::ALL`
+/// order).
+pub fn serve_sweep(
+    base: &ServeSpec,
+    backend: &dyn ServeBackend,
+) -> Result<(String, Vec<ServeReport>)> {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "== serve sweep: {} clients x {} requests (batch {}), payloads [{}] ==",
+        base.clients,
+        base.requests,
+        base.batch,
+        base.payloads.join(", ")
+    );
+    let _ = writeln!(
+        out,
+        "{:<10} {:>8} {:>9} {:>9} {:>9} {:>12} {:>12}",
+        "strategy", "IPS", "p50 ms", "p95 ms", "max ms", "gate-w p95", "gate-h p95"
+    );
+    let mut reports = Vec::new();
+    for strategy in StrategyKind::ALL {
+        let mut spec = base.clone();
+        spec.strategy = strategy;
+        let r = serve(&spec, backend)?;
+        let (gw, gh) = match &r.gate {
+            Some(g) => (
+                format!("{:.2}", g.wait.quantile_ns(0.95) as f64 / 1e6),
+                format!("{:.2}", g.hold.quantile_ns(0.95) as f64 / 1e6),
+            ),
+            None => ("-".to_string(), "-".to_string()),
+        };
+        let _ = writeln!(
+            out,
+            "{:<10} {:>8.1} {:>9.2} {:>9.2} {:>9.2} {:>12} {:>12}",
+            strategy.name(),
+            r.ips(),
+            r.latency_p(0.50),
+            r.latency_p(0.95),
+            r.latencies_ms.last().copied().unwrap_or(0.0),
+            gw,
+            gh,
+        );
+        reports.push(r);
+    }
+    Ok((out, reports))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::serving::SyntheticBackend;
+
+    #[test]
+    fn sweep_covers_all_strategies() {
+        let base = ServeSpec::new(StrategyKind::None, "dna")
+            .with_clients(2)
+            .with_requests(3);
+        let (text, reports) = serve_sweep(&base, &SyntheticBackend::new(30)).unwrap();
+        assert_eq!(reports.len(), StrategyKind::ALL.len());
+        for (s, r) in StrategyKind::ALL.iter().zip(&reports) {
+            assert_eq!(r.strategy, *s);
+            assert_eq!(r.total(), 6);
+            assert!(text.contains(s.name()), "missing {s} in:\n{text}");
+        }
+        assert!(text.contains("IPS"));
+    }
+}

@@ -17,6 +17,12 @@
 //! * L3 (this crate): hooks, strategies, simulator, apps, harness, CLI.
 //! * L2 (`python/compile/model.py`): JAX models, lowered once to HLO text.
 //! * L1 (`python/compile/kernels/`): Pallas kernels with jnp oracles.
+//!
+//! Strategy dispatch lives in exactly one place — the
+//! [`control::policy::AccessPolicy`] layer — interpreted by the simulator
+//! ([`gpu::engine`]) with simulated events and by the live multi-payload
+//! serving subsystem ([`control::serving`]) with real threads behind the
+//! FIFO [`control::gate::GpuGate`].
 
 pub mod apps;
 pub mod config;

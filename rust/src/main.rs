@@ -8,18 +8,20 @@
 //! * `hookgen --strategy <s> [--out <dir>]` — run the COOK toolchain and
 //!   emit the generated hook library source tree.
 //! * `symbols` — list the hooked library's exported surface.
-//! * `validate` — load the AOT artifacts via PJRT and check numerics
-//!   against the jax golden vectors.
-//! * `serve` — live serving demo: concurrent clients run real DNA-Net
-//!   inferences through the access controller.
+//! * `validate` — load the AOT artifacts and check numerics against the
+//!   jax golden vectors (PJRT engine with the `pjrt` feature, the native
+//!   reference interpreter otherwise).
+//! * `serve` — live serving: concurrent clients run payload inferences
+//!   (any manifest payload, all five strategies, optional batching)
+//!   through the access-control policy layer.
 
 use anyhow::{anyhow, bail, Context, Result};
 use cook::config::StrategyKind;
-use cook::control::serve_dna;
+use cook::control::serving::{serve, ManifestBackend, ServeBackend, ServeSpec, SyntheticBackend};
 use cook::cudart::SymbolTable;
-use cook::harness::{figures, run_spec, Bench, ExperimentSpec};
+use cook::harness::{figures, run_spec, serve_sweep, Bench, ExperimentSpec};
 use cook::hooks::generate_standard;
-use cook::runtime::{PjrtEngine, PAYLOAD_DNA};
+use cook::runtime::{Engine, Manifest};
 use std::path::PathBuf;
 use std::time::Instant;
 
@@ -66,10 +68,14 @@ fn print_usage() {
          \x20 hookgen --strategy <s> [--out DIR]        generate the hook library\n\
          \x20 symbols [--unknown]                       list libcudart exported symbols\n\
          \x20 validate                                  check AOT artifacts vs jax goldens\n\
-         \x20 serve [--strategy s] [--clients N] [--requests N]\n\
+         \x20 serve [--strategy s] [--payload p[,p]] [--clients N] [--requests N]\n\
+         \x20       [--batch N] [--sweep] [--synthetic]\n\
+         \x20       serve payload inferences through the access-control layer\n\
+         \x20       (--sweep tabulates all strategies; --synthetic needs no artifacts)\n\
          \n\
          benches: cuda_mmult, onnx_dna;  isolation|parallel;\n\
-         strategies: none, callback, synced, worker, ptb"
+         strategies: none, callback, synced, worker, ptb;\n\
+         payloads: dna, mmult, vecadd (from the AOT manifest)"
     );
 }
 
@@ -245,9 +251,15 @@ fn cmd_symbols(rest: &[String]) -> Result<()> {
 }
 
 fn cmd_validate() -> Result<()> {
-    let engine = PjrtEngine::load_default()?;
-    println!("PJRT platform: {}", engine.platform());
+    let engine = Engine::load_default()?;
+    println!("engine platform: {}", engine.platform());
+    let mut skipped = 0;
     for (i, spec) in engine.manifest.artifacts.iter().enumerate() {
+        if !engine.supports(i) {
+            println!("  {}: SKIP (requires the `pjrt` build feature)", spec.name);
+            skipped += 1;
+            continue;
+        }
         let t0 = Instant::now();
         engine.validate_golden(i)?;
         println!(
@@ -258,31 +270,73 @@ fn cmd_validate() -> Result<()> {
             t0.elapsed()
         );
     }
-    println!("all artifacts match the jax golden vectors");
+    if skipped == 0 {
+        println!("all artifacts match the jax golden vectors");
+    } else {
+        println!("all supported artifacts match the jax golden vectors ({skipped} skipped)");
+    }
     Ok(())
 }
 
 fn cmd_serve(rest: &[String]) -> Result<()> {
-    let strategy: StrategyKind = flag(rest, "--strategy")
-        .unwrap_or("worker")
-        .parse()
-        .map_err(|e: String| anyhow!(e))?;
     let clients: usize = flag(rest, "--clients").and_then(|s| s.parse().ok()).unwrap_or(2);
     let requests: usize = flag(rest, "--requests").and_then(|s| s.parse().ok()).unwrap_or(50);
-    // Validate numerics once before serving.
-    let engine = PjrtEngine::load_default()?;
-    engine.validate_golden(PAYLOAD_DNA)?;
-    println!(
-        "serving DNA-Net on {} with strategy {strategy}: {clients} clients x {requests} requests",
-        engine.platform()
-    );
-    drop(engine);
-    let report = serve_dna(
-        strategy,
-        clients,
-        requests,
-        cook::runtime::Manifest::default_dir(),
-    )?;
-    println!("{}", report.render());
+    let batch: usize = flag(rest, "--batch").and_then(|s| s.parse().ok()).unwrap_or(1);
+    let payloads: Vec<String> = flag(rest, "--payload")
+        .unwrap_or("dna")
+        .split(',')
+        .map(str::to_string)
+        .collect();
+    let synthetic = rest.iter().any(|a| a == "--synthetic");
+    let sweep = rest.iter().any(|a| a == "--sweep");
+
+    let backend: Box<dyn ServeBackend> = if synthetic {
+        println!("serving synthetic payloads (no artifacts required)");
+        Box::new(SyntheticBackend::new(200))
+    } else {
+        // Validate numerics of the served payloads once before serving.
+        let engine = Engine::load_default()?;
+        println!("serving on {}", engine.platform());
+        for (i, spec) in engine.manifest.artifacts.iter().enumerate() {
+            if payloads.iter().any(|p| *p == spec.name) {
+                if engine.supports(i) {
+                    engine.validate_golden(i)?;
+                } else {
+                    bail!(
+                        "payload '{}' is not executable by this build \
+                         (rebuild with --features pjrt)",
+                        spec.name
+                    );
+                }
+            }
+        }
+        drop(engine);
+        Box::new(ManifestBackend::new(Manifest::default_dir()))
+    };
+
+    let base = ServeSpec::new(StrategyKind::None, "dna")
+        .with_payloads(payloads)
+        .with_clients(clients)
+        .with_requests(requests)
+        .with_batch(batch);
+    if sweep {
+        if flag(rest, "--strategy").is_some() {
+            bail!("--sweep runs every strategy; drop --strategy or drop --sweep");
+        }
+        let (text, _) = serve_sweep(&base, backend.as_ref())?;
+        print!("{text}");
+    } else {
+        let strategy: StrategyKind = flag(rest, "--strategy")
+            .unwrap_or("worker")
+            .parse()
+            .map_err(|e: String| anyhow!(e))?;
+        let mut spec = base;
+        spec.strategy = strategy;
+        println!(
+            "strategy {strategy}: {clients} clients x {requests} requests (batch {batch})"
+        );
+        let report = serve(&spec, backend.as_ref())?;
+        println!("{}", report.render());
+    }
     Ok(())
 }

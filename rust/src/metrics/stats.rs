@@ -76,6 +76,138 @@ impl BoxStats {
     }
 }
 
+/// A log2-bucketed latency histogram over nanosecond samples.
+///
+/// Built for the serving gate's wait/hold accounting: recording is O(1)
+/// and allocation-free, so it can sit on the admission hot path, while
+/// quantile reads are approximate (bucket upper bound — at most 2x the
+/// true value, which is ample for latency reporting across decades).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// buckets[i] counts samples with floor(log2(ns)) == i (bucket 0 also
+    /// holds ns == 0); the last bucket is open-ended.
+    buckets: [u64; Self::NUM_BUCKETS],
+    count: u64,
+    sum_ns: u128,
+    min_ns: u64,
+    max_ns: u64,
+}
+
+impl Histogram {
+    const NUM_BUCKETS: usize = 64;
+
+    pub fn new() -> Self {
+        Self {
+            buckets: [0; Self::NUM_BUCKETS],
+            count: 0,
+            sum_ns: 0,
+            min_ns: u64::MAX,
+            max_ns: 0,
+        }
+    }
+
+    fn bucket_of(ns: u64) -> usize {
+        if ns == 0 {
+            0
+        } else {
+            (63 - ns.leading_zeros() as usize).min(Self::NUM_BUCKETS - 1)
+        }
+    }
+
+    pub fn record(&mut self, ns: u64) {
+        self.buckets[Self::bucket_of(ns)] += 1;
+        self.count += 1;
+        self.sum_ns += ns as u128;
+        self.min_ns = self.min_ns.min(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn min_ns(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min_ns
+        }
+    }
+
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate nearest-rank quantile: the upper bound of the bucket
+    /// holding the rank-`ceil(q*n)` sample (exact min/max at q==0/1).
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        if q <= 0.0 {
+            return self.min_ns();
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                // Upper bound of bucket i, clamped to the observed max.
+                let ub = if i + 1 >= Self::NUM_BUCKETS {
+                    u64::MAX
+                } else {
+                    (1u64 << (i + 1)) - 1
+                };
+                return ub.min(self.max_ns);
+            }
+        }
+        self.max_ns
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.min_ns = self.min_ns.min(other.min_ns);
+        self.max_ns = self.max_ns.max(other.max_ns);
+    }
+
+    /// One-line rendering in milliseconds (serving reports).
+    pub fn render_ms(&self) -> String {
+        let ms = |ns: u64| ns as f64 / 1e6;
+        format!(
+            "n={} mean={:.3} p50≈{:.3} p95≈{:.3} p99≈{:.3} max={:.3} (ms)",
+            self.count,
+            self.mean_ns() / 1e6,
+            ms(self.quantile_ns(0.50)),
+            ms(self.quantile_ns(0.95)),
+            ms(self.quantile_ns(0.99)),
+            ms(self.max_ns),
+        )
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -140,5 +272,64 @@ mod tests {
     fn render_contains_median() {
         let b = BoxStats::from(&[1.0, 2.0, 3.0]);
         assert!(b.render().contains("med=2.000"));
+    }
+
+    #[test]
+    fn histogram_empty_is_zeroed() {
+        let h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.min_ns(), 0);
+        assert_eq!(h.max_ns(), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+        assert_eq!(h.quantile_ns(0.5), 0);
+    }
+
+    #[test]
+    fn histogram_basic_accounting() {
+        let mut h = Histogram::new();
+        for ns in [100u64, 200, 400, 800, 1_600] {
+            h.record(ns);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.min_ns(), 100);
+        assert_eq!(h.max_ns(), 1_600);
+        assert_eq!(h.mean_ns(), 620.0);
+    }
+
+    #[test]
+    fn histogram_quantile_bucket_bounds() {
+        let mut h = Histogram::new();
+        // 99 samples at ~1us, one outlier at ~1ms.
+        for _ in 0..99 {
+            h.record(1_000);
+        }
+        h.record(1_000_000);
+        // p50 must land in the 1us bucket (upper bound < 2048ns)...
+        assert!(h.quantile_ns(0.5) < 2_048, "p50 = {}", h.quantile_ns(0.5));
+        // ...and p100 must see the outlier, clamped to the observed max.
+        assert_eq!(h.quantile_ns(1.0), 1_000_000);
+        // Approximation bound: never more than 2x the true value.
+        assert!(h.quantile_ns(0.5) >= 1_000);
+    }
+
+    #[test]
+    fn histogram_zero_sample_and_merge() {
+        let mut a = Histogram::new();
+        a.record(0);
+        a.record(10);
+        let mut b = Histogram::new();
+        b.record(1 << 40);
+        a.merge(&b);
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.min_ns(), 0);
+        assert_eq!(a.max_ns(), 1 << 40);
+    }
+
+    #[test]
+    fn histogram_render_mentions_count() {
+        let mut h = Histogram::new();
+        h.record(5_000_000);
+        assert!(h.render_ms().contains("n=1"));
     }
 }

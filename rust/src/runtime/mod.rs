@@ -1,154 +1,70 @@
-//! PJRT runtime: load the AOT artifacts (HLO text produced by the L2/L1
+//! Runtime: load the AOT artifacts (HLO text produced by the L2/L1
 //! python compile path) and execute them from rust.
 //!
-//! Python never runs on this path: `make artifacts` compiled the models
-//! once; this module loads `artifacts/*.hlo.txt` through the `xla` crate
-//! (PJRT C API), compiles them on the CPU client, and executes them with
-//! concrete inputs. The simulated GPU's kernel payloads and the live
-//! serving controller both call [`PjrtEngine::execute`].
+//! Two interchangeable engines sit behind the [`Engine`] alias:
+//!
+//! * **PJRT** (`pjrt` cargo feature): compiles the HLO artifacts through
+//!   the `xla` crate's PJRT CPU client — full fidelity, every payload.
+//! * **Native** (default): a pure-Rust reference interpreter for the
+//!   payloads whose math the manifest fully specifies (`mmult`,
+//!   `vecadd`); no external native libraries required. `dna` reports
+//!   unsupported (its weights are baked into the HLO artifact).
+//!
+//! Both expose the same surface (`load`, `execute`, `validate_golden`,
+//! `supports`, ...), so the simulator's kernel payloads, the CLI, and
+//! the live serving subsystem are engine-agnostic.
 
 pub mod artifact;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 pub use artifact::{
     ArtifactSpec, Manifest, PAYLOAD_DNA, PAYLOAD_MMULT, PAYLOAD_NAMES, PAYLOAD_VECADD,
 };
+pub use native::NativeEngine;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtEngine;
 
-use anyhow::{anyhow, Context, Result};
+/// The engine this build executes payloads with.
+#[cfg(feature = "pjrt")]
+pub type Engine = pjrt::PjrtEngine;
+/// The engine this build executes payloads with.
+#[cfg(not(feature = "pjrt"))]
+pub type Engine = native::NativeEngine;
 
-/// A loaded PJRT engine: one compiled executable per artifact.
-pub struct PjrtEngine {
-    pub manifest: Manifest,
-    client: xla::PjRtClient,
-    executables: Vec<xla::PjRtLoadedExecutable>,
-}
+use anyhow::{anyhow, Result};
 
-impl PjrtEngine {
-    /// Load and compile every artifact in the manifest directory.
-    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
-        let mut executables = Vec::new();
-        for spec in &manifest.artifacts {
-            // HLO *text* interchange: the text parser reassigns instruction
-            // ids, avoiding the 64-bit-id protos jax >= 0.5 would emit.
-            let proto = xla::HloModuleProto::from_text_file(
-                spec.hlo_path
-                    .to_str()
-                    .ok_or_else(|| anyhow!("non-utf8 path {:?}", spec.hlo_path))?,
-            )
-            .map_err(|e| anyhow!("parsing {:?}: {e:?}", spec.hlo_path))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {}: {e:?}", spec.name))?;
-            executables.push(exe);
-        }
-        Ok(Self { manifest, client, executables })
+/// Shared golden validation: compare an execution's output against the
+/// manifest's jax-computed golden vectors (head elements + checksum).
+pub(crate) fn check_golden(spec: &ArtifactSpec, out: &[f32]) -> Result<()> {
+    if out.len() != spec.out_elems() {
+        return Err(anyhow!(
+            "{}: output has {} elements, manifest says {}",
+            spec.name,
+            out.len(),
+            spec.out_elems()
+        ));
     }
-
-    /// Load from the default artifact directory (`$COOK_ARTIFACTS` or
-    /// `./artifacts`).
-    pub fn load_default() -> Result<Self> {
-        Self::load(Manifest::default_dir())
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Execute artifact `payload` with flat f32 inputs (row-major order);
-    /// returns the flat f32 output.
-    pub fn execute(&self, payload: usize, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
-        let spec = self
-            .manifest
-            .artifacts
-            .get(payload)
-            .ok_or_else(|| anyhow!("unknown payload index {payload}"))?;
-        if inputs.len() != spec.arg_sizes.len() {
+    for (i, (got, want)) in out.iter().zip(&spec.golden_output_head).enumerate() {
+        let tol = 1e-3 * want.abs().max(1.0);
+        if (got - want).abs() > tol {
             return Err(anyhow!(
-                "{}: expected {} args, got {}",
-                spec.name,
-                spec.arg_sizes.len(),
-                inputs.len()
+                "{}: output[{i}] = {got}, jax golden = {want}",
+                spec.name
             ));
         }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (i, (input, shape)) in inputs.iter().zip(&spec.arg_shapes).enumerate() {
-            if input.len() != spec.arg_sizes[i] {
-                return Err(anyhow!(
-                    "{} arg {i}: expected {} elements, got {}",
-                    spec.name,
-                    spec.arg_sizes[i],
-                    input.len()
-                ));
-            }
-            let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
-            let lit = xla::Literal::vec1(input)
-                .reshape(&dims)
-                .map_err(|e| anyhow!("reshape arg {i}: {e:?}"))?;
-            literals.push(lit);
-        }
-        let result = self.executables[payload]
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {}: {e:?}", spec.name))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {}: {e:?}", spec.name))?;
-        // aot.py lowers with return_tuple=True -> unwrap the 1-tuple.
-        let out = result
-            .to_tuple1()
-            .map_err(|e| anyhow!("untuple {}: {e:?}", spec.name))?;
-        out.to_vec::<f32>()
-            .map_err(|e| anyhow!("to_vec {}: {e:?}", spec.name))
     }
-
-    /// Execute with the manifest's deterministic golden inputs.
-    pub fn execute_golden(&self, payload: usize) -> Result<Vec<f32>> {
-        let spec = &self.manifest.artifacts[payload];
-        self.execute(payload, &spec.golden_inputs())
-    }
-
-    /// Validate numerics against the jax-computed golden vectors: the
-    /// cross-language correctness gate for the whole AOT path.
-    pub fn validate_golden(&self, payload: usize) -> Result<()> {
-        let spec = &self.manifest.artifacts[payload];
-        let out = self.execute_golden(payload)?;
-        if out.len() != spec.out_elems() {
+    if spec.golden_output_sum.is_finite() {
+        let sum: f64 = out.iter().map(|v| *v as f64).sum();
+        let tol = 1e-3 * spec.golden_output_sum.abs().max(1.0);
+        if (sum - spec.golden_output_sum).abs() > tol {
             return Err(anyhow!(
-                "{}: output has {} elements, manifest says {}",
+                "{}: output sum {sum} vs jax golden {}",
                 spec.name,
-                out.len(),
-                spec.out_elems()
+                spec.golden_output_sum
             ));
         }
-        for (i, (got, want)) in out.iter().zip(&spec.golden_output_head).enumerate() {
-            let tol = 1e-3 * want.abs().max(1.0);
-            if (got - want).abs() > tol {
-                return Err(anyhow!(
-                    "{}: output[{i}] = {got}, jax golden = {want}",
-                    spec.name
-                ));
-            }
-        }
-        if spec.golden_output_sum.is_finite() {
-            let sum: f64 = out.iter().map(|v| *v as f64).sum();
-            let tol = 1e-3 * spec.golden_output_sum.abs().max(1.0);
-            if (sum - spec.golden_output_sum).abs() > tol {
-                return Err(anyhow!(
-                    "{}: output sum {sum} vs jax golden {}",
-                    spec.name,
-                    spec.golden_output_sum
-                ));
-            }
-        }
-        Ok(())
     }
-
-    pub fn validate_all(&self) -> Result<()> {
-        for p in 0..self.manifest.artifacts.len() {
-            self.validate_golden(p)
-                .with_context(|| format!("artifact {}", PAYLOAD_NAMES[p]))?;
-        }
-        Ok(())
-    }
+    Ok(())
 }

@@ -1,0 +1,232 @@
+//! Native fallback engine: pure-Rust reference execution of the AOT
+//! payloads whose math is fully specified by the manifest shapes.
+//!
+//! The default build carries no PJRT/XLA dependency (the `xla` crate and
+//! its `xla_extension` shared library are heavyweight and unavailable in
+//! offline environments), yet the serving subsystem still needs real
+//! numerics to push through the access-control machinery. This engine
+//! executes:
+//!
+//! * `mmult`  — naive row-major f32 matmul (the cuda_mmult payload);
+//! * `vecadd` — `(x + y) * 2` (the runtime smoke payload).
+//!
+//! `dna` (the CNN) bakes jax-PRNG weights into its HLO artifact and has
+//! no manifest-derivable reference, so it reports unsupported here and
+//! requires the `pjrt` feature. [`NativeEngine::supports`] lets callers
+//! (CLI `validate`, serving) distinguish "unsupported in this build"
+//! from failure.
+
+use super::artifact::Manifest;
+use anyhow::{anyhow, Context, Result};
+
+/// Manifest-driven pure-Rust executor for reference payloads.
+pub struct NativeEngine {
+    pub manifest: Manifest,
+}
+
+impl NativeEngine {
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Ok(Self { manifest: Manifest::load(dir)? })
+    }
+
+    /// Load from the default artifact directory (`$COOK_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn load_default() -> Result<Self> {
+        Self::load(Manifest::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        "native-cpu (reference interpreter)".to_string()
+    }
+
+    /// Can this build execute `payload`? (`dna` needs the `pjrt` feature.)
+    pub fn supports(&self, payload: usize) -> bool {
+        self.manifest
+            .artifacts
+            .get(payload)
+            .map(|s| matches!(s.name.as_str(), "mmult" | "vecadd"))
+            .unwrap_or(false)
+    }
+
+    /// Execute artifact `payload` with flat f32 inputs (row-major order);
+    /// returns the flat f32 output.
+    pub fn execute(&self, payload: usize, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let spec = self
+            .manifest
+            .artifacts
+            .get(payload)
+            .ok_or_else(|| anyhow!("unknown payload index {payload}"))?;
+        if inputs.len() != spec.arg_sizes.len() {
+            return Err(anyhow!(
+                "{}: expected {} args, got {}",
+                spec.name,
+                spec.arg_sizes.len(),
+                inputs.len()
+            ));
+        }
+        for (i, input) in inputs.iter().enumerate() {
+            if input.len() != spec.arg_sizes[i] {
+                return Err(anyhow!(
+                    "{} arg {i}: expected {} elements, got {}",
+                    spec.name,
+                    spec.arg_sizes[i],
+                    input.len()
+                ));
+            }
+        }
+        match spec.name.as_str() {
+            "mmult" => {
+                let a_shape = &spec.arg_shapes[0];
+                let b_shape = &spec.arg_shapes[1];
+                if a_shape.len() != 2 || b_shape.len() != 2 || a_shape[1] != b_shape[0] {
+                    return Err(anyhow!(
+                        "mmult: incompatible shapes {a_shape:?} x {b_shape:?}"
+                    ));
+                }
+                Ok(matmul(&inputs[0], &inputs[1], a_shape[0], a_shape[1], b_shape[1]))
+            }
+            "vecadd" => Ok(inputs[0]
+                .iter()
+                .zip(&inputs[1])
+                .map(|(x, y)| (x + y) * 2.0)
+                .collect()),
+            other => Err(anyhow!(
+                "payload '{other}' is not supported by the native engine \
+                 (build with the `pjrt` feature for full AOT execution)"
+            )),
+        }
+    }
+
+    /// Execute with the manifest's deterministic golden inputs.
+    pub fn execute_golden(&self, payload: usize) -> Result<Vec<f32>> {
+        let spec = &self.manifest.artifacts[payload];
+        self.execute(payload, &spec.golden_inputs())
+    }
+
+    /// Validate numerics against the jax-computed golden vectors (only
+    /// meaningful for payloads this engine supports).
+    pub fn validate_golden(&self, payload: usize) -> Result<()> {
+        let spec = &self.manifest.artifacts[payload];
+        let out = self.execute_golden(payload)?;
+        super::check_golden(spec, &out)
+    }
+
+    /// Validate every payload this build can execute (unsupported
+    /// payloads are skipped — the `pjrt` build validates them all).
+    pub fn validate_all(&self) -> Result<()> {
+        for p in 0..self.manifest.artifacts.len() {
+            if self.supports(p) {
+                self.validate_golden(p)
+                    .with_context(|| format!("artifact {}", self.manifest.artifacts[p].name))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Naive row-major f32 matmul: (m x k) * (k x n) -> (m x n). Accumulates
+/// in f32 like the XLA CPU dot, keeping goldens within tolerance.
+fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let aik = a[i * k + kk];
+            let brow = &b[kk * n..(kk + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += aik * bv;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::artifact::ArtifactSpec;
+    use super::*;
+
+    fn manifest_with(names: &[&str]) -> Manifest {
+        let artifacts = names
+            .iter()
+            .map(|n| {
+                let (arg_shapes, out_shape): (Vec<Vec<usize>>, Vec<usize>) = match *n {
+                    "mmult" => (vec![vec![4, 4], vec![4, 4]], vec![4, 4]),
+                    "vecadd" => (vec![vec![8], vec![8]], vec![8]),
+                    _ => (vec![vec![2]], vec![8]),
+                };
+                ArtifactSpec {
+                    name: n.to_string(),
+                    hlo_path: "/nonexistent".into(),
+                    arg_sizes: arg_shapes
+                        .iter()
+                        .map(|s| s.iter().product::<usize>().max(1))
+                        .collect(),
+                    arg_shapes,
+                    out_shape,
+                    golden_seed: 42,
+                    golden_output_head: vec![],
+                    golden_output_sum: f64::NAN,
+                }
+            })
+            .collect();
+        Manifest { dir: "/nonexistent".into(), artifacts }
+    }
+
+    fn engine() -> NativeEngine {
+        NativeEngine { manifest: manifest_with(&["mmult", "dna", "vecadd"]) }
+    }
+
+    #[test]
+    fn vecadd_exact() {
+        let e = engine();
+        let out = e.execute(2, &[vec![1.5; 8], vec![-0.5; 8]]).unwrap();
+        assert_eq!(out, vec![2.0; 8]);
+    }
+
+    #[test]
+    fn mmult_identity() {
+        let e = engine();
+        // A * I == A for a 4x4 identity.
+        let a: Vec<f32> = (0..16).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let mut ident = vec![0.0f32; 16];
+        for i in 0..4 {
+            ident[i * 4 + i] = 1.0;
+        }
+        let out = e.execute(0, &[a.clone(), ident]).unwrap();
+        assert_eq!(out, a);
+    }
+
+    #[test]
+    fn mmult_known_product() {
+        // [[1,2],[3,4]] * [[5,6],[7,8]] = [[19,22],[43,50]]
+        let out = matmul(&[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0], 2, 2, 2);
+        assert_eq!(out, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn dna_unsupported_with_clear_error() {
+        let e = engine();
+        assert!(!e.supports(1));
+        assert!(e.supports(0));
+        assert!(e.supports(2));
+        let err = e.execute(1, &[vec![0.0; 2]]).unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn arity_and_size_rejected() {
+        let e = engine();
+        assert!(e.execute(2, &[vec![0.0; 8]]).is_err(), "arity");
+        assert!(e.execute(2, &[vec![0.0; 4], vec![0.0; 8]]).is_err(), "size");
+        assert!(e.execute(99, &[]).is_err(), "unknown payload");
+    }
+
+    #[test]
+    fn validate_all_skips_unsupported() {
+        // No golden heads in the test manifest, so validation reduces to
+        // executing the supported payloads — dna must be skipped, not
+        // failed.
+        engine().validate_all().unwrap();
+    }
+}

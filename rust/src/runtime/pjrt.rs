@@ -1,0 +1,129 @@
+//! PJRT-backed engine (feature `pjrt`): load the AOT artifacts (HLO text
+//! produced by the L2/L1 python compile path) and execute them through
+//! the `xla` crate (PJRT C API).
+//!
+//! Python never runs on this path: `make artifacts` compiled the models
+//! once; this module loads `artifacts/*.hlo.txt`, compiles them on the
+//! CPU client, and executes them with concrete inputs.
+//!
+//! Enabling the `pjrt` cargo feature requires the `xla` crate (0.1.6)
+//! and its `xla_extension` shared library in the build environment; the
+//! default build uses [`super::native::NativeEngine`] instead.
+
+use super::artifact::{Manifest, PAYLOAD_NAMES};
+use anyhow::{anyhow, Context, Result};
+
+/// A loaded PJRT engine: one compiled executable per artifact.
+pub struct PjrtEngine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    executables: Vec<xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtEngine {
+    /// Load and compile every artifact in the manifest directory.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let mut executables = Vec::new();
+        for spec in &manifest.artifacts {
+            // HLO *text* interchange: the text parser reassigns instruction
+            // ids, avoiding the 64-bit-id protos jax >= 0.5 would emit.
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.hlo_path
+                    .to_str()
+                    .ok_or_else(|| anyhow!("non-utf8 path {:?}", spec.hlo_path))?,
+            )
+            .map_err(|e| anyhow!("parsing {:?}: {e:?}", spec.hlo_path))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e:?}", spec.name))?;
+            executables.push(exe);
+        }
+        Ok(Self { manifest, client, executables })
+    }
+
+    /// Load from the default artifact directory (`$COOK_ARTIFACTS` or
+    /// `./artifacts`).
+    pub fn load_default() -> Result<Self> {
+        Self::load(Manifest::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// PJRT executes every artifact in the manifest.
+    pub fn supports(&self, payload: usize) -> bool {
+        payload < self.manifest.artifacts.len()
+    }
+
+    /// Execute artifact `payload` with flat f32 inputs (row-major order);
+    /// returns the flat f32 output.
+    pub fn execute(&self, payload: usize, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let spec = self
+            .manifest
+            .artifacts
+            .get(payload)
+            .ok_or_else(|| anyhow!("unknown payload index {payload}"))?;
+        if inputs.len() != spec.arg_sizes.len() {
+            return Err(anyhow!(
+                "{}: expected {} args, got {}",
+                spec.name,
+                spec.arg_sizes.len(),
+                inputs.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (input, shape)) in inputs.iter().zip(&spec.arg_shapes).enumerate() {
+            if input.len() != spec.arg_sizes[i] {
+                return Err(anyhow!(
+                    "{} arg {i}: expected {} elements, got {}",
+                    spec.name,
+                    spec.arg_sizes[i],
+                    input.len()
+                ));
+            }
+            let dims: Vec<i64> = shape.iter().map(|d| *d as i64).collect();
+            let lit = xla::Literal::vec1(input)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape arg {i}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let result = self.executables[payload]
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", spec.name))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {}: {e:?}", spec.name))?;
+        // aot.py lowers with return_tuple=True -> unwrap the 1-tuple.
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow!("untuple {}: {e:?}", spec.name))?;
+        out.to_vec::<f32>()
+            .map_err(|e| anyhow!("to_vec {}: {e:?}", spec.name))
+    }
+
+    /// Execute with the manifest's deterministic golden inputs.
+    pub fn execute_golden(&self, payload: usize) -> Result<Vec<f32>> {
+        let spec = &self.manifest.artifacts[payload];
+        self.execute(payload, &spec.golden_inputs())
+    }
+
+    /// Validate numerics against the jax-computed golden vectors: the
+    /// cross-language correctness gate for the whole AOT path.
+    pub fn validate_golden(&self, payload: usize) -> Result<()> {
+        let spec = &self.manifest.artifacts[payload];
+        let out = self.execute_golden(payload)?;
+        super::check_golden(spec, &out)
+    }
+
+    pub fn validate_all(&self) -> Result<()> {
+        for p in 0..self.manifest.artifacts.len() {
+            self.validate_golden(p)
+                .with_context(|| format!("artifact {}", PAYLOAD_NAMES[p]))?;
+        }
+        Ok(())
+    }
+}

@@ -1,8 +1,12 @@
 //! PJRT runtime integration: the cross-language numerics gate.
 //!
-//! These tests require `make artifacts` (they are the rust half of the
-//! L1/L2 <-> L3 contract). They skip, loudly, when artifacts are absent
-//! so `cargo test` stays usable before the python step.
+//! These tests require the `pjrt` cargo feature (the `xla` crate) AND
+//! `make artifacts` (they are the rust half of the L1/L2 <-> L3
+//! contract). They compile to nothing without the feature and skip,
+//! loudly, when artifacts are absent, so `cargo test` stays usable
+//! before the python step.
+
+#![cfg(feature = "pjrt")]
 
 use cook::runtime::{Manifest, PjrtEngine, PAYLOAD_DNA, PAYLOAD_MMULT, PAYLOAD_VECADD};
 

@@ -1,0 +1,128 @@
+//! Live serving integration: the rebuilt multi-payload serving subsystem
+//! exercised end-to-end through the public API and the CLI, per strategy.
+//!
+//! The synthetic backend stands in for the AOT artifacts so the whole
+//! admission machinery (policy plans, FIFO gate, batching, per-payload
+//! reporting) runs in any environment.
+
+use cook::config::StrategyKind;
+use cook::control::serving::{serve, ServeSpec, SyntheticBackend};
+use cook::control::AccessPolicy;
+use std::process::Command;
+
+fn cli() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_cook"))
+}
+
+fn backend() -> SyntheticBackend {
+    SyntheticBackend::new(100)
+}
+
+#[test]
+fn smoke_every_strategy_and_both_paper_payloads() {
+    for strategy in StrategyKind::ALL {
+        for payload in ["dna", "mmult"] {
+            let spec = ServeSpec::new(strategy, payload)
+                .with_clients(2)
+                .with_requests(3);
+            let r = serve(&spec, &backend())
+                .unwrap_or_else(|e| panic!("{strategy}/{payload}: {e}"));
+            assert_eq!(r.total(), 6, "{strategy}/{payload}");
+            assert_eq!(r.per_payload.len(), 1);
+            assert_eq!(r.per_payload[0].payload, payload);
+            assert!(r.latency_p(0.99) >= r.latency_p(0.50), "{strategy}");
+        }
+    }
+}
+
+#[test]
+fn gated_strategies_serialise_under_contention() {
+    // With 4 clients hammering a gated strategy, the gate must observe
+    // every admission and waits must be non-trivial under contention.
+    for strategy in [StrategyKind::Synced, StrategyKind::Worker, StrategyKind::Callback] {
+        let spec = ServeSpec::new(strategy, "dna")
+            .with_clients(4)
+            .with_requests(6);
+        let r = serve(&spec, &backend()).unwrap();
+        let gate = r.gate.expect("gated");
+        // 4 warm-up grants + 24 per-request grants.
+        assert_eq!(gate.grants(), 28, "{strategy}");
+        assert!(gate.wait.max_ns() > 0, "{strategy}: no contention observed");
+    }
+    // Ungated strategies must not fabricate a gate.
+    for strategy in [StrategyKind::None, StrategyKind::Ptb] {
+        let spec = ServeSpec::new(strategy, "dna").with_clients(2).with_requests(2);
+        let r = serve(&spec, &backend()).unwrap();
+        assert!(r.gate.is_none(), "{strategy}");
+        assert!(!AccessPolicy::new(strategy).gated());
+    }
+}
+
+#[test]
+fn batching_preserves_totals_across_strategies() {
+    for strategy in StrategyKind::ALL {
+        let spec = ServeSpec::new(strategy, "mmult")
+            .with_clients(2)
+            .with_requests(7)
+            .with_batch(3); // 3 + 3 + 1 per client
+        let r = serve(&spec, &backend()).unwrap();
+        assert_eq!(r.latencies_ms.len(), 14, "{strategy}");
+    }
+}
+
+#[test]
+fn cli_serve_accepts_all_strategies_and_payloads() {
+    for strategy in StrategyKind::ALL {
+        let out = cli()
+            .args([
+                "serve",
+                "--synthetic",
+                "--strategy",
+                strategy.name(),
+                "--payload",
+                "mmult,dna",
+                "--clients",
+                "2",
+                "--requests",
+                "2",
+            ])
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "{strategy}: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains("IPS"), "{strategy}: {text}");
+        assert!(text.contains("payload mmult"), "{strategy}: {text}");
+    }
+}
+
+#[test]
+fn cli_serve_sweep_tabulates_all_strategies() {
+    let out = cli()
+        .args([
+            "serve", "--synthetic", "--sweep", "--clients", "2", "--requests", "2",
+            "--batch", "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    for s in StrategyKind::ALL {
+        assert!(text.contains(s.name()), "sweep missing {s}: {text}");
+    }
+    assert!(text.contains("gate-w"), "{text}");
+}
+
+#[test]
+fn cli_serve_rejects_unknown_strategy() {
+    let out = cli()
+        .args(["serve", "--synthetic", "--strategy", "mps"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown strategy"), "{err}");
+}
