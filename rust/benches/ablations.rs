@@ -9,7 +9,7 @@ mod common;
 
 use cook::config::{SimConfig, StrategyKind};
 use cook::gpu::Sim;
-use cook::harness::{run_spec, Bench, ExperimentSpec, Isol};
+use cook::harness::{parallel_map, run_spec, Bench, ExperimentSpec, Isol};
 use cook::metrics::ips_with_warmup;
 use cook::util::AppId;
 use std::fmt::Write as _;
@@ -30,9 +30,14 @@ fn main() {
         let _ = writeln!(out, "== ablations ==");
 
         // 1. Lock handoff latency: the synced strategy's parallel cost.
+        // Independent sims -> fan the sweep across cores (results render
+        // in parameter order regardless of completion order).
         let _ = writeln!(out, "\n-- lock handoff (synced, dna parallel IPS) --");
-        for handoff in [10_000u64, 60_000, 120_000, 240_000] {
-            let ips = dna_par_ips(|c| c.timing.lock_handoff_ns = handoff);
+        let handoffs = vec![10_000u64, 60_000, 120_000, 240_000];
+        let rows = parallel_map(handoffs, |h| {
+            (h, dna_par_ips(|c| c.timing.lock_handoff_ns = h))
+        });
+        for (handoff, ips) in rows {
             let _ = writeln!(out, "handoff {:>4} us -> {ips:>5.1} IPS", handoff / 1000);
         }
 
@@ -74,7 +79,8 @@ fn main() {
 
         // 4. Callback CPU steal: host-heavy vs host-idle applications.
         let _ = writeln!(out, "\n-- callback cb_steal (dna isolation IPS) --");
-        for steal in [0u64, 100_000, 250_000, 400_000] {
+        let steals = vec![0u64, 100_000, 250_000, 400_000];
+        let rows = parallel_map(steals, |steal| {
             let spec =
                 ExperimentSpec::new(Bench::OnnxDna, Isol::Isolation, StrategyKind::Callback);
             let mut cfg = spec.sim_config(0);
@@ -82,7 +88,9 @@ fn main() {
             let mut sim = Sim::new(cfg, spec.programs());
             sim.run();
             let p = spec.bench.protocol();
-            let ips = ips_with_warmup(sim.completions(AppId(0)), p.warmup_ns, p.window_ns);
+            (steal, ips_with_warmup(sim.completions(AppId(0)), p.warmup_ns, p.window_ns))
+        });
+        for (steal, ips) in rows {
             let _ = writeln!(out, "steal {:>3} us -> {ips:>5.1} IPS", steal / 1000);
         }
         out

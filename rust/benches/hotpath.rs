@@ -1,17 +1,36 @@
 //! Hot-path microbenchmarks (§Perf deliverable): wall time of the L3
 //! simulator's critical loops, tracked before/after optimization in
-//! EXPERIMENTS.md §Perf.
+//! EXPERIMENTS.md §Perf and machine-readably in BENCH_hotpath.json at
+//! the repository root (the cross-PR perf trajectory).
 //!
 //! The whole-stack target: simulate the full Fig. 10 workload (tens of
 //! thousands of GPU ops) in single-digit seconds, with zero allocation
 //! growth in the per-event loop after warm-up.
+//!
+//! `HOTPATH_SMOKE=1` shrinks horizons for CI smoke runs (the numbers are
+//! not comparable to full runs and are flagged as such in the JSON).
 
 mod common;
 
 use cook::apps::{dna, mmult};
 use cook::config::{SimConfig, StrategyKind};
 use cook::gpu::Sim;
+use cook::harness::{parallel_map, Bench};
+use cook::util::json::Json;
 use std::fmt::Write as _;
+use std::path::PathBuf;
+
+fn smoke() -> bool {
+    std::env::var("HOTPATH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+fn des_horizon_ns() -> u64 {
+    if smoke() {
+        200_000_000
+    } else {
+        5_000_000_000
+    }
+}
 
 fn run_once(strategy: StrategyKind, programs: usize, horizon_ns: u64) -> (usize, f64) {
     let mut cfg = SimConfig::default().with_strategy(strategy).with_seed(1);
@@ -24,49 +43,162 @@ fn run_once(strategy: StrategyKind, programs: usize, horizon_ns: u64) -> (usize,
     (sim.trace.ops.len(), dt)
 }
 
+/// Median wall time of `n` identical runs; the op count is identical
+/// across runs (the sim is deterministic), the wall time is not.
+fn des_throughput(strategy: StrategyKind, n: usize) -> (usize, f64, f64) {
+    let mut times = Vec::with_capacity(n);
+    let mut ops = 0;
+    for _ in 0..n {
+        let (o, dt) = run_once(strategy, 2, des_horizon_ns());
+        ops = o;
+        times.push(dt);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    // Guard against coarse clocks rounding dt to zero (previously this
+    // printed `inf` ops/s); clamp to 1ns so the ratio stays finite.
+    let ops_per_s = ops as f64 / median.max(1e-9);
+    (ops, median, ops_per_s)
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// The committed perf-trajectory file at the repository root — single
+/// source for both the reader (previous-rotation) and the writer.
+fn root_json_path() -> Option<PathBuf> {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .map(|p| p.join("BENCH_hotpath.json"))
+}
+
 fn main() {
     common::section("hotpath", || {
         let mut out = String::new();
         let _ = writeln!(out, "== L3 hot-path microbenchmarks ==");
+        if smoke() {
+            let _ = writeln!(out, "(HOTPATH_SMOKE=1: reduced horizons, smoke only)");
+        }
 
-        // 1. DES throughput: simulated GPU ops per wall second.
+        // 1. DES throughput: simulated GPU ops per wall second,
+        //    median-of-3 full runs per strategy.
+        let mut des = Vec::new();
         for (name, strategy) in [
             ("dna-parallel-none", StrategyKind::None),
             ("dna-parallel-synced", StrategyKind::Synced),
             ("dna-parallel-worker", StrategyKind::Worker),
             ("dna-parallel-callback", StrategyKind::Callback),
         ] {
-            let (ops, dt) = run_once(strategy, 2, 5_000_000_000);
+            let (ops, median_s, ops_per_s) = des_throughput(strategy, 3);
             let _ = writeln!(
                 out,
-                "{name:<24} {ops:>7} ops in {dt:>6.3}s  -> {:>9.0} ops/s",
-                ops as f64 / dt
+                "{name:<24} {ops:>7} ops, median {median_s:>7.3}s of 3  -> {ops_per_s:>9.0} ops/s"
             );
+            des.push((name, ops_per_s));
         }
 
         // 2. mmult end-to-end sim latency (the Fig. 11 unit of work).
-        let t = common::time_median(9, || {
+        let mmult_t = common::time_median(9, || {
             let cfg = SimConfig::default().with_seed(1);
             let mut sim = Sim::new(cfg, vec![mmult::program(), mmult::program()]);
             sim.run();
         });
-        let _ = writeln!(out, "mmult-parallel sim (median of 9): {t:?}");
+        let _ = writeln!(out, "mmult-parallel sim (median of 9): {mmult_t:?}");
 
         // 3. Hook generation latency (the toolchain of Fig. 4).
-        let t = common::time_median(9, || {
+        let hookgen_t = common::time_median(9, || {
             let _ = cook::hooks::generate_standard(StrategyKind::Worker);
         });
-        let _ = writeln!(out, "hookgen worker (median of 9):     {t:?}");
+        let _ = writeln!(out, "hookgen worker (median of 9):     {hookgen_t:?}");
 
         // 4. NET extraction over a large trace.
         let mut cfg = SimConfig::default().with_seed(1);
-        cfg.horizon_ns = 5_000_000_000;
+        cfg.horizon_ns = des_horizon_ns();
         let mut sim = Sim::new(cfg, vec![dna::program(), dna::program()]);
         sim.run();
-        let t = common::time_median(9, || {
+        let net_t = common::time_median(9, || {
             let _ = cook::metrics::net_per_kernel(&sim.trace, cook::util::AppId(0));
         });
-        let _ = writeln!(out, "NET extraction (median of 9):     {t:?}");
+        let _ = writeln!(out, "NET extraction (median of 9):     {net_t:?}");
+
+        // 5. Whole Fig. 10 grid wall time through the parallel harness
+        //    (the "single-digit seconds" whole-stack target).
+        let fig10_s = if smoke() {
+            f64::NAN
+        } else {
+            let t0 = std::time::Instant::now();
+            let specs: Vec<_> = cook::harness::ExperimentSpec::paper_grid()
+                .into_iter()
+                .filter(|s| s.bench == Bench::OnnxDna)
+                .collect();
+            let results = parallel_map(specs, |s| cook::harness::run_spec(s, 0));
+            let dt = t0.elapsed().as_secs_f64();
+            let _ = writeln!(
+                out,
+                "fig10 grid ({} configs, {} threads): {dt:.2}s wall",
+                results.len(),
+                cook::harness::max_threads()
+            );
+            dt
+        };
+
+        // Machine-readable trajectory: always to target/bench-results/;
+        // the committed repo-root file only on FULL runs — smoke numbers
+        // are not comparable and must not rotate the real baseline away.
+        let json = render_json(&des, &mmult_t, &hookgen_t, &net_t, fig10_s);
+        let _ = std::fs::write(common::results_dir().join("BENCH_hotpath.json"), &json);
+        if smoke() {
+            let _ = writeln!(out, "[smoke run: repo-root BENCH_hotpath.json left untouched]");
+        } else if let Some(path) = root_json_path() {
+            match std::fs::write(&path, &json) {
+                Ok(()) => {
+                    let _ = writeln!(out, "[wrote {}]", path.display());
+                }
+                Err(e) => {
+                    let _ = writeln!(out, "[could not write {}: {e}]", path.display());
+                }
+            }
+        }
         out
     });
+}
+
+/// Assemble BENCH_hotpath.json. The previous file's `current` block (if
+/// parseable) is preserved under `previous`, so the file itself carries
+/// one step of perf history across PRs.
+fn render_json(
+    des: &[(&str, f64)],
+    mmult_t: &std::time::Duration,
+    hookgen_t: &std::time::Duration,
+    net_t: &std::time::Duration,
+    fig10_s: f64,
+) -> String {
+    let mut cur = String::new();
+    cur.push_str("{\n    \"des_ops_per_s\": {\n");
+    for (i, (name, v)) in des.iter().enumerate() {
+        let comma = if i + 1 < des.len() { "," } else { "" };
+        let _ = writeln!(cur, "      \"{name}\": {}{comma}", fmt_f64(*v));
+    }
+    cur.push_str("    },\n");
+    let _ = writeln!(cur, "    \"mmult_sim_ms\": {},", fmt_f64(mmult_t.as_secs_f64() * 1e3));
+    let _ = writeln!(cur, "    \"hookgen_ms\": {},", fmt_f64(hookgen_t.as_secs_f64() * 1e3));
+    let _ = writeln!(cur, "    \"net_extraction_ms\": {},", fmt_f64(net_t.as_secs_f64() * 1e3));
+    let _ = writeln!(cur, "    \"fig10_grid_s\": {},", fmt_f64(fig10_s));
+    let _ = write!(cur, "    \"smoke\": {}\n  }}", smoke());
+
+    // Carry the committed file's `current` forward as `previous`.
+    let prev = root_json_path()
+        .and_then(|p| std::fs::read_to_string(p).ok())
+        .and_then(|text| Json::parse(&text).ok())
+        .and_then(|j| j.get("current").map(|c| c.to_string()))
+        .unwrap_or_else(|| "null".to_string());
+
+    format!(
+        "{{\n  \"schema\": 1,\n  \"bench\": \"hotpath\",\n  \"current\": {cur},\n  \"previous\": {prev}\n}}\n"
+    )
 }

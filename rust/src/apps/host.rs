@@ -4,7 +4,7 @@
 //! never contend for CPU in the model; they contend only on the GPU lock
 //! and the GPU itself. The engine (gpu/engine.rs) drives these states.
 
-use super::program::Program;
+use super::program::{CompiledProgram, CompiledStep};
 use crate::util::{CtxId, Nanos, OpUid, StreamId};
 
 /// What the host thread is doing right now.
@@ -29,7 +29,8 @@ pub enum HostPhase {
 /// Host-thread state for one application.
 #[derive(Debug)]
 pub struct HostState {
-    pub program: Program,
+    /// Execution-form program (kernel names interned at compile time).
+    pub program: CompiledProgram,
     pub ctx: CtxId,
     pub stream: StreamId,
     /// Program counter into `program.steps`.
@@ -55,7 +56,7 @@ pub struct HostState {
 }
 
 impl HostState {
-    pub fn new(program: Program, ctx: CtxId, stream: StreamId) -> Self {
+    pub fn new(program: CompiledProgram, ctx: CtxId, stream: StreamId) -> Self {
         Self {
             program,
             ctx,
@@ -104,11 +105,13 @@ impl HostState {
         }
     }
 
-    pub fn current_step(&self) -> Option<&super::program::HostStep> {
+    /// Current step by value (`CompiledStep` is `Copy`; no per-step
+    /// clone of kernel descriptors on the hot path).
+    pub fn current_step(&self) -> Option<CompiledStep> {
         if self.phase == HostPhase::Done {
             None
         } else {
-            self.program.steps.get(self.pc)
+            self.program.steps.get(self.pc).copied()
         }
     }
 
@@ -120,20 +123,21 @@ impl HostState {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::apps::program::{HostStep, Program, RepeatMode};
+    use crate::apps::program::{Program, RepeatMode};
     use crate::util::ids::*;
 
     fn host(repeat: RepeatMode) -> HostState {
         let p = Program::new("t", repeat).compute(10).mark_completion();
-        HostState::new(p, CtxId(0), StreamId { ctx: CtxId(0), idx: 0 })
+        let compiled = p.compile(&mut |_| SymId(0));
+        HostState::new(compiled, CtxId(0), StreamId { ctx: CtxId(0), idx: 0 })
     }
 
     #[test]
     fn advance_once_terminates() {
         let mut h = host(RepeatMode::Once);
-        assert!(matches!(h.current_step(), Some(HostStep::Compute(10))));
+        assert!(matches!(h.current_step(), Some(CompiledStep::Compute(10))));
         h.advance();
-        assert!(matches!(h.current_step(), Some(HostStep::MarkCompletion)));
+        assert!(matches!(h.current_step(), Some(CompiledStep::MarkCompletion)));
         h.advance();
         assert!(h.done());
         assert!(h.current_step().is_none());

@@ -7,4 +7,4 @@ pub mod mmult;
 pub mod program;
 pub mod workload;
 
-pub use program::{HostStep, Program, RepeatMode};
+pub use program::{CompiledProgram, CompiledStep, HostStep, Program, RepeatMode};

@@ -5,8 +5,8 @@
 //! program can run under every strategy and the generated traces are
 //! directly comparable.
 
-use crate::cudart::{CopyDesc, CopyDir, KernelDesc};
-use crate::util::Nanos;
+use crate::cudart::{CopyDesc, CopyDir, KernelDesc, KernelInstance};
+use crate::util::{Nanos, SymId};
 
 /// One step of host code.
 #[derive(Debug, Clone)]
@@ -128,6 +128,61 @@ impl Program {
         }
         p.sync().mark_completion()
     }
+
+    /// Lower the program to its execution form: every kernel name is
+    /// resolved through `intern` exactly once, here, so the simulator's
+    /// per-event loop never clones strings or hashes names. The interner
+    /// is supplied by the run (the `TraceCollector` owns the table).
+    pub fn compile(&self, intern: &mut dyn FnMut(&str) -> SymId) -> CompiledProgram {
+        let steps = self
+            .steps
+            .iter()
+            .map(|s| match s {
+                HostStep::Compute(d) => CompiledStep::Compute(*d),
+                HostStep::Launch(k) => CompiledStep::Launch(k.instance(intern(&k.name))),
+                HostStep::Memcpy(c) => CompiledStep::Memcpy(*c),
+                HostStep::HostFunc(d) => CompiledStep::HostFunc(*d),
+                HostStep::Sync => CompiledStep::Sync,
+                HostStep::MarkCompletion => CompiledStep::MarkCompletion,
+            })
+            .collect();
+        CompiledProgram { name: self.name.clone(), steps, repeat: self.repeat }
+    }
+}
+
+/// One step of a compiled (execution-form) program. Fully `Copy`: the
+/// host state machine reads steps by value with no per-step allocation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CompiledStep {
+    Compute(Nanos),
+    Launch(KernelInstance),
+    Memcpy(CopyDesc),
+    HostFunc(Nanos),
+    Sync,
+    MarkCompletion,
+}
+
+/// A program lowered by [`Program::compile`] for one simulator run.
+#[derive(Debug, Clone)]
+pub struct CompiledProgram {
+    pub name: String,
+    pub steps: Vec<CompiledStep>,
+    pub repeat: RepeatMode,
+}
+
+impl CompiledProgram {
+    /// Number of GPU routines per iteration (event-queue sizing input).
+    pub fn gpu_routines(&self) -> usize {
+        self.steps
+            .iter()
+            .filter(|s| {
+                matches!(
+                    s,
+                    CompiledStep::Launch(_) | CompiledStep::Memcpy(_) | CompiledStep::HostFunc(_)
+                )
+            })
+            .count()
+    }
 }
 
 #[cfg(test)]
@@ -173,5 +228,34 @@ mod tests {
         let p = Program::new("t", RepeatMode::Once).compute(5).mark_completion();
         assert_eq!(p.bursts(), 0);
         assert_eq!(p.gpu_routines(), 0);
+    }
+
+    #[test]
+    fn compile_interns_each_distinct_name_once() {
+        let p = Program::new("t", RepeatMode::Once)
+            .launch(kd())
+            .launch(kd())
+            .launch(KernelDesc::compute("other", Grid::new(1, 32), 5))
+            .sync()
+            .mark_completion();
+        let mut names: Vec<String> = Vec::new();
+        let c = p.compile(&mut |n| {
+            if let Some(i) = names.iter().position(|x| x == n) {
+                SymId(i as u32)
+            } else {
+                names.push(n.to_string());
+                SymId((names.len() - 1) as u32)
+            }
+        });
+        assert_eq!(names, vec!["k".to_string(), "other".to_string()]);
+        assert_eq!(c.steps.len(), p.steps.len());
+        assert_eq!(c.gpu_routines(), p.gpu_routines());
+        match (&c.steps[0], &c.steps[2]) {
+            (CompiledStep::Launch(a), CompiledStep::Launch(b)) => {
+                assert_eq!(a.sym, SymId(0));
+                assert_eq!(b.sym, SymId(1));
+            }
+            other => panic!("unexpected compiled steps: {other:?}"),
+        }
     }
 }

@@ -15,7 +15,7 @@ pub mod symbols;
 
 pub use context::GpuContext;
 pub use error::CudaError;
-pub use op::{CopyDesc, CopyDir, Grid, KernelDesc, LockAction, Op, OpKind, OpState};
+pub use op::{CopyDesc, CopyDir, Grid, KernelDesc, KernelInstance, LockAction, Op, OpKind, OpState};
 pub use registry::{KernelRegistry, RegisteredKernel};
 pub use stream::Stream;
 pub use symbols::{Symbol, SymbolCategory, SymbolTable};

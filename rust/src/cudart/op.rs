@@ -1,6 +1,14 @@
 //! GPU operations: kernels, copies, host-func callbacks (§II-A).
+//!
+//! Two kernel representations exist on purpose:
+//! * [`KernelDesc`] is the *authoring* form (owned name string, builder
+//!   methods) used by programs and workload generators;
+//! * [`KernelInstance`] is the *execution* form the simulator's op slab
+//!   carries: the name is interned to a dense [`SymId`] when the program
+//!   is compiled for a run, so the per-event hot path never touches a
+//!   heap-allocated string and `Op` stays `Copy`.
 
-use crate::util::{AppId, CtxId, Nanos, OpUid, StreamId};
+use crate::util::{AppId, CtxId, Nanos, OpUid, StreamId, SymId};
 
 /// Kernel launch grid: number of thread blocks and their (uniform) shape.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -59,6 +67,40 @@ impl KernelDesc {
         self.payload = Some(artifact);
         self
     }
+
+    /// Compile-time lowering: resolve this descriptor into the `Copy`
+    /// execution form the simulator carries, with the name replaced by
+    /// its interned symbol id.
+    pub fn instance(&self, sym: SymId) -> KernelInstance {
+        KernelInstance {
+            sym,
+            grid: self.grid,
+            block_cost_ns: self.block_cost_ns,
+            l2_footprint_bytes: self.l2_footprint_bytes,
+            payload: self.payload,
+            // Worker-strategy deep-copy model: 8 bytes per pointer-ish
+            // param, param count derived from the registered name.
+            args_bytes: 8 * (2 + self.name.len() as u64 % 6),
+        }
+    }
+}
+
+/// Execution form of a kernel launch: everything the simulator needs,
+/// all `Copy`, no heap payload. Built once per program step at compile
+/// time (`Program::compile`), not per launch on the hot path.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct KernelInstance {
+    /// Interned kernel name (resolve via `TraceCollector::sym_name`).
+    pub sym: SymId,
+    pub grid: Grid,
+    /// Warm-cache execution time of one block with the SM to itself.
+    pub block_cost_ns: Nanos,
+    /// Working-set footprint in the shared L2, bytes (cache model input).
+    pub l2_footprint_bytes: u64,
+    /// Index of the AOT artifact computing this kernel's payload, if any.
+    pub payload: Option<usize>,
+    /// Bytes the deferred worker deep-copies for this launch's args.
+    pub args_bytes: u64,
 }
 
 /// Direction of a copy operation.
@@ -77,9 +119,9 @@ pub struct CopyDesc {
 }
 
 /// Everything a stream can carry.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum OpKind {
-    Kernel(KernelDesc),
+    Kernel(KernelInstance),
     Copy(CopyDesc),
     /// `cudaLaunchHostFunc`: run a host function in stream order. The
     /// `lock_action` distinguishes the COOK acquire/release callbacks from
@@ -110,8 +152,9 @@ pub enum OpState {
     Complete,
 }
 
-/// One operation instance flowing through the stack.
-#[derive(Debug, Clone)]
+/// One operation instance flowing through the stack. `Copy`: the op
+/// slab hands out cheap by-value reads on the hot path.
+#[derive(Debug, Clone, Copy)]
 pub struct Op {
     pub uid: OpUid,
     pub app: AppId,
@@ -146,7 +189,7 @@ impl Op {
         }
     }
 
-    pub fn kernel(&self) -> Option<&KernelDesc> {
+    pub fn kernel(&self) -> Option<&KernelInstance> {
         match &self.kind {
             OpKind::Kernel(k) => Some(k),
             _ => None,
@@ -195,13 +238,11 @@ mod tests {
 
     #[test]
     fn kind_predicates() {
-        let k = mk_op(OpKind::Kernel(KernelDesc::compute(
-            "k",
-            Grid::new(1, 32),
-            1000,
-        )));
+        let k = mk_op(OpKind::Kernel(
+            KernelDesc::compute("k", Grid::new(1, 32), 1000).instance(SymId(7)),
+        ));
         assert!(k.is_kernel() && !k.is_copy());
-        assert_eq!(k.kernel().unwrap().name, "k");
+        assert_eq!(k.kernel().unwrap().sym, SymId(7));
         let c = mk_op(OpKind::Copy(CopyDesc { bytes: 4, dir: CopyDir::HostToDevice }));
         assert!(c.is_copy() && c.kernel().is_none());
     }
@@ -213,5 +254,20 @@ mod tests {
             .with_payload(2);
         assert_eq!(k.l2_footprint_bytes, 1 << 20);
         assert_eq!(k.payload, Some(2));
+    }
+
+    #[test]
+    fn instance_preserves_fields_and_args_model() {
+        let d = KernelDesc::compute("mm", Grid::new(4, 256), 10_000)
+            .with_l2_footprint(1 << 20)
+            .with_payload(2);
+        let i = d.instance(SymId(3));
+        assert_eq!(i.sym, SymId(3));
+        assert_eq!(i.grid, d.grid);
+        assert_eq!(i.block_cost_ns, d.block_cost_ns);
+        assert_eq!(i.l2_footprint_bytes, d.l2_footprint_bytes);
+        assert_eq!(i.payload, d.payload);
+        // The worker deep-copy model: 8 * (2 + len("mm") % 6) = 32.
+        assert_eq!(i.args_bytes, 32);
     }
 }

@@ -8,13 +8,13 @@
 //! subsystem streams.
 
 use crate::apps::host::{HostPhase, HostState};
-use crate::apps::program::{HostStep, Program};
+use crate::apps::program::{CompiledStep, Program, RepeatMode};
 use crate::config::SimConfig;
 use crate::control::lock::{GpuLock, LockClient};
 use crate::control::policy::{AccessPolicy, Admission, Arbitration, OrderedOpRule};
 use crate::control::worker::{WorkerPhase, WorkerState};
 use crate::cudart::{
-    CopyDesc, GpuContext, KernelDesc, LockAction, Op, OpKind, OpState,
+    CopyDesc, GpuContext, KernelInstance, LockAction, Op, OpKind, OpState,
 };
 use crate::gpu::cache::L2State;
 use crate::gpu::event::{Event, EventQueue};
@@ -23,7 +23,25 @@ use crate::trace::record::{
     BlockRecord, OpRecord, StallRecord, SwitchRecord, TraceCollector,
 };
 use crate::util::{AppId, BlockUid, CtxId, DetRng, Nanos, OpUid, SmId, StreamId};
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::VecDeque;
+
+// ---------------------------------------------------------------------
+// dirty-set pump bits (which subsystems an event handler touched)
+// ---------------------------------------------------------------------
+
+/// Host threads have a step to (re)try (some app entered `Ready`).
+const D_HOSTS: u8 = 1 << 0;
+/// A worker queue gained work or a worker went idle.
+const D_WORKERS: u8 = 1 << 1;
+/// A stream head may now dispatch (insert/retire/stall-clear/slot-free).
+const D_DRIVER: u8 = 1 << 2;
+/// Device state changed (SM residency, run pool, copy engine, switches).
+const D_GPU: u8 = 1 << 3;
+
+/// Per-op bitflags stored in a dense `Vec<u8>` alongside the op slab
+/// (replaces the old `HashSet<OpUid>` stall bookkeeping).
+const F_STALLED: u8 = 1 << 0;
+const F_STALL_CHECKED: u8 = 1 << 1;
 
 /// A kernel admitted to the device, tracking block progress.
 #[derive(Debug)]
@@ -67,11 +85,59 @@ struct FrozenBatch {
     remaining_ns: Nanos,
 }
 
-/// Device-side dynamic state.
+/// Slot-indexed slab of live batches. Insertion reuses freed slots
+/// (LIFO), iteration runs in ascending slot order — both deterministic,
+/// unlike the `HashMap<u64, Batch>` this replaces (whose randomized
+/// iteration order leaked into freeze ordering). `BatchDone` events
+/// carry (slot, uid); a reused slot's stale event fails the uid check.
+#[derive(Debug, Default)]
+struct BatchSlab {
+    slots: Vec<Option<Batch>>,
+    free: Vec<u32>,
+}
+
+impl BatchSlab {
+    fn insert(&mut self, b: Batch) -> u32 {
+        match self.free.pop() {
+            Some(i) => {
+                self.slots[i as usize] = Some(b);
+                i
+            }
+            None => {
+                self.slots.push(Some(b));
+                (self.slots.len() - 1) as u32
+            }
+        }
+    }
+
+    fn get(&self, slot: u32) -> Option<&Batch> {
+        self.slots.get(slot as usize).and_then(|s| s.as_ref())
+    }
+
+    fn remove(&mut self, slot: u32) -> Option<Batch> {
+        let b = self.slots.get_mut(slot as usize)?.take();
+        if b.is_some() {
+            self.free.push(slot);
+        }
+        b
+    }
+
+    fn iter(&self) -> impl Iterator<Item = &Batch> {
+        self.slots.iter().filter_map(|s| s.as_ref())
+    }
+
+    fn num_slots(&self) -> u32 {
+        self.slots.len() as u32
+    }
+}
+
+/// Device-side dynamic state. Everything here is dense (`Vec`-indexed
+/// slabs, per-ctx vectors, per-op bitflags) — the per-event loop does no
+/// hashing and no steady-state allocation.
 #[derive(Debug, Default)]
 struct GpuExec {
     run_pool: Vec<KernelRun>,
-    batches: HashMap<u64, Batch>,
+    batches: BatchSlab,
     frozen: Vec<FrozenBatch>,
     active_ctx: Option<CtxId>,
     /// Previous owner of the SMs (switch cost applies when it changes).
@@ -86,12 +152,9 @@ struct GpuExec {
     copy_current: Option<OpUid>,
     copy_gen: u64,
     copy_q: VecDeque<OpUid>,
-    /// Ops at a stream head currently delayed by a software-stack stall.
-    stalled: HashSet<OpUid>,
-    /// Ops that already passed (won or lost) the stall dice roll.
-    stall_checked: HashSet<OpUid>,
-    /// Per-context timestamp of last device activity (stall exposure).
-    last_activity: HashMap<CtxId, Nanos>,
+    /// Per-context timestamp of last device activity (stall exposure),
+    /// indexed by ctx id; `None` = never active.
+    last_activity: Vec<Option<Nanos>>,
 }
 
 /// Set of runnable contexts as a bitmask (the Xavier never hosts more
@@ -147,6 +210,10 @@ pub struct Sim {
     pub now: Nanos,
     events: EventQueue,
     pub ops: Vec<Op>,
+    /// Per-op bitflags (`F_*`), parallel to `ops`.
+    op_flags: Vec<u8>,
+    /// Dirty-set pump bits (`D_*`): which subsystems need a pump pass.
+    dirty: u8,
     pub ctxs: Vec<GpuContext>,
     pub apps: Vec<HostState>,
     pub workers: Vec<Option<WorkerState>>,
@@ -179,6 +246,13 @@ impl Sim {
         let mut ctxs = Vec::with_capacity(n);
         let mut apps = Vec::with_capacity(n);
         let mut workers = Vec::with_capacity(n);
+        let mut trace = TraceCollector::new(true);
+        // Op-count hint for pre-sizing the event queue, the op slab and
+        // the trace: one-shot programs run their routines once (x4 covers
+        // the callback strategy's 3-ops-per-routine expansion plus host
+        // events); looping programs get a generous starting block and the
+        // vectors amortise from there.
+        let mut op_hint = 0usize;
         for (i, prog) in programs.into_iter().enumerate() {
             let ctx_id = CtxId(i);
             let mut ctx = GpuContext::new(ctx_id, cfg.platform.callback_threads);
@@ -189,9 +263,19 @@ impl Sim {
             } else {
                 workers.push(None);
             }
-            apps.push(HostState::new(prog, ctx_id, stream));
+            // Program build: kernel names are interned here, once; the
+            // hot path only ever sees dense `SymId`s.
+            let compiled = prog.compile(&mut |name| trace.intern(name));
+            op_hint += compiled.gpu_routines().max(1)
+                * match compiled.repeat {
+                    RepeatMode::Once => 4,
+                    RepeatMode::LoopUntilHorizon => 64,
+                };
+            apps.push(HostState::new(compiled, ctx_id, stream));
             ctxs.push(ctx);
         }
+        let op_hint = op_hint.min(1 << 20);
+        trace.reserve_ops(op_hint);
         let num_sms = cfg.platform.num_sms;
         // Spatial policies (PTB) pin each application to its SM share.
         let sm_mask = (0..n)
@@ -201,6 +285,7 @@ impl Sim {
                     .collect()
             })
             .collect();
+        let gpu = GpuExec { last_activity: vec![None; n], ..GpuExec::default() };
         Self {
             policy,
             l2: L2State::new(cfg.platform.l2_bytes),
@@ -209,14 +294,16 @@ impl Sim {
             rng_stall: root.child(0x5354414c), // "STAL"
             cfg,
             now: 0,
-            events: EventQueue::new(),
-            ops: Vec::new(),
+            events: EventQueue::with_capacity(op_hint),
+            ops: Vec::with_capacity(op_hint),
+            op_flags: Vec::with_capacity(op_hint),
+            dirty: 0,
             ctxs,
             apps,
             workers,
             lock: GpuLock::new(),
-            gpu: GpuExec::default(),
-            trace: TraceCollector::new(true),
+            gpu,
+            trace,
             next_block_uid: 0,
             horizon_reached: false,
             sm_mask,
@@ -229,6 +316,10 @@ impl Sim {
         for i in 0..self.apps.len() {
             self.events.push(0, Event::HostReady(AppId(i)));
         }
+        // Bootstrap: hosts start in `Ready` (not `Busy`), so the initial
+        // HostReady events alone would mark nothing. Mirror the legacy
+        // engine's unconditional first pump by marking everything dirty.
+        self.mark(D_HOSTS | D_WORKERS | D_DRIVER | D_GPU);
         while let Some((t, ev)) = self.events.pop() {
             debug_assert!(t >= self.now, "time went backwards");
             self.now = t;
@@ -259,32 +350,88 @@ impl Sim {
                 if a.phase == HostPhase::Busy {
                     a.phase = HostPhase::Ready;
                 }
+                // Mark unconditionally: the host may already be `Ready`
+                // (initial events) — the legacy engine pumped regardless.
+                self.mark(D_HOSTS);
             }
             Event::WorkerReady(app) => self.worker_on_ready(app),
             Event::CallbackStart(op) => self.callback_start(op),
             Event::CallbackDone(op) => self.callback_done(op),
-            Event::BatchDone { block, gen: _ } => self.batch_done(block),
+            Event::BatchDone { slot, uid } => self.batch_done(slot, uid),
             Event::CopyDone { op, gen } => self.copy_done(op, gen),
             Event::QuantumExpire { gen } => self.quantum_expire(gen),
             Event::SwitchDone { gen } => self.switch_done(gen),
             Event::StallDone(op) => {
-                self.gpu.stalled.remove(&op);
+                self.clear_flag(op, F_STALLED);
+                self.mark(D_DRIVER);
             }
             Event::LockWake => self.lock_wake(),
             Event::Horizon => unreachable!("handled in run()"),
         }
     }
 
-    /// Fix-point pump: keep advancing every subsystem until quiescence.
+    // ------------------------------------------------------------------
+    // dirty-set bookkeeping
+    // ------------------------------------------------------------------
+
+    #[inline]
+    fn mark(&mut self, bits: u8) {
+        self.dirty |= bits;
+    }
+
+    #[inline]
+    fn flag(&self, op: OpUid, f: u8) -> bool {
+        self.op_flags[op.0 as usize] & f != 0
+    }
+
+    #[inline]
+    fn set_flag(&mut self, op: OpUid, f: u8) {
+        self.op_flags[op.0 as usize] |= f;
+    }
+
+    #[inline]
+    fn clear_flag(&mut self, op: OpUid, f: u8) {
+        self.op_flags[op.0 as usize] &= !f;
+    }
+
+    /// Dirty-set fix-point pump (contract documented in DESIGN.md §7).
+    ///
+    /// Event handlers and mutation helpers mark the subsystems they
+    /// touched (`D_*` bits); one sweep visits only marked subsystems, in
+    /// the fixed order hosts -> workers -> driver -> GPU. Each bit is
+    /// consumed *at its turn*, so a subsystem marked by an earlier pump
+    /// in the same sweep still runs this sweep — exactly the mutation
+    /// order of the legacy rescan-everything fix-point, minus the
+    /// unproductive scans. A pump that changed anything re-marks itself
+    /// (it may be productive again, e.g. a freed stream slot).
     fn pump(&mut self) {
         for _ in 0..10_000 {
-            let mut changed = false;
-            changed |= self.host_pump();
-            changed |= self.worker_pump();
-            changed |= self.driver_pump();
-            changed |= self.gpu_pump();
-            if !changed {
+            if self.dirty == 0 {
                 return;
+            }
+            if self.dirty & D_HOSTS != 0 {
+                self.dirty &= !D_HOSTS;
+                if self.host_pump() {
+                    self.mark(D_HOSTS);
+                }
+            }
+            if self.dirty & D_WORKERS != 0 {
+                self.dirty &= !D_WORKERS;
+                if self.worker_pump() {
+                    self.mark(D_WORKERS);
+                }
+            }
+            if self.dirty & D_DRIVER != 0 {
+                self.dirty &= !D_DRIVER;
+                if self.driver_pump() {
+                    self.mark(D_DRIVER);
+                }
+            }
+            if self.dirty & D_GPU != 0 {
+                self.dirty &= !D_GPU;
+                if self.gpu_pump() {
+                    self.mark(D_GPU);
+                }
             }
         }
         panic!("pump failed to reach a fix-point (simulator bug)");
@@ -304,6 +451,8 @@ impl Sim {
                 let a = &mut self.apps[app.0];
                 a.holds_lock = true;
                 a.unblock(self.now);
+                // Back to `Ready`: the blocked routine re-executes.
+                self.mark(D_HOSTS);
             }
             LockClient::Worker(app) => {
                 if let Some(w) = &mut self.workers[app.0] {
@@ -355,11 +504,11 @@ impl Sim {
     /// Execute the current step of `app`'s program. Returns true if any
     /// state changed (the step ran or transitioned to a blocking phase).
     fn exec_host_step(&mut self, app: AppId) -> bool {
-        let Some(step) = self.apps[app.0].current_step().cloned() else {
+        let Some(step) = self.apps[app.0].current_step() else {
             return false;
         };
         match step {
-            HostStep::Compute(d) => {
+            CompiledStep::Compute(d) => {
                 // CPU time stolen by driver callbacks is charged here:
                 // callbacks preempt *application computation*, not the
                 // thin routine-call overheads (a host thread blocked at a
@@ -368,15 +517,15 @@ impl Sim {
                 self.host_busy(app, d + steal);
                 self.apps[app.0].advance();
             }
-            HostStep::MarkCompletion => {
+            CompiledStep::MarkCompletion => {
                 let now = self.now;
                 self.apps[app.0].completions.push(now);
                 self.apps[app.0].advance();
             }
-            HostStep::Launch(k) => return self.routine_launch(app, k),
-            HostStep::Memcpy(c) => return self.routine_memcpy(app, c),
-            HostStep::HostFunc(d) => return self.routine_host_func(app, d),
-            HostStep::Sync => return self.routine_sync(app),
+            CompiledStep::Launch(k) => return self.routine_launch(app, k),
+            CompiledStep::Memcpy(c) => return self.routine_memcpy(app, c),
+            CompiledStep::HostFunc(d) => return self.routine_host_func(app, d),
+            CompiledStep::Sync => return self.routine_sync(app),
         }
         true
     }
@@ -387,7 +536,7 @@ impl Sim {
     }
 
     /// `cudaLaunchKernel` through the active hook (Alg. 1/3/4/5).
-    fn routine_launch(&mut self, app: AppId, k: KernelDesc) -> bool {
+    fn routine_launch(&mut self, app: AppId, k: KernelInstance) -> bool {
         let cost = self.cfg.timing.launch_overhead_ns;
         self.routine_gpu_op(app, OpKind::Kernel(k), cost)
     }
@@ -453,18 +602,18 @@ impl Sim {
                 // pc advances when the op completes (routine is synchronous).
             }
             Admission::DeferToWorker => {
-                // Alg. 5: deep-copy args, defer to the worker queue.
+                // Alg. 5: deep-copy args, defer to the worker queue. The
+                // copy size (8 bytes per pointer-ish param, layout walked
+                // through the registry) was resolved at program build and
+                // rides the kernel instance.
                 let wstream = self.workers[app.0].as_ref().unwrap().stream;
                 let op = self.new_op(app, kind, wstream);
                 let args_bytes = match &self.ops[op.0 as usize].kind {
-                    OpKind::Kernel(k) => {
-                        // 8 bytes per pointer-ish param; the registry-backed
-                        // layout walk is modelled by the enqueue cost.
-                        8 * (2 + k.name.len() as u64 % 6)
-                    }
+                    OpKind::Kernel(k) => k.args_bytes,
                     _ => 32,
                 };
                 self.workers[app.0].as_mut().unwrap().enqueue(op, args_bytes);
+                self.mark(D_WORKERS);
                 self.host_busy(app, base_cost + self.cfg.timing.worker_enqueue_ns);
                 self.apps[app.0].advance();
             }
@@ -589,6 +738,8 @@ impl Sim {
         w.on_lock_released(now);
         w.processed += 1;
         w.phase = WorkerPhase::Idle;
+        // Idle again: the worker pump may dequeue the next deferred op.
+        self.mark(D_WORKERS);
         self.lock_release();
         self.wake_worker_waiters(app);
     }
@@ -642,12 +793,22 @@ impl Sim {
             completed_at: None,
             burst: self.apps[app.0].burst,
         });
+        self.op_flags.push(0);
         uid
     }
 
     fn insert_in_stream(&mut self, op: OpUid) {
         let stream = self.ops[op.0 as usize].stream;
         self.ctxs[stream.ctx.0].stream_mut(stream).push(op);
+        // A new stream tail may be (or become) the dispatchable head.
+        self.mark(D_DRIVER);
+    }
+
+    /// Retire an in-flight op from its stream, unblocking the head.
+    fn retire_in_stream(&mut self, op: OpUid) {
+        let sid = self.ops[op.0 as usize].stream;
+        self.ctxs[sid.ctx.0].stream_mut(sid).retire(op);
+        self.mark(D_DRIVER);
     }
 
     // ------------------------------------------------------------------
@@ -660,7 +821,7 @@ impl Sim {
             for s in 0..self.ctxs[c].num_streams() {
                 let sid = StreamId { ctx: CtxId(c), idx: s };
                 let Some(op) = self.ctxs[c].stream(sid).head() else { continue };
-                if self.gpu.stalled.contains(&op) {
+                if self.flag(op, F_STALLED) {
                     continue;
                 }
                 // Dispatch policy: strict FIFO, except that up to
@@ -689,12 +850,13 @@ impl Sim {
                         }
                         self.ctxs[c].stream_mut(sid).begin_past(op);
                         self.ops[op.0 as usize].state = OpState::Running;
-                        self.gpu.last_activity.insert(CtxId(c), self.now);
-                        self.gpu.stall_checked.remove(&op); // done with dice
+                        self.gpu.last_activity[c] = Some(self.now);
+                        self.clear_flag(op, F_STALL_CHECKED); // done with dice
                         if self.ops[op.0 as usize].is_kernel() {
                             self.admit_kernel(op);
                         } else {
                             self.gpu.copy_q.push_back(op);
+                            self.mark(D_GPU);
                         }
                         changed = true;
                     }
@@ -721,6 +883,7 @@ impl Sim {
                         }
                         self.ctxs[c].stream_mut(sid).begin(op);
                         self.ctxs[c].stream_mut(sid).retire(op);
+                        self.mark(D_DRIVER);
                         self.ops[op.0 as usize].started_at = Some(self.now);
                         self.complete_op(op);
                         changed = true;
@@ -735,23 +898,22 @@ impl Sim {
     /// while another context was recently active at the driver level may
     /// collide in the shared queues. Returns true if the op got stalled.
     fn maybe_stall(&mut self, op: OpUid) -> bool {
-        if !self.gpu.stall_checked.insert(op) {
+        if self.flag(op, F_STALL_CHECKED) {
             return false; // already diced
         }
+        self.set_flag(op, F_STALL_CHECKED);
         let ctx = self.ops[op.0 as usize].ctx;
         let window = self.cfg.timing.stall_window_ns;
-        let exposed = self
-            .gpu
-            .last_activity
-            .iter()
-            .any(|(c, &t)| *c != ctx && self.now.saturating_sub(t) <= window);
+        let exposed = self.gpu.last_activity.iter().copied().enumerate().any(|(c, t)| {
+            c != ctx.0 && matches!(t, Some(t) if self.now.saturating_sub(t) <= window)
+        });
         if !exposed || !self.rng_stall.chance(self.cfg.timing.stall_prob) {
             return false;
         }
         let base = self.op_base_cost(op).max(1_000);
         let mult = self.rng_stall.pareto(self.cfg.timing.stall_alpha, self.cfg.timing.stall_cap);
         let dur = (base as f64 * mult) as Nanos;
-        self.gpu.stalled.insert(op);
+        self.set_flag(op, F_STALLED);
         self.trace.stalls.push(StallRecord { op, at: self.now, duration_ns: dur });
         self.events.push(self.now + dur, Event::StallDone(op));
         true
@@ -813,9 +975,8 @@ impl Sim {
             .position(|s| *s == crate::cudart::context::CallbackSlot::Busy(op))
             .expect("callback op must hold a slot");
         self.ctxs[ctx.0].release_callback_slot(slot);
-        // Retire the stream position the callback held (FIFO completion).
-        let sid = self.ops[op.0 as usize].stream;
-        self.ctxs[sid.ctx.0].stream_mut(sid).retire(op);
+        // Slot freed + stream position retired: the driver may dispatch.
+        self.retire_in_stream(op);
         // The callback ran on the application's CPU: charge the steal to
         // the app's next host compute segment (cache pollution + wakeups).
         let app = self.ops[op.0 as usize].app;
@@ -841,6 +1002,8 @@ impl Sim {
             block_cost_ns: k.block_cost_ns,
             pending_cold_ns: 0,
         });
+        // New device work: the block scheduler has dispatching to do.
+        self.mark(D_GPU);
     }
 
     /// Contexts that currently have device work (kernels or frozen
@@ -914,7 +1077,7 @@ impl Sim {
         let must_save = self
             .gpu
             .batches
-            .values()
+            .iter()
             .any(|b| Some(b.ctx) == self.gpu.active_ctx)
             || self.gpu.frozen.iter().any(|f| Some(f.ctx) == from);
         let cost = if from.is_some() && from != Some(next) {
@@ -938,6 +1101,7 @@ impl Sim {
             self.events
                 .push(self.now + cost, Event::SwitchDone { gen: self.gpu.switch_gen });
         }
+        self.mark(D_GPU);
         true
     }
 
@@ -949,6 +1113,8 @@ impl Sim {
         if let Some(next) = self.gpu.pending_next.take() {
             self.activate(next);
         }
+        // Switch complete: the new context's blocks may now dispatch.
+        self.mark(D_GPU);
     }
 
     fn activate(&mut self, ctx: CtxId) {
@@ -959,17 +1125,15 @@ impl Sim {
     }
 
     /// Freeze all running batches of the active context (state save).
+    /// Slab order = slot order: deterministic, allocation-free.
     fn freeze_active(&mut self) {
         let Some(active) = self.gpu.active_ctx else { return };
-        let uids: Vec<u64> = self
-            .gpu
-            .batches
-            .values()
-            .filter(|b| b.ctx == active)
-            .map(|b| b.uid.0)
-            .collect();
-        for uid in uids {
-            let b = self.gpu.batches.remove(&uid).unwrap();
+        for slot in 0..self.gpu.batches.num_slots() {
+            match self.gpu.batches.get(slot) {
+                Some(b) if b.ctx == active => {}
+                _ => continue,
+            }
+            let b = self.gpu.batches.remove(slot).unwrap();
             self.sms[b.sm.0].vacate(b.blocks, b.warps_per_block);
             self.gpu.frozen.push(FrozenBatch {
                 op: b.op,
@@ -979,7 +1143,7 @@ impl Sim {
                 warps_per_block: b.warps_per_block,
                 remaining_ns: b.end_at.saturating_sub(self.now),
             });
-            // Its BatchDone event is now stale (lookup by uid fails).
+            // Its BatchDone event is now stale (uid check fails).
         }
         self.gpu.quantum_armed = false;
         self.gpu.active_ctx = None;
@@ -1080,7 +1244,7 @@ impl Sim {
             self.gpu.run_pool[i].pending_cold_ns = 0;
         }
         if changed {
-            self.gpu.last_activity.insert(ctx, self.now);
+            self.gpu.last_activity[ctx.0] = Some(self.now);
         }
         changed
     }
@@ -1118,29 +1282,31 @@ impl Sim {
         self.next_block_uid += 1;
         let uid = BlockUid(self.next_block_uid);
         let end = self.now + dur.max(1);
-        self.gpu.batches.insert(
-            uid.0,
-            Batch {
-                uid,
-                op,
-                ctx,
-                app,
-                sm,
-                blocks,
-                warps_per_block,
-                started_at: self.now,
-                end_at: end,
-                resumed,
-            },
-        );
-        self.events.push(end, Event::BatchDone { block: uid, gen: 0 });
+        let slot = self.gpu.batches.insert(Batch {
+            uid,
+            op,
+            ctx,
+            app,
+            sm,
+            blocks,
+            warps_per_block,
+            started_at: self.now,
+            end_at: end,
+            resumed,
+        });
+        self.events.push(end, Event::BatchDone { slot, uid });
     }
 
-    fn batch_done(&mut self, uid: BlockUid) {
-        let Some(b) = self.gpu.batches.remove(&uid.0) else {
-            return; // stale: batch was frozen/cancelled
-        };
+    fn batch_done(&mut self, slot: u32, uid: BlockUid) {
+        match self.gpu.batches.get(slot) {
+            Some(b) if b.uid == uid => {}
+            _ => return, // stale: batch was frozen/cancelled, slot reused
+        }
+        let b = self.gpu.batches.remove(slot).unwrap();
         self.sms[b.sm.0].vacate(b.blocks, b.warps_per_block);
+        // Freed SM residency (and possibly a finished kernel): the block
+        // scheduler has room to fill.
+        self.mark(D_GPU);
         if self.trace.block_level {
             self.trace.blocks.push(BlockRecord {
                 op: b.op,
@@ -1159,12 +1325,11 @@ impl Sim {
             .position(|kr| kr.op == b.op)
             .expect("batch for unknown kernel");
         self.gpu.run_pool[idx].done += b.blocks as u32;
-        self.gpu.last_activity.insert(b.ctx, self.now);
+        self.gpu.last_activity[b.ctx.0] = Some(self.now);
         if self.gpu.run_pool[idx].done >= self.gpu.run_pool[idx].total {
             let kr = self.gpu.run_pool.remove(idx);
             // FIFO retirement in the op's stream.
-            let sid = self.ops[kr.op.0 as usize].stream;
-            self.ctxs[sid.ctx.0].stream_mut(sid).retire(kr.op);
+            self.retire_in_stream(kr.op);
             self.complete_op(kr.op);
         }
     }
@@ -1195,10 +1360,11 @@ impl Sim {
             return;
         }
         self.gpu.copy_current = None;
-        let sid = self.ops[op.0 as usize].stream;
-        self.ctxs[sid.ctx.0].stream_mut(sid).retire(op);
+        // Copy engine free: the next queued transfer may start.
+        self.mark(D_GPU);
+        self.retire_in_stream(op);
         let ctx = self.ops[op.0 as usize].ctx;
-        self.gpu.last_activity.insert(ctx, self.now);
+        self.gpu.last_activity[ctx.0] = Some(self.now);
         self.complete_op(op);
     }
 
@@ -1207,26 +1373,28 @@ impl Sim {
     // ------------------------------------------------------------------
 
     fn complete_op(&mut self, op: OpUid) {
-        {
+        // Stamp the op and derive its trace record in one borrow — no
+        // `Op` clone, no string clone (kernel names are interned syms).
+        let rec = {
             let o = &mut self.ops[op.0 as usize];
             o.state = OpState::Complete;
             if o.started_at.is_none() {
                 o.started_at = Some(self.now);
             }
             o.completed_at = Some(self.now);
-        }
-        let o = self.ops[op.0 as usize].clone();
-        self.trace.ops.push(OpRecord {
-            op,
-            app: o.app,
-            kernel_name: o.kernel().map(|k| k.name.clone()),
-            is_kernel: o.is_kernel(),
-            is_copy: o.is_copy(),
-            enqueued_at: o.enqueued_at,
-            started_at: o.started_at.unwrap(),
-            completed_at: self.now,
-            burst: o.burst,
-        });
+            OpRecord {
+                op,
+                app: o.app,
+                sym: o.kernel().map(|k| k.sym),
+                is_kernel: o.is_kernel(),
+                is_copy: o.is_copy(),
+                enqueued_at: o.enqueued_at,
+                started_at: o.started_at.unwrap(),
+                completed_at: self.now,
+                burst: o.burst,
+            }
+        };
+        self.trace.ops.push(rec);
 
         // Wake a synced-strategy host waiting on this op.
         for i in 0..self.apps.len() {

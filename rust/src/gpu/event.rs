@@ -20,8 +20,10 @@ pub enum Event {
     CallbackStart(OpUid),
     /// A host-func callback body returns.
     CallbackDone(OpUid),
-    /// A batch of thread blocks completes on an SM.
-    BatchDone { block: BlockUid, gen: u64 },
+    /// A batch of thread blocks completes on an SM. Carries the batch's
+    /// slab slot (direct index, no hashing) plus its unique uid so a
+    /// reused slot invalidates stale events (freeze/cancel idiom).
+    BatchDone { slot: u32, uid: BlockUid },
     /// A copy-engine transfer completes.
     CopyDone { op: OpUid, gen: u64 },
     /// The context-scheduling quantum expires.
@@ -49,6 +51,12 @@ pub struct EventQueue {
 impl EventQueue {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// Pre-sized queue (capacity derived from the run's op count so the
+    /// steady-state heap never reallocates).
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { heap: BinaryHeap::with_capacity(cap), seq: 0 }
     }
 
     pub fn push(&mut self, at: Nanos, ev: Event) {
@@ -107,5 +115,13 @@ mod tests {
         q.push(42, Event::Horizon);
         assert_eq!(q.peek_time(), Some(42));
         assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn with_capacity_behaves_like_new() {
+        let mut q = EventQueue::with_capacity(128);
+        assert!(q.is_empty());
+        q.push(1, Event::Horizon);
+        assert_eq!(q.pop(), Some((1, Event::Horizon)));
     }
 }

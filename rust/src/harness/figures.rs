@@ -4,6 +4,7 @@
 //! Each emitter returns the rendered text (also used by `cargo bench`
 //! harnesses) and can persist CSV series for external plotting.
 
+use super::parallel::parallel_map;
 use super::runner::{run_spec, RunResult};
 use super::spec::{Bench, ExperimentSpec, Isol};
 use crate::config::StrategyKind;
@@ -12,40 +13,43 @@ use std::fmt::Write as _;
 use std::path::Path;
 
 /// Figures 9/10: NET distribution per configuration, one row per
-/// instance, rendered as boxplot summaries.
+/// instance, rendered as boxplot summaries. The 8 configurations are
+/// independent sims, so they fan out across cores; rendering follows
+/// input order, keeping the emitted text identical at any core count.
 pub fn net_figure(bench: Bench, seed: u64) -> (String, Vec<RunResult>) {
     let mut out = String::new();
-    let mut results = Vec::new();
     let _ = writeln!(
         out,
         "== Normalised Kernel Runtime (NET) distribution: {} ==",
         bench.name()
     );
+    let mut specs = Vec::new();
     for isol in [Isol::Isolation, Isol::Parallel] {
         for strategy in StrategyKind::PAPER_SET {
-            let spec = ExperimentSpec::new(bench, isol, strategy);
-            let r = run_spec(spec, seed);
-            let _ = writeln!(out, "{spec}");
-            for inst in 0..r.net.len() {
-                match r.net_box(inst) {
-                    Some(b) => {
-                        let _ = writeln!(out, "  inst{}: {}", inst, b.render());
-                    }
-                    None => {
-                        let _ = writeln!(out, "  inst{}: no kernels measured", inst);
-                    }
+            specs.push(ExperimentSpec::new(bench, isol, strategy));
+        }
+    }
+    let results = parallel_map(specs, |spec| run_spec(spec, seed));
+    for r in &results {
+        let _ = writeln!(out, "{}", r.spec);
+        for inst in 0..r.net.len() {
+            match r.net_box(inst) {
+                Some(b) => {
+                    let _ = writeln!(out, "  inst{}: {}", inst, b.render());
+                }
+                None => {
+                    let _ = writeln!(out, "  inst{}: no kernels measured", inst);
                 }
             }
-            let _ = writeln!(
-                out,
-                "  pooled: max={:.1}x  frac>10x={:.4}%  overlaps={}  stalls={}",
-                r.max_net(),
-                100.0 * r.frac_net_above(10.0),
-                r.overlaps,
-                r.stalls
-            );
-            results.push(r);
         }
+        let _ = writeln!(
+            out,
+            "  pooled: max={:.1}x  frac>10x={:.4}%  overlaps={}  stalls={}",
+            r.max_net(),
+            100.0 * r.frac_net_above(10.0),
+            r.overlaps,
+            r.stalls
+        );
     }
     (out, results)
 }
@@ -64,16 +68,16 @@ pub fn chronogram_figure(seed: u64) -> (String, Vec<RunResult>) {
         ExperimentSpec::new(Bench::CudaMmult, Isol::Parallel, StrategyKind::Ptb),
     ];
     let _ = writeln!(out, "== Chronograms: cuda_mmult (Fig. 11) ==");
-    for spec in configs {
-        let r = run_spec(spec, seed);
+    results.extend(parallel_map(configs.to_vec(), |spec| run_spec(spec, seed)));
+    for r in &results {
         let _ = writeln!(
             out,
-            "{spec}: total={:.1} Mcycles, cross-instance overlap={}",
+            "{}: total={:.1} Mcycles, cross-instance overlap={}",
+            r.spec,
             r.chronogram.total_mcycles(),
             if r.chronogram.has_cross_lane_overlap() { "YES" } else { "no" }
         );
         out.push_str(&r.chronogram.render_ascii(24));
-        results.push(r);
     }
     (out, results)
 }
@@ -88,17 +92,23 @@ pub fn ips_table(seed: u64) -> (String, Vec<(ExperimentSpec, f64)>) {
         "{:<12} {:>8} {:>10} {:>8} {:>8}",
         "Config", "none", "callback", "synced", "worker"
     );
+    let mut specs = Vec::new();
     for isol in [Isol::Isolation, Isol::Parallel] {
-        let mut row = format!("{:<12}", isol.name());
         for strategy in StrategyKind::PAPER_SET {
-            let spec = ExperimentSpec::new(Bench::OnnxDna, isol, strategy);
-            let r = run_spec(spec, seed);
+            specs.push(ExperimentSpec::new(Bench::OnnxDna, isol, strategy));
+        }
+    }
+    let results = parallel_map(specs, |spec| run_spec(spec, seed));
+    for (row_idx, isol) in [Isol::Isolation, Isol::Parallel].into_iter().enumerate() {
+        let mut row = format!("{:<12}", isol.name());
+        for (col, strategy) in StrategyKind::PAPER_SET.into_iter().enumerate() {
+            let r = &results[row_idx * StrategyKind::PAPER_SET.len() + col];
             // Paper reports the application IPS; in parallel both
             // instances are mirrored, report the mean.
             let v = r.ips.iter().sum::<f64>() / r.ips.len() as f64;
             let width = if strategy == StrategyKind::Callback { 10 } else { 8 };
             let _ = write!(row, " {:>width$.0}", v, width = width);
-            cells.push((spec, v));
+            cells.push((r.spec, v));
         }
         let _ = writeln!(out, "{row}");
     }

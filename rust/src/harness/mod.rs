@@ -2,10 +2,12 @@
 //! figure/table emitters that regenerate the paper's evaluation.
 
 pub mod figures;
+pub mod parallel;
 pub mod runner;
 pub mod serving;
 pub mod spec;
 
+pub use parallel::{max_threads, parallel_map};
 pub use runner::{run_spec, run_spec_pooled, RunResult};
 pub use serving::serve_sweep;
 pub use spec::{Bench, ExperimentSpec, Isol, RunProtocol};

@@ -1,0 +1,133 @@
+//! Deterministic fan-out of independent simulator runs across cores.
+//!
+//! One `Sim` is single-threaded by construction; an *experiment* is many
+//! independent (config, seed) runs — figures sweep 6–16 configurations,
+//! pooled runs sweep seeds, ablations sweep parameters. [`parallel_map`]
+//! fans those runs over a `std::thread::scope` worker pool while keeping
+//! the result order identical to the input order, so every consumer
+//! (figure emitters, pooled mergers, bench tables) produces bit-identical
+//! output whether it runs on 1 core or 64.
+//!
+//! Determinism guarantee: `f` receives each input exactly once; result
+//! slot `i` holds `f(inputs[i])`. Thread scheduling decides only *when*
+//! a run executes, never *what* it computes (each `Sim` draws from its
+//! own seeded RNG streams) nor *where* its result lands.
+//!
+//! `COOK_THREADS=n` caps the pool (1 = fully serial), e.g. for timing
+//! individual runs or debugging.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker-pool size: `COOK_THREADS` override, else available cores.
+pub fn max_threads() -> usize {
+    if let Ok(v) = std::env::var("COOK_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Apply `f` to every input on a scoped worker pool; results come back
+/// in input order. Panics in `f` propagate to the caller (the scope
+/// joins all workers before returning).
+pub fn parallel_map<T, R, F>(inputs: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let n = inputs.len();
+    let threads = max_threads().min(n);
+    if threads <= 1 {
+        return inputs.into_iter().map(f).collect();
+    }
+    // Per-slot mutexes rather than one global queue lock: a worker takes
+    // job i, computes, writes slot i. fetch_add hands out indices in
+    // ascending order; ordering of *completion* is irrelevant.
+    let jobs: Vec<Mutex<Option<T>>> =
+        inputs.into_iter().map(|t| Mutex::new(Some(t))).collect();
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let next = AtomicUsize::new(0);
+    let f = &f;
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let item = jobs[i]
+                    .lock()
+                    .unwrap()
+                    .take()
+                    .expect("parallel_map job dispatched twice");
+                let out = f(item);
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| {
+            m.into_inner()
+                .unwrap()
+                .expect("parallel_map worker exited without a result")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StrategyKind;
+    use crate::harness::run_spec;
+    use crate::harness::spec::{Bench, ExperimentSpec, Isol};
+
+    #[test]
+    fn preserves_input_order() {
+        let out = parallel_map((0..64).collect(), |i: usize| i * 2);
+        assert_eq!(out, (0..64).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_input_is_fine() {
+        let out: Vec<usize> = parallel_map(Vec::<usize>::new(), |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_item_runs_inline() {
+        assert_eq!(parallel_map(vec![41usize], |i| i + 1), vec![42]);
+    }
+
+    #[test]
+    fn parallel_sim_runs_match_sequential() {
+        // The determinism guarantee the experiment harness rests on:
+        // fanning runs across threads changes nothing about any result.
+        let spec = ExperimentSpec::new(Bench::CudaMmult, Isol::Parallel, StrategyKind::None);
+        let seeds: Vec<u64> = (0..4).collect();
+        let seq: Vec<_> = seeds.iter().map(|&s| run_spec(spec, s)).collect();
+        let par = parallel_map(seeds, |s| run_spec(spec, s));
+        for (a, b) in seq.iter().zip(&par) {
+            assert_eq!(a.seed, b.seed);
+            assert_eq!(a.net, b.net, "seed {}", a.seed);
+            assert_eq!(a.kernels, b.kernels);
+            assert_eq!(a.overlaps, b.overlaps);
+            assert_eq!(a.switches, b.switches);
+            assert_eq!(a.stalls, b.stalls);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn worker_panics_propagate() {
+        let _ = parallel_map((0..8).collect::<Vec<usize>>(), |i| {
+            if i == 5 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+}

@@ -90,11 +90,16 @@ pub fn run_spec(spec: ExperimentSpec, seed: u64) -> RunResult {
 
 /// Run a spec across several seeds and pool the NET samples (the paper
 /// collects one long run; pooling seeds tightens the tails we report).
+///
+/// Per-seed runs are independent, so they fan out across cores via
+/// [`super::parallel::parallel_map`]; the merge folds in seed order, so
+/// the pooled result is identical to the old sequential loop.
 pub fn run_spec_pooled(spec: ExperimentSpec, seeds: &[u64]) -> RunResult {
     assert!(!seeds.is_empty());
-    let mut base = run_spec(spec, seeds[0]);
-    for &s in &seeds[1..] {
-        let r = run_spec(spec, s);
+    let results = super::parallel::parallel_map(seeds.to_vec(), |s| run_spec(spec, s));
+    let mut it = results.into_iter();
+    let mut base = it.next().unwrap();
+    for r in it {
         for (acc, more) in base.net.iter_mut().zip(r.net) {
             acc.extend(more);
         }

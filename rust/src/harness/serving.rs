@@ -11,6 +11,13 @@ use std::fmt::Write as _;
 /// Run `base` under every strategy against `backend`; returns the
 /// rendered table and the per-strategy reports (in `StrategyKind::ALL`
 /// order).
+///
+/// Deliberately sequential, unlike the simulator sweeps fanned out by
+/// `harness::parallel::parallel_map`: each serving run spawns real
+/// client/worker threads and *measures wall-clock* IPS and latency, so
+/// running strategies concurrently would contend for cores and corrupt
+/// the numbers the sweep exists to report. Virtual-time `Sim` runs have
+/// no such coupling; live wall-clock runs do.
 pub fn serve_sweep(
     base: &ServeSpec,
     backend: &dyn ServeBackend,

@@ -7,20 +7,34 @@
 
 use crate::trace::record::TraceCollector;
 use crate::util::{AppId, Nanos};
-use std::collections::HashMap;
 
 /// Compute NET values for every kernel instance of `app`, normalising
 /// each instance by the minimum observed time of the *same kernel name*.
+///
+/// Kernel names are interned symbols, so grouping is a dense
+/// `Vec`-indexed bucket fill — no hashing, single pass over the trace,
+/// deterministic output order (symbol-less records, then ascending
+/// symbol id).
 pub fn net_per_kernel(trace: &TraceCollector, app: AppId) -> Vec<f64> {
-    let mut by_name: HashMap<&str, Vec<Nanos>> = HashMap::new();
+    // Bucket 0 collects records without a symbol (hand-built traces in
+    // tests); interned symbol s maps to bucket s+1. Real traces have
+    // every sym < num_syms; the resize is a test-only escape hatch.
+    let mut by_sym: Vec<Vec<Nanos>> = vec![Vec::new(); trace.num_syms() + 1];
+    let mut total = 0usize;
     for r in trace.kernel_ops(app) {
-        let name = r.kernel_name.as_deref().unwrap_or("?");
-        by_name.entry(name).or_default().push(r.exec_ns());
+        let idx = r.sym.map(|s| s.0 as usize + 1).unwrap_or(0);
+        if idx >= by_sym.len() {
+            by_sym.resize(idx + 1, Vec::new());
+        }
+        by_sym[idx].push(r.exec_ns());
+        total += 1;
     }
-    let mut out = Vec::new();
-    for (_, times) in by_name {
-        let min = *times.iter().min().unwrap_or(&1) as f64;
-        let min = min.max(1.0);
+    let mut out = Vec::with_capacity(total);
+    for times in by_sym {
+        if times.is_empty() {
+            continue;
+        }
+        let min = (*times.iter().min().unwrap() as f64).max(1.0);
         for t in times {
             out.push(t as f64 / min);
         }
@@ -42,26 +56,27 @@ mod tests {
     use crate::trace::record::OpRecord;
     use crate::util::OpUid;
 
-    fn rec(app: usize, name: &str, start: Nanos, end: Nanos) -> OpRecord {
-        OpRecord {
+    fn push(t: &mut TraceCollector, app: usize, name: &str, start: Nanos, end: Nanos) {
+        let sym = t.intern(name);
+        t.ops.push(OpRecord {
             op: OpUid(start),
             app: AppId(app),
-            kernel_name: Some(name.to_string()),
+            sym: Some(sym),
             is_kernel: true,
             is_copy: false,
             enqueued_at: start,
             started_at: start,
             completed_at: end,
             burst: 0,
-        }
+        });
     }
 
     #[test]
     fn net_normalises_by_min() {
         let mut t = TraceCollector::new(false);
-        t.ops.push(rec(0, "k", 0, 100));
-        t.ops.push(rec(0, "k", 200, 300)); // 100 -> NET 1.0
-        t.ops.push(rec(0, "k", 400, 650)); // 250 -> NET 2.5
+        push(&mut t, 0, "k", 0, 100);
+        push(&mut t, 0, "k", 200, 300); // 100 -> NET 1.0
+        push(&mut t, 0, "k", 400, 650); // 250 -> NET 2.5
         let mut v = net_per_kernel(&t, AppId(0));
         v.sort_by(|a, b| a.partial_cmp(b).unwrap());
         assert_eq!(v, vec![1.0, 1.0, 2.5]);
@@ -70,8 +85,8 @@ mod tests {
     #[test]
     fn net_is_per_kernel_name() {
         let mut t = TraceCollector::new(false);
-        t.ops.push(rec(0, "fast", 0, 10));
-        t.ops.push(rec(0, "slow", 0, 1000));
+        push(&mut t, 0, "fast", 0, 10);
+        push(&mut t, 0, "slow", 0, 1000);
         let v = net_per_kernel(&t, AppId(0));
         // Both are the min of their own name -> both exactly 1.0.
         assert_eq!(v, vec![1.0, 1.0]);
@@ -80,21 +95,41 @@ mod tests {
     #[test]
     fn net_ignores_other_apps_and_copies() {
         let mut t = TraceCollector::new(false);
-        t.ops.push(rec(0, "k", 0, 100));
-        t.ops.push(rec(1, "k", 0, 999));
-        let mut c = rec(0, "c", 0, 5);
-        c.is_kernel = false;
-        c.is_copy = true;
-        t.ops.push(c);
+        push(&mut t, 0, "k", 0, 100);
+        push(&mut t, 1, "k", 0, 999);
+        push(&mut t, 0, "c", 0, 5);
+        let last = t.ops.last_mut().unwrap();
+        last.is_kernel = false;
+        last.is_copy = true;
         assert_eq!(net_per_kernel(&t, AppId(0)).len(), 1);
+    }
+
+    #[test]
+    fn net_groups_symbolless_records_together() {
+        // Hand-built traces may carry no symbol; they form one group.
+        let mut t = TraceCollector::new(false);
+        push(&mut t, 0, "k", 0, 100);
+        t.ops.push(OpRecord {
+            op: OpUid(7),
+            app: AppId(0),
+            sym: None,
+            is_kernel: true,
+            is_copy: false,
+            enqueued_at: 0,
+            started_at: 0,
+            completed_at: 40,
+            burst: 0,
+        });
+        let v = net_per_kernel(&t, AppId(0));
+        assert_eq!(v, vec![1.0, 1.0]);
     }
 
     #[test]
     fn net_all_apps_shapes() {
         let mut t = TraceCollector::new(false);
-        t.ops.push(rec(0, "k", 0, 100));
-        t.ops.push(rec(1, "k", 0, 100));
-        t.ops.push(rec(1, "k", 200, 400));
+        push(&mut t, 0, "k", 0, 100);
+        push(&mut t, 1, "k", 0, 100);
+        push(&mut t, 1, "k", 200, 400);
         let v = net_all_apps(&t, 2);
         assert_eq!(v[0].len(), 1);
         assert_eq!(v[1].len(), 2);

@@ -115,11 +115,12 @@ mod tests {
 
     fn trace_with(spans: &[(usize, Nanos, Nanos)]) -> TraceCollector {
         let mut t = TraceCollector::new(false);
+        let sym = t.intern("k");
         for &(app, s, e) in spans {
             t.ops.push(OpRecord {
                 op: OpUid(s),
                 app: AppId(app),
-                kernel_name: Some("k".into()),
+                sym: Some(sym),
                 is_kernel: true,
                 is_copy: false,
                 enqueued_at: s,

@@ -6,14 +6,18 @@
 //! * kernel-level (custom instrumentation): one record per *batch* of
 //!   thread blocks placed on an SM, end-to-end.
 
-use crate::util::{AppId, CtxId, Nanos, OpUid, SmId};
+use crate::util::{AppId, CtxId, Nanos, OpUid, SmId, SymId};
 
 /// Application-level record: the lifecycle of one GPU operation.
-#[derive(Debug, Clone)]
+/// `Copy`: no owned strings — kernel names are interned once at program
+/// build and carried as a [`SymId`] (resolve with
+/// [`TraceCollector::sym_name`]).
+#[derive(Debug, Clone, Copy)]
 pub struct OpRecord {
     pub op: OpUid,
     pub app: AppId,
-    pub kernel_name: Option<String>,
+    /// Interned kernel name (kernel ops only).
+    pub sym: Option<SymId>,
     pub is_kernel: bool,
     pub is_copy: bool,
     pub enqueued_at: Nanos,
@@ -74,11 +78,44 @@ pub struct TraceCollector {
     /// Collect block-level records? (kernel-level instrumentation on/off —
     /// nsys-level op records are always on.)
     pub block_level: bool,
+    /// Interned kernel-name table (`SymId` -> name). Filled once when the
+    /// run's programs are compiled; the distinct-name count is small, so
+    /// interning is a linear scan with no hashing.
+    names: Vec<String>,
 }
 
 impl TraceCollector {
     pub fn new(block_level: bool) -> Self {
         Self { block_level, ..Default::default() }
+    }
+
+    /// Intern `name`, returning its dense symbol id. Called at program
+    /// build time only — never on the per-event hot path.
+    pub fn intern(&mut self, name: &str) -> SymId {
+        if let Some(i) = self.names.iter().position(|n| n == name) {
+            return SymId(i as u32);
+        }
+        self.names.push(name.to_string());
+        SymId((self.names.len() - 1) as u32)
+    }
+
+    /// Number of distinct interned kernel names.
+    pub fn num_syms(&self) -> usize {
+        self.names.len()
+    }
+
+    /// Resolve a record's symbol back to the kernel name ("?" when the
+    /// op carries no symbol or the id is unknown to this collector).
+    pub fn sym_name(&self, sym: Option<SymId>) -> &str {
+        sym.and_then(|s| self.names.get(s.0 as usize))
+            .map(String::as_str)
+            .unwrap_or("?")
+    }
+
+    /// Pre-size the op-record vector (called once by `Sim::new` from the
+    /// programs' op counts so steady-state pushes never reallocate).
+    pub fn reserve_ops(&mut self, n: usize) {
+        self.ops.reserve(n);
     }
 
     /// Kernel op records for one app, in completion order.
@@ -121,7 +158,7 @@ mod tests {
         OpRecord {
             op: OpUid(start),
             app: AppId(app),
-            kernel_name: Some("k".into()),
+            sym: Some(SymId(0)),
             is_kernel: true,
             is_copy: false,
             enqueued_at: start.saturating_sub(10),
@@ -163,5 +200,20 @@ mod tests {
         t.ops.push(rec(1, 0, 20));
         t.ops.push(rec(0, 30, 70));
         assert_eq!(t.kernel_exec_times(AppId(0)), vec![10, 40]);
+    }
+
+    #[test]
+    fn intern_dedupes_and_resolves() {
+        let mut t = TraceCollector::new(false);
+        let a = t.intern("conv0");
+        let b = t.intern("dense");
+        let a2 = t.intern("conv0");
+        assert_eq!(a, a2);
+        assert_ne!(a, b);
+        assert_eq!(t.num_syms(), 2);
+        assert_eq!(t.sym_name(Some(a)), "conv0");
+        assert_eq!(t.sym_name(Some(b)), "dense");
+        assert_eq!(t.sym_name(None), "?");
+        assert_eq!(t.sym_name(Some(SymId(99))), "?");
     }
 }

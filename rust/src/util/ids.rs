@@ -34,6 +34,13 @@ pub struct OpUid(pub u64);
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct BlockUid(pub u64);
 
+/// Interned kernel-name symbol. Resolved once when a `Program` is
+/// compiled for a run (`Program::compile`); the hot path then carries
+/// this dense id instead of cloning name strings per operation. Resolve
+/// back to the name through `TraceCollector::sym_name`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SymId(pub u32);
+
 impl fmt::Display for AppId {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "app{}", self.0)
@@ -52,6 +59,11 @@ impl fmt::Display for StreamId {
 impl fmt::Display for OpUid {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "op{}", self.0)
+    }
+}
+impl fmt::Display for SymId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "sym{}", self.0)
     }
 }
 

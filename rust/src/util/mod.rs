@@ -5,6 +5,6 @@ pub mod rng;
 pub mod json;
 pub mod time;
 
-pub use ids::{AppId, BlockUid, CtxId, OpUid, SmId, StreamId};
+pub use ids::{AppId, BlockUid, CtxId, OpUid, SmId, StreamId, SymId};
 pub use rng::DetRng;
 pub use time::{cycles_to_ns, ns_to_cycles, Nanos, GPU_HZ};

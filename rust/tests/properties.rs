@@ -206,7 +206,7 @@ fn prop_same_work_under_all_strategies() {
                 .ops
                 .iter()
                 .filter(|r| r.is_kernel)
-                .map(|r| format!("{}/{}", r.app, r.kernel_name.as_deref().unwrap_or("?")))
+                .map(|r| format!("{}/{}", r.app, sim.trace.sym_name(r.sym)))
                 .collect();
             names.sort();
             match &reference {
