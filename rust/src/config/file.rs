@@ -63,6 +63,13 @@ fn set_key(cfg: &mut SimConfig, key: &str, v: &str) -> Result<(), String> {
         "seed" => cfg.seed = parse(key, v)?,
         "horizon_ns" => cfg.horizon_ns = parse(key, v)?,
         "strategy" => cfg.strategy = v.parse()?,
+        "num_gpus" => {
+            let g: usize = parse(key, v)?;
+            if g == 0 {
+                return Err("num_gpus must be >= 1".to_string());
+            }
+            cfg.num_gpus = g;
+        }
         // ----------------------------------------------------- timing --
         "timing.launch_overhead_ns" => t.launch_overhead_ns = parse(key, v)?,
         "timing.memcpy_call_extra_ns" => t.memcpy_call_extra_ns = parse(key, v)?,
@@ -111,6 +118,7 @@ pub const KEYS: &[&str] = &[
     "seed",
     "horizon_ns",
     "strategy",
+    "num_gpus",
     "timing.launch_overhead_ns",
     "timing.memcpy_call_extra_ns",
     "timing.sync_wakeup_ns",
@@ -197,6 +205,16 @@ mod tests {
             let v = if *key == "strategy" { "synced" } else { "1" };
             set_key(&mut cfg, key, v).unwrap_or_else(|e| panic!("{key}: {e}"));
         }
+    }
+
+    #[test]
+    fn zero_num_gpus_rejected_at_parse_time() {
+        // Must surface as a config error, not a downstream Sim::new panic.
+        let mut cfg = SimConfig::default();
+        let err = apply_overrides(&mut cfg, "num_gpus = 0").unwrap_err();
+        assert!(err.msg.contains(">= 1"), "{err}");
+        apply_overrides(&mut cfg, "num_gpus = 3").unwrap();
+        assert_eq!(cfg.num_gpus, 3);
     }
 
     #[test]

@@ -23,6 +23,12 @@ pub struct SimConfig {
     pub seed: u64,
     /// Virtual-time horizon; the run stops at this time even if apps loop.
     pub horizon_ns: u64,
+    /// Number of independent GPU shards in the simulated fleet. Each
+    /// shard has its own SMs, L2, copy engine, context scheduler, and
+    /// `GPU_LOCK`; applications are placed round-robin (ctx `i` on shard
+    /// `i % num_gpus`). `1` (the default) is exactly the paper's
+    /// single-Volta testbed.
+    pub num_gpus: usize,
 }
 
 impl Default for SimConfig {
@@ -33,6 +39,7 @@ impl Default for SimConfig {
             strategy: StrategyKind::None,
             seed: 0,
             horizon_ns: 10_000_000_000, // 10 s of virtual time
+            num_gpus: 1,
         }
     }
 }
@@ -52,6 +59,11 @@ impl SimConfig {
         self.horizon_ns = h;
         self
     }
+
+    pub fn with_num_gpus(mut self, g: usize) -> Self {
+        self.num_gpus = g;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -64,6 +76,7 @@ mod tests {
         assert_eq!(cfg.strategy, StrategyKind::None);
         assert_eq!(cfg.horizon_ns, 10_000_000_000);
         assert_eq!(cfg.platform.num_sms, 8);
+        assert_eq!(cfg.num_gpus, 1, "default fleet is the paper's single GPU");
     }
 
     #[test]
@@ -71,9 +84,11 @@ mod tests {
         let cfg = SimConfig::default()
             .with_strategy(StrategyKind::Worker)
             .with_seed(9)
-            .with_horizon_ns(123);
+            .with_horizon_ns(123)
+            .with_num_gpus(4);
         assert_eq!(cfg.strategy, StrategyKind::Worker);
         assert_eq!(cfg.seed, 9);
         assert_eq!(cfg.horizon_ns, 123);
+        assert_eq!(cfg.num_gpus, 4);
     }
 }

@@ -1,0 +1,637 @@
+//! Sharded multi-GPU serving fleet.
+//!
+//! The paper's controller serialises GPU operations onto a *single*
+//! embedded Volta. This module scales that guarantee horizontally: a
+//! fleet of `N` shards, each owning its **own**
+//! [`GpuGate`](crate::control::gate::GpuGate) +
+//! [`AccessPolicy`](crate::control::policy::AccessPolicy) instance, so
+//! per-GPU temporal isolation holds unchanged on every shard while
+//! aggregate throughput scales with the shard count.
+//!
+//! Three layers:
+//!
+//! * [`Placement`] — the routing policy: round-robin, least-loaded (by
+//!   shard queue depth), or payload-affinity (a payload's warm state —
+//!   compiled executables, caches — stays on one shard).
+//! * [`ShardRouter`] — the placement engine. Thread-safe and allocation
+//!   -light; `route` picks a shard and bumps its depth, `complete`
+//!   releases it. Routing is *advisory* (a racing `route` may observe a
+//!   slightly stale depth), which is exactly how production load
+//!   balancers behave; every correctness property (per-shard isolation,
+//!   FIFO admission) is enforced by the shards' own gates, never by the
+//!   router.
+//! * [`serve_fleet`] — runs a [`ServeSpec`]'s clients across the fleet:
+//!   clients are routed once at admission (a client keeps its shard for
+//!   the whole run, like a sticky connection), shards then execute
+//!   concurrently via [`parallel_map`](crate::harness::parallel_map)
+//!   (they model independent devices), and each shard internally runs
+//!   the ordinary [`serve`] loop with its own FIFO gate. Reports are
+//!   merged into a [`FleetReport`]: per-shard breakdowns plus fleet
+//!   -level latency quantiles and gate histograms (via
+//!   [`Histogram::merge`](crate::metrics::stats::Histogram::merge)).
+//!
+//! The simulator models the same topology: `SimConfig::num_gpus` gives
+//! [`Sim`](crate::gpu::Sim) one lock/SM-bank/L2/copy-engine per shard.
+//! DESIGN.md §8 documents the router contract and the isolation
+//! invariant.
+//!
+//! # Example
+//!
+//! ```
+//! use cook::config::StrategyKind;
+//! use cook::control::fleet::{serve_fleet, FleetSpec, Placement, ShardRouter};
+//! use cook::control::serving::{ServeSpec, SyntheticBackend};
+//!
+//! // Routing alone: round-robin spreads clients evenly.
+//! let router = ShardRouter::new(4, Placement::RoundRobin);
+//! for _ in 0..8 {
+//!     router.route(0);
+//! }
+//! assert!((0..4).all(|s| router.depth(s) == 2));
+//!
+//! // End-to-end: 4 clients over 2 shards, each shard with its own gate.
+//! let base = ServeSpec::new(StrategyKind::Worker, "dna")
+//!     .with_clients(4)
+//!     .with_requests(2);
+//! let spec = FleetSpec::new(base, 2, Placement::RoundRobin);
+//! let report = serve_fleet(&spec, &SyntheticBackend::new(20)).unwrap();
+//! assert_eq!(report.total(), 8);
+//! assert_eq!(report.shards.len(), 2);
+//! ```
+
+use crate::config::StrategyKind;
+use crate::control::gate::GateStats;
+use crate::control::serving::{nearest_rank, serve, ServeBackend, ServeReport, ServeSpec};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::fmt;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+// ---------------------------------------------------------------------
+// placement
+// ---------------------------------------------------------------------
+
+/// How the router places a client on a shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Placement {
+    /// Strict rotation: client `k` lands on shard `k % N`. Fair by
+    /// construction, blind to load and payload.
+    RoundRobin,
+    /// Pick the shard with the smallest current queue depth (ties break
+    /// to the lowest shard id, keeping placement deterministic).
+    LeastLoaded,
+    /// Sticky payload affinity: the first client of a payload is placed
+    /// least-loaded, every later client of the same payload follows it —
+    /// so a payload's warm state (compiled executables, L2 residency)
+    /// concentrates on one shard.
+    Affinity,
+}
+
+impl Placement {
+    pub const ALL: [Placement; 3] =
+        [Self::RoundRobin, Self::LeastLoaded, Self::Affinity];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::RoundRobin => "rr",
+            Self::LeastLoaded => "least-loaded",
+            Self::Affinity => "affinity",
+        }
+    }
+}
+
+impl fmt::Display for Placement {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for Placement {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "rr" | "round-robin" => Ok(Self::RoundRobin),
+            "least-loaded" | "ll" => Ok(Self::LeastLoaded),
+            "affinity" | "payload-affinity" => Ok(Self::Affinity),
+            other => Err(format!(
+                "unknown placement '{other}' (expected rr|least-loaded|affinity)"
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// router
+// ---------------------------------------------------------------------
+
+/// Routes work onto fleet shards per the configured [`Placement`].
+///
+/// Depth accounting: [`ShardRouter::route`] increments the chosen
+/// shard's depth and [`ShardRouter::complete`] decrements it, so
+/// `LeastLoaded` reacts to whatever granularity the caller routes at —
+/// per client (sticky sessions, what [`serve_fleet`] does) or per
+/// request. The scan-then-increment is not one atomic step: two racing
+/// routes may pick the same shard. That is deliberate (see module docs)
+/// — the router balances, the per-shard gate *enforces*.
+#[derive(Debug)]
+pub struct ShardRouter {
+    placement: Placement,
+    rr_next: AtomicUsize,
+    depths: Vec<AtomicUsize>,
+    /// Payload slot -> shard, first-come sticky (affinity placement).
+    affinity: Mutex<HashMap<usize, usize>>,
+}
+
+impl ShardRouter {
+    pub fn new(shards: usize, placement: Placement) -> Self {
+        assert!(shards >= 1, "a fleet needs at least one shard");
+        Self {
+            placement,
+            rr_next: AtomicUsize::new(0),
+            depths: (0..shards).map(|_| AtomicUsize::new(0)).collect(),
+            affinity: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.depths.len()
+    }
+
+    pub fn placement(&self) -> Placement {
+        self.placement
+    }
+
+    /// Current queue depth of `shard` (routed minus completed).
+    pub fn depth(&self, shard: usize) -> usize {
+        self.depths[shard].load(Ordering::Relaxed)
+    }
+
+    /// Shallowest shard; ties break to the lowest id.
+    fn least_loaded(&self) -> usize {
+        let mut best = 0;
+        let mut best_depth = usize::MAX;
+        for (i, d) in self.depths.iter().enumerate() {
+            let depth = d.load(Ordering::Relaxed);
+            if depth < best_depth {
+                best = i;
+                best_depth = depth;
+            }
+        }
+        best
+    }
+
+    /// Place one unit of work for `payload_slot` (an index identifying
+    /// the payload, e.g. its slot in `ServeSpec::payloads`); returns the
+    /// chosen shard with its depth already incremented. Pair with
+    /// [`ShardRouter::complete`] when the work leaves the shard.
+    pub fn route(&self, payload_slot: usize) -> usize {
+        let shard = match self.placement {
+            Placement::RoundRobin => {
+                self.rr_next.fetch_add(1, Ordering::Relaxed) % self.num_shards()
+            }
+            Placement::LeastLoaded => self.least_loaded(),
+            Placement::Affinity => {
+                let mut map = self.affinity.lock().unwrap();
+                match map.get(&payload_slot) {
+                    Some(&s) => s,
+                    None => {
+                        let s = self.least_loaded();
+                        map.insert(payload_slot, s);
+                        s
+                    }
+                }
+            }
+        };
+        self.depths[shard].fetch_add(1, Ordering::Relaxed);
+        shard
+    }
+
+    /// Work routed to `shard` finished: release its depth unit.
+    pub fn complete(&self, shard: usize) {
+        let _ = self.depths[shard].fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |d| d.checked_sub(1),
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// fleet spec + report
+// ---------------------------------------------------------------------
+
+/// Configuration of one fleet serving run: a base [`ServeSpec`] (whose
+/// clients are distributed over the fleet) plus the shard count and
+/// placement policy.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    pub base: ServeSpec,
+    pub shards: usize,
+    pub placement: Placement,
+}
+
+impl FleetSpec {
+    pub fn new(base: ServeSpec, shards: usize, placement: Placement) -> Self {
+        Self { base, shards, placement }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.shards == 0 {
+            return Err(anyhow!("a fleet needs at least one shard"));
+        }
+        Ok(())
+    }
+}
+
+/// One shard's slice of a fleet run.
+#[derive(Debug)]
+pub struct ShardReport {
+    pub shard: usize,
+    /// Clients routed to this shard (0 = the shard idled all run).
+    pub clients: usize,
+    /// The shard's full serving report; `None` when no client was routed
+    /// here.
+    pub report: Option<ServeReport>,
+}
+
+/// Result of a fleet serving run: per-shard breakdowns plus merged
+/// fleet-level latency and gate statistics.
+#[derive(Debug)]
+pub struct FleetReport {
+    pub strategy: StrategyKind,
+    pub placement: Placement,
+    pub clients: usize,
+    pub requests_per_client: usize,
+    pub batch: usize,
+    /// Fleet wall-clock (shards run concurrently; this is the makespan).
+    pub wall_s: f64,
+    /// Sorted per-request latencies merged across every shard, ms.
+    pub latencies_ms: Vec<f64>,
+    /// One entry per shard, in shard-id order.
+    pub shards: Vec<ShardReport>,
+    /// Gate wait/hold statistics merged across shards (None for ungated
+    /// strategies).
+    pub gate: Option<GateStats>,
+}
+
+impl FleetReport {
+    pub fn total(&self) -> usize {
+        self.clients * self.requests_per_client
+    }
+
+    /// Aggregate fleet throughput: every request served, over the
+    /// fleet's wall-clock makespan.
+    pub fn ips(&self) -> f64 {
+        self.total() as f64 / self.wall_s.max(1e-9)
+    }
+
+    /// Nearest-rank quantile of the merged latencies; 0.0 when empty.
+    pub fn latency_p(&self, q: f64) -> f64 {
+        nearest_rank(&self.latencies_ms, q)
+    }
+
+    /// Shards that actually served clients.
+    pub fn active_shards(&self) -> usize {
+        self.shards.iter().filter(|s| s.clients > 0).count()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "fleet: {} shards ({}), strategy {}: {} clients x {} requests \
+             (batch {}): {:.1} IPS aggregate; latency ms p50={:.2} p95={:.2} \
+             p99={:.2} max={:.2}",
+            self.shards.len(),
+            self.placement,
+            self.strategy,
+            self.clients,
+            self.requests_per_client,
+            self.batch,
+            self.ips(),
+            self.latency_p(0.50),
+            self.latency_p(0.95),
+            self.latency_p(0.99),
+            self.latencies_ms.last().copied().unwrap_or(0.0),
+        );
+        for s in &self.shards {
+            match &s.report {
+                Some(r) => out.push_str(&format!(
+                    "\n  shard {}: {} clients, {:.1} IPS; p50={:.2} p95={:.2} max={:.2} ms",
+                    s.shard,
+                    s.clients,
+                    r.ips(),
+                    r.latency_p(0.50),
+                    r.latency_p(0.95),
+                    r.latencies_ms.last().copied().unwrap_or(0.0),
+                )),
+                None => out.push_str(&format!("\n  shard {}: idle (no clients routed)", s.shard)),
+            }
+        }
+        if let Some(g) = &self.gate {
+            for line in g.render().lines() {
+                out.push_str("\n  fleet ");
+                out.push_str(line);
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// the fleet serve loop
+// ---------------------------------------------------------------------
+
+/// Serve `spec.base`'s clients across a fleet of `spec.shards` shards.
+///
+/// Each client is routed once (it keeps its shard — and hence its warm
+/// executor and its position in that shard's FIFO — for the whole run),
+/// then every non-idle shard runs the ordinary [`serve`] loop
+/// concurrently with its **own** [`GpuGate`](crate::control::gate::GpuGate)
+/// and policy instance. The
+/// per-GPU isolation guarantee is therefore exactly the single-GPU one,
+/// per shard; nothing is shared across shards but the backend.
+pub fn serve_fleet(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result<FleetReport> {
+    spec.validate()?;
+    let base = &spec.base;
+    base.validate()?;
+    let router = ShardRouter::new(spec.shards, spec.placement);
+    // Admission-time routing: client c serves payloads[c % len] (the
+    // ServeSpec contract), and its payload slot is what affinity keys on.
+    let mut assigned: Vec<Vec<usize>> = vec![Vec::new(); spec.shards];
+    for c in 0..base.clients {
+        let slot = c % base.payloads.len();
+        let shard = router.route(slot);
+        assigned[shard].push(slot);
+    }
+    // Per-shard sub-specs. A sub-spec maps its client `i` to
+    // `payloads[i % len]`, so the payload list must reproduce each routed
+    // client's payload positionally; compressing it to its minimal period
+    // keeps that mapping while collapsing e.g. [dna, dna] -> [dna], so a
+    // single-payload shard reports one per-payload row, not one per
+    // client.
+    let subs: Vec<Option<ServeSpec>> = assigned
+        .iter()
+        .map(|slots| {
+            if slots.is_empty() {
+                return None;
+            }
+            let names: Vec<&str> =
+                slots.iter().map(|&s| base.payloads[s].as_str()).collect();
+            let period = (1..=names.len())
+                .find(|&p| (0..names.len()).all(|i| names[i] == names[i % p]))
+                .expect("p = len always reproduces the sequence");
+            let mut sub = base.clone();
+            sub.payloads = names[..period].iter().map(|s| s.to_string()).collect();
+            sub.clients = slots.len();
+            Some(sub)
+        })
+        .collect();
+
+    let t0 = Instant::now();
+    // Shards model independent GPUs: fan them out. Within a shard the
+    // ordinary serve loop spawns that shard's client/stream threads.
+    let results: Vec<Option<Result<ServeReport>>> = crate::harness::parallel::parallel_map(
+        subs,
+        |sub| sub.map(|s| serve(&s, backend)),
+    );
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut shards = Vec::with_capacity(spec.shards);
+    let mut latencies_ms = Vec::new();
+    let mut gate: Option<GateStats> = None;
+    for (shard, result) in results.into_iter().enumerate() {
+        let report = match result {
+            None => None,
+            Some(r) => {
+                let r = r.map_err(|e| anyhow!("shard {shard}: {e}"))?;
+                latencies_ms.extend_from_slice(&r.latencies_ms);
+                if let Some(g) = &r.gate {
+                    match &mut gate {
+                        Some(merged) => {
+                            merged.wait.merge(&g.wait);
+                            merged.hold.merge(&g.hold);
+                        }
+                        None => gate = Some(g.clone()),
+                    }
+                }
+                Some(r)
+            }
+        };
+        shards.push(ShardReport { shard, clients: assigned[shard].len(), report });
+    }
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(FleetReport {
+        strategy: base.strategy,
+        placement: spec.placement,
+        clients: base.clients,
+        requests_per_client: base.requests,
+        batch: base.batch,
+        wall_s,
+        latencies_ms,
+        shards,
+        gate,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::policy::AccessPolicy;
+    use crate::control::serving::SyntheticBackend;
+
+    fn backend() -> SyntheticBackend {
+        SyntheticBackend::new(40)
+    }
+
+    // ----------------------------------------------------- placement --
+
+    #[test]
+    fn placement_parse_roundtrip() {
+        for p in Placement::ALL {
+            assert_eq!(p.name().parse::<Placement>().unwrap(), p);
+        }
+        assert_eq!("round-robin".parse::<Placement>().unwrap(), Placement::RoundRobin);
+        assert_eq!("ll".parse::<Placement>().unwrap(), Placement::LeastLoaded);
+        assert_eq!("payload-affinity".parse::<Placement>().unwrap(), Placement::Affinity);
+        assert!("random".parse::<Placement>().is_err());
+    }
+
+    #[test]
+    fn round_robin_is_fair_and_ordered() {
+        let r = ShardRouter::new(4, Placement::RoundRobin);
+        let picks: Vec<usize> = (0..8).map(|_| r.route(0)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+        for s in 0..4 {
+            assert_eq!(r.depth(s), 2, "shard {s} not evenly loaded");
+        }
+    }
+
+    #[test]
+    fn least_loaded_picks_the_shallower_queue() {
+        let r = ShardRouter::new(3, Placement::LeastLoaded);
+        assert_eq!(r.route(0), 0); // all empty: lowest id
+        assert_eq!(r.route(0), 1); // depth [1,0,0]
+        assert_eq!(r.route(0), 2); // depth [1,1,0]
+        assert_eq!(r.route(0), 0); // tie again: lowest id
+        // Drain shard 1: it becomes the unique shallowest.
+        r.complete(1);
+        assert_eq!(r.route(0), 1);
+    }
+
+    #[test]
+    fn affinity_is_sticky_per_payload() {
+        let r = ShardRouter::new(3, Placement::Affinity);
+        let first = r.route(7);
+        assert_eq!(first, 0, "first payload lands least-loaded");
+        // A different payload goes elsewhere (shard 0 now deeper)...
+        let other = r.route(8);
+        assert_eq!(other, 1);
+        // ...but payload 7 keeps returning to its warm shard even though
+        // it is now the deepest.
+        for _ in 0..5 {
+            assert_eq!(r.route(7), first, "affinity must stick");
+        }
+        assert_eq!(r.depth(first), 6);
+    }
+
+    #[test]
+    fn completes_saturate_at_zero() {
+        let r = ShardRouter::new(2, Placement::LeastLoaded);
+        r.complete(0); // nothing routed: must not underflow
+        assert_eq!(r.depth(0), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one shard")]
+    fn zero_shard_router_rejected() {
+        let _ = ShardRouter::new(0, Placement::RoundRobin);
+    }
+
+    // --------------------------------------------------------- fleet --
+
+    #[test]
+    fn fleet_serves_all_requests_across_shards() {
+        let base = ServeSpec::new(StrategyKind::Worker, "dna")
+            .with_clients(4)
+            .with_requests(3);
+        let spec = FleetSpec::new(base, 2, Placement::RoundRobin);
+        let r = serve_fleet(&spec, &backend()).unwrap();
+        assert_eq!(r.total(), 12);
+        assert_eq!(r.latencies_ms.len(), 12);
+        assert_eq!(r.shards.len(), 2);
+        for s in &r.shards {
+            assert_eq!(s.clients, 2, "round-robin must split 4 clients 2/2");
+            let rep = s.report.as_ref().unwrap();
+            assert_eq!(rep.total(), 6);
+        }
+        assert!(r.ips() > 0.0);
+        assert!(r.latency_p(0.99) >= r.latency_p(0.5));
+    }
+
+    #[test]
+    fn fleet_gate_is_per_shard_and_merged() {
+        let base = ServeSpec::new(StrategyKind::Synced, "dna")
+            .with_clients(4)
+            .with_requests(2);
+        let spec = FleetSpec::new(base, 2, Placement::RoundRobin);
+        let r = serve_fleet(&spec, &backend()).unwrap();
+        // Each shard gates independently: 2 warm-ups + 4 request grants.
+        for s in &r.shards {
+            let g = s.report.as_ref().unwrap().gate.as_ref().unwrap();
+            assert_eq!(g.grants(), 6, "shard {}", s.shard);
+        }
+        // The fleet view merges both shards' histograms.
+        assert_eq!(r.gate.as_ref().unwrap().grants(), 12);
+    }
+
+    #[test]
+    fn fleet_ungated_strategy_reports_no_gate() {
+        let base = ServeSpec::new(StrategyKind::None, "dna")
+            .with_clients(2)
+            .with_requests(2);
+        let r = serve_fleet(&FleetSpec::new(base, 2, Placement::RoundRobin), &backend())
+            .unwrap();
+        assert!(r.gate.is_none());
+        assert!(!AccessPolicy::new(StrategyKind::None).gated());
+    }
+
+    #[test]
+    fn one_shard_fleet_degenerates_to_plain_serving() {
+        let base = ServeSpec::new(StrategyKind::Worker, "dna")
+            .with_clients(2)
+            .with_requests(4);
+        let r = serve_fleet(&FleetSpec::new(base, 1, Placement::LeastLoaded), &backend())
+            .unwrap();
+        assert_eq!(r.shards.len(), 1);
+        assert_eq!(r.active_shards(), 1);
+        let inner = r.shards[0].report.as_ref().unwrap();
+        assert_eq!(inner.total(), r.total());
+        // 2 warm-ups + 2 clients x 4 requests, all through ONE gate.
+        assert_eq!(r.gate.unwrap().grants(), 10);
+    }
+
+    #[test]
+    fn idle_shards_are_reported_idle() {
+        // 1 client over 4 shards: three shards never see work.
+        let base = ServeSpec::new(StrategyKind::Worker, "dna")
+            .with_clients(1)
+            .with_requests(2);
+        let r = serve_fleet(&FleetSpec::new(base, 4, Placement::RoundRobin), &backend())
+            .unwrap();
+        assert_eq!(r.active_shards(), 1);
+        assert_eq!(r.shards.iter().filter(|s| s.report.is_none()).count(), 3);
+        assert_eq!(r.total(), 2);
+        assert!(r.render().contains("idle"));
+    }
+
+    #[test]
+    fn affinity_keeps_each_payload_on_one_shard() {
+        // 4 clients, 2 payloads, affinity: clients of payload 'dna' all
+        // land together, clients of 'mmult' all land together.
+        let base = ServeSpec::new(StrategyKind::Worker, "dna")
+            .with_payloads(vec!["dna".into(), "mmult".into()])
+            .with_clients(4)
+            .with_requests(2);
+        let r = serve_fleet(&FleetSpec::new(base, 2, Placement::Affinity), &backend())
+            .unwrap();
+        for s in &r.shards {
+            let rep = s.report.as_ref().unwrap();
+            assert_eq!(
+                rep.per_payload.len(),
+                1,
+                "shard {} serves a single payload under affinity",
+                s.shard
+            );
+        }
+        let names: Vec<&str> = r
+            .shards
+            .iter()
+            .map(|s| s.report.as_ref().unwrap().per_payload[0].payload.as_str())
+            .collect();
+        assert!(names.contains(&"dna") && names.contains(&"mmult"));
+    }
+
+    #[test]
+    fn invalid_fleet_rejected() {
+        let base = ServeSpec::new(StrategyKind::None, "dna");
+        let spec = FleetSpec::new(base, 0, Placement::RoundRobin);
+        assert!(serve_fleet(&spec, &backend()).is_err());
+    }
+
+    #[test]
+    fn render_mentions_fleet_shape() {
+        let base = ServeSpec::new(StrategyKind::Synced, "dna")
+            .with_clients(2)
+            .with_requests(2);
+        let r = serve_fleet(&FleetSpec::new(base, 2, Placement::LeastLoaded), &backend())
+            .unwrap();
+        let text = r.render();
+        assert!(text.contains("2 shards"), "{text}");
+        assert!(text.contains("least-loaded"), "{text}");
+        assert!(text.contains("shard 0"), "{text}");
+        assert!(text.contains("gate wait"), "{text}");
+    }
+}

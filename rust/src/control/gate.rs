@@ -84,6 +84,25 @@ impl Drop for GateGrant<'_> {
 }
 
 /// FIFO-fair gate serialising GPU access across serving threads.
+///
+/// One gate = one GPU's admission queue: the live counterpart of the
+/// paper's `GPU_LOCK`. A serving fleet holds one per shard (see
+/// [`crate::control::fleet`]) so isolation is enforced per device.
+///
+/// # Example
+///
+/// ```
+/// use cook::control::gate::GpuGate;
+///
+/// let gate = GpuGate::new();
+/// // Scoped critical section (the synced strategy's shape)...
+/// let answer = gate.with(|| 42);
+/// assert_eq!(answer, 42);
+/// // ...or a grant carried across scopes (the callback strategy).
+/// let grant = gate.acquire();
+/// gate.release(grant);
+/// assert_eq!(gate.stats().grants(), 2);
+/// ```
 #[derive(Debug)]
 pub struct GpuGate {
     state: Mutex<GateState>,

@@ -1,5 +1,5 @@
-//! Access control: the policy layer, the global GPU lock/gate, and the
-//! per-strategy runtime state.
+//! Access control: the policy layer, the global GPU lock/gate, the
+//! per-strategy runtime state, and the sharded serving fleet.
 //!
 //! Strategy *dispatch* lives in exactly one place — [`policy`] — shared
 //! by the simulator (`gpu::engine` interprets the policy's plans with
@@ -7,14 +7,19 @@
 //! interprets the same plans with real threads and the FIFO [`gate`]).
 //! This module also holds the shared mechanisms: the simulated semaphore
 //! ([`lock`]), the live gate ([`gate`]), and worker-thread state
-//! ([`worker`]).
+//! ([`worker`]) — and the horizontal scaling layer ([`fleet`]): a
+//! [`ShardRouter`] placing clients over N shards, each shard owning its
+//! own gate + policy instance so the paper's per-GPU isolation guarantee
+//! survives fleet-scale serving.
 
+pub mod fleet;
 pub mod gate;
 pub mod lock;
 pub mod policy;
 pub mod serving;
 pub mod worker;
 
+pub use fleet::{serve_fleet, FleetReport, FleetSpec, Placement, ShardReport, ShardRouter};
 pub use gate::{GateGrant, GateStats, GpuGate};
 pub use lock::{GpuLock, LockClient};
 pub use policy::{AccessPolicy, Admission, Arbitration, OrderedOpRule};

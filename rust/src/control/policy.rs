@@ -64,6 +64,21 @@ pub enum Arbitration {
 
 /// The per-strategy access-control policy: a pure, copyable description
 /// of behaviour shared by the simulator and the live serving subsystem.
+///
+/// # Example
+///
+/// ```
+/// use cook::config::StrategyKind;
+/// use cook::control::policy::{AccessPolicy, Admission};
+///
+/// let synced = AccessPolicy::new(StrategyKind::Synced);
+/// assert_eq!(synced.admission(), Admission::AcquireSyncRelease);
+/// assert!(synced.gated()); // serialises behind the GPU lock
+///
+/// let ptb = AccessPolicy::new(StrategyKind::Ptb);
+/// assert!(!ptb.gated()); // spatial partitioning, no lock traffic
+/// assert_eq!(ptb.sm_share(4), 0.25); // each of 4 apps owns 1/4 of the SMs
+/// ```
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct AccessPolicy {
     kind: StrategyKind,

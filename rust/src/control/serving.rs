@@ -195,6 +195,21 @@ impl ServeBackend for SyntheticBackend {
 // ---------------------------------------------------------------------
 
 /// Configuration of one serving run.
+///
+/// # Example
+///
+/// ```
+/// use cook::config::StrategyKind;
+/// use cook::control::serving::{serve, ServeSpec, SyntheticBackend};
+///
+/// let spec = ServeSpec::new(StrategyKind::Worker, "dna")
+///     .with_clients(2)
+///     .with_requests(3)
+///     .with_batch(1);
+/// let report = serve(&spec, &SyntheticBackend::new(20)).unwrap();
+/// assert_eq!(report.total(), 6);
+/// assert!(report.gate.is_some()); // worker serialises behind the gate
+/// ```
 #[derive(Debug, Clone)]
 pub struct ServeSpec {
     pub strategy: StrategyKind,
@@ -239,7 +254,7 @@ impl ServeSpec {
         self
     }
 
-    fn validate(&self) -> Result<()> {
+    pub(crate) fn validate(&self) -> Result<()> {
         if self.clients == 0 || self.requests == 0 {
             return Err(anyhow!("serve requires clients > 0 and requests > 0"));
         }
@@ -267,7 +282,12 @@ impl PayloadReport {
     }
 }
 
-/// Result of a serving run.
+/// Result of a serving run: pooled + per-payload latency distributions,
+/// throughput, and (for gated strategies) the gate's wait/hold
+/// histograms. Aggregate across shards with
+/// [`crate::control::fleet::FleetReport`]. Quantiles are nearest-rank
+/// (see [`ServeReport::latency_p`]); [`ServeReport::render`] produces
+/// the human table printed by `cook serve`.
 #[derive(Debug)]
 pub struct ServeReport {
     pub strategy: StrategyKind,
@@ -334,8 +354,10 @@ impl ServeReport {
     }
 }
 
-/// Nearest-rank quantile of a sorted slice; 0.0 when empty.
-fn nearest_rank(sorted: &[f64], q: f64) -> f64 {
+/// Nearest-rank quantile of a sorted slice; 0.0 when empty. Shared with
+/// the fleet layer, which reports the same quantiles over merged
+/// latencies.
+pub(crate) fn nearest_rank(sorted: &[f64], q: f64) -> f64 {
     let n = sorted.len();
     if n == 0 {
         return 0.0;

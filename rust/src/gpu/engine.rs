@@ -131,13 +131,15 @@ impl BatchSlab {
     }
 }
 
-/// Device-side dynamic state. Everything here is dense (`Vec`-indexed
-/// slabs, per-ctx vectors, per-op bitflags) — the per-event loop does no
-/// hashing and no steady-state allocation.
+/// Dynamic state of ONE simulated GPU (one fleet shard). Everything here
+/// is dense (`Vec`-indexed slabs, per-ctx vectors, per-op bitflags) — the
+/// per-event loop does no hashing and no steady-state allocation. A
+/// single-GPU run (`num_gpus == 1`, the paper's testbed) has exactly one
+/// of these; the fleet simulator holds one per shard, so each GPU has an
+/// independent context scheduler, copy engine, and switch/quantum state.
 #[derive(Debug, Default)]
 struct GpuExec {
     run_pool: Vec<KernelRun>,
-    batches: BatchSlab,
     frozen: Vec<FrozenBatch>,
     active_ctx: Option<CtxId>,
     /// Previous owner of the SMs (switch cost applies when it changes).
@@ -152,9 +154,6 @@ struct GpuExec {
     copy_current: Option<OpUid>,
     copy_gen: u64,
     copy_q: VecDeque<OpUid>,
-    /// Per-context timestamp of last device activity (stall exposure),
-    /// indexed by ctx id; `None` = never active.
-    last_activity: Vec<Option<Nanos>>,
 }
 
 /// Set of runnable contexts as a bitmask (the Xavier never hosts more
@@ -202,7 +201,35 @@ impl RunnableSet {
     }
 }
 
-/// The simulator.
+/// The simulator: a fleet of `cfg.num_gpus` independent GPU shards (one,
+/// by default — the paper's single embedded Volta) driven by one virtual
+/// clock.
+///
+/// One `Sim` = one run of one configuration (`bench-isol-strategy`,
+/// optionally sharded). Everything is deterministic given (config, seed);
+/// see the [`crate::gpu`] module docs and DESIGN.md §4.
+///
+/// # Example
+///
+/// Run a one-kernel program to completion and inspect its trace:
+///
+/// ```
+/// use cook::apps::program::{Program, RepeatMode};
+/// use cook::config::SimConfig;
+/// use cook::cudart::{Grid, KernelDesc};
+/// use cook::gpu::Sim;
+/// use cook::util::AppId;
+///
+/// let kernel = KernelDesc::compute("k", Grid::new(8, 128), 10_000);
+/// let prog = Program::new("demo", RepeatMode::Once)
+///     .launch(kernel)
+///     .sync()
+///     .mark_completion();
+/// let mut sim = Sim::new(SimConfig::default(), vec![prog]);
+/// sim.run();
+/// assert_eq!(sim.completions(AppId(0)).len(), 1);
+/// assert_eq!(sim.num_gpus(), 1);
+/// ```
 pub struct Sim {
     pub cfg: SimConfig,
     /// Per-strategy behaviour plans (the only strategy dispatch point).
@@ -217,16 +244,31 @@ pub struct Sim {
     pub ctxs: Vec<GpuContext>,
     pub apps: Vec<HostState>,
     pub workers: Vec<Option<WorkerState>>,
-    pub lock: GpuLock,
-    pub sms: Vec<SmState>,
-    gpu: GpuExec,
-    pub l2: L2State,
+    /// One `GPU_LOCK` semaphore per shard: the paper's serialisation
+    /// guarantee holds per GPU, never across GPUs.
+    pub locks: Vec<GpuLock>,
+    /// Per-shard SM banks (`sms[shard][sm]`).
+    sms: Vec<Vec<SmState>>,
+    /// Per-shard scheduler/copy-engine state.
+    gpus: Vec<GpuExec>,
+    /// Live batches of ALL shards in one slab: `BatchDone` events carry
+    /// (slot, uid) and a batch's shard is derived from its ctx, so the
+    /// event shape is identical at any fleet size.
+    batches: BatchSlab,
+    /// Per-shard L2 caches.
+    l2: Vec<L2State>,
+    /// Per-context timestamp of last device activity (stall exposure),
+    /// indexed by ctx id; `None` = never active.
+    last_activity: Vec<Option<Nanos>>,
+    /// Shard owning each context (`ctx i -> shard i % num_gpus`).
+    shard_of_ctx: Vec<usize>,
     pub trace: TraceCollector,
     rng_exec: DetRng,
     rng_stall: DetRng,
     next_block_uid: u64,
     horizon_reached: bool,
-    /// Per-app SM masks (PTB partitioning; all-true otherwise).
+    /// Per-app SM masks (PTB partitioning among same-shard peers;
+    /// all-true otherwise).
     sm_mask: Vec<Vec<bool>>,
 }
 
@@ -241,6 +283,10 @@ impl Sim {
              bitmask carries one bit per context",
             RunnableSet::MAX_CTXS
         );
+        assert!(cfg.num_gpus >= 1, "num_gpus must be >= 1");
+        let num_gpus = cfg.num_gpus;
+        // Round-robin placement of applications over the fleet's shards.
+        let shard_of_ctx: Vec<usize> = (0..n).map(|i| i % num_gpus).collect();
         let policy = AccessPolicy::new(cfg.strategy);
         let root = DetRng::new(cfg.seed);
         let mut ctxs = Vec::with_capacity(n);
@@ -277,19 +323,22 @@ impl Sim {
         let op_hint = op_hint.min(1 << 20);
         trace.reserve_ops(op_hint);
         let num_sms = cfg.platform.num_sms;
-        // Spatial policies (PTB) pin each application to its SM share.
+        // Spatial policies (PTB) pin each application to its SM share —
+        // partitioned among the apps that share its *shard*: every GPU of
+        // the fleet has the full SM bank, so partitions never span GPUs.
         let sm_mask = (0..n)
             .map(|i| {
+                let peers = shard_of_ctx.iter().filter(|&&s| s == shard_of_ctx[i]).count();
+                let rank = shard_of_ctx[..i].iter().filter(|&&s| s == shard_of_ctx[i]).count();
                 (0..num_sms)
-                    .map(|sm| policy.sm_allowed(i, n, sm, num_sms))
+                    .map(|sm| policy.sm_allowed(rank, peers, sm, num_sms))
                     .collect()
             })
             .collect();
-        let gpu = GpuExec { last_activity: vec![None; n], ..GpuExec::default() };
         Self {
             policy,
-            l2: L2State::new(cfg.platform.l2_bytes),
-            sms: vec![SmState::default(); num_sms],
+            l2: (0..num_gpus).map(|_| L2State::new(cfg.platform.l2_bytes)).collect(),
+            sms: vec![vec![SmState::default(); num_sms]; num_gpus],
             rng_exec: root.child(0x45584543), // "EXEC"
             rng_stall: root.child(0x5354414c), // "STAL"
             cfg,
@@ -301,13 +350,54 @@ impl Sim {
             ctxs,
             apps,
             workers,
-            lock: GpuLock::new(),
-            gpu,
+            locks: (0..num_gpus).map(|_| GpuLock::new()).collect(),
+            gpus: (0..num_gpus).map(|_| GpuExec::default()).collect(),
+            batches: BatchSlab::default(),
+            last_activity: vec![None; n],
+            shard_of_ctx,
             trace,
             next_block_uid: 0,
             horizon_reached: false,
             sm_mask,
         }
+    }
+
+    /// Number of GPU shards in this run's fleet.
+    pub fn num_gpus(&self) -> usize {
+        self.gpus.len()
+    }
+
+    /// The shard (GPU) application `app` is placed on.
+    pub fn shard_of(&self, app: AppId) -> usize {
+        self.shard_of_ctx[self.apps[app.0].ctx.0]
+    }
+
+    /// Applications placed on `shard`, in app-id order.
+    pub fn shard_apps(&self, shard: usize) -> Vec<AppId> {
+        (0..self.apps.len())
+            .filter(|&a| self.shard_of(AppId(a)) == shard)
+            .map(AppId)
+            .collect()
+    }
+
+    /// Cross-app kernel overlaps *within* each shard, indexed by shard.
+    /// The paper's isolation guarantee is per-GPU: a gated strategy must
+    /// drive every entry to 0, while kernels on different shards may (and
+    /// should) overlap freely.
+    pub fn within_shard_overlaps(&self) -> Vec<usize> {
+        (0..self.num_gpus())
+            .map(|s| self.trace.cross_app_kernel_overlaps_among(&self.shard_apps(s)))
+            .collect()
+    }
+
+    #[inline]
+    fn shard_of_app(&self, app: AppId) -> usize {
+        self.shard_of(app)
+    }
+
+    #[inline]
+    fn shard_of_op(&self, op: OpUid) -> usize {
+        self.shard_of_ctx[self.ops[op.0 as usize].ctx.0]
     }
 
     /// Run to completion: all apps done, or the horizon, whichever first.
@@ -359,13 +449,13 @@ impl Sim {
             Event::CallbackDone(op) => self.callback_done(op),
             Event::BatchDone { slot, uid } => self.batch_done(slot, uid),
             Event::CopyDone { op, gen } => self.copy_done(op, gen),
-            Event::QuantumExpire { gen } => self.quantum_expire(gen),
-            Event::SwitchDone { gen } => self.switch_done(gen),
+            Event::QuantumExpire { shard, gen } => self.quantum_expire(shard as usize, gen),
+            Event::SwitchDone { shard, gen } => self.switch_done(shard as usize, gen),
             Event::StallDone(op) => {
                 self.clear_flag(op, F_STALLED);
                 self.mark(D_DRIVER);
             }
-            Event::LockWake => self.lock_wake(),
+            Event::LockWake { shard } => self.lock_wake(shard as usize),
             Event::Horizon => unreachable!("handled in run()"),
         }
     }
@@ -441,11 +531,12 @@ impl Sim {
     // lock
     // ------------------------------------------------------------------
 
-    /// A sleeping waiter's wakeup completes: grant if the count survived
-    /// the barging window (`GpuLock::acquire` docs). One wake event is
-    /// scheduled per release; the handoff latency is the wake delay.
-    fn lock_wake(&mut self) {
-        let Some(client) = self.lock.grant_next(self.now) else { return };
+    /// A sleeping waiter's wakeup on one shard's lock completes: grant if
+    /// the count survived the barging window (`GpuLock::acquire` docs).
+    /// One wake event is scheduled per release; the handoff latency is
+    /// the wake delay.
+    fn lock_wake(&mut self, shard: usize) {
+        let Some(client) = self.locks[shard].grant_next(self.now) else { return };
         match client {
             LockClient::Host(app) => {
                 let a = &mut self.apps[app.0];
@@ -469,17 +560,19 @@ impl Sim {
         }
     }
 
-    /// `sem_post` + schedule the waiters' wakeup after the handoff delay.
-    /// Driver callback threads wake fast (busy-polling); application
-    /// host/worker threads pay the full cross-process futex latency.
-    fn lock_release(&mut self) {
-        self.lock.release(self.now);
-        if let Some(head) = self.lock.head_waiter() {
+    /// `sem_post` on one shard's lock + schedule the waiters' wakeup
+    /// after the handoff delay. Driver callback threads wake fast
+    /// (busy-polling); application host/worker threads pay the full
+    /// cross-process futex latency.
+    fn lock_release(&mut self, shard: usize) {
+        self.locks[shard].release(self.now);
+        if let Some(head) = self.locks[shard].head_waiter() {
             let delay = match head {
                 LockClient::Callback(_) => self.cfg.timing.cb_wake_ns,
                 _ => self.cfg.timing.lock_handoff_ns,
             };
-            self.events.push(self.now + delay, Event::LockWake);
+            self.events
+                .push(self.now + delay, Event::LockWake { shard: shard as u32 });
         }
     }
 
@@ -585,9 +678,11 @@ impl Sim {
                 self.apps[app.0].advance();
             }
             Admission::AcquireSyncRelease => {
-                // Alg. 4: acquire; insert; sync; release.
+                // Alg. 4: acquire; insert; sync; release (this app's
+                // shard lock — isolation is per-GPU).
+                let shard = self.shard_of_app(app);
                 if !self.apps[app.0].holds_lock {
-                    if self.lock.acquire(LockClient::Host(app), self.now) {
+                    if self.locks[shard].acquire(LockClient::Host(app), self.now) {
                         self.apps[app.0].holds_lock = true;
                     } else {
                         let now = self.now;
@@ -708,7 +803,8 @@ impl Sim {
         let Some(w) = &self.workers[app.0] else { return };
         match w.phase {
             WorkerPhase::Dequeuing(op) => {
-                if self.lock.acquire(LockClient::Worker(app), self.now) {
+                let shard = self.shard_of_app(app);
+                if self.locks[shard].acquire(LockClient::Worker(app), self.now) {
                     self.worker_lock_granted_inner(app, op);
                 } else {
                     self.workers[app.0].as_mut().unwrap().phase =
@@ -740,7 +836,7 @@ impl Sim {
         w.phase = WorkerPhase::Idle;
         // Idle again: the worker pump may dequeue the next deferred op.
         self.mark(D_WORKERS);
-        self.lock_release();
+        self.lock_release(self.shard_of_app(app));
         self.wake_worker_waiters(app);
     }
 
@@ -850,12 +946,13 @@ impl Sim {
                         }
                         self.ctxs[c].stream_mut(sid).begin_past(op);
                         self.ops[op.0 as usize].state = OpState::Running;
-                        self.gpu.last_activity[c] = Some(self.now);
+                        self.last_activity[c] = Some(self.now);
                         self.clear_flag(op, F_STALL_CHECKED); // done with dice
                         if self.ops[op.0 as usize].is_kernel() {
                             self.admit_kernel(op);
                         } else {
-                            self.gpu.copy_q.push_back(op);
+                            let shard = self.shard_of_ctx[c];
+                            self.gpus[shard].copy_q.push_back(op);
                             self.mark(D_GPU);
                         }
                         changed = true;
@@ -896,16 +993,21 @@ impl Sim {
 
     /// Shared-software-queue stall injection (DESIGN.md §5): dispatching
     /// while another context was recently active at the driver level may
-    /// collide in the shared queues. Returns true if the op got stalled.
+    /// collide in the shared queues. The queues are per-GPU, so only
+    /// contexts on the *same shard* expose each other. Returns true if
+    /// the op got stalled.
     fn maybe_stall(&mut self, op: OpUid) -> bool {
         if self.flag(op, F_STALL_CHECKED) {
             return false; // already diced
         }
         self.set_flag(op, F_STALL_CHECKED);
         let ctx = self.ops[op.0 as usize].ctx;
+        let shard = self.shard_of_ctx[ctx.0];
         let window = self.cfg.timing.stall_window_ns;
-        let exposed = self.gpu.last_activity.iter().copied().enumerate().any(|(c, t)| {
-            c != ctx.0 && matches!(t, Some(t) if self.now.saturating_sub(t) <= window)
+        let exposed = self.last_activity.iter().copied().enumerate().any(|(c, t)| {
+            c != ctx.0
+                && self.shard_of_ctx[c] == shard
+                && matches!(t, Some(t) if self.now.saturating_sub(t) <= window)
         });
         if !exposed || !self.rng_stall.chance(self.cfg.timing.stall_prob) {
             return false;
@@ -947,16 +1049,17 @@ impl Sim {
             OpKind::HostFunc { exec_ns, lock_action } => (*exec_ns, *lock_action),
             _ => unreachable!("callback_start on non-hostfunc"),
         };
+        let shard = self.shard_of_op(op);
         match action {
             LockAction::Acquire => {
-                if self.lock.acquire(LockClient::Callback(op), self.now) {
+                if self.locks[shard].acquire(LockClient::Callback(op), self.now) {
                     self.events
                         .push(self.now + self.cfg.timing.cb_exec_ns, Event::CallbackDone(op));
                 }
                 // else: blocked in the lock FIFO; lock_pump schedules done.
             }
             LockAction::Release => {
-                self.lock_release();
+                self.lock_release(shard);
                 self.events
                     .push(self.now + self.cfg.timing.cb_exec_ns, Event::CallbackDone(op));
             }
@@ -989,9 +1092,10 @@ impl Sim {
     // ------------------------------------------------------------------
 
     fn admit_kernel(&mut self, op: OpUid) {
+        let shard = self.shard_of_op(op);
         let o = &self.ops[op.0 as usize];
         let k = o.kernel().expect("admit_kernel on non-kernel");
-        self.gpu.run_pool.push(KernelRun {
+        self.gpus[shard].run_pool.push(KernelRun {
             op,
             ctx: o.ctx,
             app: o.app,
@@ -1006,26 +1110,42 @@ impl Sim {
         self.mark(D_GPU);
     }
 
-    /// Contexts that currently have device work (kernels or frozen
-    /// blocks). Bitmask-based: no allocation on the hot path.
-    fn runnable_ctxs(&self) -> RunnableSet {
+    /// Contexts of `shard` that currently have device work (kernels or
+    /// frozen blocks). Bitmask-based: no allocation on the hot path.
+    fn runnable_ctxs(&self, shard: usize) -> RunnableSet {
         let mut mask: u64 = 0;
-        for kr in &self.gpu.run_pool {
+        for kr in &self.gpus[shard].run_pool {
             mask |= 1u64 << kr.ctx.0;
         }
-        for fb in &self.gpu.frozen {
+        for fb in &self.gpus[shard].frozen {
             mask |= 1u64 << fb.ctx.0;
         }
         RunnableSet { mask }
     }
 
+    /// Pump every shard: the GPUs are independent devices sharing only
+    /// the virtual clock, so each runs its own copy engine and context
+    /// arbitration. The `D_GPU` dirty bit stays fleet-global, so one
+    /// marked shard re-pumps them all — an accepted deviation from the
+    /// §7 minimal-mark contract: a shard pump with nothing to do is a
+    /// handful of empty-vec scans, fleets are small (≤ a few GPUs), and
+    /// splitting `D_GPU` per shard would complicate every mark site for
+    /// a win the 1-GPU paper configurations (the hot benches) never see.
     fn gpu_pump(&mut self) -> bool {
-        let mut changed = self.copy_pump();
-        if self.gpu.switching {
+        let mut changed = false;
+        for shard in 0..self.gpus.len() {
+            changed |= self.gpu_pump_shard(shard);
+        }
+        changed
+    }
+
+    fn gpu_pump_shard(&mut self, shard: usize) -> bool {
+        let mut changed = self.copy_pump(shard);
+        if self.gpus[shard].switching {
             return changed;
         }
         let spatial = self.policy.arbitration() == Arbitration::Spatial;
-        let runnable = self.runnable_ctxs();
+        let runnable = self.runnable_ctxs(shard);
         if runnable.is_empty() {
             return changed;
         }
@@ -1033,53 +1153,56 @@ impl Sim {
             // Spatial partitioning: all contexts co-active on their SM
             // partitions; no temporal arbitration.
             for i in 0..runnable.len() {
-                changed |= self.dispatch_blocks(runnable.nth(i));
+                changed |= self.dispatch_blocks(shard, runnable.nth(i));
             }
             return changed;
         }
-        // Temporal arbitration: one active context at a time.
-        let active_has_work = self
-            .gpu
+        // Temporal arbitration: one active context at a time (per GPU).
+        let active_has_work = self.gpus[shard]
             .active_ctx
             .map(|c| runnable.contains(c))
             .unwrap_or(false);
         if !active_has_work {
             // Pick the next runnable context round-robin and switch.
-            let next = runnable.nth(self.gpu.rr_next % runnable.len());
-            self.gpu.rr_next = self.gpu.rr_next.wrapping_add(1);
-            changed |= self.begin_switch(next);
+            let next = runnable.nth(self.gpus[shard].rr_next % runnable.len());
+            self.gpus[shard].rr_next = self.gpus[shard].rr_next.wrapping_add(1);
+            changed |= self.begin_switch(shard, next);
             return changed;
         }
-        let active = self.gpu.active_ctx.unwrap();
+        let active = self.gpus[shard].active_ctx.unwrap();
         // Arm the preemption quantum while others are waiting.
-        if runnable.len() > 1 && !self.gpu.quantum_armed {
-            self.gpu.quantum_armed = true;
-            self.gpu.quantum_gen += 1;
+        if runnable.len() > 1 && !self.gpus[shard].quantum_armed {
+            self.gpus[shard].quantum_armed = true;
+            self.gpus[shard].quantum_gen += 1;
             self.events.push(
                 self.now + self.cfg.timing.ctx_quantum_ns,
-                Event::QuantumExpire { gen: self.gpu.quantum_gen },
+                Event::QuantumExpire {
+                    shard: shard as u32,
+                    gen: self.gpus[shard].quantum_gen,
+                },
             );
         }
-        changed |= self.dispatch_blocks(active);
+        changed |= self.dispatch_blocks(shard, active);
         changed
     }
 
-    /// Begin a context switch to `next`. Instant when the SMs were idle
-    /// and never owned (cold boot); otherwise costs ctx_switch_ns.
-    fn begin_switch(&mut self, next: CtxId) -> bool {
-        if self.gpu.active_ctx == Some(next) {
+    /// Begin a context switch on `shard` to `next`. Instant when the SMs
+    /// were idle and never owned (cold boot); otherwise costs
+    /// ctx_switch_ns.
+    fn begin_switch(&mut self, shard: usize, next: CtxId) -> bool {
+        if self.gpus[shard].active_ctx == Some(next) {
             return false;
         }
-        let from = self.gpu.active_ctx.or(self.gpu.last_ctx);
+        let from = self.gpus[shard].active_ctx.or(self.gpus[shard].last_ctx);
         // A switch away from resident state (frozen blocks to save) costs
         // the full register save/restore; a drained context hands the SMs
-        // over with a cheap runlist update.
+        // over with a cheap runlist update. The slab holds every shard's
+        // batches, but only this shard's active ctx can match here.
         let must_save = self
-            .gpu
             .batches
             .iter()
-            .any(|b| Some(b.ctx) == self.gpu.active_ctx)
-            || self.gpu.frozen.iter().any(|f| Some(f.ctx) == from);
+            .any(|b| Some(b.ctx) == self.gpus[shard].active_ctx)
+            || self.gpus[shard].frozen.iter().any(|f| Some(f.ctx) == from);
         let cost = if from.is_some() && from != Some(next) {
             if must_save {
                 self.cfg.timing.ctx_switch_ns
@@ -1089,53 +1212,55 @@ impl Sim {
         } else {
             0
         };
-        self.freeze_active();
+        self.freeze_active(shard);
         self.trace.switches.push(SwitchRecord { at: self.now, from, to: next, cost_ns: cost });
         if cost == 0 {
-            self.activate(next);
+            self.activate(shard, next);
         } else {
-            self.gpu.switching = true;
-            self.gpu.switch_gen += 1;
-            self.gpu.active_ctx = None;
-            self.gpu.pending_next = Some(next);
-            self.events
-                .push(self.now + cost, Event::SwitchDone { gen: self.gpu.switch_gen });
+            self.gpus[shard].switching = true;
+            self.gpus[shard].switch_gen += 1;
+            self.gpus[shard].active_ctx = None;
+            self.gpus[shard].pending_next = Some(next);
+            self.events.push(
+                self.now + cost,
+                Event::SwitchDone { shard: shard as u32, gen: self.gpus[shard].switch_gen },
+            );
         }
         self.mark(D_GPU);
         true
     }
 
-    fn switch_done(&mut self, gen: u64) {
-        if gen != self.gpu.switch_gen || !self.gpu.switching {
+    fn switch_done(&mut self, shard: usize, gen: u64) {
+        if gen != self.gpus[shard].switch_gen || !self.gpus[shard].switching {
             return;
         }
-        self.gpu.switching = false;
-        if let Some(next) = self.gpu.pending_next.take() {
-            self.activate(next);
+        self.gpus[shard].switching = false;
+        if let Some(next) = self.gpus[shard].pending_next.take() {
+            self.activate(shard, next);
         }
         // Switch complete: the new context's blocks may now dispatch.
         self.mark(D_GPU);
     }
 
-    fn activate(&mut self, ctx: CtxId) {
-        self.gpu.active_ctx = Some(ctx);
-        self.gpu.last_ctx = Some(ctx);
+    fn activate(&mut self, shard: usize, ctx: CtxId) {
+        self.gpus[shard].active_ctx = Some(ctx);
+        self.gpus[shard].last_ctx = Some(ctx);
         // CRPD is charged per batch at dispatch time through the L2
         // model's cold fraction (dispatch_blocks); nothing to do here.
     }
 
-    /// Freeze all running batches of the active context (state save).
-    /// Slab order = slot order: deterministic, allocation-free.
-    fn freeze_active(&mut self) {
-        let Some(active) = self.gpu.active_ctx else { return };
-        for slot in 0..self.gpu.batches.num_slots() {
-            match self.gpu.batches.get(slot) {
+    /// Freeze all running batches of `shard`'s active context (state
+    /// save). Slab order = slot order: deterministic, allocation-free.
+    fn freeze_active(&mut self, shard: usize) {
+        let Some(active) = self.gpus[shard].active_ctx else { return };
+        for slot in 0..self.batches.num_slots() {
+            match self.batches.get(slot) {
                 Some(b) if b.ctx == active => {}
                 _ => continue,
             }
-            let b = self.gpu.batches.remove(slot).unwrap();
-            self.sms[b.sm.0].vacate(b.blocks, b.warps_per_block);
-            self.gpu.frozen.push(FrozenBatch {
+            let b = self.batches.remove(slot).unwrap();
+            self.sms[shard][b.sm.0].vacate(b.blocks, b.warps_per_block);
+            self.gpus[shard].frozen.push(FrozenBatch {
                 op: b.op,
                 ctx: b.ctx,
                 app: b.app,
@@ -1145,36 +1270,37 @@ impl Sim {
             });
             // Its BatchDone event is now stale (uid check fails).
         }
-        self.gpu.quantum_armed = false;
-        self.gpu.active_ctx = None;
+        self.gpus[shard].quantum_armed = false;
+        self.gpus[shard].active_ctx = None;
     }
 
-    fn quantum_expire(&mut self, gen: u64) {
-        if gen != self.gpu.quantum_gen || !self.gpu.quantum_armed {
+    fn quantum_expire(&mut self, shard: usize, gen: u64) {
+        if gen != self.gpus[shard].quantum_gen || !self.gpus[shard].quantum_armed {
             return;
         }
-        self.gpu.quantum_armed = false;
-        let runnable = self.runnable_ctxs();
+        self.gpus[shard].quantum_armed = false;
+        let runnable = self.runnable_ctxs(shard);
         if runnable.len() <= 1 {
             return; // nobody else waiting anymore
         }
-        let Some(active) = self.gpu.active_ctx else { return };
+        let Some(active) = self.gpus[shard].active_ctx else { return };
         // Round-robin to the next context after the active one.
         let pos = runnable.position(active).unwrap_or(0);
         let next = runnable.nth((pos + 1) % runnable.len());
-        self.begin_switch(next);
+        self.begin_switch(shard, next);
     }
 
-    /// Place pending (and previously frozen) blocks of `ctx` onto SMs.
-    fn dispatch_blocks(&mut self, ctx: CtxId) -> bool {
+    /// Place pending (and previously frozen) blocks of `ctx` onto the SMs
+    /// of its shard.
+    fn dispatch_blocks(&mut self, shard: usize, ctx: CtxId) -> bool {
         let mut changed = false;
         // 1. Resume frozen batches first (they keep their progress).
         let frozen: Vec<FrozenBatch> = {
             let mut out = Vec::new();
             let mut i = 0;
-            while i < self.gpu.frozen.len() {
-                if self.gpu.frozen[i].ctx == ctx {
-                    out.push(self.gpu.frozen.remove(i));
+            while i < self.gpus[shard].frozen.len() {
+                if self.gpus[shard].frozen[i].ctx == ctx {
+                    out.push(self.gpus[shard].frozen.remove(i));
                 } else {
                     i += 1;
                 }
@@ -1182,24 +1308,24 @@ impl Sim {
             out
         };
         for fb in frozen {
-            let sm = self.pick_sm(fb.app, fb.warps_per_block);
+            let sm = self.pick_sm(shard, fb.app, fb.warps_per_block);
             let crpd = self.cfg.timing.crpd_ns;
             match sm {
                 Some(sm) => {
-                    self.sms[sm.0].occupy(fb.blocks, fb.warps_per_block);
+                    self.sms[shard][sm.0].occupy(fb.blocks, fb.warps_per_block);
                     let dur = fb.remaining_ns + crpd;
                     self.spawn_batch(fb.op, ctx, fb.app, sm, fb.blocks, fb.warps_per_block, dur, true);
                     changed = true;
                 }
                 None => {
-                    self.gpu.frozen.push(fb); // no room: stays frozen
+                    self.gpus[shard].frozen.push(fb); // no room: stays frozen
                 }
             }
         }
         // 2. Dispatch fresh blocks, kernels in admission order.
-        for i in 0..self.gpu.run_pool.len() {
+        for i in 0..self.gpus[shard].run_pool.len() {
             let (op, app, wpb, cost, cold) = {
-                let kr = &self.gpu.run_pool[i];
+                let kr = &self.gpus[shard].run_pool[i];
                 if kr.ctx != ctx || kr.dispatched >= kr.total {
                     continue;
                 }
@@ -1207,24 +1333,25 @@ impl Sim {
             };
             loop {
                 let remaining = {
-                    let kr = &self.gpu.run_pool[i];
+                    let kr = &self.gpus[shard].run_pool[i];
                     (kr.total - kr.dispatched) as usize
                 };
                 if remaining == 0 {
                     break;
                 }
-                let Some(sm) = self.pick_sm(app, wpb) else { break };
-                let fit = self.sms[sm.0].fits(&self.cfg.platform, wpb).min(remaining);
+                let Some(sm) = self.pick_sm(shard, app, wpb) else { break };
+                let fit = self.sms[shard][sm.0].fits(&self.cfg.platform, wpb).min(remaining);
                 if fit == 0 {
                     break;
                 }
-                self.sms[sm.0].occupy(fit, wpb);
+                self.sms[shard][sm.0].occupy(fit, wpb);
                 // First touch of this kernel's working set on the L2.
                 let footprint = match &self.ops[op.0 as usize].kind {
                     OpKind::Kernel(k) => k.l2_footprint_bytes,
                     _ => 0,
                 };
-                let cold_frac = if footprint > 0 { self.l2.touch(ctx, footprint) } else { 0.0 };
+                let cold_frac =
+                    if footprint > 0 { self.l2[shard].touch(ctx, footprint) } else { 0.0 };
                 let jit = self.rng_exec.jitter(self.cfg.timing.jitter_amp);
                 let tail = if self.rng_exec.chance(self.cfg.timing.inherent_tail_prob) {
                     self.rng_exec.pareto(1.0, self.cfg.timing.inherent_tail_cap)
@@ -1234,25 +1361,26 @@ impl Sim {
                 let dur = (cost as f64 * jit * tail) as Nanos
                     + cold
                     + (self.cfg.timing.crpd_ns as f64 * cold_frac) as Nanos;
-                self.gpu.run_pool[i].dispatched += fit as u32;
+                self.gpus[shard].run_pool[i].dispatched += fit as u32;
                 if self.ops[op.0 as usize].started_at.is_none() {
                     self.ops[op.0 as usize].started_at = Some(self.now);
                 }
                 self.spawn_batch(op, ctx, app, sm, fit, wpb, dur, false);
                 changed = true;
             }
-            self.gpu.run_pool[i].pending_cold_ns = 0;
+            self.gpus[shard].run_pool[i].pending_cold_ns = 0;
         }
         if changed {
-            self.gpu.last_activity[ctx.0] = Some(self.now);
+            self.last_activity[ctx.0] = Some(self.now);
         }
         changed
     }
 
-    /// Least-loaded SM allowed for `app` with room for one more block.
-    fn pick_sm(&self, app: AppId, warps_per_block: usize) -> Option<SmId> {
+    /// Least-loaded SM of `shard` allowed for `app` with room for one
+    /// more block.
+    fn pick_sm(&self, shard: usize, app: AppId, warps_per_block: usize) -> Option<SmId> {
         let mut best: Option<(usize, usize)> = None; // (used_warps, idx)
-        for (i, sm) in self.sms.iter().enumerate() {
+        for (i, sm) in self.sms[shard].iter().enumerate() {
             if !self.sm_mask[app.0][i] {
                 continue;
             }
@@ -1282,7 +1410,7 @@ impl Sim {
         self.next_block_uid += 1;
         let uid = BlockUid(self.next_block_uid);
         let end = self.now + dur.max(1);
-        let slot = self.gpu.batches.insert(Batch {
+        let slot = self.batches.insert(Batch {
             uid,
             op,
             ctx,
@@ -1298,12 +1426,13 @@ impl Sim {
     }
 
     fn batch_done(&mut self, slot: u32, uid: BlockUid) {
-        match self.gpu.batches.get(slot) {
+        match self.batches.get(slot) {
             Some(b) if b.uid == uid => {}
             _ => return, // stale: batch was frozen/cancelled, slot reused
         }
-        let b = self.gpu.batches.remove(slot).unwrap();
-        self.sms[b.sm.0].vacate(b.blocks, b.warps_per_block);
+        let b = self.batches.remove(slot).unwrap();
+        let shard = self.shard_of_ctx[b.ctx.0];
+        self.sms[shard][b.sm.0].vacate(b.blocks, b.warps_per_block);
         // Freed SM residency (and possibly a finished kernel): the block
         // scheduler has room to fill.
         self.mark(D_GPU);
@@ -1318,27 +1447,26 @@ impl Sim {
                 resumed: b.resumed,
             });
         }
-        let idx = self
-            .gpu
+        let idx = self.gpus[shard]
             .run_pool
             .iter()
             .position(|kr| kr.op == b.op)
             .expect("batch for unknown kernel");
-        self.gpu.run_pool[idx].done += b.blocks as u32;
-        self.gpu.last_activity[b.ctx.0] = Some(self.now);
-        if self.gpu.run_pool[idx].done >= self.gpu.run_pool[idx].total {
-            let kr = self.gpu.run_pool.remove(idx);
+        self.gpus[shard].run_pool[idx].done += b.blocks as u32;
+        self.last_activity[b.ctx.0] = Some(self.now);
+        if self.gpus[shard].run_pool[idx].done >= self.gpus[shard].run_pool[idx].total {
+            let kr = self.gpus[shard].run_pool.remove(idx);
             // FIFO retirement in the op's stream.
             self.retire_in_stream(kr.op);
             self.complete_op(kr.op);
         }
     }
 
-    fn copy_pump(&mut self) -> bool {
-        if self.gpu.copy_current.is_some() {
+    fn copy_pump(&mut self, shard: usize) -> bool {
+        if self.gpus[shard].copy_current.is_some() {
             return false;
         }
-        let Some(op) = self.gpu.copy_q.pop_front() else { return false };
+        let Some(op) = self.gpus[shard].copy_q.pop_front() else { return false };
         let bytes = match &self.ops[op.0 as usize].kind {
             OpKind::Copy(c) => c.bytes,
             _ => unreachable!("copy_pump on non-copy"),
@@ -1347,24 +1475,27 @@ impl Sim {
         let dur = (self.cfg.timing.copy_duration_ns(bytes) as f64 * jit) as Nanos;
         self.ops[op.0 as usize].started_at = Some(self.now);
         // Copies stream through the L2, polluting it (§VII-A effects).
-        self.l2.pollute(bytes.min(self.cfg.platform.l2_bytes / 2));
-        self.gpu.copy_current = Some(op);
-        self.gpu.copy_gen += 1;
-        self.events
-            .push(self.now + dur.max(1), Event::CopyDone { op, gen: self.gpu.copy_gen });
+        self.l2[shard].pollute(bytes.min(self.cfg.platform.l2_bytes / 2));
+        self.gpus[shard].copy_current = Some(op);
+        self.gpus[shard].copy_gen += 1;
+        self.events.push(
+            self.now + dur.max(1),
+            Event::CopyDone { op, gen: self.gpus[shard].copy_gen },
+        );
         true
     }
 
     fn copy_done(&mut self, op: OpUid, gen: u64) {
-        if self.gpu.copy_current != Some(op) || gen != self.gpu.copy_gen {
+        let shard = self.shard_of_op(op);
+        if self.gpus[shard].copy_current != Some(op) || gen != self.gpus[shard].copy_gen {
             return;
         }
-        self.gpu.copy_current = None;
+        self.gpus[shard].copy_current = None;
         // Copy engine free: the next queued transfer may start.
         self.mark(D_GPU);
         self.retire_in_stream(op);
         let ctx = self.ops[op.0 as usize].ctx;
-        self.gpu.last_activity[ctx.0] = Some(self.now);
+        self.last_activity[ctx.0] = Some(self.now);
         self.complete_op(op);
     }
 
@@ -1401,7 +1532,7 @@ impl Sim {
             if self.apps[i].phase == HostPhase::WaitingOp(op) {
                 debug_assert!(self.apps[i].holds_lock);
                 self.apps[i].holds_lock = false;
-                self.lock_release();
+                self.lock_release(self.shard_of_app(AppId(i)));
                 self.apps[i].unblock(self.now);
                 self.apps[i].advance();
                 self.host_busy(AppId(i), self.cfg.timing.sync_wakeup_ns);
@@ -1440,29 +1571,25 @@ impl Sim {
         }
     }
 
-    /// Nothing of `ctx` anywhere in the stack: streams, run pool, copies,
-    /// callbacks, stalls.
+    /// Nothing of `ctx` anywhere in its shard's stack: streams, run pool,
+    /// copies, callbacks, stalls.
     pub fn ctx_quiescent(&self, ctx: CtxId) -> bool {
         if !self.ctxs[ctx.0].quiescent() {
             return false;
         }
-        if self.gpu.run_pool.iter().any(|kr| kr.ctx == ctx) {
+        let shard = &self.gpus[self.shard_of_ctx[ctx.0]];
+        if shard.run_pool.iter().any(|kr| kr.ctx == ctx) {
             return false;
         }
-        if self.gpu.frozen.iter().any(|fb| fb.ctx == ctx) {
+        if shard.frozen.iter().any(|fb| fb.ctx == ctx) {
             return false;
         }
-        if let Some(op) = self.gpu.copy_current {
+        if let Some(op) = shard.copy_current {
             if self.ops[op.0 as usize].ctx == ctx {
                 return false;
             }
         }
-        if self
-            .gpu
-            .copy_q
-            .iter()
-            .any(|op| self.ops[op.0 as usize].ctx == ctx)
-        {
+        if shard.copy_q.iter().any(|op| self.ops[op.0 as usize].ctx == ctx) {
             return false;
         }
         true

@@ -24,17 +24,19 @@ pub enum Event {
     /// slab slot (direct index, no hashing) plus its unique uid so a
     /// reused slot invalidates stale events (freeze/cancel idiom).
     BatchDone { slot: u32, uid: BlockUid },
-    /// A copy-engine transfer completes.
+    /// A copy-engine transfer completes (the shard is derived from the
+    /// op's context; `gen` is the owning shard's copy generation).
     CopyDone { op: OpUid, gen: u64 },
-    /// The context-scheduling quantum expires.
-    QuantumExpire { gen: u64 },
-    /// A context switch (state save/restore) completes.
-    SwitchDone { gen: u64 },
+    /// The context-scheduling quantum of one GPU shard expires.
+    QuantumExpire { shard: u32, gen: u64 },
+    /// A context switch (state save/restore) on one shard completes.
+    SwitchDone { shard: u32, gen: u64 },
     /// A software-stack stall delaying an op's dispatch ends.
     StallDone(OpUid),
-    /// A sleeping GPU-lock waiter finishes waking up (sem_post latency);
-    /// grants happen here, letting fresh acquires barge in the meantime.
-    LockWake,
+    /// A sleeping GPU-lock waiter on one shard finishes waking up
+    /// (sem_post latency); grants happen here, letting fresh acquires
+    /// barge in the meantime.
+    LockWake { shard: u32 },
     /// End of the measurement horizon.
     Horizon,
 }

@@ -1,5 +1,11 @@
 //! The Volta GPU discrete-event simulator (the paper's physical testbed,
 //! rebuilt as a deterministic model — see DESIGN.md substitution table).
+//!
+//! One [`Sim`] models a *fleet* of `SimConfig::num_gpus` independent
+//! devices — each shard with its own SM bank, L2, copy engine, context
+//! scheduler and `GPU_LOCK` — under a single virtual clock. The default
+//! (`num_gpus = 1`) is exactly the paper's single embedded Volta; see
+//! DESIGN.md §8 for the sharded-fleet semantics.
 
 pub mod cache;
 pub mod engine;

@@ -8,6 +8,6 @@ pub mod serving;
 pub mod spec;
 
 pub use parallel::{max_threads, parallel_map};
-pub use runner::{run_spec, run_spec_pooled, RunResult};
-pub use serving::serve_sweep;
+pub use runner::{result_from_sim, run_spec, run_spec_pooled, RunResult};
+pub use serving::{fleet_sweep, serve_sweep};
 pub use spec::{Bench, ExperimentSpec, Isol, RunProtocol};

@@ -26,6 +26,13 @@ pub struct RunResult {
     pub switches: usize,
     /// Software-stack stalls injected.
     pub stalls: usize,
+    /// Shard (GPU) each instance ran on — all zeros for the paper's
+    /// single-GPU configurations; fleet runs key NET/IPS rows by this.
+    pub shards: Vec<usize>,
+    /// Cross-app kernel overlaps *within* each shard (indexed by shard).
+    /// The per-GPU isolation check: gated strategies must keep every
+    /// entry at 0 even when the fleet overlaps across shards.
+    pub shard_overlaps: Vec<usize>,
 }
 
 impl RunResult {
@@ -57,11 +64,16 @@ impl RunResult {
 
 /// Run one experiment configuration.
 pub fn run_spec(spec: ExperimentSpec, seed: u64) -> RunResult {
-    let programs = spec.programs();
-    let n = programs.len();
-    let mut sim = Sim::new(spec.sim_config(seed), programs);
+    let mut sim = Sim::new(spec.sim_config(seed), spec.programs());
     sim.run();
+    result_from_sim(spec, seed, &sim)
+}
 
+/// Extract a [`RunResult`] from a finished sim (shared by [`run_spec`]
+/// and the CLI's `--config` override path, so the metric assembly lives
+/// in exactly one place).
+pub fn result_from_sim(spec: ExperimentSpec, seed: u64, sim: &Sim) -> RunResult {
+    let n = sim.apps.len();
     let protocol = spec.bench.protocol();
     let mut net = Vec::new();
     let mut ips = Vec::new();
@@ -75,6 +87,14 @@ pub fn run_spec(spec: ExperimentSpec, seed: u64) -> RunResult {
         ));
         kernels.push(sim.trace.kernel_ops(AppId(a)).count());
     }
+    let overlaps = sim.trace.cross_app_kernel_overlaps();
+    // A single-GPU run's only shard sees exactly the global overlap set;
+    // skip the second pairwise scan on the hot (fig9/10/table1) path.
+    let shard_overlaps = if sim.num_gpus() == 1 {
+        vec![overlaps]
+    } else {
+        sim.within_shard_overlaps()
+    };
     RunResult {
         spec,
         seed,
@@ -82,9 +102,11 @@ pub fn run_spec(spec: ExperimentSpec, seed: u64) -> RunResult {
         ips,
         kernels,
         chronogram: Chronogram::from_trace(&sim.trace, n),
-        overlaps: sim.trace.cross_app_kernel_overlaps(),
+        overlaps,
         switches: sim.trace.switches.len(),
         stalls: sim.trace.stalls.len(),
+        shards: (0..n).map(|a| sim.shard_of(AppId(a))).collect(),
+        shard_overlaps,
     }
 }
 
@@ -109,6 +131,9 @@ pub fn run_spec_pooled(spec: ExperimentSpec, seeds: &[u64]) -> RunResult {
         base.overlaps += r.overlaps;
         base.switches += r.switches;
         base.stalls += r.stalls;
+        for (acc, more) in base.shard_overlaps.iter_mut().zip(r.shard_overlaps) {
+            *acc += more;
+        }
     }
     base
 }

@@ -1,9 +1,12 @@
-//! Serving sweep: the live-path analogue of the simulator's ablation
-//! benches. Runs one [`ServeSpec`] under every access-control strategy
-//! and tabulates throughput, latency quantiles, and gate occupancy —
-//! the serving counterpart of Table I's IPS comparison.
+//! Serving sweeps: the live-path analogue of the simulator's ablation
+//! benches. [`serve_sweep`] runs one [`ServeSpec`] under every
+//! access-control strategy (the serving counterpart of Table I's IPS
+//! comparison); [`fleet_sweep`] sweeps the *shard count* instead,
+//! tabulating how aggregate throughput and tail latency scale as the
+//! same client population spreads over a growing fleet.
 
 use crate::config::StrategyKind;
+use crate::control::fleet::{serve_fleet, FleetReport, FleetSpec, Placement};
 use crate::control::serving::{serve, ServeBackend, ServeReport, ServeSpec};
 use anyhow::Result;
 use std::fmt::Write as _;
@@ -64,6 +67,55 @@ pub fn serve_sweep(
     Ok((out, reports))
 }
 
+/// Run `base` across fleets of every size in `shard_counts` (same
+/// placement, same client population) and tabulate aggregate IPS,
+/// latency quantiles, and speedup over the 1-shard (or smallest) fleet.
+///
+/// Sweep points run **sequentially** — each point is itself a concurrent
+/// fleet measuring wall-clock throughput, so overlapping points would
+/// contend for cores and corrupt the scaling curve. *Within* a point the
+/// shards fan out via `parallel_map` (that concurrency is the quantity
+/// being measured). DESIGN.md §8 spells out this split.
+pub fn fleet_sweep(
+    base: &ServeSpec,
+    placement: Placement,
+    shard_counts: &[usize],
+    backend: &dyn ServeBackend,
+) -> Result<(String, Vec<FleetReport>)> {
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "== fleet sweep ({placement}): {} clients x {} requests (batch {}), strategy {} ==",
+        base.clients, base.requests, base.batch, base.strategy
+    );
+    let _ = writeln!(
+        out,
+        "{:<7} {:>9} {:>9} {:>9} {:>9} {:>8} {:>8}",
+        "shards", "IPS", "p50 ms", "p95 ms", "max ms", "active", "speedup"
+    );
+    let mut reports = Vec::new();
+    let mut base_ips = None;
+    for &shards in shard_counts {
+        let spec = FleetSpec::new(base.clone(), shards, placement);
+        let r = serve_fleet(&spec, backend)?;
+        let ips = r.ips();
+        let baseline = *base_ips.get_or_insert(ips);
+        let _ = writeln!(
+            out,
+            "{:<7} {:>9.1} {:>9.2} {:>9.2} {:>9.2} {:>8} {:>7.2}x",
+            shards,
+            ips,
+            r.latency_p(0.50),
+            r.latency_p(0.95),
+            r.latencies_ms.last().copied().unwrap_or(0.0),
+            r.active_shards(),
+            ips / baseline.max(1e-9),
+        );
+        reports.push(r);
+    }
+    Ok((out, reports))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -82,5 +134,22 @@ mod tests {
             assert!(text.contains(s.name()), "missing {s} in:\n{text}");
         }
         assert!(text.contains("IPS"));
+    }
+
+    #[test]
+    fn fleet_sweep_covers_every_shard_count() {
+        let base = ServeSpec::new(StrategyKind::Worker, "dna")
+            .with_clients(4)
+            .with_requests(2);
+        let (text, reports) =
+            fleet_sweep(&base, Placement::RoundRobin, &[1, 2, 4], &SyntheticBackend::new(30))
+                .unwrap();
+        assert_eq!(reports.len(), 3);
+        for (r, want) in reports.iter().zip([1usize, 2, 4]) {
+            assert_eq!(r.shards.len(), want);
+            assert_eq!(r.total(), 8);
+        }
+        assert!(text.contains("fleet sweep"), "{text}");
+        assert!(text.contains("speedup"), "{text}");
     }
 }

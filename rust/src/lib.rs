@@ -4,25 +4,57 @@
 //! Access Control on an embedded Volta GPU"* (CS.AR 2024): a configurable
 //! C-hook (COOK) generator plus temporal access-control strategies that
 //! serialise GPU operations from concurrent applications behind a global
-//! GPU lock.
+//! GPU lock — and scales that guarantee out to a sharded multi-GPU
+//! serving fleet.
 //!
 //! The paper's testbed is a physical Jetson AGX Xavier; this reproduction
 //! replaces the physical platform with a deterministic discrete-event
 //! simulator of the Volta execution model ([`gpu`]) and a simulated CUDA
 //! Runtime surface ([`cudart`]), while real numerics run through AOT
 //! compiled JAX/Pallas artifacts on a PJRT CPU client ([`runtime`]).
-//! See DESIGN.md for the substitution table and experiment index.
+//! See `DESIGN.md` for the substitution table and experiment index, and
+//! `README.md` for the quickstart and the figure → command reproduction
+//! matrix.
 //!
-//! Layer map (rust + JAX + Pallas, AOT via PJRT):
+//! ## Layer map (rust + JAX + Pallas, AOT via PJRT)
+//!
 //! * L3 (this crate): hooks, strategies, simulator, apps, harness, CLI.
 //! * L2 (`python/compile/model.py`): JAX models, lowered once to HLO text.
 //! * L1 (`python/compile/kernels/`): Pallas kernels with jnp oracles.
+//!
+//! ## Module tour
+//!
+//! | Module | Role |
+//! |--------|------|
+//! | [`apps`] | Benchmark programs (`cuda_mmult`, `onnx_dna`) compiled to step lists |
+//! | [`cudart`] | Simulated CUDA Runtime surface: contexts, streams, ops, symbol table |
+//! | [`control`] | Access control: [`control::policy::AccessPolicy`] (the ONE strategy dispatch point), the simulated [`control::lock::GpuLock`], the live [`control::gate::GpuGate`], the serving loop ([`control::serving`]) and the sharded fleet ([`control::fleet`]) |
+//! | [`gpu`] | The discrete-event Volta simulator ([`gpu::Sim`]), now a fleet of `num_gpus` independent shards |
+//! | [`harness`] | Experiment specs, the parallel runner, figure/table emitters, serving sweeps |
+//! | [`hooks`] | The COOK generator: condition rules → generated C hook tree (Table II) |
+//! | [`metrics`] | NET (eq. 1), IPS (eq. 2), quantiles, latency [`metrics::stats::Histogram`] |
+//! | [`runtime`] | AOT artifact execution: PJRT (`--features pjrt`) or the native interpreter |
+//! | [`trace`] | Trace records, per-shard overlap checks, Fig. 11 chronograms |
+//!
+//! ## Strategy dispatch
 //!
 //! Strategy dispatch lives in exactly one place — the
 //! [`control::policy::AccessPolicy`] layer — interpreted by the simulator
 //! ([`gpu::engine`]) with simulated events and by the live multi-payload
 //! serving subsystem ([`control::serving`]) with real threads behind the
 //! FIFO [`control::gate::GpuGate`].
+//!
+//! ## Scaling out: the fleet
+//!
+//! The paper serialises onto one GPU. [`control::fleet`] routes serving
+//! clients across `N` shards — each with its **own** gate + policy
+//! instance — via a [`control::fleet::ShardRouter`] (round-robin,
+//! least-loaded, or payload-affinity placement), and
+//! [`SimConfig::num_gpus`](config::SimConfig) gives the simulator one
+//! lock, SM bank, L2 and copy engine per shard so the same topology can
+//! be studied in deterministic virtual time (`cook experiment fleet`).
+//! Per-GPU isolation is preserved by construction; aggregate throughput
+//! scales with the shard count.
 
 pub mod apps;
 pub mod config;

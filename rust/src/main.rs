@@ -13,13 +13,16 @@
 //!   reference interpreter otherwise).
 //! * `serve` — live serving: concurrent clients run payload inferences
 //!   (any manifest payload, all five strategies, optional batching)
-//!   through the access-control policy layer.
+//!   through the access-control policy layer; `--shards N` routes the
+//!   clients across a fleet of per-GPU gates (`control::fleet`), and
+//!   `--shard-sweep` tabulates throughput scaling across fleet sizes.
 
 use anyhow::{anyhow, bail, Context, Result};
 use cook::config::StrategyKind;
+use cook::control::fleet::{serve_fleet, FleetSpec, Placement};
 use cook::control::serving::{serve, ManifestBackend, ServeBackend, ServeSpec, SyntheticBackend};
 use cook::cudart::SymbolTable;
-use cook::harness::{figures, run_spec, serve_sweep, Bench, ExperimentSpec};
+use cook::harness::{figures, fleet_sweep, run_spec, serve_sweep, Bench, ExperimentSpec};
 use cook::hooks::generate_standard;
 use cook::runtime::{Engine, Manifest};
 use std::path::PathBuf;
@@ -63,15 +66,18 @@ fn print_usage() {
          \n\
          commands:\n\
          \x20 run <bench-isol-strategy> [--seed N]      simulate one configuration\n\
-         \x20 experiment <fig9|fig10|fig11|table1|table2|all> [--seed N] [--out DIR]\n\
+         \x20 experiment <fig9|fig10|fig11|table1|table2|fleet|all> [--seed N] [--out DIR]\n\
          \x20 chronogram <bench-isol-strategy> [--seed N] [--rows N]\n\
          \x20 hookgen --strategy <s> [--out DIR]        generate the hook library\n\
          \x20 symbols [--unknown]                       list libcudart exported symbols\n\
          \x20 validate                                  check AOT artifacts vs jax goldens\n\
          \x20 serve [--strategy s] [--payload p[,p]] [--clients N] [--requests N]\n\
          \x20       [--batch N] [--sweep] [--synthetic]\n\
+         \x20       [--shards N] [--placement rr|least-loaded|affinity] [--shard-sweep N[,N]]\n\
          \x20       serve payload inferences through the access-control layer\n\
-         \x20       (--sweep tabulates all strategies; --synthetic needs no artifacts)\n\
+         \x20       (--sweep tabulates all strategies; --synthetic needs no artifacts;\n\
+         \x20        --shards N routes clients across a fleet of per-GPU gates;\n\
+         \x20        --shard-sweep tabulates scaling across fleet sizes)\n\
          \n\
          benches: cuda_mmult, onnx_dna;  isolation|parallel;\n\
          strategies: none, callback, synced, worker, ptb;\n\
@@ -107,31 +113,7 @@ fn cmd_run(rest: &[String]) -> Result<()> {
         println!("applied {n} overrides from {path}");
         let mut sim = cook::gpu::Sim::new(cfg, spec.programs());
         sim.run();
-        let protocol = spec.bench.protocol();
-        let mut net = Vec::new();
-        let mut ips = Vec::new();
-        let mut kernels = Vec::new();
-        for a in 0..spec.isol.instances() {
-            let app = cook::util::AppId(a);
-            net.push(cook::metrics::net_per_kernel(&sim.trace, app));
-            ips.push(cook::metrics::ips_with_warmup(
-                sim.completions(app),
-                protocol.warmup_ns,
-                protocol.window_ns,
-            ));
-            kernels.push(sim.trace.kernel_ops(app).count());
-        }
-        cook::harness::RunResult {
-            spec,
-            seed,
-            net,
-            ips,
-            kernels,
-            chronogram: cook::trace::Chronogram::from_trace(&sim.trace, spec.isol.instances()),
-            overlaps: sim.trace.cross_app_kernel_overlaps(),
-            switches: sim.trace.switches.len(),
-            stalls: sim.trace.stalls.len(),
-        }
+        cook::harness::runner::result_from_sim(spec, seed, &sim)
     } else {
         run_spec(spec, seed)
     };
@@ -167,6 +149,7 @@ fn cmd_experiment(rest: &[String]) -> Result<()> {
             "fig11" => figures::chronogram_figure(seed).0,
             "table1" => figures::ips_table(seed).0,
             "table2" => figures::loc_table().0,
+            "fleet" => figures::shard_scaling_figure(seed).0,
             other => bail!("unknown experiment '{other}'"),
         };
         println!("{text}");
@@ -176,7 +159,7 @@ fn cmd_experiment(rest: &[String]) -> Result<()> {
         Ok(())
     };
     if which == "all" {
-        for name in ["fig9", "fig10", "fig11", "table1", "table2"] {
+        for name in ["fig9", "fig10", "fig11", "table1", "table2", "fleet"] {
             run_one(name, &mut emitted)?;
         }
     } else {
@@ -289,6 +272,26 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .collect();
     let synthetic = rest.iter().any(|a| a == "--synthetic");
     let sweep = rest.iter().any(|a| a == "--sweep");
+    let shards: usize = flag(rest, "--shards").and_then(|s| s.parse().ok()).unwrap_or(1);
+    if shards == 0 {
+        bail!("--shards must be >= 1");
+    }
+    let placement: Placement = flag(rest, "--placement")
+        .unwrap_or("rr")
+        .parse()
+        .map_err(|e: String| anyhow!(e))?;
+    let shard_sweep: Option<Vec<usize>> = match flag(rest, "--shard-sweep") {
+        Some(list) => Some(
+            list.split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<usize>()
+                        .map_err(|_| anyhow!("bad shard count '{s}' in --shard-sweep"))
+                })
+                .collect::<Result<_>>()?,
+        ),
+        None => None,
+    };
 
     let backend: Box<dyn ServeBackend> = if synthetic {
         println!("serving synthetic payloads (no artifacts required)");
@@ -323,15 +326,28 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         if flag(rest, "--strategy").is_some() {
             bail!("--sweep runs every strategy; drop --strategy or drop --sweep");
         }
+        if shards > 1 || shard_sweep.is_some() {
+            bail!("--sweep sweeps strategies on one shard; use --shard-sweep for the fleet axis");
+        }
         let (text, _) = serve_sweep(&base, backend.as_ref())?;
         print!("{text}");
+        return Ok(());
+    }
+    let strategy: StrategyKind = flag(rest, "--strategy")
+        .unwrap_or("worker")
+        .parse()
+        .map_err(|e: String| anyhow!(e))?;
+    let mut spec = base;
+    spec.strategy = strategy;
+    if let Some(counts) = shard_sweep {
+        let (text, _) = fleet_sweep(&spec, placement, &counts, backend.as_ref())?;
+        print!("{text}");
+    } else if shards > 1 {
+        // FleetReport::render already leads with the fleet shape line.
+        let fleet = FleetSpec::new(spec, shards, placement);
+        let report = serve_fleet(&fleet, backend.as_ref())?;
+        println!("{}", report.render());
     } else {
-        let strategy: StrategyKind = flag(rest, "--strategy")
-            .unwrap_or("worker")
-            .parse()
-            .map_err(|e: String| anyhow!(e))?;
-        let mut spec = base;
-        spec.strategy = strategy;
         println!(
             "strategy {strategy}: {clients} clients x {requests} requests (batch {batch})"
         );

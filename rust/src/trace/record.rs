@@ -131,8 +131,23 @@ impl TraceCollector {
     /// Overlap check used by the isolation property tests (§VII-B): do any
     /// two *kernel* executions from different apps overlap in time?
     pub fn cross_app_kernel_overlaps(&self) -> usize {
-        let mut kernels: Vec<&OpRecord> =
-            self.ops.iter().filter(|r| r.is_kernel).collect();
+        self.count_overlaps(|_| true)
+    }
+
+    /// Cross-app kernel overlaps restricted to a subset of apps — the
+    /// per-shard isolation check of a fleet run: a gated strategy must
+    /// show zero overlaps *among the apps sharing one GPU*, while apps on
+    /// different shards are free to overlap.
+    pub fn cross_app_kernel_overlaps_among(&self, apps: &[AppId]) -> usize {
+        self.count_overlaps(|a| apps.contains(&a))
+    }
+
+    fn count_overlaps(&self, in_group: impl Fn(AppId) -> bool) -> usize {
+        let mut kernels: Vec<&OpRecord> = self
+            .ops
+            .iter()
+            .filter(|r| r.is_kernel && in_group(r.app))
+            .collect();
         kernels.sort_by_key(|r| r.started_at);
         let mut overlaps = 0;
         for i in 0..kernels.len() {
@@ -191,6 +206,23 @@ mod tests {
         t.ops.push(rec(0, 0, 100));
         t.ops.push(rec(0, 50, 150));
         assert_eq!(t.cross_app_kernel_overlaps(), 0);
+    }
+
+    #[test]
+    fn overlap_among_subset_ignores_other_apps() {
+        // Apps 0/1 overlap, apps 2/3 overlap; the per-shard view sees
+        // only its own pair.
+        let mut t = TraceCollector::new(false);
+        t.ops.push(rec(0, 0, 100));
+        t.ops.push(rec(1, 50, 150));
+        t.ops.push(rec(2, 60, 160));
+        t.ops.push(rec(3, 70, 170));
+        assert_eq!(t.cross_app_kernel_overlaps_among(&[AppId(0), AppId(1)]), 1);
+        assert_eq!(t.cross_app_kernel_overlaps_among(&[AppId(2), AppId(3)]), 1);
+        assert_eq!(t.cross_app_kernel_overlaps_among(&[AppId(0)]), 0);
+        assert_eq!(t.cross_app_kernel_overlaps_among(&[]), 0);
+        // The unrestricted count sees every cross pair.
+        assert!(t.cross_app_kernel_overlaps() > 2);
     }
 
     #[test]

@@ -261,3 +261,92 @@ fn different_seeds_produce_different_hashes() {
     let spec = ExperimentSpec::new(Bench::CudaMmult, Isol::Parallel, StrategyKind::None);
     assert_ne!(run_hash(spec, 1), run_hash(spec, 2));
 }
+
+// ---------------------------------------------------------------------
+// fleet (num_gpus) determinism
+// ---------------------------------------------------------------------
+
+fn fleet_hash(strategy: StrategyKind, num_gpus: usize, apps: usize, seed: u64) -> u64 {
+    let cfg = cook::config::SimConfig::default()
+        .with_strategy(strategy)
+        .with_seed(seed)
+        .with_num_gpus(num_gpus);
+    let programs = (0..apps).map(|_| cook::apps::mmult::program()).collect();
+    let mut sim = Sim::new(cfg, programs);
+    sim.run();
+    trace_hash(&sim)
+}
+
+#[test]
+fn one_shard_fleet_reproduces_single_gpu_golden_hashes() {
+    // The REAL pin of "1-shard fleet == single-GPU engine" is the
+    // committed golden file: its hashes predate (or are regenerated
+    // independently of) any fleet change, so re-deriving the grid with
+    // an explicit `with_num_gpus(1)` config and comparing against the
+    // file catches a fleet refactor that perturbs single-GPU scheduling.
+    // Until the file is generated and committed (needs a toolchain) the
+    // pin is inactive, like hashes_match_committed_goldens, and this
+    // test only announces that on stderr — deliberately NOT asserting
+    // explicit-1 == default, which would be a tautology (both build the
+    // same SimConfig value).
+    let path = golden_path();
+    if !path.exists() {
+        eprintln!(
+            "golden_trace: {} missing — 1-shard-fleet pin inactive; \
+             regenerate with UPDATE_GOLDEN_TRACES=1 and commit it",
+            path.display()
+        );
+        return;
+    }
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut expected = std::collections::BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.split_whitespace();
+        let (Some(spec), Some(seed), Some(hash)) = (parts.next(), parts.next(), parts.next())
+        else {
+            panic!("malformed golden line: {line}");
+        };
+        expected.insert(
+            (spec.to_string(), seed.parse::<u64>().unwrap()),
+            u64::from_str_radix(hash, 16).unwrap(),
+        );
+    }
+    for (spec, seed) in golden_grid() {
+        let Some(&want) = expected.get(&(spec.to_string(), seed)) else {
+            panic!("{spec} seed {seed}: missing from {}", path.display());
+        };
+        let mut sim = Sim::new(spec.sim_config(seed).with_num_gpus(1), spec.programs());
+        sim.run();
+        assert_eq!(
+            trace_hash(&sim),
+            want,
+            "{spec} seed {seed}: 1-shard fleet diverged from the committed \
+             single-GPU golden"
+        );
+    }
+}
+
+#[test]
+fn fleet_hashes_stable_run_to_run() {
+    for strategy in StrategyKind::ALL {
+        for num_gpus in [2usize, 3] {
+            let a = fleet_hash(strategy, num_gpus, 4, 7);
+            let b = fleet_hash(strategy, num_gpus, 4, 7);
+            assert_eq!(a, b, "{strategy} x{num_gpus}: fleet trace not reproducible");
+        }
+    }
+}
+
+#[test]
+fn fleet_size_changes_the_trace() {
+    // Sharding must actually change scheduling (otherwise the fleet is
+    // a no-op): 2 apps serialised on 1 GPU vs parallel on 2.
+    assert_ne!(
+        fleet_hash(StrategyKind::Synced, 1, 2, 5),
+        fleet_hash(StrategyKind::Synced, 2, 2, 5)
+    );
+}

@@ -172,8 +172,8 @@ fn prop_lock_balance() {
         for strategy in [StrategyKind::Synced, StrategyKind::Worker] {
             let sim = sim_random(trial, strategy, 2);
             assert_eq!(
-                sim.lock.grants.len(),
-                sim.lock.releases.len(),
+                sim.locks[0].grants.len(),
+                sim.locks[0].releases.len(),
                 "trial {trial} {strategy}: unbalanced lock"
             );
         }

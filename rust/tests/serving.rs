@@ -126,3 +126,92 @@ fn cli_serve_rejects_unknown_strategy() {
     let err = String::from_utf8_lossy(&out.stderr);
     assert!(err.contains("unknown strategy"), "{err}");
 }
+
+// ---------------------------------------------------------------------
+// fleet serving
+// ---------------------------------------------------------------------
+
+#[test]
+fn fleet_preserves_per_shard_isolation_semantics() {
+    // Library-level acceptance: every client's requests flow through
+    // exactly one shard's gate; each shard's grant count is exactly its
+    // own clients' warm-ups + requests (no cross-shard traffic).
+    use cook::control::fleet::{serve_fleet, FleetSpec, Placement};
+    let base = ServeSpec::new(StrategyKind::Synced, "dna")
+        .with_clients(6)
+        .with_requests(4);
+    let spec = FleetSpec::new(base, 3, Placement::RoundRobin);
+    let r = serve_fleet(&spec, &backend()).unwrap();
+    assert_eq!(r.total(), 24);
+    for s in &r.shards {
+        assert_eq!(s.clients, 2);
+        let rep = s.report.as_ref().unwrap();
+        let gate = rep.gate.as_ref().unwrap();
+        // 2 warm-ups + 2 clients x 4 requests, through THIS shard only.
+        assert_eq!(gate.grants(), 10, "shard {}", s.shard);
+        assert_eq!(rep.total(), 8, "shard {}", s.shard);
+    }
+    // The merged fleet view accounts for every grant once.
+    assert_eq!(r.gate.unwrap().grants(), 30);
+}
+
+#[test]
+fn cli_serve_fleet_reports_per_shard_and_aggregate() {
+    // Acceptance: `cook serve --shards 4 --placement least-loaded
+    // --synthetic` runs end-to-end with per-shard + aggregate IPS and
+    // latency percentiles.
+    let out = cli()
+        .args([
+            "serve",
+            "--synthetic",
+            "--shards",
+            "4",
+            "--placement",
+            "least-loaded",
+            "--clients",
+            "4",
+            "--requests",
+            "3",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("4 shards"), "{text}");
+    assert!(text.contains("IPS aggregate"), "{text}");
+    assert!(text.contains("p95"), "{text}");
+    assert!(text.contains("shard 0"), "{text}");
+    assert!(text.contains("shard 3"), "{text}");
+}
+
+#[test]
+fn cli_serve_shard_sweep_tabulates_fleet_sizes() {
+    let out = cli()
+        .args([
+            "serve",
+            "--synthetic",
+            "--shard-sweep",
+            "1,2",
+            "--clients",
+            "2",
+            "--requests",
+            "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("fleet sweep"), "{text}");
+    assert!(text.contains("speedup"), "{text}");
+}
+
+#[test]
+fn cli_serve_rejects_bad_placement() {
+    let out = cli()
+        .args(["serve", "--synthetic", "--shards", "2", "--placement", "random"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown placement"), "{err}");
+}
