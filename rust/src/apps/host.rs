@@ -6,6 +6,7 @@
 
 use super::program::{CompiledProgram, CompiledStep};
 use crate::util::{CtxId, Nanos, OpUid, StreamId};
+use std::collections::VecDeque;
 
 /// What the host thread is doing right now.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -22,6 +23,9 @@ pub enum HostPhase {
     WaitingDevice,
     /// Waiting for the worker to drain (worker strategy barrier/Alg. 7).
     WaitingWorker,
+    /// Waiting for an open-loop arrival to admit the next iteration
+    /// (`SimConfig::arrivals`; closed-loop runs never enter this phase).
+    WaitingArrival,
     /// Program finished (RepeatMode::Once exhausted).
     Done,
 }
@@ -53,6 +57,20 @@ pub struct HostState {
     pub blocked_ns: Nanos,
     /// Timestamp when the current blocking phase began.
     pub blocked_since: Option<Nanos>,
+    /// Admitted open-loop arrivals not yet consumed by an iteration
+    /// (bounded by `SimConfig::arrival_queue_cap`; the engine sheds past
+    /// it). Each entry is the arrival timestamp.
+    pub arrival_backlog: VecDeque<Nanos>,
+    /// Arrival timestamps of iterations currently in flight (consumed at
+    /// iteration start, popped at `MarkCompletion` for latency).
+    pub arrival_inflight: VecDeque<Nanos>,
+    /// Arrival-to-completion latencies (ns) of completed iterations
+    /// under open-loop arrivals.
+    pub arrival_latency_ns: Vec<Nanos>,
+    /// The current iteration already consumed its arrival (reset when
+    /// the program counter wraps); keeps blocking hook re-entries at
+    /// pc 0 from double-charging the backlog.
+    pub iteration_admitted: bool,
 }
 
 impl HostState {
@@ -70,6 +88,10 @@ impl HostState {
             pending_steal_ns: 0,
             blocked_ns: 0,
             blocked_since: None,
+            arrival_backlog: VecDeque::new(),
+            arrival_inflight: VecDeque::new(),
+            arrival_latency_ns: Vec::new(),
+            iteration_admitted: false,
         }
     }
 
@@ -81,6 +103,7 @@ impl HostState {
                 | HostPhase::WaitingOp(_)
                 | HostPhase::WaitingDevice
                 | HostPhase::WaitingWorker
+                | HostPhase::WaitingArrival
         ));
         self.phase = phase;
         self.blocked_since = Some(now);
@@ -100,7 +123,12 @@ impl HostState {
         if self.pc >= self.program.steps.len() {
             match self.program.repeat {
                 super::program::RepeatMode::Once => self.phase = HostPhase::Done,
-                super::program::RepeatMode::LoopUntilHorizon => self.pc = 0,
+                super::program::RepeatMode::LoopUntilHorizon => {
+                    self.pc = 0;
+                    // The next iteration must consume its own arrival
+                    // under open-loop traffic.
+                    self.iteration_admitted = false;
+                }
             }
         }
     }

@@ -70,6 +70,14 @@ fn set_key(cfg: &mut SimConfig, key: &str, v: &str) -> Result<(), String> {
             }
             cfg.num_gpus = g;
         }
+        "arrivals" => cfg.arrivals = v.parse()?,
+        "arrival_queue_cap" => {
+            let c: usize = parse(key, v)?;
+            if c == 0 {
+                return Err("arrival_queue_cap must be >= 1".to_string());
+            }
+            cfg.arrival_queue_cap = c;
+        }
         // ----------------------------------------------------- timing --
         "timing.launch_overhead_ns" => t.launch_overhead_ns = parse(key, v)?,
         "timing.memcpy_call_extra_ns" => t.memcpy_call_extra_ns = parse(key, v)?,
@@ -119,6 +127,8 @@ pub const KEYS: &[&str] = &[
     "horizon_ns",
     "strategy",
     "num_gpus",
+    "arrivals",
+    "arrival_queue_cap",
     "timing.launch_overhead_ns",
     "timing.memcpy_call_extra_ns",
     "timing.sync_wakeup_ns",
@@ -202,9 +212,24 @@ mod tests {
     fn every_listed_key_is_settable() {
         let mut cfg = SimConfig::default();
         for key in KEYS {
-            let v = if *key == "strategy" { "synced" } else { "1" };
+            let v = match *key {
+                "strategy" => "synced",
+                "arrivals" => "poisson:200",
+                _ => "1",
+            };
             set_key(&mut cfg, key, v).unwrap_or_else(|e| panic!("{key}: {e}"));
         }
+    }
+
+    #[test]
+    fn arrival_keys_parse_and_validate() {
+        let mut cfg = SimConfig::default();
+        apply_overrides(&mut cfg, "arrivals = bursty:500@10/40\narrival_queue_cap = 8\n")
+            .unwrap();
+        assert!(cfg.arrivals.is_open_loop());
+        assert_eq!(cfg.arrival_queue_cap, 8);
+        assert!(apply_overrides(&mut cfg, "arrivals = warp:9").is_err());
+        assert!(apply_overrides(&mut cfg, "arrival_queue_cap = 0").is_err());
     }
 
     #[test]

@@ -12,6 +12,7 @@ pub use platform::PlatformConfig;
 pub use strategy::StrategyKind;
 pub use timing::TimingConfig;
 
+use crate::control::traffic::ArrivalProcess;
 
 /// Full simulator configuration for one run.
 #[derive(Debug, Clone)]
@@ -29,6 +30,17 @@ pub struct SimConfig {
     /// `i % num_gpus`). `1` (the default) is exactly the paper's
     /// single-Volta testbed.
     pub num_gpus: usize,
+    /// How looping applications are driven. `ClosedLoop` (the default,
+    /// the paper's protocol): each app re-runs its routine as fast as
+    /// completions allow. Open-loop processes inject seeded arrival
+    /// events instead; an iteration starts only when an admitted arrival
+    /// is available, mirroring the live serving path's traffic generator
+    /// (DESIGN.md §9).
+    pub arrivals: ArrivalProcess,
+    /// Bound on each app's admitted-arrival backlog under open-loop
+    /// arrivals (the simulator mirror of the live admission queue);
+    /// arrivals past the bound are shed and counted.
+    pub arrival_queue_cap: usize,
 }
 
 impl Default for SimConfig {
@@ -40,6 +52,8 @@ impl Default for SimConfig {
             seed: 0,
             horizon_ns: 10_000_000_000, // 10 s of virtual time
             num_gpus: 1,
+            arrivals: ArrivalProcess::ClosedLoop,
+            arrival_queue_cap: 64,
         }
     }
 }
@@ -64,6 +78,16 @@ impl SimConfig {
         self.num_gpus = g;
         self
     }
+
+    pub fn with_arrivals(mut self, arrivals: ArrivalProcess) -> Self {
+        self.arrivals = arrivals;
+        self
+    }
+
+    pub fn with_arrival_queue_cap(mut self, cap: usize) -> Self {
+        self.arrival_queue_cap = cap;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -85,10 +109,21 @@ mod tests {
             .with_strategy(StrategyKind::Worker)
             .with_seed(9)
             .with_horizon_ns(123)
-            .with_num_gpus(4);
+            .with_num_gpus(4)
+            .with_arrivals(ArrivalProcess::Poisson { rate_hz: 200.0 })
+            .with_arrival_queue_cap(16);
         assert_eq!(cfg.strategy, StrategyKind::Worker);
         assert_eq!(cfg.seed, 9);
         assert_eq!(cfg.horizon_ns, 123);
         assert_eq!(cfg.num_gpus, 4);
+        assert_eq!(cfg.arrivals, ArrivalProcess::Poisson { rate_hz: 200.0 });
+        assert_eq!(cfg.arrival_queue_cap, 16);
+    }
+
+    #[test]
+    fn default_is_closed_loop() {
+        let cfg = SimConfig::default();
+        assert_eq!(cfg.arrivals, ArrivalProcess::ClosedLoop);
+        assert!(!cfg.arrivals.is_open_loop());
     }
 }

@@ -60,15 +60,20 @@
 //! ```
 
 use crate::config::StrategyKind;
-use crate::control::gate::GateStats;
-use crate::control::serving::{nearest_rank, serve, ServeBackend, ServeReport, ServeSpec};
+use crate::control::gate::{GateStats, GpuGate};
+use crate::control::policy::AccessPolicy;
+use crate::control::serving::{
+    admit, build_latency_tables, fold_open_outs, nearest_rank, offered_rate_hz, open_worker,
+    serve, OpenWorkerOut, Pending, ServeBackend, ServeReport, ServeSpec,
+};
+use crate::control::traffic::{AdmissionQueue, ShedPolicy, TrafficReport};
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::fmt;
 use std::str::FromStr;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
-use std::time::Instant;
+use std::sync::{Barrier, Mutex};
+use std::time::{Duration, Instant};
 
 // ---------------------------------------------------------------------
 // placement
@@ -191,7 +196,17 @@ impl ShardRouter {
     pub fn route(&self, payload_slot: usize) -> usize {
         let shard = match self.placement {
             Placement::RoundRobin => {
-                self.rr_next.fetch_add(1, Ordering::Relaxed) % self.num_shards()
+                // Modular increment (ISSUE 4): a plain `fetch_add % N`
+                // breaks strict rotation when the counter wraps at
+                // `usize::MAX` and N doesn't divide it — the wrap jumps
+                // the rotation back to 0, double-serving a shard. Keeping
+                // the counter in [0, N) makes wrap-around a non-event.
+                self.rr_next
+                    .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |n| {
+                        Some(n.wrapping_add(1) % self.num_shards())
+                    })
+                    .expect("fetch_update closure is infallible")
+                    % self.num_shards()
             }
             Placement::LeastLoaded => self.least_loaded(),
             Placement::Affinity => {
@@ -217,6 +232,17 @@ impl ShardRouter {
             Ordering::Relaxed,
             |d| d.checked_sub(1),
         );
+    }
+
+    /// Move one routed unit from `from` to `to`: the open-loop dispatcher
+    /// diverts a request when the routed shard's admission queue is full,
+    /// and the depth accounting must follow it.
+    pub fn transfer(&self, from: usize, to: usize) {
+        if from == to {
+            return;
+        }
+        self.complete(from);
+        self.depths[to].fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -276,6 +302,10 @@ pub struct FleetReport {
     /// Gate wait/hold statistics merged across shards (None for ungated
     /// strategies).
     pub gate: Option<GateStats>,
+    /// Traffic/SLO accounting merged across shards (Some for open-loop
+    /// runs); `shed` counts requests that found **every** shard's
+    /// admission queue full.
+    pub traffic: Option<TrafficReport>,
 }
 
 impl FleetReport {
@@ -283,10 +313,10 @@ impl FleetReport {
         self.clients * self.requests_per_client
     }
 
-    /// Aggregate fleet throughput: every request served, over the
-    /// fleet's wall-clock makespan.
+    /// Aggregate fleet throughput: completed requests over the fleet's
+    /// wall-clock makespan (shed traffic never inflates throughput).
     pub fn ips(&self) -> f64 {
-        self.total() as f64 / self.wall_s.max(1e-9)
+        self.latencies_ms.len() as f64 / self.wall_s.max(1e-9)
     }
 
     /// Nearest-rank quantile of the merged latencies; 0.0 when empty.
@@ -336,6 +366,12 @@ impl FleetReport {
                 out.push_str(line);
             }
         }
+        if let Some(t) = &self.traffic {
+            for line in t.render(self.wall_s).lines() {
+                out.push_str("\n  fleet ");
+                out.push_str(line);
+            }
+        }
         out
     }
 }
@@ -357,6 +393,9 @@ pub fn serve_fleet(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result<Fleet
     spec.validate()?;
     let base = &spec.base;
     base.validate()?;
+    if base.traffic.arrivals.is_open_loop() {
+        return serve_fleet_open_loop(spec, backend);
+    }
     let router = ShardRouter::new(spec.shards, spec.placement);
     // Admission-time routing: client c serves payloads[c % len] (the
     // ServeSpec contract), and its payload slot is what affinity keys on.
@@ -433,6 +472,243 @@ pub fn serve_fleet(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result<Fleet
         latencies_ms,
         shards,
         gate,
+        traffic: None,
+    })
+}
+
+/// Open-loop fleet serving: one paced generator feeds per-shard bounded
+/// admission queues, each drained by that shard's worker pool behind its
+/// **own** [`GpuGate`]. The router places each arrival; a full queue
+/// diverts it to the shallowest shard with room (depth accounting
+/// follows via [`ShardRouter::transfer`]), and the generator applies the
+/// shed policy only when **every** shard reports a full queue — the
+/// "router sheds last" contract of DESIGN.md §9.
+fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result<FleetReport> {
+    let base = &spec.base;
+    let policy = AccessPolicy::new(base.strategy);
+    let resolved: Vec<crate::control::serving::ResolvedPayload> = base
+        .payloads
+        .iter()
+        .map(|p| backend.resolve(p))
+        .collect::<Result<_>>()?;
+    // Shards beyond the worker count would have an unserved queue; route
+    // only over shards that own at least one worker.
+    let active = spec.shards.min(base.clients);
+    let router = ShardRouter::new(active, spec.placement);
+    let queues: Vec<AdmissionQueue<Pending>> =
+        (0..active).map(|_| AdmissionQueue::new(base.traffic.queue_cap)).collect();
+    let gates: Vec<Option<GpuGate>> =
+        (0..active).map(|_| policy.gated().then(GpuGate::new)).collect();
+    // Worker c drains shard c % active; PTB's SM-share fallback divides
+    // by the shard-local worker count (partitions never span shards).
+    let shard_of_worker: Vec<usize> = (0..base.clients).map(|c| c % active).collect();
+    let workers_of_shard: Vec<usize> =
+        (0..active).map(|s| shard_of_worker.iter().filter(|&&x| x == s).count()).collect();
+    let timeout = match base.traffic.shed {
+        ShedPolicy::Timeout { ms } => Some(Duration::from_millis(ms)),
+        _ => None,
+    };
+    let total = base.clients * base.requests;
+    let offsets = base.traffic.arrivals.schedule_n(total, base.traffic.seed);
+    let shed = AtomicUsize::new(0);
+    let routed: Vec<AtomicUsize> = (0..active).map(|_| AtomicUsize::new(0)).collect();
+    let warm = Barrier::new(base.clients + 1);
+    // Per-shard completion hooks: workers release router depth as
+    // requests leave the system.
+    let router_ref = &router;
+    let done: Vec<Box<dyn Fn() + Sync + '_>> = (0..active)
+        .map(|s| Box::new(move || router_ref.complete(s)) as Box<dyn Fn() + Sync + '_>)
+        .collect();
+
+    let (outs, wall_s) = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (c, &shard) in shard_of_worker.iter().enumerate() {
+            let (queue, gate, warm, resolved, done) = (
+                &queues[shard],
+                gates[shard].as_ref(),
+                &warm,
+                &resolved,
+                &*done[shard],
+            );
+            let share = policy.sm_share(workers_of_shard[shard]);
+            let handle = s.spawn(move || {
+                let out = open_worker(
+                    backend,
+                    resolved,
+                    queue,
+                    gate,
+                    base.batch,
+                    timeout,
+                    share,
+                    warm,
+                    c,
+                    Some(done),
+                );
+                (shard, out)
+            });
+            handles.push((shard, handle));
+        }
+        warm.wait();
+        let t0 = Instant::now();
+        for (seq, &off) in offsets.iter().enumerate() {
+            let arrival_at = t0 + Duration::from_nanos(off);
+            let now = Instant::now();
+            if arrival_at > now {
+                std::thread::sleep(arrival_at - now);
+            }
+            let slot = seq % resolved.len();
+            let primary = router.route(slot);
+            let mut pending = Some(Pending { slot, seq, arrival_at });
+            let mut placed: Option<usize> = None;
+            match queues[primary].try_push(pending.take().unwrap()) {
+                Ok(()) => placed = Some(primary),
+                Err(back) => pending = Some(back),
+            }
+            if placed.is_none() {
+                // Divert: shallowest other queue with room, ties by id.
+                let mut order: Vec<usize> = (0..active).filter(|&x| x != primary).collect();
+                order.sort_by_key(|&x| (queues[x].len(), x));
+                for cand in order {
+                    match queues[cand].try_push(pending.take().unwrap()) {
+                        Ok(()) => {
+                            placed = Some(cand);
+                            break;
+                        }
+                        Err(back) => pending = Some(back),
+                    }
+                }
+            }
+            match placed {
+                Some(s) => {
+                    routed[s].fetch_add(1, Ordering::Relaxed);
+                    if s != primary {
+                        router.transfer(primary, s);
+                    }
+                }
+                None => {
+                    // Every shard full: the shed policy decides, against
+                    // the shard the router originally picked.
+                    if admit(&queues[primary], pending.take().unwrap(), base.traffic.shed) {
+                        routed[primary].fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        shed.fetch_add(1, Ordering::Relaxed);
+                        router.complete(primary);
+                    }
+                }
+            }
+        }
+        for q in &queues {
+            q.close();
+        }
+        let outs: Vec<(usize, OpenWorkerOut)> = handles
+            .into_iter()
+            .map(|(shard, h)| {
+                h.join().unwrap_or_else(|_| {
+                    (
+                        shard,
+                        OpenWorkerOut {
+                            error: Some(anyhow!("fleet open-loop worker panicked")),
+                            ..OpenWorkerOut::default()
+                        },
+                    )
+                })
+            })
+            .collect();
+        (outs, t0.elapsed().as_secs_f64())
+    });
+
+    // Group worker outputs per shard and assemble shard + fleet reports.
+    let mut per_shard: Vec<Vec<OpenWorkerOut>> = (0..active).map(|_| Vec::new()).collect();
+    for (shard, out) in outs {
+        per_shard[shard].push(out);
+    }
+    let mut shards = Vec::with_capacity(spec.shards);
+    let mut fleet_latencies = Vec::new();
+    let mut fleet_gate: Option<GateStats> = None;
+    let mut fleet_traffic: Option<TrafficReport> = None;
+    // Span of the arrival schedule: per-shard offered rates are that
+    // shard's admitted count over the same span, so the per-shard and
+    // fleet-level renders stay mutually consistent.
+    let span_s = offsets.last().map(|&l| l as f64 / 1e9).unwrap_or(0.0);
+    for (shard, outs) in per_shard.into_iter().enumerate() {
+        let o = fold_open_outs(outs, base.traffic.slo_ms);
+        if let Some(e) = o.error {
+            return Err(anyhow!("shard {shard}: {e}"));
+        }
+        let (queue_delay, timed_out, within_slo) = (o.queue_delay, o.timed_out, o.within_slo);
+        let completed = o.samples.len();
+        let (latencies_ms, per_payload) = build_latency_tables(o.samples, &base.payloads);
+        fleet_latencies.extend_from_slice(&latencies_ms);
+        let gate_stats = gates[shard].as_ref().map(|g| g.stats());
+        if let Some(g) = &gate_stats {
+            match &mut fleet_gate {
+                Some(merged) => {
+                    merged.wait.merge(&g.wait);
+                    merged.hold.merge(&g.hold);
+                }
+                None => fleet_gate = Some(g.clone()),
+            }
+        }
+        // Per shard, "offered" is what the router admitted here (the
+        // fleet-level report accounts for generator-side sheds), and the
+        // offered rate is that count over the schedule span — not the
+        // whole generator's rate.
+        let shard_offered = routed[shard].load(Ordering::Relaxed);
+        let shard_traffic = TrafficReport {
+            arrivals: base.traffic.arrivals,
+            queue_cap: base.traffic.queue_cap,
+            shed_policy: base.traffic.shed,
+            slo_ms: base.traffic.slo_ms,
+            offered: shard_offered,
+            completed,
+            shed: 0,
+            timed_out,
+            within_slo,
+            queue_delay,
+            offered_rate_hz: if span_s > 0.0 { shard_offered as f64 / span_s } else { 0.0 },
+        };
+        match &mut fleet_traffic {
+            Some(merged) => merged.merge(&shard_traffic),
+            None => fleet_traffic = Some(shard_traffic.clone()),
+        }
+        shards.push(ShardReport {
+            shard,
+            clients: workers_of_shard[shard],
+            report: Some(ServeReport {
+                strategy: base.strategy,
+                clients: workers_of_shard[shard],
+                requests_per_client: base.requests,
+                batch: base.batch,
+                wall_s,
+                latencies_ms,
+                per_payload,
+                gate: gate_stats,
+                traffic: Some(shard_traffic),
+            }),
+        });
+    }
+    for shard in active..spec.shards {
+        shards.push(ShardReport { shard, clients: 0, report: None });
+    }
+    if let Some(t) = &mut fleet_traffic {
+        t.offered = total;
+        t.shed = shed.into_inner();
+        // Fleet-level rate is the whole generator's (the per-shard
+        // values it was merged from are shard-local).
+        t.offered_rate_hz = offered_rate_hz(&offsets);
+    }
+    fleet_latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Ok(FleetReport {
+        strategy: base.strategy,
+        placement: spec.placement,
+        clients: base.clients,
+        requests_per_client: base.requests,
+        batch: base.batch,
+        wall_s,
+        latencies_ms: fleet_latencies,
+        shards,
+        gate: fleet_gate,
+        traffic: fleet_traffic,
     })
 }
 
@@ -495,6 +771,22 @@ mod tests {
             assert_eq!(r.route(7), first, "affinity must stick");
         }
         assert_eq!(r.depth(first), 6);
+    }
+
+    #[test]
+    fn round_robin_survives_counter_wrap() {
+        // Regression (ISSUE 4): with `fetch_add % N` the rotation breaks
+        // when the counter wraps at usize::MAX and N doesn't divide it
+        // (usize::MAX % 3 == 0, so ...MAX-1, MAX, wrap-to-0 yielded
+        // 2, 0, 0 — shard 0 double-served). Pre-seed the counter at the
+        // brink and demand strict rotation across the wrap.
+        let r = ShardRouter::new(3, Placement::RoundRobin);
+        r.rr_next.store(usize::MAX - 1, Ordering::Relaxed);
+        let picks: Vec<usize> = (0..9).map(|_| r.route(0)).collect();
+        for w in picks.windows(2) {
+            assert_eq!(w[1], (w[0] + 1) % 3, "rotation broke across the wrap: {picks:?}");
+        }
+        assert!(picks.iter().all(|&s| s < 3));
     }
 
     #[test]
@@ -619,6 +911,119 @@ mod tests {
         let base = ServeSpec::new(StrategyKind::None, "dna");
         let spec = FleetSpec::new(base, 0, Placement::RoundRobin);
         assert!(serve_fleet(&spec, &backend()).is_err());
+    }
+
+    #[test]
+    fn fleet_quantiles_equal_resorted_concatenation() {
+        // Merge-then-sort invariant (ISSUE 4): the fleet's latency_p must
+        // equal the nearest-rank quantile of the re-sorted concatenation
+        // of every shard's latencies, so a future merge path can't
+        // silently feed unsorted data.
+        let base = ServeSpec::new(StrategyKind::Worker, "dna")
+            .with_payloads(vec!["dna".into(), "mmult".into()])
+            .with_clients(6)
+            .with_requests(4);
+        let r = serve_fleet(&FleetSpec::new(base, 3, Placement::RoundRobin), &backend())
+            .unwrap();
+        let mut concat: Vec<f64> = r
+            .shards
+            .iter()
+            .filter_map(|s| s.report.as_ref())
+            .flat_map(|rep| rep.latencies_ms.iter().copied())
+            .collect();
+        concat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(concat.len(), r.latencies_ms.len());
+        for q in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0] {
+            assert_eq!(
+                r.latency_p(q),
+                nearest_rank(&concat, q),
+                "fleet quantile q={q} diverged from re-sorted concatenation"
+            );
+        }
+    }
+
+    // -------------------------------------------------- open-loop fleet --
+
+    #[test]
+    fn open_loop_fleet_conserves_requests_and_gates_per_shard() {
+        use crate::control::traffic::{ArrivalProcess, TrafficSpec};
+        let base = ServeSpec::new(StrategyKind::Synced, "dna")
+            .with_clients(4)
+            .with_requests(5)
+            .with_traffic(TrafficSpec {
+                arrivals: ArrivalProcess::Poisson { rate_hz: 2_000.0 },
+                queue_cap: 32,
+                shed: ShedPolicy::Block,
+                slo_ms: 1_000.0,
+                seed: 5,
+            });
+        let r = serve_fleet(&FleetSpec::new(base, 2, Placement::RoundRobin), &backend())
+            .unwrap();
+        let t = r.traffic.as_ref().expect("open-loop fleet must report traffic");
+        assert_eq!(t.offered, 20);
+        assert!(t.accounted(0), "requests leaked across the fleet");
+        assert_eq!(t.completed, 20, "blocking policy completes everything");
+        assert_eq!(r.latencies_ms.len(), 20);
+        assert_eq!(r.shards.len(), 2);
+        // Per-shard: own gate, own queue accounting.
+        let mut shard_offered = 0;
+        for s in &r.shards {
+            let rep = s.report.as_ref().unwrap();
+            assert!(rep.gate.is_some(), "shard {} must gate", s.shard);
+            let st = rep.traffic.as_ref().unwrap();
+            assert_eq!(st.completed + st.timed_out, st.offered, "shard {}", s.shard);
+            shard_offered += st.offered;
+        }
+        assert_eq!(shard_offered, 20, "router must place every admitted arrival");
+        let text = r.render();
+        assert!(text.contains("goodput"), "{text}");
+    }
+
+    #[test]
+    fn open_loop_fleet_sheds_only_when_all_queues_full() {
+        use crate::control::traffic::{ArrivalProcess, TrafficSpec};
+        // Flood 2 shards with tiny queues and slow service: the reject
+        // policy must shed, and everything admitted must be accounted.
+        let base = ServeSpec::new(StrategyKind::Worker, "dna")
+            .with_clients(2)
+            .with_requests(30)
+            .with_traffic(TrafficSpec {
+                arrivals: ArrivalProcess::Poisson { rate_hz: 30_000.0 },
+                queue_cap: 2,
+                shed: ShedPolicy::Reject,
+                slo_ms: 50.0,
+                seed: 2,
+            });
+        let r = serve_fleet(
+            &FleetSpec::new(base, 2, Placement::LeastLoaded),
+            &SyntheticBackend::new(2_000),
+        )
+        .unwrap();
+        let t = r.traffic.as_ref().unwrap();
+        assert_eq!(t.offered, 60);
+        assert!(t.shed > 0, "flood against cap-2 queues must shed");
+        assert!(t.accounted(0));
+        assert!(t.completed < t.offered);
+    }
+
+    #[test]
+    fn open_loop_fleet_with_more_shards_than_workers_idles_the_rest() {
+        use crate::control::traffic::{ArrivalProcess, TrafficSpec};
+        let base = ServeSpec::new(StrategyKind::Worker, "dna")
+            .with_clients(2)
+            .with_requests(3)
+            .with_traffic(TrafficSpec {
+                arrivals: ArrivalProcess::Poisson { rate_hz: 1_000.0 },
+                queue_cap: 16,
+                shed: ShedPolicy::Block,
+                slo_ms: 1_000.0,
+                seed: 0,
+            });
+        let r = serve_fleet(&FleetSpec::new(base, 4, Placement::RoundRobin), &backend())
+            .unwrap();
+        assert_eq!(r.shards.len(), 4);
+        assert_eq!(r.active_shards(), 2, "workerless shards must stay idle");
+        assert_eq!(r.traffic.as_ref().unwrap().completed, 6);
     }
 
     #[test]

@@ -21,8 +21,12 @@
 //! stream order (Alg. 3).
 
 use crate::metrics::stats::Histogram;
-use crate::util::Nanos;
-use std::sync::{Condvar, Mutex};
+// The gate's protected state is a pair of monotonic counters (or a
+// histogram) — valid after any panic — so a client that panicked while
+// holding a mutex must not leave the FIFO wedged behind a poisoned lock:
+// every lock site recovers via `lock_recover`.
+use crate::util::{lock_recover, Nanos};
+use std::sync::{Condvar, Mutex, PoisonError};
 use std::time::Instant;
 
 #[derive(Debug)]
@@ -72,13 +76,16 @@ pub struct GateGrant<'a> {
 impl Drop for GateGrant<'_> {
     fn drop(&mut self) {
         let held = self.granted_at.elapsed();
-        // No unwrap: a panic inside Drop during unwinding would abort.
-        if let Ok(mut stats) = self.gate.stats.lock() {
-            stats.hold.record(held.as_nanos().min(u64::MAX as u128) as Nanos);
-        }
-        if let Ok(mut st) = self.gate.state.lock() {
-            st.now_serving += 1;
-        }
+        // Regression (ISSUE 4): this used `if let Ok(..) = lock()`, which
+        // silently skipped the `now_serving` bump whenever the state mutex
+        // was poisoned — wedging every queued waiter forever. The state is
+        // a pair of counters, always valid, so recover the guard instead.
+        // (`lock_recover` never panics, which also keeps this Drop safe
+        // during unwinding.)
+        lock_recover(&self.gate.stats)
+            .hold
+            .record(held.as_nanos().min(u64::MAX as u128) as Nanos);
+        lock_recover(&self.gate.state).now_serving += 1;
         self.gate.cv.notify_all();
     }
 }
@@ -122,17 +129,15 @@ impl GpuGate {
     /// Block until admitted (strict arrival order), recording the wait.
     pub fn acquire(&self) -> GateGrant<'_> {
         let arrived = Instant::now();
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_recover(&self.state);
         let ticket = st.next_ticket;
         st.next_ticket += 1;
         while st.now_serving != ticket {
-            st = self.cv.wait(st).unwrap();
+            st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
         }
         drop(st);
         let waited = arrived.elapsed();
-        self.stats
-            .lock()
-            .unwrap()
+        lock_recover(&self.stats)
             .wait
             .record(waited.as_nanos().min(u64::MAX as u128) as Nanos);
         GateGrant { gate: self, granted_at: Instant::now() }
@@ -155,7 +160,7 @@ impl GpuGate {
 
     /// Snapshot of the wait/hold statistics so far.
     pub fn stats(&self) -> GateStats {
-        self.stats.lock().unwrap().clone()
+        lock_recover(&self.stats).clone()
     }
 }
 
@@ -258,6 +263,36 @@ mod tests {
         // Must be acquirable again without blocking.
         gate.with(|| ());
         assert_eq!(gate.stats().grants(), 2);
+    }
+
+    #[test]
+    fn poisoned_state_mutex_does_not_wedge_waiters() {
+        // Regression (ISSUE 4): GateGrant::Drop used to skip the
+        // `now_serving` bump when the state mutex was poisoned, wedging
+        // every queued waiter forever. Poison the mutex deliberately and
+        // check the FIFO still hands off.
+        let gate = Arc::new(GpuGate::new());
+        {
+            let gate = Arc::clone(&gate);
+            let _ = std::thread::spawn(move || {
+                let _guard = gate.state.lock().unwrap();
+                panic!("poison the state mutex");
+            })
+            .join();
+        }
+        assert!(gate.state.is_poisoned(), "setup must actually poison");
+        // Acquire/release must still progress the ticket counter...
+        gate.with(|| ());
+        // ...and a queued waiter must still be woken by a release.
+        let first = gate.acquire();
+        let waiter = {
+            let gate = Arc::clone(&gate);
+            std::thread::spawn(move || gate.with(|| 7))
+        };
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        gate.release(first);
+        assert_eq!(waiter.join().unwrap(), 7);
+        assert_eq!(gate.stats().grants(), 3);
     }
 
     #[test]

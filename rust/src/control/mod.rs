@@ -10,13 +10,16 @@
 //! ([`worker`]) — and the horizontal scaling layer ([`fleet`]): a
 //! [`ShardRouter`] placing clients over N shards, each shard owning its
 //! own gate + policy instance so the paper's per-GPU isolation guarantee
-//! survives fleet-scale serving.
+//! survives fleet-scale serving. The [`traffic`] module opens the load
+//! axis: seeded arrival processes, bounded admission queues with shed
+//! policies, and SLO accounting measured from arrival (DESIGN.md §9).
 
 pub mod fleet;
 pub mod gate;
 pub mod lock;
 pub mod policy;
 pub mod serving;
+pub mod traffic;
 pub mod worker;
 
 pub use fleet::{serve_fleet, FleetReport, FleetSpec, Placement, ShardReport, ShardRouter};
@@ -26,5 +29,8 @@ pub use policy::{AccessPolicy, Admission, Arbitration, OrderedOpRule};
 pub use serving::{
     serve, serve_dna, ManifestBackend, PayloadExecutor, ResolvedPayload, ServeBackend,
     ServeReport, ServeSpec, SyntheticBackend,
+};
+pub use traffic::{
+    AdmissionQueue, ArrivalProcess, ShedPolicy, TrafficReport, TrafficSpec,
 };
 pub use worker::{WorkerPhase, WorkerState};

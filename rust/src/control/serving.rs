@@ -29,9 +29,14 @@
 use crate::config::StrategyKind;
 use crate::control::gate::{GateStats, GpuGate};
 use crate::control::policy::{AccessPolicy, Admission};
+use crate::control::traffic::{
+    AdmissionQueue, ShedPolicy, TrafficReport, TrafficSpec,
+};
+use crate::metrics::stats::Histogram;
 use anyhow::{anyhow, Result};
 use std::path::PathBuf;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Barrier};
 use std::time::{Duration, Instant};
 
 // ---------------------------------------------------------------------
@@ -213,14 +218,20 @@ impl ServeBackend for SyntheticBackend {
 #[derive(Debug, Clone)]
 pub struct ServeSpec {
     pub strategy: StrategyKind,
-    /// Payload names; client `i` serves `payloads[i % payloads.len()]`.
+    /// Payload names; client `i` serves `payloads[i % payloads.len()]`
+    /// (closed loop) / arrival `k` serves `payloads[k % len]` (open loop).
     pub payloads: Vec<String>,
     pub clients: usize,
-    /// Requests per client.
+    /// Requests per client. Under open-loop arrivals the run generates
+    /// `clients * requests` arrivals total (same request budget, but
+    /// paced by the arrival process instead of by completions).
     pub requests: usize,
     /// Requests admitted per gate grant (1 = per-op admission, the
     /// paper's shape; >1 amortises admission over a burst).
     pub batch: usize,
+    /// Traffic shape: arrival process, admission-queue bound, shed
+    /// policy, SLO target. Defaults to the historical closed loop.
+    pub traffic: TrafficSpec,
 }
 
 impl ServeSpec {
@@ -231,6 +242,7 @@ impl ServeSpec {
             clients: 2,
             requests: 50,
             batch: 1,
+            traffic: TrafficSpec::default(),
         }
     }
 
@@ -254,6 +266,16 @@ impl ServeSpec {
         self
     }
 
+    pub fn with_traffic(mut self, traffic: TrafficSpec) -> Self {
+        self.traffic = traffic;
+        self
+    }
+
+    pub fn with_arrivals(mut self, arrivals: crate::control::traffic::ArrivalProcess) -> Self {
+        self.traffic.arrivals = arrivals;
+        self
+    }
+
     pub(crate) fn validate(&self) -> Result<()> {
         if self.clients == 0 || self.requests == 0 {
             return Err(anyhow!("serve requires clients > 0 and requests > 0"));
@@ -264,6 +286,7 @@ impl ServeSpec {
         if self.payloads.is_empty() {
             return Err(anyhow!("at least one payload required"));
         }
+        self.traffic.validate().map_err(|e| anyhow!(e))?;
         Ok(())
     }
 }
@@ -301,15 +324,21 @@ pub struct ServeReport {
     pub per_payload: Vec<PayloadReport>,
     /// Gate wait/hold statistics (None for ungated strategies).
     pub gate: Option<GateStats>,
+    /// Traffic/SLO accounting (Some for open-loop runs).
+    pub traffic: Option<TrafficReport>,
 }
 
 impl ServeReport {
+    /// Requests offered to the run (under open-loop arrivals some may
+    /// have been shed; see [`ServeReport::traffic`]).
     pub fn total(&self) -> usize {
         self.clients * self.requests_per_client
     }
 
+    /// Completed inferences per second of wall clock (completions, not
+    /// offered requests, so shed traffic never inflates throughput).
     pub fn ips(&self) -> f64 {
-        self.total() as f64 / self.wall_s.max(1e-9)
+        self.latencies_ms.len() as f64 / self.wall_s.max(1e-9)
     }
 
     /// Nearest-rank quantile (rank `ceil(q*n)`) of the pooled latencies;
@@ -350,14 +379,25 @@ impl ServeReport {
                 out.push_str(line);
             }
         }
+        if let Some(t) = &self.traffic {
+            for line in t.render(self.wall_s).lines() {
+                out.push_str("\n  ");
+                out.push_str(line);
+            }
+        }
         out
     }
 }
 
 /// Nearest-rank quantile of a sorted slice; 0.0 when empty. Shared with
 /// the fleet layer, which reports the same quantiles over merged
-/// latencies.
+/// latencies — the debug assertion keeps a future merge path from
+/// silently feeding unsorted data (ISSUE 4).
 pub(crate) fn nearest_rank(sorted: &[f64], q: f64) -> f64 {
+    debug_assert!(
+        sorted.windows(2).all(|w| w[0] <= w[1]),
+        "nearest_rank requires sorted input"
+    );
     let n = sorted.len();
     if n == 0 {
         return 0.0;
@@ -398,11 +438,43 @@ enum StreamJob {
     Release,
 }
 
-/// Serve `spec` against `backend`. Spawns one client thread per client
-/// (plus a stream/worker thread per client for the deferred strategies),
-/// all sharing one FIFO [`GpuGate`] when the policy is gated.
+/// Sort recorded samples into the pooled + per-payload latency tables
+/// (shared by the closed-loop, open-loop and fleet assembly paths).
+pub(crate) fn build_latency_tables(
+    samples: Vec<Sample>,
+    payloads: &[String],
+) -> (Vec<f64>, Vec<PayloadReport>) {
+    let mut by_slot: Vec<Vec<f64>> = vec![Vec::new(); payloads.len()];
+    let mut latencies_ms = Vec::with_capacity(samples.len());
+    for (slot, ms) in samples {
+        by_slot[slot].push(ms);
+        latencies_ms.push(ms);
+    }
+    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut per_payload = Vec::new();
+    for (slot, mut lats) in by_slot.into_iter().enumerate() {
+        if lats.is_empty() {
+            continue;
+        }
+        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        per_payload.push(PayloadReport { payload: payloads[slot].clone(), latencies_ms: lats });
+    }
+    (latencies_ms, per_payload)
+}
+
+/// Serve `spec` against `backend`.
+///
+/// Closed loop (the default): one client thread per client (plus a
+/// stream/worker thread per client for the deferred strategies), all
+/// sharing one FIFO [`GpuGate`] when the policy is gated. Open-loop
+/// arrival processes (`spec.traffic`) take the open-loop path instead:
+/// a paced generator in front of a bounded admission queue drained by a
+/// fixed worker pool, with latency measured from arrival (DESIGN.md §9).
 pub fn serve(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<ServeReport> {
     spec.validate()?;
+    if spec.traffic.arrivals.is_open_loop() {
+        return serve_open_loop(spec, backend);
+    }
     let policy = AccessPolicy::new(spec.strategy);
     let resolved: Vec<ResolvedPayload> = spec
         .payloads
@@ -434,24 +506,7 @@ pub fn serve(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<ServeReport
     for r in joined {
         samples.extend(r?);
     }
-    let mut by_slot: Vec<Vec<f64>> = vec![Vec::new(); spec.payloads.len()];
-    let mut latencies_ms = Vec::with_capacity(samples.len());
-    for (slot, ms) in samples {
-        by_slot[slot].push(ms);
-        latencies_ms.push(ms);
-    }
-    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let mut per_payload = Vec::new();
-    for (slot, mut lats) in by_slot.into_iter().enumerate() {
-        if lats.is_empty() {
-            continue;
-        }
-        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        per_payload.push(PayloadReport {
-            payload: spec.payloads[slot].clone(),
-            latencies_ms: lats,
-        });
-    }
+    let (latencies_ms, per_payload) = build_latency_tables(samples, &spec.payloads);
     Ok(ServeReport {
         strategy: spec.strategy,
         clients: spec.clients,
@@ -461,6 +516,7 @@ pub fn serve(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<ServeReport
         latencies_ms,
         per_payload,
         gate: gate.map(|g| g.stats()),
+        traffic: None,
     })
 }
 
@@ -704,6 +760,294 @@ fn check_out(rp: &ResolvedPayload, out: &[f32]) -> Result<()> {
 }
 
 // ---------------------------------------------------------------------
+// open-loop serving
+// ---------------------------------------------------------------------
+
+/// One generated request waiting in an admission queue. `arrival_at` is
+/// the *scheduled* arrival instant — latency and queue delay are
+/// measured from here even when the generator was delayed pushing it
+/// (backpressure), which is exactly the coordinated-omission correction.
+#[derive(Debug)]
+pub(crate) struct Pending {
+    /// Index into `ServeSpec::payloads`.
+    pub slot: usize,
+    /// Global arrival sequence number (input perturbation).
+    pub seq: usize,
+    pub arrival_at: Instant,
+}
+
+/// What one open-loop worker brings home.
+#[derive(Debug, Default)]
+pub(crate) struct OpenWorkerOut {
+    pub samples: Vec<Sample>,
+    /// Arrival-to-dequeue delay per dequeued request (ns).
+    pub queue_delay: Histogram,
+    /// Requests dropped at dequeue (timeout shed policy).
+    pub timed_out: usize,
+    /// Requests whose execution failed (first error reported below).
+    pub failed: usize,
+    pub error: Option<anyhow::Error>,
+}
+
+/// Aggregated outcome of a pool of open-loop workers (one shard's worth).
+pub(crate) struct OpenOutcome {
+    pub samples: Vec<Sample>,
+    pub queue_delay: Histogram,
+    pub timed_out: usize,
+    /// Samples meeting the SLO (arrival-to-completion <= slo_ms).
+    pub within_slo: usize,
+    /// First worker error, if any (failed-request counts always come
+    /// with one).
+    pub error: Option<anyhow::Error>,
+}
+
+/// Fold worker outputs into one outcome (shared by the single-shard and
+/// per-shard fleet assembly paths, so shed/timeout/SLO accounting can
+/// never diverge between them).
+pub(crate) fn fold_open_outs(outs: Vec<OpenWorkerOut>, slo_ms: f64) -> OpenOutcome {
+    let mut samples = Vec::new();
+    let mut queue_delay = Histogram::new();
+    let (mut timed_out, mut failed) = (0usize, 0usize);
+    let mut error = None;
+    for o in outs {
+        samples.extend(o.samples);
+        queue_delay.merge(&o.queue_delay);
+        timed_out += o.timed_out;
+        failed += o.failed;
+        if error.is_none() {
+            error = o.error;
+        }
+    }
+    debug_assert!(error.is_some() || failed == 0, "failed requests must come with an error");
+    let within_slo = samples.iter().filter(|(_, ms)| *ms <= slo_ms).count();
+    OpenOutcome { samples, queue_delay, timed_out, within_slo, error }
+}
+
+/// An open-loop serving worker: drains an [`AdmissionQueue`], admitting
+/// bursts of up to `batch` requests per gate grant. `done` (when given)
+/// runs once per dequeued request — the fleet uses it to release router
+/// depth. An erroring worker keeps draining (so blocking producers can
+/// never wedge) and reports the first error at the end.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn open_worker(
+    backend: &dyn ServeBackend,
+    resolved: &[ResolvedPayload],
+    queue: &AdmissionQueue<Pending>,
+    gate: Option<&GpuGate>,
+    batch: usize,
+    timeout: Option<Duration>,
+    share: f64,
+    warm: &Barrier,
+    client: usize,
+    done: Option<&(dyn Fn() + Sync)>,
+) -> OpenWorkerOut {
+    let mut out = OpenWorkerOut::default();
+    let exec = match backend.executor() {
+        Ok(e) => Some(e),
+        Err(e) => {
+            out.error = Some(e);
+            None
+        }
+    };
+    if let Some(exec) = &exec {
+        // Warm-up (first-use compile) outside the recorded window,
+        // through the gate so grant accounting matches the closed loop.
+        let rp = &resolved[client % resolved.len()];
+        let warmed = match gate {
+            Some(g) => g.with(|| exec.execute(rp.index, &rp.base_inputs)),
+            None => exec.execute(rp.index, &rp.base_inputs),
+        };
+        if let Err(e) = warmed.and_then(|r| check_out(rp, &r)) {
+            out.error = Some(e);
+        }
+    }
+    // Every worker reaches the barrier exactly once, healthy or not —
+    // the dispatcher starts the clock behind it.
+    warm.wait();
+    let Some(exec) = exec.filter(|_| out.error.is_none()) else {
+        // Unhealthy: drain so blocking/timeout pushes cannot deadlock.
+        while queue.pop().is_some() {
+            out.failed += 1;
+            if let Some(f) = done {
+                f();
+            }
+        }
+        return out;
+    };
+    while let Some(first) = queue.pop() {
+        // Burst collection: the first request plus whatever backlog is
+        // already waiting, up to `batch` per admission.
+        let mut burst = vec![first];
+        while burst.len() < batch {
+            match queue.try_pop() {
+                Some(p) => burst.push(p),
+                None => break,
+            }
+        }
+        // Dequeue-side accounting happens HERE, before any gate wait:
+        // the queue-delay histogram measures arrival-to-dequeue only
+        // (the gate wait has its own histogram), and the timeout policy
+        // judges a request's age at dequeue — never acquiring a grant
+        // just to drop an already-expired burst.
+        let mut ready = Vec::with_capacity(burst.len());
+        for p in burst {
+            let qd = p.arrival_at.elapsed();
+            out.queue_delay.record(qd.as_nanos().min(u64::MAX as u128) as u64);
+            if timeout.is_some_and(|t| qd > t) {
+                out.timed_out += 1;
+                if let Some(f) = done {
+                    f();
+                }
+            } else {
+                ready.push(p);
+            }
+        }
+        if ready.is_empty() {
+            continue;
+        }
+        let grant = gate.map(|g| g.acquire());
+        for p in ready {
+            let rp = &resolved[p.slot];
+            let mut inputs = rp.base_inputs.clone();
+            perturb(&mut inputs, p.seq, p.seq);
+            let t = Instant::now();
+            match exec.execute(rp.index, &inputs).and_then(|r| check_out(rp, &r)) {
+                Ok(()) => {
+                    if share < 1.0 {
+                        // PTB SM-share simulation (see run_client).
+                        std::thread::sleep(t.elapsed().mul_f64(1.0 / share - 1.0));
+                    }
+                    out.samples.push((p.slot, p.arrival_at.elapsed().as_secs_f64() * 1e3));
+                }
+                Err(e) => {
+                    out.failed += 1;
+                    if out.error.is_none() {
+                        out.error = Some(e);
+                    }
+                }
+            }
+            if let Some(f) = done {
+                f();
+            }
+        }
+        if let (Some(g), Some(grant)) = (gate, grant) {
+            g.release(grant);
+        }
+    }
+    out
+}
+
+/// Push one request into `queue` per the shed policy; false = shed.
+pub(crate) fn admit(queue: &AdmissionQueue<Pending>, p: Pending, shed: ShedPolicy) -> bool {
+    match shed {
+        ShedPolicy::Block => queue.push_blocking(p),
+        ShedPolicy::Reject => queue.try_push(p).is_ok(),
+        ShedPolicy::Timeout { ms } => queue.push_timeout(p, Duration::from_millis(ms)).is_ok(),
+    }
+}
+
+/// Realised offered rate of a schedule (requests/s over its span).
+pub(crate) fn offered_rate_hz(offsets: &[crate::util::Nanos]) -> f64 {
+    match offsets.last() {
+        Some(&last) if last > 0 => offsets.len() as f64 / (last as f64 / 1e9),
+        _ => 0.0,
+    }
+}
+
+/// Open-loop serving: a paced generator (this thread) feeds a bounded
+/// [`AdmissionQueue`] drained by `spec.clients` workers. The deferred
+/// per-client stream machinery is a closed-loop construct; under open
+/// loop the workers *are* the streams, so every gated strategy brackets
+/// execution with the FIFO gate directly (one grant per burst).
+fn serve_open_loop(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<ServeReport> {
+    let policy = AccessPolicy::new(spec.strategy);
+    let resolved: Vec<ResolvedPayload> = spec
+        .payloads
+        .iter()
+        .map(|p| backend.resolve(p))
+        .collect::<Result<_>>()?;
+    let gate = if policy.gated() { Some(GpuGate::new()) } else { None };
+    let total = spec.clients * spec.requests;
+    let offsets = spec.traffic.arrivals.schedule_n(total, spec.traffic.seed);
+    let queue: AdmissionQueue<Pending> = AdmissionQueue::new(spec.traffic.queue_cap);
+    let shed = AtomicUsize::new(0);
+    let warm = Barrier::new(spec.clients + 1);
+    let share = policy.sm_share(spec.clients);
+    let timeout = match spec.traffic.shed {
+        ShedPolicy::Timeout { ms } => Some(Duration::from_millis(ms)),
+        _ => None,
+    };
+
+    let (outs, wall_s) = std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for c in 0..spec.clients {
+            let (queue, gate, warm, resolved) = (&queue, gate.as_ref(), &warm, &resolved);
+            handles.push(s.spawn(move || {
+                open_worker(
+                    backend, resolved, queue, gate, spec.batch, timeout, share, warm, c, None,
+                )
+            }));
+        }
+        warm.wait();
+        let t0 = Instant::now();
+        for (seq, &off) in offsets.iter().enumerate() {
+            let arrival_at = t0 + Duration::from_nanos(off);
+            let now = Instant::now();
+            if arrival_at > now {
+                std::thread::sleep(arrival_at - now);
+            }
+            let p = Pending { slot: seq % resolved.len(), seq, arrival_at };
+            if !admit(&queue, p, spec.traffic.shed) {
+                shed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        queue.close();
+        let outs: Vec<OpenWorkerOut> = handles
+            .into_iter()
+            .map(|h| {
+                h.join().unwrap_or_else(|_| OpenWorkerOut {
+                    error: Some(anyhow!("open-loop worker thread panicked")),
+                    ..OpenWorkerOut::default()
+                })
+            })
+            .collect();
+        // Wall clock spans generation AND backlog drain: the makespan.
+        (outs, t0.elapsed().as_secs_f64())
+    });
+
+    let o = fold_open_outs(outs, spec.traffic.slo_ms);
+    if let Some(e) = o.error {
+        return Err(e);
+    }
+    let (queue_delay, timed_out, within_slo) = (o.queue_delay, o.timed_out, o.within_slo);
+    let completed = o.samples.len();
+    let (latencies_ms, per_payload) = build_latency_tables(o.samples, &spec.payloads);
+    Ok(ServeReport {
+        strategy: spec.strategy,
+        clients: spec.clients,
+        requests_per_client: spec.requests,
+        batch: spec.batch,
+        wall_s,
+        latencies_ms,
+        per_payload,
+        gate: gate.map(|g| g.stats()),
+        traffic: Some(TrafficReport {
+            arrivals: spec.traffic.arrivals,
+            queue_cap: spec.traffic.queue_cap,
+            shed_policy: spec.traffic.shed,
+            slo_ms: spec.traffic.slo_ms,
+            offered: total,
+            completed,
+            shed: shed.into_inner(),
+            timed_out,
+            within_slo,
+            queue_delay,
+            offered_rate_hz: offered_rate_hz(&offsets),
+        }),
+    })
+}
+
+// ---------------------------------------------------------------------
 // compatibility wrapper
 // ---------------------------------------------------------------------
 
@@ -799,6 +1143,7 @@ mod tests {
             latencies_ms: vec![],
             per_payload: vec![],
             gate: None,
+            traffic: None,
         };
         assert_eq!(empty.latency_p(0.5), 0.0);
         assert_eq!(empty.latency_p(0.99), 0.0);
@@ -836,5 +1181,141 @@ mod tests {
         assert!(text.contains("strategy synced"), "{text}");
         assert!(text.contains("gate wait"), "{text}");
         assert!(text.contains("IPS"), "{text}");
+    }
+
+    // ------------------------------------------------------ open loop --
+
+    use crate::control::traffic::ArrivalProcess;
+
+    fn open_traffic(rate_hz: f64) -> TrafficSpec {
+        TrafficSpec {
+            arrivals: ArrivalProcess::Poisson { rate_hz },
+            queue_cap: 64,
+            shed: ShedPolicy::Block,
+            slo_ms: 1_000.0,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn open_loop_serves_every_strategy() {
+        for strategy in StrategyKind::ALL {
+            let spec = ServeSpec::new(strategy, "dna")
+                .with_clients(2)
+                .with_requests(5)
+                .with_traffic(open_traffic(2_000.0));
+            let r = serve(&spec, &backend()).unwrap_or_else(|e| panic!("{strategy}: {e}"));
+            let t = r.traffic.as_ref().expect("open loop must report traffic");
+            assert_eq!(t.offered, 10, "{strategy}");
+            assert!(t.accounted(0), "{strategy}: requests leaked");
+            // Blocking shed policy + generous SLO: everything completes.
+            assert_eq!(t.completed, 10, "{strategy}");
+            assert_eq!(t.shed, 0, "{strategy}");
+            assert_eq!(r.latencies_ms.len(), 10, "{strategy}");
+            assert_eq!(t.queue_delay.count(), 10, "{strategy}");
+            assert_eq!(r.gate.is_some(), AccessPolicy::new(strategy).gated(), "{strategy}");
+        }
+    }
+
+    #[test]
+    fn open_loop_overload_sheds_with_reject() {
+        // Service capacity ~= clients/exec_us; offer far beyond it into a
+        // tiny queue: the reject policy must shed most of the flood.
+        let spec = ServeSpec::new(StrategyKind::Synced, "dna")
+            .with_clients(2)
+            .with_requests(20)
+            .with_traffic(TrafficSpec {
+                arrivals: ArrivalProcess::Poisson { rate_hz: 20_000.0 },
+                queue_cap: 2,
+                shed: ShedPolicy::Reject,
+                slo_ms: 50.0,
+                seed: 1,
+            });
+        let r = serve(&spec, &SyntheticBackend::new(2_000)).unwrap();
+        let t = r.traffic.as_ref().unwrap();
+        assert_eq!(t.offered, 40);
+        assert!(t.shed > 0, "overload against cap 2 must shed");
+        assert!(t.accounted(0));
+        assert_eq!(t.completed, r.latencies_ms.len());
+        assert!(t.completed < t.offered);
+    }
+
+    #[test]
+    fn open_loop_slo_accounting_brackets() {
+        let base = ServeSpec::new(StrategyKind::Worker, "dna")
+            .with_clients(2)
+            .with_requests(5);
+        // Unreachably generous SLO: attainment equals completion rate.
+        let generous = base
+            .clone()
+            .with_traffic(TrafficSpec { slo_ms: 1e9, ..open_traffic(2_000.0) });
+        let r = serve(&generous, &backend()).unwrap();
+        let t = r.traffic.as_ref().unwrap();
+        assert_eq!(t.within_slo, t.completed);
+        assert!((t.slo_attainment_pct() - 100.0).abs() < 1e-9);
+        assert!(t.goodput(r.wall_s) > 0.0);
+        // Unreachably tight SLO: nothing attains it.
+        let tight = base.with_traffic(TrafficSpec { slo_ms: 1e-6, ..open_traffic(2_000.0) });
+        let r = serve(&tight, &backend()).unwrap();
+        assert_eq!(r.traffic.as_ref().unwrap().within_slo, 0);
+    }
+
+    #[test]
+    fn open_loop_timeout_policy_drops_stale_requests() {
+        // 1 ms of patience against multi-ms service: the backlog ages out
+        // (at admission or at dequeue) instead of growing unboundedly.
+        let spec = ServeSpec::new(StrategyKind::Synced, "dna")
+            .with_clients(1)
+            .with_requests(30)
+            .with_traffic(TrafficSpec {
+                arrivals: ArrivalProcess::Poisson { rate_hz: 20_000.0 },
+                queue_cap: 4,
+                shed: ShedPolicy::Timeout { ms: 1 },
+                slo_ms: 50.0,
+                seed: 3,
+            });
+        let r = serve(&spec, &SyntheticBackend::new(3_000)).unwrap();
+        let t = r.traffic.as_ref().unwrap();
+        assert!(t.shed + t.timed_out > 0, "saturation must age requests out");
+        assert!(t.accounted(0));
+    }
+
+    #[test]
+    fn open_loop_batching_and_payload_mix() {
+        let spec = ServeSpec::new(StrategyKind::Worker, "dna")
+            .with_payloads(vec!["dna".into(), "mmult".into()])
+            .with_clients(2)
+            .with_requests(6)
+            .with_batch(3)
+            .with_traffic(open_traffic(5_000.0));
+        let r = serve(&spec, &backend()).unwrap();
+        assert_eq!(r.traffic.as_ref().unwrap().completed, 12);
+        // Arrivals alternate payload slots: both payloads must be served.
+        assert_eq!(r.per_payload.len(), 2);
+        let text = r.render();
+        assert!(text.contains("goodput"), "{text}");
+        assert!(text.contains("attainment"), "{text}");
+    }
+
+    #[test]
+    fn open_loop_streams_are_seed_deterministic() {
+        let p = ArrivalProcess::Poisson { rate_hz: 777.0 };
+        assert_eq!(p.schedule_n(64, 11), p.schedule_n(64, 11));
+        assert_ne!(p.schedule_n(64, 11), p.schedule_n(64, 12));
+    }
+
+    #[test]
+    fn open_loop_rejects_invalid_traffic() {
+        let b = backend();
+        let bad_cap = ServeSpec::new(StrategyKind::None, "x").with_traffic(TrafficSpec {
+            queue_cap: 0,
+            ..open_traffic(100.0)
+        });
+        assert!(serve(&bad_cap, &b).is_err());
+        let bad_slo = ServeSpec::new(StrategyKind::None, "x").with_traffic(TrafficSpec {
+            slo_ms: 0.0,
+            ..open_traffic(100.0)
+        });
+        assert!(serve(&bad_slo, &b).is_err());
     }
 }

@@ -1,0 +1,760 @@
+//! Traffic generation and bounded admission: the offered-load axis.
+//!
+//! Every serving path in this repository used to be **closed-loop**: each
+//! client fires its next request only after the previous one returns, so
+//! the offered load can never exceed the service rate and queueing delay
+//! is invisible — the classic *coordinated omission* trap, which
+//! understates tail latency under real traffic. This module opens that
+//! loop:
+//!
+//! * [`ArrivalProcess`] — seeded, deterministic arrival streams: the
+//!   closed loop as before, open-loop Poisson, bursty on/off, and a
+//!   linear rate ramp. Identical seeds produce identical streams.
+//! * [`ShedPolicy`] + [`AdmissionQueue`] — a bounded queue in front of
+//!   each shard's gate with a configurable full-queue policy: `block`
+//!   (backpressure onto the generator), `reject` (shed immediately), or
+//!   `timeout` (bounded admission wait, plus dequeue-side expiry).
+//! * [`TrafficReport`] — SLO accounting where latency is measured from
+//!   **arrival** (the scheduled instant, not admission and not dispatch),
+//!   reporting goodput, SLO-attainment %, queue-delay histograms, and
+//!   shed/timeout counts.
+//!
+//! The live serving loop ([`crate::control::serving`]), the fleet
+//! ([`crate::control::fleet`]) and the simulator
+//! ([`crate::config::SimConfig::arrivals`]) all consume the same
+//! [`ArrivalProcess`], so the saturation curve has the same shape in
+//! wall-clock and in virtual time. DESIGN.md §9 documents the contract.
+
+use crate::metrics::stats::Histogram;
+use crate::util::{lock_recover, DetRng, Nanos};
+use std::collections::VecDeque;
+use std::fmt;
+use std::str::FromStr;
+use std::sync::{Condvar, Mutex, PoisonError};
+use std::time::Duration;
+
+/// RNG stream tag for arrival generation (independent of the simulator's
+/// `EXEC`/`STAL` streams).
+const ARRIVAL_RNG_TAG: u64 = 0x5452_4646; // "TRFF"
+
+// ---------------------------------------------------------------------
+// arrival processes
+// ---------------------------------------------------------------------
+
+/// How requests arrive at the serving system.
+///
+/// All open-loop processes are generated from a seeded [`DetRng`] stream:
+/// the schedule is a pure function of (process, seed), never of service
+/// progress — that independence is what makes the load *offered* rather
+/// than *admitted*.
+///
+/// # Example
+///
+/// ```
+/// use cook::control::traffic::ArrivalProcess;
+///
+/// let p: ArrivalProcess = "poisson:200".parse().unwrap();
+/// assert!(p.is_open_loop());
+/// // Identical seeds produce identical arrival streams.
+/// assert_eq!(p.schedule_n(100, 7), p.schedule_n(100, 7));
+/// assert_ne!(p.schedule_n(100, 7), p.schedule_n(100, 8));
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Lock-step clients (the pre-traffic behaviour): a client issues its
+    /// next request when the previous one returns. No pacing, no sheds.
+    ClosedLoop,
+    /// Open-loop Poisson arrivals at `rate_hz` (exponential gaps).
+    Poisson { rate_hz: f64 },
+    /// On/off bursts: Poisson at `rate_hz` during `on_ms` windows,
+    /// silence during `off_ms` windows (square-wave modulated Poisson).
+    Bursty { rate_hz: f64, on_ms: u64, off_ms: u64 },
+    /// Linear rate ramp from `from_hz` to `to_hz` across the run (by
+    /// arrival index in [`ArrivalProcess::schedule_n`], by time fraction
+    /// in [`ArrivalProcess::schedule_until`]).
+    Ramp { from_hz: f64, to_hz: f64 },
+}
+
+impl ArrivalProcess {
+    /// Does this process pace arrivals independently of completions?
+    pub fn is_open_loop(&self) -> bool {
+        !matches!(self, Self::ClosedLoop)
+    }
+
+    /// Reject non-positive rates/windows up front so serving paths never
+    /// divide by zero mid-run.
+    pub fn validate(&self) -> Result<(), String> {
+        let ok = |r: f64| r.is_finite() && r > 0.0;
+        match *self {
+            Self::ClosedLoop => Ok(()),
+            Self::Poisson { rate_hz } if ok(rate_hz) => Ok(()),
+            Self::Bursty { rate_hz, on_ms, off_ms } if ok(rate_hz) && on_ms > 0 && off_ms > 0 => {
+                Ok(())
+            }
+            Self::Ramp { from_hz, to_hz } if ok(from_hz) && ok(to_hz) => Ok(()),
+            _ => Err(format!("invalid arrival process '{self}' (rates/windows must be > 0)")),
+        }
+    }
+
+    /// Instantaneous rate at run fraction `frac` in [0, 1].
+    fn rate_at(&self, frac: f64) -> f64 {
+        match *self {
+            Self::ClosedLoop => 0.0,
+            Self::Poisson { rate_hz } | Self::Bursty { rate_hz, .. } => rate_hz,
+            Self::Ramp { from_hz, to_hz } => from_hz + (to_hz - from_hz) * frac.clamp(0.0, 1.0),
+        }
+    }
+
+    /// One exponential inter-arrival gap (ns) at `rate_hz`.
+    fn exp_gap_ns(rng: &mut DetRng, rate_hz: f64) -> f64 {
+        // u in [0,1) => (1-u) in (0,1]: ln never sees 0.
+        -(1.0 - rng.f64()).ln() / rate_hz * 1e9
+    }
+
+    /// Push `t_ns` out of a bursty off-window (to the start of the next
+    /// on-window); identity for the other processes.
+    fn skip_off_phase(&self, t_ns: f64) -> f64 {
+        if let Self::Bursty { on_ms, off_ms, .. } = self {
+            let on = *on_ms as f64 * 1e6;
+            let cycle = on + *off_ms as f64 * 1e6;
+            let pos = t_ns % cycle;
+            if pos >= on {
+                return t_ns - pos + cycle;
+            }
+        }
+        t_ns
+    }
+
+    /// Exactly `n` arrival offsets (ns from run start), sorted. The
+    /// closed loop has no schedule: it returns `n` zeros (callers gate on
+    /// [`ArrivalProcess::is_open_loop`] before pacing).
+    pub fn schedule_n(&self, n: usize, seed: u64) -> Vec<Nanos> {
+        if !self.is_open_loop() {
+            return vec![0; n];
+        }
+        let mut rng = DetRng::new(seed).child(ARRIVAL_RNG_TAG);
+        let mut out = Vec::with_capacity(n);
+        let mut t = 0.0f64;
+        for k in 0..n {
+            let frac = k as f64 / n.max(1) as f64;
+            t += Self::exp_gap_ns(&mut rng, self.rate_at(frac));
+            t = self.skip_off_phase(t);
+            out.push(t as Nanos);
+        }
+        out
+    }
+
+    /// Arrival offsets (ns) strictly before `horizon_ns` (the simulator
+    /// mirror: the stream covers the virtual-time horizon). Capped at
+    /// 2^20 arrivals as a runaway-rate backstop.
+    pub fn schedule_until(&self, horizon_ns: Nanos, seed: u64) -> Vec<Nanos> {
+        if !self.is_open_loop() || horizon_ns == 0 {
+            return Vec::new();
+        }
+        const CAP: usize = 1 << 20;
+        let mut rng = DetRng::new(seed).child(ARRIVAL_RNG_TAG);
+        let mut out = Vec::new();
+        let h = horizon_ns as f64;
+        let mut t = 0.0f64;
+        while out.len() < CAP {
+            t += Self::exp_gap_ns(&mut rng, self.rate_at((t / h).min(1.0)));
+            t = self.skip_off_phase(t);
+            if t >= h {
+                break;
+            }
+            out.push(t as Nanos);
+        }
+        out
+    }
+}
+
+impl fmt::Display for ArrivalProcess {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::ClosedLoop => f.write_str("closed"),
+            Self::Poisson { rate_hz } => write!(f, "poisson:{rate_hz}"),
+            Self::Bursty { rate_hz, on_ms, off_ms } => {
+                write!(f, "bursty:{rate_hz}@{on_ms}/{off_ms}")
+            }
+            Self::Ramp { from_hz, to_hz } => write!(f, "ramp:{from_hz}-{to_hz}"),
+        }
+    }
+}
+
+impl FromStr for ArrivalProcess {
+    type Err = String;
+
+    /// `closed` | `poisson:RATE` | `bursty:RATE[@ON_MS/OFF_MS]` |
+    /// `ramp:FROM-TO` (rates in requests/s).
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let bad = |what: &str| format!("bad arrival process '{s}': {what}");
+        let parse_rate = |v: &str| -> Result<f64, String> {
+            v.trim().parse::<f64>().map_err(|_| bad("rate must be a number"))
+        };
+        let out = if s == "closed" || s == "closed-loop" {
+            Self::ClosedLoop
+        } else if let Some(rate) = s.strip_prefix("poisson:") {
+            Self::Poisson { rate_hz: parse_rate(rate)? }
+        } else if let Some(rest) = s.strip_prefix("bursty:") {
+            let (rate, windows) = rest.split_once('@').unwrap_or((rest, "100/100"));
+            let (on, off) = windows
+                .split_once('/')
+                .ok_or_else(|| bad("expected bursty:RATE[@ON_MS/OFF_MS]"))?;
+            Self::Bursty {
+                rate_hz: parse_rate(rate)?,
+                on_ms: on.trim().parse().map_err(|_| bad("bad on_ms"))?,
+                off_ms: off.trim().parse().map_err(|_| bad("bad off_ms"))?,
+            }
+        } else if let Some(rest) = s.strip_prefix("ramp:") {
+            let (from, to) =
+                rest.split_once('-').ok_or_else(|| bad("expected ramp:FROM-TO"))?;
+            Self::Ramp { from_hz: parse_rate(from)?, to_hz: parse_rate(to)? }
+        } else {
+            return Err(bad("expected closed|poisson:RATE|bursty:RATE@ON/OFF|ramp:FROM-TO"));
+        };
+        out.validate()?;
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------
+// shed policy
+// ---------------------------------------------------------------------
+
+/// What happens when an arrival finds the admission queue full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Backpressure: the generator blocks until a slot frees (later
+    /// arrivals slip in *generation* time, but latency is still measured
+    /// from the scheduled arrival instant, so the slip shows up as
+    /// latency, not as omission).
+    Block,
+    /// Shed immediately: the request is dropped and counted.
+    Reject,
+    /// Bounded patience, both sides of the queue: the generator waits up
+    /// to `ms` for a slot (shed on expiry), and a request that already
+    /// waited longer than `ms` when dequeued is dropped as timed out.
+    Timeout { ms: u64 },
+}
+
+impl fmt::Display for ShedPolicy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Self::Block => f.write_str("block"),
+            Self::Reject => f.write_str("reject"),
+            Self::Timeout { ms } => write!(f, "timeout:{ms}"),
+        }
+    }
+}
+
+impl FromStr for ShedPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "block" => Ok(Self::Block),
+            "reject" => Ok(Self::Reject),
+            other => {
+                if let Some(ms) = other.strip_prefix("timeout:") {
+                    let ms: u64 = ms
+                        .parse()
+                        .map_err(|_| format!("bad timeout '{other}' (expected timeout:MS)"))?;
+                    if ms == 0 {
+                        return Err("timeout must be >= 1 ms".to_string());
+                    }
+                    Ok(Self::Timeout { ms })
+                } else {
+                    Err(format!("unknown shed policy '{other}' (expected block|reject|timeout:MS)"))
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// traffic spec
+// ---------------------------------------------------------------------
+
+/// Traffic knobs of one serving run: arrival process, admission-queue
+/// capacity, full-queue policy, SLO target, and the arrival-stream seed.
+/// The default is the historical closed loop, so existing specs behave
+/// identically.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TrafficSpec {
+    pub arrivals: ArrivalProcess,
+    /// Bounded admission-queue capacity (per shard), requests.
+    pub queue_cap: usize,
+    pub shed: ShedPolicy,
+    /// SLO target on arrival-to-completion latency, milliseconds.
+    pub slo_ms: f64,
+    /// Seed of the arrival stream (identical seeds, identical streams).
+    pub seed: u64,
+}
+
+impl Default for TrafficSpec {
+    fn default() -> Self {
+        Self {
+            arrivals: ArrivalProcess::ClosedLoop,
+            queue_cap: 64,
+            shed: ShedPolicy::Block,
+            slo_ms: 50.0,
+            seed: 0,
+        }
+    }
+}
+
+impl TrafficSpec {
+    pub fn validate(&self) -> Result<(), String> {
+        self.arrivals.validate()?;
+        if self.arrivals.is_open_loop() {
+            if self.queue_cap == 0 {
+                return Err("queue_cap must be >= 1 for open-loop arrivals".to_string());
+            }
+            if !(self.slo_ms.is_finite() && self.slo_ms > 0.0) {
+                return Err("slo_ms must be > 0".to_string());
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// bounded admission queue
+// ---------------------------------------------------------------------
+
+#[derive(Debug)]
+struct QueueState<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+/// A bounded MPMC admission queue: producers are traffic generators
+/// applying a [`ShedPolicy`] at the full-queue boundary, consumers are
+/// serving workers draining toward the gate. Closing wakes everyone;
+/// [`AdmissionQueue::pop`] then drains the backlog before reporting
+/// end-of-stream.
+#[derive(Debug)]
+pub struct AdmissionQueue<T> {
+    state: Mutex<QueueState<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+impl<T> AdmissionQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap >= 1, "admission queue needs capacity >= 1");
+        Self {
+            state: Mutex::new(QueueState { q: VecDeque::with_capacity(cap), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            cap,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Current occupancy (advisory: may be stale by the next instruction).
+    pub fn len(&self) -> usize {
+        lock_recover(&self.state).q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Non-blocking admit; `Err` hands the item back when the queue is
+    /// full or closed.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut st = lock_recover(&self.state);
+        if st.closed || st.q.len() >= self.cap {
+            return Err(item);
+        }
+        st.q.push_back(item);
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking admit (the `block` shed policy); returns false if the
+    /// queue closed while waiting.
+    pub fn push_blocking(&self, item: T) -> bool {
+        let mut st = lock_recover(&self.state);
+        loop {
+            if st.closed {
+                return false;
+            }
+            if st.q.len() < self.cap {
+                st.q.push_back(item);
+                drop(st);
+                self.not_empty.notify_one();
+                return true;
+            }
+            st = self.not_full.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Admit with bounded patience (the `timeout` shed policy); `Err`
+    /// hands the item back on expiry or close.
+    pub fn push_timeout(&self, item: T, patience: Duration) -> Result<(), T> {
+        let deadline = std::time::Instant::now() + patience;
+        let mut st = lock_recover(&self.state);
+        loop {
+            if st.closed {
+                return Err(item);
+            }
+            if st.q.len() < self.cap {
+                st.q.push_back(item);
+                drop(st);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            let now = std::time::Instant::now();
+            let Some(left) = deadline.checked_duration_since(now).filter(|d| !d.is_zero())
+            else {
+                return Err(item);
+            };
+            let (guard, _timed_out) = self
+                .not_full
+                .wait_timeout(st, left)
+                .unwrap_or_else(PoisonError::into_inner);
+            st = guard;
+        }
+    }
+
+    /// Blocking dequeue; `None` only after close **and** drain.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = lock_recover(&self.state);
+        loop {
+            if let Some(item) = st.q.pop_front() {
+                drop(st);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
+    /// Non-blocking dequeue (burst collection under one gate grant).
+    pub fn try_pop(&self) -> Option<T> {
+        let mut st = lock_recover(&self.state);
+        let item = st.q.pop_front();
+        drop(st);
+        if item.is_some() {
+            self.not_full.notify_one();
+        }
+        item
+    }
+
+    /// End of stream: wake every blocked producer and consumer.
+    pub fn close(&self) {
+        lock_recover(&self.state).closed = true;
+        self.not_full.notify_all();
+        self.not_empty.notify_all();
+    }
+}
+
+// ---------------------------------------------------------------------
+// traffic report
+// ---------------------------------------------------------------------
+
+/// Traffic/SLO accounting of one open-loop run (or one shard's slice of
+/// a fleet run). Latency — and therefore `within_slo` — is measured from
+/// the request's *scheduled arrival* to completion, never from admission:
+/// queue delay under overload is precisely the signal closed-loop
+/// clients hide.
+#[derive(Debug, Clone)]
+pub struct TrafficReport {
+    pub arrivals: ArrivalProcess,
+    pub queue_cap: usize,
+    pub shed_policy: ShedPolicy,
+    pub slo_ms: f64,
+    /// Requests generated (the offered load).
+    pub offered: usize,
+    /// Requests that completed execution.
+    pub completed: usize,
+    /// Requests shed at admission (full queue under `reject`, or
+    /// admission patience expired under `timeout`).
+    pub shed: usize,
+    /// Requests dropped at dequeue after exceeding the timeout budget.
+    pub timed_out: usize,
+    /// Completed requests whose arrival-to-completion latency met the SLO.
+    pub within_slo: usize,
+    /// Arrival-to-dequeue delay histogram (ns).
+    pub queue_delay: Histogram,
+    /// Realised offered rate (offered count over the schedule span).
+    pub offered_rate_hz: f64,
+}
+
+impl TrafficReport {
+    /// SLO attainment as a % of **offered** requests: sheds and timeouts
+    /// count against the SLO (they are the requests users lost).
+    pub fn slo_attainment_pct(&self) -> f64 {
+        100.0 * self.within_slo as f64 / self.offered.max(1) as f64
+    }
+
+    /// Goodput: SLO-compliant completions per second of wall clock.
+    pub fn goodput(&self, wall_s: f64) -> f64 {
+        self.within_slo as f64 / wall_s.max(1e-9)
+    }
+
+    /// Conservation check: every offered request is accounted for once.
+    pub fn accounted(&self, failed: usize) -> bool {
+        self.completed + self.shed + self.timed_out + failed == self.offered
+    }
+
+    /// Fold another shard's slice into this one (fleet aggregation).
+    pub fn merge(&mut self, other: &TrafficReport) {
+        self.offered += other.offered;
+        self.completed += other.completed;
+        self.shed += other.shed;
+        self.timed_out += other.timed_out;
+        self.within_slo += other.within_slo;
+        self.queue_delay.merge(&other.queue_delay);
+    }
+
+    /// Two-line human rendering (serving reports).
+    pub fn render(&self, wall_s: f64) -> String {
+        format!(
+            "traffic {} (offered {:.1}/s, queue cap {}, shed policy {}): \
+             offered={} completed={} shed={} timed-out={}\n\
+             SLO {:.1} ms: attainment {:.1}% of offered, goodput {:.1}/s; \
+             queue delay: {}",
+            self.arrivals,
+            self.offered_rate_hz,
+            self.queue_cap,
+            self.shed_policy,
+            self.offered,
+            self.completed,
+            self.shed,
+            self.timed_out,
+            self.slo_ms,
+            self.slo_attainment_pct(),
+            self.goodput(wall_s),
+            self.queue_delay.render_ms(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ------------------------------------------------- arrival streams --
+
+    #[test]
+    fn parse_display_roundtrip() {
+        for text in ["closed", "poisson:200", "bursty:300@50/20", "ramp:50-400"] {
+            let p: ArrivalProcess = text.parse().unwrap();
+            assert_eq!(p.to_string(), text);
+            assert_eq!(p.to_string().parse::<ArrivalProcess>().unwrap(), p);
+        }
+        assert_eq!(
+            "closed-loop".parse::<ArrivalProcess>().unwrap(),
+            ArrivalProcess::ClosedLoop
+        );
+        // Bursty windows default when omitted.
+        assert_eq!(
+            "bursty:100".parse::<ArrivalProcess>().unwrap(),
+            ArrivalProcess::Bursty { rate_hz: 100.0, on_ms: 100, off_ms: 100 }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_nonsense() {
+        assert!("poisson:".parse::<ArrivalProcess>().is_err());
+        assert!("poisson:-5".parse::<ArrivalProcess>().is_err());
+        assert!("poisson:0".parse::<ArrivalProcess>().is_err());
+        assert!("ramp:50".parse::<ArrivalProcess>().is_err());
+        assert!("uniform:10".parse::<ArrivalProcess>().is_err());
+        assert!("bursty:10@0/10".parse::<ArrivalProcess>().is_err());
+    }
+
+    #[test]
+    fn identical_seeds_identical_streams() {
+        for p in [
+            ArrivalProcess::Poisson { rate_hz: 500.0 },
+            ArrivalProcess::Bursty { rate_hz: 500.0, on_ms: 10, off_ms: 10 },
+            ArrivalProcess::Ramp { from_hz: 100.0, to_hz: 1000.0 },
+        ] {
+            assert_eq!(p.schedule_n(200, 42), p.schedule_n(200, 42), "{p}");
+            assert_ne!(p.schedule_n(200, 42), p.schedule_n(200, 43), "{p}");
+            assert_eq!(
+                p.schedule_until(1_000_000_000, 42),
+                p.schedule_until(1_000_000_000, 42),
+                "{p}"
+            );
+        }
+    }
+
+    #[test]
+    fn schedules_are_sorted_and_sized() {
+        let p = ArrivalProcess::Poisson { rate_hz: 1000.0 };
+        let s = p.schedule_n(500, 1);
+        assert_eq!(s.len(), 500);
+        assert!(s.windows(2).all(|w| w[0] <= w[1]), "offsets must be sorted");
+        let su = p.schedule_until(1_000_000_000, 1);
+        assert!(su.iter().all(|&t| t < 1_000_000_000));
+        assert!(su.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn poisson_mean_rate_is_close() {
+        let p = ArrivalProcess::Poisson { rate_hz: 1000.0 };
+        let s = p.schedule_until(10_000_000_000, 3); // 10 s at 1000/s
+        let n = s.len() as f64;
+        assert!((n - 10_000.0).abs() < 500.0, "got {n} arrivals");
+    }
+
+    #[test]
+    fn bursty_skips_off_windows() {
+        let p = ArrivalProcess::Bursty { rate_hz: 2000.0, on_ms: 10, off_ms: 40 };
+        let s = p.schedule_until(1_000_000_000, 5);
+        assert!(!s.is_empty());
+        for &t in &s {
+            let pos = t % 50_000_000; // cycle = 50 ms
+            assert!(pos < 10_000_000, "arrival at {t} lies in an off-window");
+        }
+    }
+
+    #[test]
+    fn ramp_accelerates() {
+        let p = ArrivalProcess::Ramp { from_hz: 100.0, to_hz: 2000.0 };
+        let s = p.schedule_n(1000, 9);
+        // The first-half span must exceed the second-half span: gaps
+        // shrink as the rate ramps up.
+        let first = s[499] - s[0];
+        let second = s[999] - s[500];
+        assert!(first > second, "ramp not accelerating: {first} vs {second}");
+    }
+
+    #[test]
+    fn closed_loop_has_no_schedule() {
+        let p = ArrivalProcess::ClosedLoop;
+        assert!(!p.is_open_loop());
+        assert_eq!(p.schedule_n(3, 0), vec![0, 0, 0]);
+        assert!(p.schedule_until(1_000_000_000, 0).is_empty());
+    }
+
+    // ------------------------------------------------------ shed policy --
+
+    #[test]
+    fn shed_policy_parse_roundtrip() {
+        for text in ["block", "reject", "timeout:25"] {
+            let p: ShedPolicy = text.parse().unwrap();
+            assert_eq!(p.to_string(), text);
+        }
+        assert!("drop".parse::<ShedPolicy>().is_err());
+        assert!("timeout:0".parse::<ShedPolicy>().is_err());
+        assert!("timeout:x".parse::<ShedPolicy>().is_err());
+    }
+
+    #[test]
+    fn traffic_spec_validation() {
+        TrafficSpec::default().validate().unwrap(); // closed loop: anything goes
+        let open = TrafficSpec {
+            arrivals: ArrivalProcess::Poisson { rate_hz: 100.0 },
+            ..TrafficSpec::default()
+        };
+        open.validate().unwrap();
+        assert!(TrafficSpec { queue_cap: 0, ..open }.validate().is_err());
+        assert!(TrafficSpec { slo_ms: 0.0, ..open }.validate().is_err());
+    }
+
+    // ------------------------------------------------- admission queue --
+
+    #[test]
+    fn queue_bounds_and_rejects() {
+        let q = AdmissionQueue::new(2);
+        assert!(q.try_push(1).is_ok());
+        assert!(q.try_push(2).is_ok());
+        assert_eq!(q.try_push(3), Err(3), "full queue must hand the item back");
+        assert_eq!(q.len(), 2);
+        assert_eq!(q.try_pop(), Some(1));
+        assert!(q.try_push(3).is_ok());
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.try_pop(), None);
+    }
+
+    #[test]
+    fn close_drains_then_ends() {
+        let q = AdmissionQueue::new(4);
+        q.try_push(7).unwrap();
+        q.close();
+        assert_eq!(q.try_push(8), Err(8), "closed queue admits nothing");
+        assert!(!q.push_blocking(9));
+        assert!(q.push_timeout(10, Duration::from_millis(1)).is_err());
+        assert_eq!(q.pop(), Some(7), "backlog drains after close");
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn blocking_push_waits_for_space() {
+        let q = std::sync::Arc::new(AdmissionQueue::new(1));
+        q.try_push(1).unwrap();
+        let q2 = std::sync::Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.push_blocking(2));
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop(), Some(1)); // frees the slot
+        assert!(h.join().unwrap());
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn timeout_push_expires() {
+        let q = AdmissionQueue::new(1);
+        q.try_push(1).unwrap();
+        let t0 = std::time::Instant::now();
+        assert_eq!(q.push_timeout(2, Duration::from_millis(10)), Err(2));
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+    }
+
+    #[test]
+    fn pop_blocks_until_push() {
+        let q = std::sync::Arc::new(AdmissionQueue::new(1));
+        let q2 = std::sync::Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(Duration::from_millis(20));
+        q.try_push(42).unwrap();
+        assert_eq!(h.join().unwrap(), Some(42));
+    }
+
+    // ----------------------------------------------------------- report --
+
+    #[test]
+    fn report_accounting_and_render() {
+        let mut r = TrafficReport {
+            arrivals: ArrivalProcess::Poisson { rate_hz: 200.0 },
+            queue_cap: 64,
+            shed_policy: ShedPolicy::Reject,
+            slo_ms: 50.0,
+            offered: 100,
+            completed: 90,
+            shed: 8,
+            timed_out: 2,
+            within_slo: 81,
+            queue_delay: Histogram::new(),
+            offered_rate_hz: 198.5,
+        };
+        assert!(r.accounted(0));
+        assert!((r.slo_attainment_pct() - 81.0).abs() < 1e-9);
+        assert!((r.goodput(2.0) - 40.5).abs() < 1e-9);
+        let text = r.render(2.0);
+        assert!(text.contains("goodput"), "{text}");
+        assert!(text.contains("attainment"), "{text}");
+        assert!(text.contains("shed=8"), "{text}");
+        assert!(text.contains("timed-out=2"), "{text}");
+
+        let other = r.clone();
+        r.merge(&other);
+        assert_eq!(r.offered, 200);
+        assert_eq!(r.within_slo, 162);
+        assert!(r.accounted(0));
+    }
+}

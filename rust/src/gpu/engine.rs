@@ -270,6 +270,17 @@ pub struct Sim {
     /// Per-app SM masks (PTB partitioning among same-shard peers;
     /// all-true otherwise).
     sm_mask: Vec<Vec<bool>>,
+    /// Open-loop traffic injection (`SimConfig::arrivals`): true when an
+    /// arrival process paces looping applications. Closed-loop runs pay
+    /// exactly one branch per host step for this.
+    open_loop: bool,
+    /// Per-app arrival offsets, generated in `new` and drained into
+    /// `ArrivalDue` events at the start of `run`.
+    arrival_schedule: Vec<Vec<Nanos>>,
+    /// Open-loop arrivals offered per app (admitted + shed).
+    arrivals_offered: Vec<usize>,
+    /// Open-loop arrivals shed per app (backlog at `arrival_queue_cap`).
+    arrivals_shed: Vec<usize>,
 }
 
 impl Sim {
@@ -322,6 +333,28 @@ impl Sim {
         }
         let op_hint = op_hint.min(1 << 20);
         trace.reserve_ops(op_hint);
+        // Open-loop traffic: one seeded global arrival stream covering
+        // the horizon, dealt round-robin over the applications that can
+        // consume it — looping programs only (the same assignment the
+        // live fleet dispatcher uses; `Once` programs model setup work
+        // and never take requests, so dealing them arrivals would admit
+        // backlog nobody ever drains and silently dilute the offered
+        // load). Deterministic in (config, seed); empty when closed-loop.
+        let open_loop = cfg.arrivals.is_open_loop();
+        let mut arrival_schedule = vec![Vec::new(); n];
+        let serving_apps: Vec<usize> = (0..n)
+            .filter(|&i| apps[i].program.repeat == RepeatMode::LoopUntilHorizon)
+            .collect();
+        if open_loop && !serving_apps.is_empty() {
+            for (k, t) in cfg
+                .arrivals
+                .schedule_until(cfg.horizon_ns, cfg.seed)
+                .into_iter()
+                .enumerate()
+            {
+                arrival_schedule[serving_apps[k % serving_apps.len()]].push(t);
+            }
+        }
         let num_sms = cfg.platform.num_sms;
         // Spatial policies (PTB) pin each application to its SM share —
         // partitioned among the apps that share its *shard*: every GPU of
@@ -359,6 +392,10 @@ impl Sim {
             next_block_uid: 0,
             horizon_reached: false,
             sm_mask,
+            open_loop,
+            arrival_schedule,
+            arrivals_offered: vec![0; n],
+            arrivals_shed: vec![0; n],
         }
     }
 
@@ -403,6 +440,14 @@ impl Sim {
     /// Run to completion: all apps done, or the horizon, whichever first.
     pub fn run(&mut self) {
         self.events.push(self.cfg.horizon_ns, Event::Horizon);
+        // Open-loop traffic: the full arrival stream is scheduled up
+        // front (it is independent of service progress by definition).
+        let schedule = std::mem::take(&mut self.arrival_schedule);
+        for (i, times) in schedule.into_iter().enumerate() {
+            for t in times {
+                self.events.push(t, Event::ArrivalDue(AppId(i)));
+            }
+        }
         for i in 0..self.apps.len() {
             self.events.push(0, Event::HostReady(AppId(i)));
         }
@@ -456,8 +501,34 @@ impl Sim {
                 self.mark(D_DRIVER);
             }
             Event::LockWake { shard } => self.lock_wake(shard as usize),
+            Event::ArrivalDue(app) => self.arrival_due(app),
             Event::Horizon => unreachable!("handled in run()"),
         }
+    }
+
+    /// An open-loop arrival lands for `app`: admit it into the bounded
+    /// backlog (waking a parked host) or shed it — the simulator mirror
+    /// of the live admission queue's `reject` boundary. Latency is
+    /// measured from this instant (see `MarkCompletion`).
+    fn arrival_due(&mut self, app: AppId) {
+        self.arrivals_offered[app.0] += 1;
+        let cap = self.cfg.arrival_queue_cap;
+        let now = self.now;
+        let a = &mut self.apps[app.0];
+        // A non-looping app can never consume an arrival (scheduling
+        // excludes them; this guard keeps conservation if that changes).
+        if a.done()
+            || a.program.repeat != RepeatMode::LoopUntilHorizon
+            || a.arrival_backlog.len() >= cap
+        {
+            self.arrivals_shed[app.0] += 1;
+            return;
+        }
+        a.arrival_backlog.push_back(now);
+        if a.phase == HostPhase::WaitingArrival {
+            a.unblock(now);
+        }
+        self.mark(D_HOSTS);
     }
 
     // ------------------------------------------------------------------
@@ -597,6 +668,30 @@ impl Sim {
     /// Execute the current step of `app`'s program. Returns true if any
     /// state changed (the step ran or transitioned to a blocking phase).
     fn exec_host_step(&mut self, app: AppId) -> bool {
+        // Open-loop gating (DESIGN.md §9): at an iteration boundary a
+        // looping program consumes one admitted arrival, or parks in
+        // `WaitingArrival` until `ArrivalDue` lands one. `Once` programs
+        // are untouched (they model setup work, not served requests).
+        if self.open_loop {
+            let now = self.now;
+            let a = &mut self.apps[app.0];
+            if a.pc == 0
+                && !a.iteration_admitted
+                && a.program.repeat == RepeatMode::LoopUntilHorizon
+                && !a.done()
+            {
+                match a.arrival_backlog.pop_front() {
+                    Some(t) => {
+                        a.iteration_admitted = true;
+                        a.arrival_inflight.push_back(t);
+                    }
+                    None => {
+                        a.block(HostPhase::WaitingArrival, now);
+                        return true;
+                    }
+                }
+            }
+        }
         let Some(step) = self.apps[app.0].current_step() else {
             return false;
         };
@@ -612,8 +707,15 @@ impl Sim {
             }
             CompiledStep::MarkCompletion => {
                 let now = self.now;
-                self.apps[app.0].completions.push(now);
-                self.apps[app.0].advance();
+                let a = &mut self.apps[app.0];
+                a.completions.push(now);
+                // Open-loop latency: this iteration's arrival (FIFO) to
+                // completion — the same arrival-to-completion measure the
+                // live serving path reports.
+                if let Some(arrived) = a.arrival_inflight.pop_front() {
+                    a.arrival_latency_ns.push(now.saturating_sub(arrived));
+                }
+                a.advance();
             }
             CompiledStep::Launch(k) => return self.routine_launch(app, k),
             CompiledStep::Memcpy(c) => return self.routine_memcpy(app, c),
@@ -1598,5 +1700,18 @@ impl Sim {
     /// Inferences-per-second input: completion timestamps per app.
     pub fn completions(&self, app: AppId) -> &[Nanos] {
         &self.apps[app.0].completions
+    }
+
+    /// Arrival-to-completion latencies (ns) of `app`'s iterations under
+    /// open-loop arrivals (empty for closed-loop runs). In completion
+    /// order, not sorted.
+    pub fn arrival_latencies(&self, app: AppId) -> &[Nanos] {
+        &self.apps[app.0].arrival_latency_ns
+    }
+
+    /// (offered, shed) open-loop arrival counts for `app`; both zero for
+    /// closed-loop runs.
+    pub fn arrival_counts(&self, app: AppId) -> (usize, usize) {
+        (self.arrivals_offered[app.0], self.arrivals_shed[app.0])
     }
 }

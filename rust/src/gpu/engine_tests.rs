@@ -415,3 +415,108 @@ fn fleet_per_shard_locks_are_independent() {
         assert_eq!(lock.max_waiters, 0, "shard {s}: single app never waits");
     }
 }
+
+// ---------------------------------------------------------------------
+// open-loop arrivals (SimConfig::arrivals)
+// ---------------------------------------------------------------------
+
+use crate::control::traffic::ArrivalProcess;
+
+/// A served-request shape: one kernel + barrier + completion mark per
+/// iteration, looping until the horizon.
+fn serving_program() -> Program {
+    Program::new("served", RepeatMode::LoopUntilHorizon)
+        .compute(5_000)
+        .launch(kernel())
+        .sync()
+        .mark_completion()
+}
+
+fn open_cfg(rate_hz: f64, cap: usize, horizon_ns: u64) -> SimConfig {
+    cfg(StrategyKind::Worker)
+        .with_horizon_ns(horizon_ns)
+        .with_arrivals(ArrivalProcess::Poisson { rate_hz })
+        .with_arrival_queue_cap(cap)
+}
+
+#[test]
+fn open_loop_light_load_completes_arrivals_with_low_latency() {
+    // 200/s against a sub-ms service time: every arrival is admitted,
+    // served, and measured from its arrival instant.
+    let mut sim = Sim::new(open_cfg(200.0, 64, 500_000_000), vec![serving_program()]);
+    sim.run();
+    let (offered, shed) = sim.arrival_counts(AppId(0));
+    assert!(offered > 50, "500 ms at 200/s must offer ~100 (got {offered})");
+    assert_eq!(shed, 0, "light load must not shed");
+    let lat = sim.arrival_latencies(AppId(0));
+    assert_eq!(lat.len(), sim.completions(AppId(0)).len());
+    assert_eq!(lat.len(), offered - sim.apps[0].arrival_backlog.len()
+        - sim.apps[0].arrival_inflight.len(), "admitted arrivals must complete or be in flight");
+    // Under-load: typical arrival-to-completion stays near the service
+    // time, far below the 5 ms inter-arrival gap (the rare injected
+    // Pareto tail can push an individual sample higher).
+    let mut sorted = lat.to_vec();
+    sorted.sort_unstable();
+    let p50 = sorted[sorted.len() / 2];
+    assert!(p50 < 2_000_000, "light-load median latency blew up: {p50} ns");
+    assert!(*sorted.last().unwrap() < 50_000_000, "latency tail unreasonable");
+}
+
+#[test]
+fn open_loop_overload_sheds_at_the_backlog_bound() {
+    // Offer far beyond the service rate into a backlog of 4: the bound
+    // must hold (sheds) and latency must reflect queueing delay, which a
+    // closed-loop run structurally cannot show.
+    let mut sim = Sim::new(open_cfg(50_000.0, 4, 200_000_000), vec![serving_program()]);
+    sim.run();
+    let (offered, shed) = sim.arrival_counts(AppId(0));
+    assert!(offered > 1_000, "flood must offer thousands (got {offered})");
+    assert!(shed > 0, "cap-4 backlog under flood must shed");
+    assert!(sim.apps[0].arrival_backlog.len() <= 4, "backlog bound violated");
+    let lat = sim.arrival_latencies(AppId(0));
+    assert!(!lat.is_empty());
+    // Queue delay dominates: the worst latency far exceeds the best.
+    let (min, max) = (*lat.iter().min().unwrap(), *lat.iter().max().unwrap());
+    assert!(max > 2 * min, "no queueing delay visible: min={min} max={max}");
+}
+
+#[test]
+fn open_loop_runs_are_seed_deterministic() {
+    let mk = |seed: u64| {
+        let c = open_cfg(2_000.0, 16, 100_000_000).with_seed(seed);
+        let mut sim = Sim::new(c, vec![serving_program(), serving_program()]);
+        sim.run();
+        (
+            sim.arrival_latencies(AppId(0)).to_vec(),
+            sim.arrival_latencies(AppId(1)).to_vec(),
+            sim.arrival_counts(AppId(0)),
+            sim.arrival_counts(AppId(1)),
+        )
+    };
+    assert_eq!(mk(9), mk(9), "identical seeds must reproduce the run exactly");
+    assert_ne!(mk(9).0, mk(10).0, "different seeds must differ");
+}
+
+#[test]
+fn closed_loop_runs_never_touch_arrival_state() {
+    let sim = run(StrategyKind::Synced, vec![burst_program(6)]);
+    assert_eq!(sim.arrival_counts(AppId(0)), (0, 0));
+    assert!(sim.arrival_latencies(AppId(0)).is_empty());
+    assert_eq!(sim.completions(AppId(0)).len(), 1);
+}
+
+#[test]
+fn open_loop_leaves_once_programs_ungated() {
+    // RepeatMode::Once programs model setup work, not served requests:
+    // they must run to completion even with no arrivals scheduled at all.
+    let p = Program::new("setup", RepeatMode::Once)
+        .launch(kernel())
+        .sync()
+        .mark_completion();
+    let mut sim = Sim::new(
+        cfg(StrategyKind::None).with_arrivals(ArrivalProcess::Poisson { rate_hz: 0.001 }),
+        vec![p],
+    );
+    sim.run();
+    assert_eq!(sim.completions(AppId(0)).len(), 1);
+}

@@ -37,6 +37,10 @@ pub enum Event {
     /// (sem_post latency); grants happen here, letting fresh acquires
     /// barge in the meantime.
     LockWake { shard: u32 },
+    /// An open-loop request arrives for an application (traffic
+    /// injection, `SimConfig::arrivals`): admitted into the app's
+    /// bounded backlog or shed, mirroring the live admission queue.
+    ArrivalDue(AppId),
     /// End of the measurement horizon.
     Horizon,
 }

@@ -8,9 +8,11 @@ use super::parallel::parallel_map;
 use super::runner::{run_spec, RunResult};
 use super::spec::{Bench, ExperimentSpec, Isol};
 use crate::config::{SimConfig, StrategyKind};
+use crate::control::traffic::ArrivalProcess;
 use crate::gpu::Sim;
 use crate::hooks::{loc_report, LocReport};
 use crate::metrics::ips_with_warmup;
+use crate::metrics::stats::quantile_sorted;
 use crate::util::AppId;
 use std::fmt::Write as _;
 use std::path::Path;
@@ -237,6 +239,92 @@ pub fn shard_scaling_figure(seed: u64) -> (String, Vec<ShardScalingRow>) {
     (out, rows)
 }
 
+/// One offered-load point of the saturation figure.
+#[derive(Debug, Clone)]
+pub struct LoadPoint {
+    pub rate_hz: f64,
+    /// Arrivals generated across all apps.
+    pub offered: usize,
+    /// Arrivals shed at the bounded per-app backlog.
+    pub shed: usize,
+    /// Iterations completed (arrival-to-completion latency recorded).
+    pub completed: usize,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// Completions per second of virtual time.
+    pub goodput_ips: f64,
+}
+
+/// Latency vs offered load (beyond the paper): the same 2-application
+/// onnx_dna workload under the isolating `worker` strategy, driven by
+/// open-loop Poisson arrivals swept across rates. Latency is measured
+/// from *arrival* to completion, so the curve shows the hockey stick a
+/// closed-loop protocol structurally hides: flat near the service time
+/// below the knee, then queueing delay (bounded by the admission cap,
+/// with the overflow shed) past saturation. Rates are independent sims,
+/// so they fan out across cores like the other figures; the live
+/// counterpart is `cook serve --arrivals poisson:R --load-sweep ...`
+/// (`harness::load_sweep`), which reports the same curve in wall-clock.
+pub fn saturation_figure(seed: u64) -> (String, Vec<LoadPoint>) {
+    const APPS: usize = 2;
+    // onnx_dna serves ~113 IPS per app in isolation (Table I), less when
+    // two apps share the GPU: the sweep brackets that capacity from
+    // clearly-under to far-past the knee.
+    const RATES: [f64; 6] = [50.0, 100.0, 200.0, 400.0, 800.0, 1600.0];
+    const HORIZON_NS: u64 = 2_000_000_000;
+    const QUEUE_CAP: usize = 64;
+    let points = parallel_map(RATES.to_vec(), move |rate| {
+        let cfg = SimConfig::default()
+            .with_strategy(StrategyKind::Worker)
+            .with_seed(seed)
+            .with_horizon_ns(HORIZON_NS)
+            .with_arrivals(ArrivalProcess::Poisson { rate_hz: rate })
+            .with_arrival_queue_cap(QUEUE_CAP);
+        let programs = (0..APPS).map(|_| Bench::OnnxDna.program()).collect();
+        let mut sim = Sim::new(cfg, programs);
+        sim.run();
+        let mut lat_ms: Vec<f64> = (0..APPS)
+            .flat_map(|a| sim.arrival_latencies(AppId(a)).iter().map(|&ns| ns as f64 / 1e6))
+            .collect();
+        lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let (offered, shed) = (0..APPS)
+            .map(|a| sim.arrival_counts(AppId(a)))
+            .fold((0, 0), |acc, c| (acc.0 + c.0, acc.1 + c.1));
+        let q = |p: f64| if lat_ms.is_empty() { 0.0 } else { quantile_sorted(&lat_ms, p) };
+        LoadPoint {
+            rate_hz: rate,
+            offered,
+            shed,
+            completed: lat_ms.len(),
+            p50_ms: q(0.50),
+            p95_ms: q(0.95),
+            p99_ms: q(0.99),
+            goodput_ips: lat_ms.len() as f64 / (HORIZON_NS as f64 / 1e9),
+        }
+    });
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "== Latency vs offered load: onnx_dna x {APPS} apps, worker strategy, \
+         open-loop Poisson (queue cap {QUEUE_CAP}) =="
+    );
+    let _ = writeln!(
+        out,
+        "{:<10} {:>9} {:>9} {:>7} {:>11} {:>9} {:>9} {:>9}",
+        "offered/s", "offered", "shed", "done", "goodput/s", "p50 ms", "p95 ms", "p99 ms"
+    );
+    for p in &points {
+        let _ = writeln!(
+            out,
+            "{:<10} {:>9} {:>9} {:>7} {:>11.1} {:>9.2} {:>9.2} {:>9.2}",
+            p.rate_hz, p.offered, p.shed, p.completed, p.goodput_ips, p.p50_ms, p.p95_ms,
+            p.p99_ms
+        );
+    }
+    (out, points)
+}
+
 /// Persist a figure's CSV series under `dir`.
 pub fn write_net_csv(dir: &Path, bench: Bench, results: &[RunResult]) -> std::io::Result<()> {
     std::fs::create_dir_all(dir)?;
@@ -280,6 +368,32 @@ mod tests {
         let iso_none = cells[0].1;
         let par_none = cells[4].1;
         assert!(iso_none > par_none, "parallel must be slower");
+    }
+
+    #[test]
+    fn saturation_figure_shows_the_knee() {
+        let (text, points) = saturation_figure(0);
+        assert_eq!(points.len(), 6);
+        // Offered load must grow with the swept rate...
+        for w in points.windows(2) {
+            assert!(w[1].offered > w[0].offered, "offered load must increase");
+        }
+        // ...and the curve must saturate past the knee: at the top rate
+        // the system either sheds or completes a clearly sub-offered
+        // fraction, with a latency tail above the under-load point.
+        let (lo, hi) = (&points[0], &points[points.len() - 1]);
+        assert!(
+            hi.shed > 0 || hi.completed < hi.offered * 9 / 10,
+            "top rate never saturated: {hi:?}"
+        );
+        assert!(
+            hi.p99_ms > lo.p99_ms,
+            "tail latency must grow past the knee: {:.3} -> {:.3}",
+            lo.p99_ms,
+            hi.p99_ms
+        );
+        assert!(lo.completed > 0 && hi.completed > 0);
+        assert!(text.contains("offered load"), "{text}");
     }
 
     #[test]

@@ -8,7 +8,8 @@
 use crate::config::StrategyKind;
 use crate::control::fleet::{serve_fleet, FleetReport, FleetSpec, Placement};
 use crate::control::serving::{serve, ServeBackend, ServeReport, ServeSpec};
-use anyhow::Result;
+use crate::control::traffic::ArrivalProcess;
+use anyhow::{anyhow, Result};
 use std::fmt::Write as _;
 
 /// Run `base` under every strategy against `backend`; returns the
@@ -116,6 +117,65 @@ pub fn fleet_sweep(
     Ok((out, reports))
 }
 
+/// Run `base` under open-loop Poisson arrivals at every rate in
+/// `rates_hz` and tabulate the latency-vs-offered-load saturation curve:
+/// goodput, SLO attainment, shed/timeout counts, and latency quantiles
+/// measured from arrival. Queue capacity, shed policy, SLO and seed come
+/// from `base.traffic`.
+///
+/// Sweep points run **sequentially** for the same reason [`serve_sweep`]
+/// does: each point measures wall-clock latency with real threads, and a
+/// concurrently running sibling would corrupt exactly the knee this
+/// sweep exists to locate.
+pub fn load_sweep(
+    base: &ServeSpec,
+    rates_hz: &[f64],
+    backend: &dyn ServeBackend,
+) -> Result<(String, Vec<ServeReport>)> {
+    if rates_hz.is_empty() {
+        return Err(anyhow!("load sweep needs at least one rate"));
+    }
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "== load sweep: {} workers, {} requests total per point, strategy {}, \
+         queue cap {}, shed {}, SLO {:.1} ms ==",
+        base.clients,
+        base.clients * base.requests,
+        base.strategy,
+        base.traffic.queue_cap,
+        base.traffic.shed,
+        base.traffic.slo_ms,
+    );
+    let _ = writeln!(
+        out,
+        "{:<10} {:>10} {:>8} {:>8} {:>7} {:>8} {:>9} {:>9} {:>9}",
+        "offered/s", "goodput/s", "SLO %", "shed", "t/out", "p50 ms", "p95 ms", "p99 ms", "max ms"
+    );
+    let mut reports = Vec::new();
+    for &rate in rates_hz {
+        let mut spec = base.clone();
+        spec.traffic.arrivals = ArrivalProcess::Poisson { rate_hz: rate };
+        let r = serve(&spec, backend)?;
+        let t = r.traffic.as_ref().expect("open-loop run must report traffic");
+        let _ = writeln!(
+            out,
+            "{:<10.1} {:>10.1} {:>7.1}% {:>8} {:>7} {:>8.2} {:>9.2} {:>9.2} {:>9.2}",
+            rate,
+            t.goodput(r.wall_s),
+            t.slo_attainment_pct(),
+            t.shed,
+            t.timed_out,
+            r.latency_p(0.50),
+            r.latency_p(0.95),
+            r.latency_p(0.99),
+            r.latencies_ms.last().copied().unwrap_or(0.0),
+        );
+        reports.push(r);
+    }
+    Ok((out, reports))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -134,6 +194,33 @@ mod tests {
             assert!(text.contains(s.name()), "missing {s} in:\n{text}");
         }
         assert!(text.contains("IPS"));
+    }
+
+    #[test]
+    fn load_sweep_tabulates_every_rate() {
+        use crate::control::traffic::{ShedPolicy, TrafficSpec};
+        let base = ServeSpec::new(StrategyKind::Worker, "dna")
+            .with_clients(2)
+            .with_requests(5)
+            .with_traffic(TrafficSpec {
+                arrivals: ArrivalProcess::Poisson { rate_hz: 1.0 }, // overridden per point
+                queue_cap: 16,
+                shed: ShedPolicy::Reject,
+                slo_ms: 100.0,
+                seed: 4,
+            });
+        let (text, reports) =
+            load_sweep(&base, &[500.0, 2_000.0], &SyntheticBackend::new(30)).unwrap();
+        assert_eq!(reports.len(), 2);
+        for r in &reports {
+            let t = r.traffic.as_ref().unwrap();
+            assert_eq!(t.offered, 10);
+            assert!(t.accounted(0));
+        }
+        assert!(text.contains("load sweep"), "{text}");
+        assert!(text.contains("goodput"), "{text}");
+        assert!(text.contains("SLO"), "{text}");
+        assert!(load_sweep(&base, &[], &SyntheticBackend::new(30)).is_err());
     }
 
     #[test]

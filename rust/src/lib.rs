@@ -28,7 +28,7 @@
 //! |--------|------|
 //! | [`apps`] | Benchmark programs (`cuda_mmult`, `onnx_dna`) compiled to step lists |
 //! | [`cudart`] | Simulated CUDA Runtime surface: contexts, streams, ops, symbol table |
-//! | [`control`] | Access control: [`control::policy::AccessPolicy`] (the ONE strategy dispatch point), the simulated [`control::lock::GpuLock`], the live [`control::gate::GpuGate`], the serving loop ([`control::serving`]) and the sharded fleet ([`control::fleet`]) |
+//! | [`control`] | Access control: [`control::policy::AccessPolicy`] (the ONE strategy dispatch point), the simulated [`control::lock::GpuLock`], the live [`control::gate::GpuGate`], the serving loop ([`control::serving`]), the sharded fleet ([`control::fleet`]) and the open-loop traffic layer ([`control::traffic`]: arrival processes, bounded admission, SLO accounting) |
 //! | [`gpu`] | The discrete-event Volta simulator ([`gpu::Sim`]), now a fleet of `num_gpus` independent shards |
 //! | [`harness`] | Experiment specs, the parallel runner, figure/table emitters, serving sweeps |
 //! | [`hooks`] | The COOK generator: condition rules → generated C hook tree (Table II) |
@@ -55,6 +55,18 @@
 //! be studied in deterministic virtual time (`cook experiment fleet`).
 //! Per-GPU isolation is preserved by construction; aggregate throughput
 //! scales with the shard count.
+//!
+//! ## Offered load: open-loop traffic
+//!
+//! Closed-loop clients structurally hide queueing delay (coordinated
+//! omission). [`control::traffic`] drives serving with *generated* load
+//! instead: seeded arrival processes
+//! ([`control::traffic::ArrivalProcess`]), a bounded admission queue
+//! with shed policies in front of each shard's gate, and SLO accounting
+//! measured from arrival. [`SimConfig::arrivals`](config::SimConfig)
+//! mirrors the axis in virtual time, so `cook experiment load` and
+//! `cook serve --arrivals poisson:R --load-sweep ...` report the same
+//! saturation-curve shape (DESIGN.md §9).
 
 pub mod apps;
 pub mod config;

@@ -21,8 +21,11 @@ use anyhow::{anyhow, bail, Context, Result};
 use cook::config::StrategyKind;
 use cook::control::fleet::{serve_fleet, FleetSpec, Placement};
 use cook::control::serving::{serve, ManifestBackend, ServeBackend, ServeSpec, SyntheticBackend};
+use cook::control::traffic::{ArrivalProcess, ShedPolicy, TrafficSpec};
 use cook::cudart::SymbolTable;
-use cook::harness::{figures, fleet_sweep, run_spec, serve_sweep, Bench, ExperimentSpec};
+use cook::harness::{
+    figures, fleet_sweep, load_sweep, run_spec, serve_sweep, Bench, ExperimentSpec,
+};
 use cook::hooks::generate_standard;
 use cook::runtime::{Engine, Manifest};
 use std::path::PathBuf;
@@ -66,7 +69,7 @@ fn print_usage() {
          \n\
          commands:\n\
          \x20 run <bench-isol-strategy> [--seed N]      simulate one configuration\n\
-         \x20 experiment <fig9|fig10|fig11|table1|table2|fleet|all> [--seed N] [--out DIR]\n\
+         \x20 experiment <fig9|fig10|fig11|table1|table2|fleet|load|all> [--seed N] [--out DIR]\n\
          \x20 chronogram <bench-isol-strategy> [--seed N] [--rows N]\n\
          \x20 hookgen --strategy <s> [--out DIR]        generate the hook library\n\
          \x20 symbols [--unknown]                       list libcudart exported symbols\n\
@@ -74,10 +77,16 @@ fn print_usage() {
          \x20 serve [--strategy s] [--payload p[,p]] [--clients N] [--requests N]\n\
          \x20       [--batch N] [--sweep] [--synthetic]\n\
          \x20       [--shards N] [--placement rr|least-loaded|affinity] [--shard-sweep N[,N]]\n\
+         \x20       [--arrivals closed|poisson:R|bursty:R@ON/OFF|ramp:A-B]\n\
+         \x20       [--queue-cap N] [--shed block|reject|timeout:MS] [--slo-ms X]\n\
+         \x20       [--load-sweep R[,R...]]\n\
          \x20       serve payload inferences through the access-control layer\n\
          \x20       (--sweep tabulates all strategies; --synthetic needs no artifacts;\n\
          \x20        --shards N routes clients across a fleet of per-GPU gates;\n\
-         \x20        --shard-sweep tabulates scaling across fleet sizes)\n\
+         \x20        --shard-sweep tabulates scaling across fleet sizes;\n\
+         \x20        --arrivals opens the loop: generated load, bounded admission\n\
+         \x20        queues, SLO accounting from arrival; --load-sweep emits the\n\
+         \x20        latency-vs-offered-load saturation curve)\n\
          \n\
          benches: cuda_mmult, onnx_dna;  isolation|parallel;\n\
          strategies: none, callback, synced, worker, ptb;\n\
@@ -150,6 +159,7 @@ fn cmd_experiment(rest: &[String]) -> Result<()> {
             "table1" => figures::ips_table(seed).0,
             "table2" => figures::loc_table().0,
             "fleet" => figures::shard_scaling_figure(seed).0,
+            "load" => figures::saturation_figure(seed).0,
             other => bail!("unknown experiment '{other}'"),
         };
         println!("{text}");
@@ -159,7 +169,7 @@ fn cmd_experiment(rest: &[String]) -> Result<()> {
         Ok(())
     };
     if which == "all" {
-        for name in ["fig9", "fig10", "fig11", "table1", "table2", "fleet"] {
+        for name in ["fig9", "fig10", "fig11", "table1", "table2", "fleet", "load"] {
             run_one(name, &mut emitted)?;
         }
     } else {
@@ -292,6 +302,36 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         ),
         None => None,
     };
+    // Traffic knobs (ISSUE 4): arrival process, bounded admission, SLO.
+    let arrivals: ArrivalProcess = flag(rest, "--arrivals")
+        .unwrap_or("closed")
+        .parse()
+        .map_err(|e: String| anyhow!(e))?;
+    let queue_cap: usize = flag(rest, "--queue-cap").and_then(|s| s.parse().ok()).unwrap_or(64);
+    let shed_policy: ShedPolicy = flag(rest, "--shed")
+        .unwrap_or("block")
+        .parse()
+        .map_err(|e: String| anyhow!(e))?;
+    let slo_ms: f64 = flag(rest, "--slo-ms").and_then(|s| s.parse().ok()).unwrap_or(50.0);
+    let traffic = TrafficSpec {
+        arrivals,
+        queue_cap,
+        shed: shed_policy,
+        slo_ms,
+        seed: seed_of(rest),
+    };
+    let load_sweep_rates: Option<Vec<f64>> = match flag(rest, "--load-sweep") {
+        Some(list) => Some(
+            list.split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<f64>()
+                        .map_err(|_| anyhow!("bad rate '{s}' in --load-sweep"))
+                })
+                .collect::<Result<_>>()?,
+        ),
+        None => None,
+    };
 
     let backend: Box<dyn ServeBackend> = if synthetic {
         println!("serving synthetic payloads (no artifacts required)");
@@ -321,13 +361,17 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .with_payloads(payloads)
         .with_clients(clients)
         .with_requests(requests)
-        .with_batch(batch);
+        .with_batch(batch)
+        .with_traffic(traffic);
     if sweep {
         if flag(rest, "--strategy").is_some() {
             bail!("--sweep runs every strategy; drop --strategy or drop --sweep");
         }
         if shards > 1 || shard_sweep.is_some() {
             bail!("--sweep sweeps strategies on one shard; use --shard-sweep for the fleet axis");
+        }
+        if load_sweep_rates.is_some() {
+            bail!("--sweep and --load-sweep are separate axes; pick one");
         }
         let (text, _) = serve_sweep(&base, backend.as_ref())?;
         print!("{text}");
@@ -339,6 +383,18 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .map_err(|e: String| anyhow!(e))?;
     let mut spec = base;
     spec.strategy = strategy;
+    if let Some(rates) = load_sweep_rates {
+        if shards > 1 || shard_sweep.is_some() {
+            bail!("--load-sweep measures one shard; drop --shards/--shard-sweep");
+        }
+        if flag(rest, "--arrivals").is_some() {
+            // The sweep would silently overwrite the process per point.
+            bail!("--load-sweep sweeps Poisson rates; drop --arrivals");
+        }
+        let (text, _) = load_sweep(&spec, &rates, backend.as_ref())?;
+        print!("{text}");
+        return Ok(());
+    }
     if let Some(counts) = shard_sweep {
         let (text, _) = fleet_sweep(&spec, placement, &counts, backend.as_ref())?;
         print!("{text}");
@@ -348,9 +404,19 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         let report = serve_fleet(&fleet, backend.as_ref())?;
         println!("{}", report.render());
     } else {
-        println!(
-            "strategy {strategy}: {clients} clients x {requests} requests (batch {batch})"
-        );
+        if spec.traffic.arrivals.is_open_loop() {
+            println!(
+                "strategy {strategy}: open-loop arrivals {} over {clients} workers \
+                 ({} requests total, queue cap {queue_cap}, shed {shed_policy}, \
+                 SLO {slo_ms} ms)",
+                spec.traffic.arrivals,
+                clients * requests,
+            );
+        } else {
+            println!(
+                "strategy {strategy}: {clients} clients x {requests} requests (batch {batch})"
+            );
+        }
         let report = serve(&spec, backend.as_ref())?;
         println!("{}", report.render());
     }

@@ -7,8 +7,14 @@
 use crate::util::Nanos;
 
 /// IPS over the window [start_ns, end_ns).
+///
+/// A degenerate window (`end_ns <= start_ns`) yields 0.0 rather than
+/// panicking: short serving runs reach it whenever the warm-up period
+/// meets or exceeds the run length (ISSUE 4 regression).
 pub fn ips(completions: &[Nanos], start_ns: Nanos, end_ns: Nanos) -> f64 {
-    assert!(end_ns > start_ns, "empty IPS window");
+    if end_ns <= start_ns {
+        return 0.0;
+    }
     let n = completions
         .iter()
         .filter(|&&t| t >= start_ns && t < end_ns)
@@ -24,12 +30,20 @@ pub fn ips_with_warmup(completions: &[Nanos], warmup_ns: Nanos, window_ns: Nanos
 
 /// Per-second IPS samples across the window (the "regular intervals" of
 /// eq. 2 — useful for time-series plots and stability checks).
+///
+/// A trailing partial window (when the span is not a whole number of
+/// seconds) is included as a final sample normalised by its true width,
+/// so the tail is accounted for instead of silently truncated
+/// (ISSUE 4 regression).
 pub fn ips_series(completions: &[Nanos], start_ns: Nanos, end_ns: Nanos) -> Vec<f64> {
     let mut out = Vec::new();
     let mut t = start_ns;
     while t + 1_000_000_000 <= end_ns {
         out.push(ips(completions, t, t + 1_000_000_000));
         t += 1_000_000_000;
+    }
+    if t < end_ns {
+        out.push(ips(completions, t, end_ns));
     }
     out
 }
@@ -68,9 +82,24 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "empty IPS window")]
-    fn empty_window_panics() {
-        ips(&[], 5, 5);
+    fn degenerate_window_is_zero() {
+        // Regression (ISSUE 4): this used to panic, reachable from short
+        // serving runs whose warm-up meets or exceeds the run length.
+        assert_eq!(ips(&[], 5, 5), 0.0);
+        assert_eq!(ips(&[1, 2, 3], 9, 3), 0.0);
+        assert_eq!(ips_with_warmup(&[1, 2, 3], 10, 0), 0.0);
+    }
+
+    #[test]
+    fn series_includes_trailing_partial_window() {
+        // 10/s for 3.5 s: three full one-second samples plus a final
+        // half-second sample normalised by its true width.
+        let c: Vec<Nanos> = (0..35).map(|i| i * 100_000_000).collect();
+        let s = ips_series(&c, 0, 3_500_000_000);
+        assert_eq!(s.len(), 4, "partial window must be accounted for");
+        assert_eq!(s[3], 10.0, "partial window normalised by its width");
+        // Exact multiples are unchanged.
+        assert_eq!(ips_series(&c, 0, 3_000_000_000).len(), 3);
     }
 
     #[test]

@@ -3,8 +3,10 @@
 pub mod ids;
 pub mod rng;
 pub mod json;
+pub(crate) mod sync;
 pub mod time;
 
 pub use ids::{AppId, BlockUid, CtxId, OpUid, SmId, StreamId, SymId};
 pub use rng::DetRng;
+pub(crate) use sync::lock_recover;
 pub use time::{cycles_to_ns, ns_to_cycles, Nanos, GPU_HZ};

@@ -1,0 +1,37 @@
+//! Synchronisation helpers shared by the live serving stack.
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Lock a mutex, recovering from poisoning.
+///
+/// For state that is valid after any panic of a holder — plain counters,
+/// histograms, queues — poisoning carries no information worth
+/// propagating, while an `unwrap()` (or a silently skipped `if let Ok`)
+/// turns one panicked client into a permanently wedged lock for everyone
+/// behind it (the ISSUE 4 gate regression). Callers whose invariants
+/// *can* be broken mid-update must not use this.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn recovers_a_poisoned_mutex() {
+        let m = Arc::new(Mutex::new(7u32));
+        {
+            let m = Arc::clone(&m);
+            let _ = std::thread::spawn(move || {
+                let _guard = m.lock().unwrap();
+                panic!("poison");
+            })
+            .join();
+        }
+        assert!(m.is_poisoned());
+        *lock_recover(&m) += 1;
+        assert_eq!(*lock_recover(&m), 8);
+    }
+}

@@ -215,3 +215,122 @@ fn cli_serve_rejects_bad_placement() {
     let err = String::from_utf8_lossy(&out.stderr);
     assert!(err.contains("unknown placement"), "{err}");
 }
+
+// ---------------------------------------------------------------------
+// open-loop traffic (ISSUE 4)
+// ---------------------------------------------------------------------
+
+#[test]
+fn cli_serve_open_loop_acceptance() {
+    // Acceptance: `cook serve --arrivals poisson:200 --queue-cap 64
+    // --shed reject --slo-ms 50 --synthetic` runs end to end reporting
+    // goodput, SLO-attainment %, shed counts, and arrival-to-completion
+    // latency quantiles. (Smaller request budget than the default to
+    // keep the test fast; the wiring is identical.)
+    let out = cli()
+        .args([
+            "serve",
+            "--synthetic",
+            "--arrivals",
+            "poisson:200",
+            "--queue-cap",
+            "64",
+            "--shed",
+            "reject",
+            "--slo-ms",
+            "50",
+            "--clients",
+            "2",
+            "--requests",
+            "5",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("open-loop arrivals poisson:200"), "{text}");
+    assert!(text.contains("goodput"), "{text}");
+    assert!(text.contains("attainment"), "{text}");
+    assert!(text.contains("shed="), "{text}");
+    assert!(text.contains("p99"), "{text}");
+    assert!(text.contains("queue delay"), "{text}");
+}
+
+#[test]
+fn cli_serve_load_sweep_emits_saturation_table() {
+    let out = cli()
+        .args([
+            "serve",
+            "--synthetic",
+            "--load-sweep",
+            "300,3000",
+            "--queue-cap",
+            "8",
+            "--shed",
+            "reject",
+            "--slo-ms",
+            "50",
+            "--clients",
+            "2",
+            "--requests",
+            "5",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("load sweep"), "{text}");
+    assert!(text.contains("goodput"), "{text}");
+    assert!(text.contains("300"), "{text}");
+    assert!(text.contains("3000"), "{text}");
+}
+
+#[test]
+fn cli_serve_open_loop_fleet_and_bursty() {
+    let out = cli()
+        .args([
+            "serve",
+            "--synthetic",
+            "--shards",
+            "2",
+            "--arrivals",
+            "bursty:500@10/10",
+            "--queue-cap",
+            "16",
+            "--clients",
+            "2",
+            "--requests",
+            "4",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("2 shards"), "{text}");
+    assert!(text.contains("fleet traffic"), "{text}");
+}
+
+#[test]
+fn cli_serve_rejects_bad_traffic_flags() {
+    let out = cli()
+        .args(["serve", "--synthetic", "--arrivals", "uniform:10"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("bad arrival process"), "{err}");
+
+    let out = cli()
+        .args(["serve", "--synthetic", "--arrivals", "poisson:100", "--shed", "drop"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown shed policy"), "{err}");
+
+    let out = cli()
+        .args(["serve", "--synthetic", "--sweep", "--load-sweep", "100"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+}
