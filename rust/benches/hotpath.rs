@@ -53,7 +53,7 @@ fn des_throughput(strategy: StrategyKind, n: usize) -> (usize, f64, f64) {
         ops = o;
         times.push(dt);
     }
-    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times.sort_by(f64::total_cmp);
     let median = times[times.len() / 2];
     // Guard against coarse clocks rounding dt to zero (previously this
     // printed `inf` ops/s); clamp to 1ns so the ratio stays finite.
@@ -69,6 +69,85 @@ fn fmt_f64(v: f64) -> String {
     }
 }
 
+/// Event-core churn in the DES hot loop's shape (hold model: pop one,
+/// push one at a near-future time, occasionally far-future so the
+/// overflow level sees traffic). Returns ops/s (pushes + pops).
+fn event_queue_churn(steps: usize) -> f64 {
+    use cook::gpu::event::{Event, EventQueue};
+    use cook::util::{AppId, DetRng};
+    let mut rng = DetRng::new(7);
+    let mut q = EventQueue::with_capacity(4096);
+    for k in 0..4096u64 {
+        q.push(rng.next_u64() % 4_000_000, Event::HostReady(AppId((k % 64) as usize)));
+    }
+    let mut now = 0u64;
+    let t0 = std::time::Instant::now();
+    for k in 0..steps as u64 {
+        let (t, ev) = q.pop().expect("steady-state queue never drains");
+        std::hint::black_box(ev);
+        now = now.max(t);
+        let dt = if k % 251 == 0 { 60_000_000 } else { rng.next_u64() % 300_000 };
+        q.push(now + dt, Event::HostReady(AppId((k % 64) as usize)));
+    }
+    let dt = t0.elapsed().as_secs_f64().max(1e-9);
+    (steps * 2) as f64 / dt
+}
+
+/// The `BinaryHeap<Reverse<(t, seq, Event)>>` the calendar queue
+/// replaced, on the identical workload — the before/after context for
+/// BENCH_hotpath.json.
+fn heap_queue_churn(steps: usize) -> f64 {
+    use cook::gpu::event::Event;
+    use cook::util::{AppId, DetRng};
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let mut rng = DetRng::new(7);
+    let mut q: BinaryHeap<Reverse<(u64, u64, Event)>> = BinaryHeap::with_capacity(4096);
+    let mut seq = 0u64;
+    for k in 0..4096u64 {
+        seq += 1;
+        let ev = Event::HostReady(AppId((k % 64) as usize));
+        q.push(Reverse((rng.next_u64() % 4_000_000, seq, ev)));
+    }
+    let mut now = 0u64;
+    let t0 = std::time::Instant::now();
+    for k in 0..steps as u64 {
+        let Reverse((t, _, ev)) = q.pop().expect("steady-state queue never drains");
+        std::hint::black_box(ev);
+        now = now.max(t);
+        let dt = if k % 251 == 0 { 60_000_000 } else { rng.next_u64() % 300_000 };
+        seq += 1;
+        q.push(Reverse((now + dt, seq, Event::HostReady(AppId((k % 64) as usize)))));
+    }
+    let dt = t0.elapsed().as_secs_f64().max(1e-9);
+    (steps * 2) as f64 / dt
+}
+
+/// Serving-report quantile pipeline: the streaming sketch (record + 3
+/// quantile reads) vs the exact accumulate-sort-rank path it replaced,
+/// over identical samples. Returns (sketch_ms, exact_sort_ms).
+fn report_path_ms(n: usize) -> (f64, f64) {
+    use cook::metrics::{nearest_rank, LatencyStats};
+    let samples: Vec<f64> = (0..n as u64)
+        .map(|i| (i.wrapping_mul(2654435761) % 1_000_003) as f64 / 997.0)
+        .collect();
+    let t0 = std::time::Instant::now();
+    let mut s = LatencyStats::new(false);
+    for &v in &samples {
+        s.record(v);
+    }
+    let qs: f64 = [0.5, 0.95, 0.99].iter().map(|&q| s.quantile(q)).sum();
+    let sketch_ms = t0.elapsed().as_secs_f64() * 1e3;
+    std::hint::black_box(qs);
+    let t1 = std::time::Instant::now();
+    let mut v = samples.clone();
+    v.sort_by(f64::total_cmp);
+    let qe: f64 = [0.5, 0.95, 0.99].iter().map(|&q| nearest_rank(&v, q)).sum();
+    let exact_ms = t1.elapsed().as_secs_f64() * 1e3;
+    std::hint::black_box(qe);
+    (sketch_ms, exact_ms)
+}
+
 /// The committed perf-trajectory file at the repository root — single
 /// source for both the reader (previous-rotation) and the writer.
 fn root_json_path() -> Option<PathBuf> {
@@ -78,7 +157,9 @@ fn root_json_path() -> Option<PathBuf> {
 }
 
 fn main() {
-    common::section("hotpath", || {
+    let mut regressions: Vec<String> = Vec::new();
+    let regressions_ref = &mut regressions;
+    common::section("hotpath", move || {
         let mut out = String::new();
         let _ = writeln!(out, "== L3 hot-path microbenchmarks ==");
         if smoke() {
@@ -147,10 +228,39 @@ fn main() {
             dt
         };
 
+        // 6. Event-queue core (ISSUE 5): the calendar/bucket queue vs
+        //    the BinaryHeap it replaced, identical churn workload.
+        let eq_steps = if smoke() { 200_000 } else { 2_000_000 };
+        let eq_cal = event_queue_churn(eq_steps);
+        let eq_heap = heap_queue_churn(eq_steps);
+        let _ = writeln!(out, "event-queue calendar ({eq_steps} steps): {eq_cal:>12.0} ops/s");
+        let _ = writeln!(out, "event-queue binary-heap (reference):   {eq_heap:>12.0} ops/s");
+
+        // 7. Serving-report path (ISSUE 5): streaming sketch vs the
+        //    exact accumulate-then-sort pipeline it replaced.
+        let rp_n = if smoke() { 200_000 } else { 2_000_000 };
+        let (rp_sketch_ms, rp_exact_ms) = report_path_ms(rp_n);
+        let _ = writeln!(
+            out,
+            "report path, {rp_n} samples: sketch {rp_sketch_ms:.2} ms, \
+             exact sort {rp_exact_ms:.2} ms"
+        );
+
         // Machine-readable trajectory: always to target/bench-results/;
         // the committed repo-root file only on FULL runs — smoke numbers
         // are not comparable and must not rotate the real baseline away.
-        let json = render_json(&des, &mmult_t, &hookgen_t, &net_t, fig10_s);
+        let json = render_json(
+            &des,
+            &mmult_t,
+            &hookgen_t,
+            &net_t,
+            fig10_s,
+            (eq_cal, eq_heap),
+            (rp_sketch_ms, rp_exact_ms),
+        );
+        // Regression guard (ISSUE 5): judged after the file is written so
+        // the trajectory still records the regressed numbers.
+        *regressions_ref = throughput_regressions(&json);
         let _ = std::fs::write(common::results_dir().join("BENCH_hotpath.json"), &json);
         if smoke() {
             let _ = writeln!(out, "[smoke run: repo-root BENCH_hotpath.json left untouched]");
@@ -166,6 +276,60 @@ fn main() {
         }
         out
     });
+    if !regressions.is_empty() {
+        for r in &regressions {
+            eprintln!("PERF REGRESSION: {r}");
+        }
+        eprintln!(
+            "hotpath bench: `current` throughput dropped >25% below `previous` \
+             (both present in BENCH_hotpath.json, comparable modes)"
+        );
+        std::process::exit(1);
+    }
+}
+
+/// The >25% regression guard over BENCH_hotpath.json: compares each
+/// throughput key of `current` against `previous` when BOTH blocks are
+/// present and were produced in the same mode (a smoke run's reduced
+/// horizons must never be judged against a full baseline). Returns the
+/// failing keys; empty means pass or not comparable.
+fn throughput_regressions(json_text: &str) -> Vec<String> {
+    const FLOOR: f64 = 0.75;
+    let Ok(j) = Json::parse(json_text) else { return Vec::new() };
+    let (Some(cur), Some(prev)) = (j.get("current"), j.get("previous")) else {
+        return Vec::new();
+    };
+    let smoke_of = |b: &Json| match b.get("smoke") {
+        Some(Json::Bool(v)) => Some(*v),
+        _ => None,
+    };
+    match (smoke_of(cur), smoke_of(prev)) {
+        (Some(a), Some(b)) if a == b => {}
+        _ => return Vec::new(),
+    }
+    let mut failures = Vec::new();
+    let mut check = |label: String, c: Option<&Json>, p: Option<&Json>| {
+        if let (Some(c), Some(p)) = (c.and_then(Json::as_f64), p.and_then(Json::as_f64)) {
+            if p > 0.0 && c < FLOOR * p {
+                failures.push(format!(
+                    "{label}: {c:.0} vs previous {p:.0} ({:.1}% drop)",
+                    (1.0 - c / p) * 100.0
+                ));
+            }
+        }
+    };
+    if let (Some(Json::Obj(cd)), Some(pd)) = (cur.get("des_ops_per_s"), prev.get("des_ops_per_s"))
+    {
+        for (k, v) in cd {
+            check(format!("des_ops_per_s.{k}"), Some(v), pd.get(k));
+        }
+    }
+    check(
+        "event_queue_ops_per_s.calendar".to_string(),
+        cur.get("event_queue_ops_per_s").and_then(|o| o.get("calendar")),
+        prev.get("event_queue_ops_per_s").and_then(|o| o.get("calendar")),
+    );
+    failures
 }
 
 /// Assemble BENCH_hotpath.json. The previous file's `current` block (if
@@ -177,6 +341,8 @@ fn render_json(
     hookgen_t: &std::time::Duration,
     net_t: &std::time::Duration,
     fig10_s: f64,
+    event_queue: (f64, f64),
+    report_path: (f64, f64),
 ) -> String {
     let mut cur = String::new();
     cur.push_str("{\n    \"des_ops_per_s\": {\n");
@@ -185,6 +351,14 @@ fn render_json(
         let _ = writeln!(cur, "      \"{name}\": {}{comma}", fmt_f64(*v));
     }
     cur.push_str("    },\n");
+    let _ = writeln!(cur, "    \"event_queue_ops_per_s\": {{");
+    let _ = writeln!(cur, "      \"calendar\": {},", fmt_f64(event_queue.0));
+    let _ = writeln!(cur, "      \"binary_heap\": {}", fmt_f64(event_queue.1));
+    let _ = writeln!(cur, "    }},");
+    let _ = writeln!(cur, "    \"report_path_ms\": {{");
+    let _ = writeln!(cur, "      \"sketch\": {},", fmt_f64(report_path.0));
+    let _ = writeln!(cur, "      \"exact_sort\": {}", fmt_f64(report_path.1));
+    let _ = writeln!(cur, "    }},");
     let _ = writeln!(cur, "    \"mmult_sim_ms\": {},", fmt_f64(mmult_t.as_secs_f64() * 1e3));
     let _ = writeln!(cur, "    \"hookgen_ms\": {},", fmt_f64(hookgen_t.as_secs_f64() * 1e3));
     let _ = writeln!(cur, "    \"net_extraction_ms\": {},", fmt_f64(net_t.as_secs_f64() * 1e3));

@@ -63,16 +63,17 @@ use crate::config::StrategyKind;
 use crate::control::gate::{GateStats, GpuGate};
 use crate::control::policy::AccessPolicy;
 use crate::control::serving::{
-    admit, build_latency_tables, fold_open_outs, nearest_rank, offered_rate_hz, open_worker,
-    serve, OpenWorkerOut, Pending, ServeBackend, ServeReport, ServeSpec,
+    admit, build_latency_stats, fold_open_outs, offered_rate_hz, open_worker, serve,
+    OpenWorkerOut, Pending, ServeBackend, ServeReport, ServeSpec,
 };
 use crate::control::traffic::{AdmissionQueue, ShedPolicy, TrafficReport};
+use crate::metrics::stats::LatencyStats;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::fmt;
 use std::str::FromStr;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Barrier, Mutex};
+use std::sync::{Barrier, PoisonError, RwLock};
 use std::time::{Duration, Instant};
 
 // ---------------------------------------------------------------------
@@ -148,7 +149,11 @@ pub struct ShardRouter {
     rr_next: AtomicUsize,
     depths: Vec<AtomicUsize>,
     /// Payload slot -> shard, first-come sticky (affinity placement).
-    affinity: Mutex<HashMap<usize, usize>>,
+    /// `RwLock`, not `Mutex`: after warm-up every arrival is a pure
+    /// lookup, and sticky routing must not serialise all arrivals on one
+    /// exclusive lock — readers proceed concurrently; the write lock is
+    /// taken only on a miss (first client of a payload).
+    affinity: RwLock<HashMap<usize, usize>>,
 }
 
 impl ShardRouter {
@@ -158,7 +163,7 @@ impl ShardRouter {
             placement,
             rr_next: AtomicUsize::new(0),
             depths: (0..shards).map(|_| AtomicUsize::new(0)).collect(),
-            affinity: Mutex::new(HashMap::new()),
+            affinity: RwLock::new(HashMap::new()),
         }
     }
 
@@ -210,13 +215,31 @@ impl ShardRouter {
             }
             Placement::LeastLoaded => self.least_loaded(),
             Placement::Affinity => {
-                let mut map = self.affinity.lock().unwrap();
-                match map.get(&payload_slot) {
-                    Some(&s) => s,
+                // Read-path fast-hit: the overwhelmingly common case is a
+                // warm payload already pinned to its shard.
+                let hit = self
+                    .affinity
+                    .read()
+                    .unwrap_or_else(PoisonError::into_inner)
+                    .get(&payload_slot)
+                    .copied();
+                match hit {
+                    Some(s) => s,
                     None => {
-                        let s = self.least_loaded();
-                        map.insert(payload_slot, s);
-                        s
+                        let mut map =
+                            self.affinity.write().unwrap_or_else(PoisonError::into_inner);
+                        // Re-check under the write lock: a racing miss may
+                        // have pinned the payload between our read and
+                        // write — stickiness must win over a second
+                        // least-loaded pick.
+                        match map.get(&payload_slot) {
+                            Some(&s) => s,
+                            None => {
+                                let s = self.least_loaded();
+                                map.insert(payload_slot, s);
+                                s
+                            }
+                        }
                     }
                 }
             }
@@ -295,8 +318,10 @@ pub struct FleetReport {
     pub batch: usize,
     /// Fleet wall-clock (shards run concurrently; this is the makespan).
     pub wall_s: f64,
-    /// Sorted per-request latencies merged across every shard, ms.
-    pub latencies_ms: Vec<f64>,
+    /// Per-request latency distribution merged across every shard, ms
+    /// (sketch merge; exact vectors survive on the `--exact-quantiles`
+    /// path, where they are re-sorted once at fleet assembly).
+    pub latency: LatencyStats,
     /// One entry per shard, in shard-id order.
     pub shards: Vec<ShardReport>,
     /// Gate wait/hold statistics merged across shards (None for ungated
@@ -316,12 +341,14 @@ impl FleetReport {
     /// Aggregate fleet throughput: completed requests over the fleet's
     /// wall-clock makespan (shed traffic never inflates throughput).
     pub fn ips(&self) -> f64 {
-        self.latencies_ms.len() as f64 / self.wall_s.max(1e-9)
+        self.latency.count() as f64 / self.wall_s.max(1e-9)
     }
 
     /// Nearest-rank quantile of the merged latencies; 0.0 when empty.
+    /// Exact on the `--exact-quantiles` path, sketch extraction (<= 2%
+    /// relative error) otherwise.
     pub fn latency_p(&self, q: f64) -> f64 {
-        nearest_rank(&self.latencies_ms, q)
+        self.latency.quantile(q)
     }
 
     /// Shards that actually served clients.
@@ -344,7 +371,7 @@ impl FleetReport {
             self.latency_p(0.50),
             self.latency_p(0.95),
             self.latency_p(0.99),
-            self.latencies_ms.last().copied().unwrap_or(0.0),
+            self.latency.max(),
         );
         for s in &self.shards {
             match &s.report {
@@ -355,7 +382,7 @@ impl FleetReport {
                     r.ips(),
                     r.latency_p(0.50),
                     r.latency_p(0.95),
-                    r.latencies_ms.last().copied().unwrap_or(0.0),
+                    r.latency.max(),
                 )),
                 None => out.push_str(&format!("\n  shard {}: idle (no clients routed)", s.shard)),
             }
@@ -439,14 +466,14 @@ pub fn serve_fleet(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result<Fleet
     let wall_s = t0.elapsed().as_secs_f64();
 
     let mut shards = Vec::with_capacity(spec.shards);
-    let mut latencies_ms = Vec::new();
+    let mut latency = LatencyStats::new(base.exact_quantiles);
     let mut gate: Option<GateStats> = None;
     for (shard, result) in results.into_iter().enumerate() {
         let report = match result {
             None => None,
             Some(r) => {
                 let r = r.map_err(|e| anyhow!("shard {shard}: {e}"))?;
-                latencies_ms.extend_from_slice(&r.latencies_ms);
+                latency.merge(&r.latency);
                 if let Some(g) = &r.gate {
                     match &mut gate {
                         Some(merged) => {
@@ -461,7 +488,7 @@ pub fn serve_fleet(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result<Fleet
         };
         shards.push(ShardReport { shard, clients: assigned[shard].len(), report });
     }
-    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    latency.seal();
     Ok(FleetReport {
         strategy: base.strategy,
         placement: spec.placement,
@@ -469,7 +496,7 @@ pub fn serve_fleet(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result<Fleet
         requests_per_client: base.requests,
         batch: base.batch,
         wall_s,
-        latencies_ms,
+        latency,
         shards,
         gate,
         traffic: None,
@@ -623,7 +650,7 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
         per_shard[shard].push(out);
     }
     let mut shards = Vec::with_capacity(spec.shards);
-    let mut fleet_latencies = Vec::new();
+    let mut fleet_latency = LatencyStats::new(base.exact_quantiles);
     let mut fleet_gate: Option<GateStats> = None;
     let mut fleet_traffic: Option<TrafficReport> = None;
     // Span of the arrival schedule: per-shard offered rates are that
@@ -637,8 +664,9 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
         }
         let (queue_delay, timed_out, within_slo) = (o.queue_delay, o.timed_out, o.within_slo);
         let completed = o.samples.len();
-        let (latencies_ms, per_payload) = build_latency_tables(o.samples, &base.payloads);
-        fleet_latencies.extend_from_slice(&latencies_ms);
+        let (latency, per_payload) =
+            build_latency_stats(o.samples, &base.payloads, base.exact_quantiles);
+        fleet_latency.merge(&latency);
         let gate_stats = gates[shard].as_ref().map(|g| g.stats());
         if let Some(g) = &gate_stats {
             match &mut fleet_gate {
@@ -680,7 +708,7 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
                 requests_per_client: base.requests,
                 batch: base.batch,
                 wall_s,
-                latencies_ms,
+                latency,
                 per_payload,
                 gate: gate_stats,
                 traffic: Some(shard_traffic),
@@ -697,7 +725,7 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
         // values it was merged from are shard-local).
         t.offered_rate_hz = offered_rate_hz(&offsets);
     }
-    fleet_latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    fleet_latency.seal();
     Ok(FleetReport {
         strategy: base.strategy,
         placement: spec.placement,
@@ -705,7 +733,7 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
         requests_per_client: base.requests,
         batch: base.batch,
         wall_s,
-        latencies_ms: fleet_latencies,
+        latency: fleet_latency,
         shards,
         gate: fleet_gate,
         traffic: fleet_traffic,
@@ -812,7 +840,7 @@ mod tests {
         let spec = FleetSpec::new(base, 2, Placement::RoundRobin);
         let r = serve_fleet(&spec, &backend()).unwrap();
         assert_eq!(r.total(), 12);
-        assert_eq!(r.latencies_ms.len(), 12);
+        assert_eq!(r.latency.count(), 12);
         assert_eq!(r.shards.len(), 2);
         for s in &r.shards {
             assert_eq!(s.clients, 2, "round-robin must split 4 clients 2/2");
@@ -915,31 +943,56 @@ mod tests {
 
     #[test]
     fn fleet_quantiles_equal_resorted_concatenation() {
-        // Merge-then-sort invariant (ISSUE 4): the fleet's latency_p must
-        // equal the nearest-rank quantile of the re-sorted concatenation
-        // of every shard's latencies, so a future merge path can't
-        // silently feed unsorted data.
+        // Merge-then-sort invariant (ISSUE 4), now the sketch-vs-exact
+        // cross-check (ISSUE 5): on the exact-quantiles path the fleet's
+        // latency_p must equal the nearest-rank quantile of the re-sorted
+        // concatenation of every shard's latencies, and the merged
+        // streaming sketch must agree with that exact value within its
+        // documented relative error bound (GAMMA - 1).
+        use crate::metrics::stats::{nearest_rank, QuantileSketch};
         let base = ServeSpec::new(StrategyKind::Worker, "dna")
             .with_payloads(vec!["dna".into(), "mmult".into()])
             .with_clients(6)
-            .with_requests(4);
+            .with_requests(4)
+            .with_exact_quantiles(true);
         let r = serve_fleet(&FleetSpec::new(base, 3, Placement::RoundRobin), &backend())
             .unwrap();
         let mut concat: Vec<f64> = r
             .shards
             .iter()
             .filter_map(|s| s.report.as_ref())
-            .flat_map(|rep| rep.latencies_ms.iter().copied())
+            .flat_map(|rep| rep.latency.exact_values().expect("exact path").iter().copied())
             .collect();
-        concat.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        assert_eq!(concat.len(), r.latencies_ms.len());
+        concat.sort_by(f64::total_cmp);
+        assert_eq!(concat.len(), r.latency.count());
+        assert!(r.latency.is_exact(), "fleet merge must keep the exact path");
         for q in [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0] {
+            let exact = nearest_rank(&concat, q);
             assert_eq!(
                 r.latency_p(q),
-                nearest_rank(&concat, q),
+                exact,
                 "fleet quantile q={q} diverged from re-sorted concatenation"
             );
+            // The merged sketch tracks the exact quantile within bound.
+            let approx = r.latency.sketch.quantile(q);
+            assert!(
+                (approx - exact).abs() / exact.max(1e-12)
+                    <= QuantileSketch::GAMMA - 1.0 + 1e-9,
+                "q={q}: merged sketch {approx} vs exact {exact}"
+            );
         }
+    }
+
+    #[test]
+    fn fleet_default_path_is_sketch_only() {
+        let base = ServeSpec::new(StrategyKind::Worker, "dna")
+            .with_clients(2)
+            .with_requests(3);
+        let r = serve_fleet(&FleetSpec::new(base, 2, Placement::RoundRobin), &backend())
+            .unwrap();
+        assert!(!r.latency.is_exact());
+        assert_eq!(r.latency.count(), 6);
+        assert!(r.latency_p(0.99) >= r.latency_p(0.5));
     }
 
     // -------------------------------------------------- open-loop fleet --
@@ -963,7 +1016,7 @@ mod tests {
         assert_eq!(t.offered, 20);
         assert!(t.accounted(0), "requests leaked across the fleet");
         assert_eq!(t.completed, 20, "blocking policy completes everything");
-        assert_eq!(r.latencies_ms.len(), 20);
+        assert_eq!(r.latency.count(), 20);
         assert_eq!(r.shards.len(), 2);
         // Per-shard: own gate, own queue accounting.
         let mut shard_offered = 0;

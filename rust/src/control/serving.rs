@@ -32,7 +32,7 @@ use crate::control::policy::{AccessPolicy, Admission};
 use crate::control::traffic::{
     AdmissionQueue, ShedPolicy, TrafficReport, TrafficSpec,
 };
-use crate::metrics::stats::Histogram;
+use crate::metrics::stats::{Histogram, LatencyStats};
 use anyhow::{anyhow, Result};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -232,6 +232,12 @@ pub struct ServeSpec {
     /// Traffic shape: arrival process, admission-queue bound, shed
     /// policy, SLO target. Defaults to the historical closed loop.
     pub traffic: TrafficSpec,
+    /// Keep the exact per-request latency vectors alongside the
+    /// streaming sketch (`--exact-quantiles`): quantiles then come from
+    /// the exact nearest-rank path at O(n log n) report cost. Off by
+    /// default — the sketch's <= 2% relative error is ample for latency
+    /// reporting, and recording stays O(1) per request.
+    pub exact_quantiles: bool,
 }
 
 impl ServeSpec {
@@ -243,6 +249,7 @@ impl ServeSpec {
             requests: 50,
             batch: 1,
             traffic: TrafficSpec::default(),
+            exact_quantiles: false,
         }
     }
 
@@ -276,6 +283,11 @@ impl ServeSpec {
         self
     }
 
+    pub fn with_exact_quantiles(mut self, exact: bool) -> Self {
+        self.exact_quantiles = exact;
+        self
+    }
+
     pub(crate) fn validate(&self) -> Result<()> {
         if self.clients == 0 || self.requests == 0 {
             return Err(anyhow!("serve requires clients > 0 and requests > 0"));
@@ -295,13 +307,14 @@ impl ServeSpec {
 #[derive(Debug)]
 pub struct PayloadReport {
     pub payload: String,
-    /// Sorted per-request latencies, milliseconds.
-    pub latencies_ms: Vec<f64>,
+    /// Per-request latency distribution, milliseconds (streaming sketch;
+    /// exact vector retained on the `--exact-quantiles` path).
+    pub latency: LatencyStats,
 }
 
 impl PayloadReport {
     pub fn ips(&self, wall_s: f64) -> f64 {
-        self.latencies_ms.len() as f64 / wall_s.max(1e-9)
+        self.latency.count() as f64 / wall_s.max(1e-9)
     }
 }
 
@@ -309,8 +322,9 @@ impl PayloadReport {
 /// throughput, and (for gated strategies) the gate's wait/hold
 /// histograms. Aggregate across shards with
 /// [`crate::control::fleet::FleetReport`]. Quantiles are nearest-rank
-/// (see [`ServeReport::latency_p`]); [`ServeReport::render`] produces
-/// the human table printed by `cook serve`.
+/// over a streaming sketch (exact on the `--exact-quantiles` path — see
+/// [`ServeReport::latency_p`]); [`ServeReport::render`] produces the
+/// human table printed by `cook serve`.
 #[derive(Debug)]
 pub struct ServeReport {
     pub strategy: StrategyKind,
@@ -318,8 +332,8 @@ pub struct ServeReport {
     pub requests_per_client: usize,
     pub batch: usize,
     pub wall_s: f64,
-    /// Sorted per-request latencies across all payloads, milliseconds.
-    pub latencies_ms: Vec<f64>,
+    /// Per-request latency distribution across all payloads, ms.
+    pub latency: LatencyStats,
     /// Per-payload breakdowns (one entry per distinct served payload).
     pub per_payload: Vec<PayloadReport>,
     /// Gate wait/hold statistics (None for ungated strategies).
@@ -338,13 +352,15 @@ impl ServeReport {
     /// Completed inferences per second of wall clock (completions, not
     /// offered requests, so shed traffic never inflates throughput).
     pub fn ips(&self) -> f64 {
-        self.latencies_ms.len() as f64 / self.wall_s.max(1e-9)
+        self.latency.count() as f64 / self.wall_s.max(1e-9)
     }
 
     /// Nearest-rank quantile (rank `ceil(q*n)`) of the pooled latencies;
-    /// 0.0 when no latency was recorded.
+    /// 0.0 when no latency was recorded. Exact when the spec kept the
+    /// exact vectors, within the sketch's <= 2% relative error bound
+    /// otherwise (min/max are always exact).
     pub fn latency_p(&self, q: f64) -> f64 {
-        nearest_rank(&self.latencies_ms, q)
+        self.latency.quantile(q)
     }
 
     pub fn render(&self) -> String {
@@ -359,17 +375,17 @@ impl ServeReport {
             self.latency_p(0.50),
             self.latency_p(0.95),
             self.latency_p(0.99),
-            self.latencies_ms.last().copied().unwrap_or(0.0),
+            self.latency.max(),
         );
         if self.per_payload.len() > 1 {
             for p in &self.per_payload {
                 out.push_str(&format!(
                     "\n  payload {:<8} n={:<5} {:.1} IPS; p50={:.2} p95={:.2} ms",
                     p.payload,
-                    p.latencies_ms.len(),
+                    p.latency.count(),
                     p.ips(self.wall_s),
-                    nearest_rank(&p.latencies_ms, 0.50),
-                    nearest_rank(&p.latencies_ms, 0.95),
+                    p.latency.quantile(0.50),
+                    p.latency.quantile(0.95),
                 ));
             }
         }
@@ -387,23 +403,6 @@ impl ServeReport {
         }
         out
     }
-}
-
-/// Nearest-rank quantile of a sorted slice; 0.0 when empty. Shared with
-/// the fleet layer, which reports the same quantiles over merged
-/// latencies — the debug assertion keeps a future merge path from
-/// silently feeding unsorted data (ISSUE 4).
-pub(crate) fn nearest_rank(sorted: &[f64], q: f64) -> f64 {
-    debug_assert!(
-        sorted.windows(2).all(|w| w[0] <= w[1]),
-        "nearest_rank requires sorted input"
-    );
-    let n = sorted.len();
-    if n == 0 {
-        return 0.0;
-    }
-    let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as usize).clamp(1, n);
-    sorted[rank - 1]
 }
 
 // ---------------------------------------------------------------------
@@ -438,28 +437,32 @@ enum StreamJob {
     Release,
 }
 
-/// Sort recorded samples into the pooled + per-payload latency tables
-/// (shared by the closed-loop, open-loop and fleet assembly paths).
-pub(crate) fn build_latency_tables(
+/// Fold recorded samples into the pooled + per-payload latency stats
+/// (shared by the closed-loop, open-loop and fleet assembly paths). One
+/// pass recording into streaming sketches — the old accumulate-then-sort
+/// tables paid an O(n log n) sort per report; the exact vectors (and
+/// their sort) survive only behind `exact` (`--exact-quantiles`).
+pub(crate) fn build_latency_stats(
     samples: Vec<Sample>,
     payloads: &[String],
-) -> (Vec<f64>, Vec<PayloadReport>) {
-    let mut by_slot: Vec<Vec<f64>> = vec![Vec::new(); payloads.len()];
-    let mut latencies_ms = Vec::with_capacity(samples.len());
+    exact: bool,
+) -> (LatencyStats, Vec<PayloadReport>) {
+    let mut pooled = LatencyStats::new(exact);
+    let mut by_slot: Vec<LatencyStats> = vec![LatencyStats::new(exact); payloads.len()];
     for (slot, ms) in samples {
-        by_slot[slot].push(ms);
-        latencies_ms.push(ms);
+        by_slot[slot].record(ms);
+        pooled.record(ms);
     }
-    latencies_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    pooled.seal();
     let mut per_payload = Vec::new();
-    for (slot, mut lats) in by_slot.into_iter().enumerate() {
-        if lats.is_empty() {
+    for (slot, mut lat) in by_slot.into_iter().enumerate() {
+        if lat.is_empty() {
             continue;
         }
-        lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        per_payload.push(PayloadReport { payload: payloads[slot].clone(), latencies_ms: lats });
+        lat.seal();
+        per_payload.push(PayloadReport { payload: payloads[slot].clone(), latency: lat });
     }
-    (latencies_ms, per_payload)
+    (pooled, per_payload)
 }
 
 /// Serve `spec` against `backend`.
@@ -506,14 +509,14 @@ pub fn serve(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<ServeReport
     for r in joined {
         samples.extend(r?);
     }
-    let (latencies_ms, per_payload) = build_latency_tables(samples, &spec.payloads);
+    let (latency, per_payload) = build_latency_stats(samples, &spec.payloads, spec.exact_quantiles);
     Ok(ServeReport {
         strategy: spec.strategy,
         clients: spec.clients,
         requests_per_client: spec.requests,
         batch: spec.batch,
         wall_s,
-        latencies_ms,
+        latency,
         per_payload,
         gate: gate.map(|g| g.stats()),
         traffic: None,
@@ -1021,14 +1024,15 @@ fn serve_open_loop(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<Serve
     }
     let (queue_delay, timed_out, within_slo) = (o.queue_delay, o.timed_out, o.within_slo);
     let completed = o.samples.len();
-    let (latencies_ms, per_payload) = build_latency_tables(o.samples, &spec.payloads);
+    let (latency, per_payload) =
+        build_latency_stats(o.samples, &spec.payloads, spec.exact_quantiles);
     Ok(ServeReport {
         strategy: spec.strategy,
         clients: spec.clients,
         requests_per_client: spec.requests,
         batch: spec.batch,
         wall_s,
-        latencies_ms,
+        latency,
         per_payload,
         gate: gate.map(|g| g.stats()),
         traffic: Some(TrafficReport {
@@ -1081,7 +1085,8 @@ mod tests {
                 .with_requests(4);
             let r = serve(&spec, &backend()).unwrap_or_else(|e| panic!("{strategy}: {e}"));
             assert_eq!(r.total(), 8, "{strategy}");
-            assert_eq!(r.latencies_ms.len(), 8, "{strategy}");
+            assert_eq!(r.latency.count(), 8, "{strategy}");
+            assert!(!r.latency.is_exact(), "sketch-only by default");
             assert!(r.ips() > 0.0, "{strategy}");
             assert!(r.latency_p(0.5) > 0.0, "{strategy}");
             assert_eq!(r.gate.is_some(), AccessPolicy::new(strategy).gated(), "{strategy}");
@@ -1123,7 +1128,7 @@ mod tests {
         let r = serve(&spec, &backend()).unwrap();
         assert_eq!(r.per_payload.len(), 2);
         for p in &r.per_payload {
-            assert_eq!(p.latencies_ms.len(), 6, "{}", p.payload);
+            assert_eq!(p.latency.count(), 6, "{}", p.payload);
             assert!(p.ips(r.wall_s) > 0.0);
         }
         assert!(r.render().contains("payload dna"));
@@ -1140,7 +1145,7 @@ mod tests {
             requests_per_client: 1,
             batch: 1,
             wall_s: 1.0,
-            latencies_ms: vec![],
+            latency: LatencyStats::new(true),
             per_payload: vec![],
             gate: None,
             traffic: None,
@@ -1149,15 +1154,36 @@ mod tests {
         assert_eq!(empty.latency_p(0.99), 0.0);
 
         let four = ServeReport {
-            latencies_ms: vec![1.0, 2.0, 3.0, 4.0],
+            latency: LatencyStats::from_values(&[1.0, 2.0, 3.0, 4.0], true),
             ..empty
         };
-        // Nearest rank: ceil(0.5*4) = 2 -> the 2nd smallest.
+        // Nearest rank (exact path): ceil(0.5*4) = 2 -> the 2nd smallest.
         assert_eq!(four.latency_p(0.50), 2.0);
         assert_eq!(four.latency_p(0.25), 1.0);
         assert_eq!(four.latency_p(0.75), 3.0);
         assert_eq!(four.latency_p(1.00), 4.0);
         assert_eq!(four.latency_p(0.0), 1.0);
+    }
+
+    #[test]
+    fn exact_quantiles_flag_keeps_exact_vectors() {
+        let spec = ServeSpec::new(StrategyKind::Synced, "dna")
+            .with_clients(2)
+            .with_requests(4)
+            .with_exact_quantiles(true);
+        let r = serve(&spec, &backend()).unwrap();
+        assert!(r.latency.is_exact());
+        let exact = r.latency.exact_values().unwrap();
+        assert_eq!(exact.len(), 8);
+        // Sketch and exact must agree within the documented error bound.
+        for q in [0.25, 0.5, 0.95] {
+            let (e, s) = (r.latency.quantile(q), r.latency.sketch.quantile(q));
+            assert!(
+                (s - e).abs() / e.max(1e-12)
+                    <= crate::metrics::stats::QuantileSketch::GAMMA - 1.0 + 1e-9,
+                "q={q}: sketch {s} vs exact {e}"
+            );
+        }
     }
 
     #[test]
@@ -1211,7 +1237,7 @@ mod tests {
             // Blocking shed policy + generous SLO: everything completes.
             assert_eq!(t.completed, 10, "{strategy}");
             assert_eq!(t.shed, 0, "{strategy}");
-            assert_eq!(r.latencies_ms.len(), 10, "{strategy}");
+            assert_eq!(r.latency.count(), 10, "{strategy}");
             assert_eq!(t.queue_delay.count(), 10, "{strategy}");
             assert_eq!(r.gate.is_some(), AccessPolicy::new(strategy).gated(), "{strategy}");
         }
@@ -1236,7 +1262,7 @@ mod tests {
         assert_eq!(t.offered, 40);
         assert!(t.shed > 0, "overload against cap 2 must shed");
         assert!(t.accounted(0));
-        assert_eq!(t.completed, r.latencies_ms.len());
+        assert_eq!(t.completed, r.latency.count());
         assert!(t.completed < t.offered);
     }
 

@@ -455,14 +455,36 @@ impl Sim {
         // HostReady events alone would mark nothing. Mirror the legacy
         // engine's unconditional first pump by marking everything dirty.
         self.mark(D_HOSTS | D_WORKERS | D_DRIVER | D_GPU);
-        while let Some((t, ev)) = self.events.pop() {
+        // Batch drain: pull EVERY event of the next virtual instant at
+        // once (in the same (time, seq) order single pops would yield)
+        // and run the dirty-set pump once per instant, not once per
+        // event. Events pushed *at the current instant* by a handler or
+        // by the pump form a follow-up batch at the same timestamp.
+        //
+        // This is a deliberate semantic change from the per-event pump,
+        // not a pure optimisation: a generation/uid-guarded event that
+        // shares an instant with the event that would have invalidated
+        // it (e.g. a QuantumExpire landing at the same nanosecond as the
+        // active context's final BatchDone) used to be cancelled by the
+        // intervening pump and is now handled first. Every such handler
+        // copes with arbitrary state (the guards exist precisely for
+        // stale events), so the result is a different-but-valid schedule
+        // — still a pure function of (config, seed), pinned by the
+        // golden-trace suite from its first generation on the batched
+        // engine.
+        let mut batch: Vec<Event> = Vec::with_capacity(16);
+        'run: while let Some(t) = self.events.pop_batch(&mut batch) {
             debug_assert!(t >= self.now, "time went backwards");
             self.now = t;
-            if ev == Event::Horizon {
-                self.horizon_reached = true;
-                break;
+            for &ev in &batch {
+                if ev == Event::Horizon {
+                    // Horizon is pushed first (lowest seq), so nothing at
+                    // the horizon instant is ever handled before it.
+                    self.horizon_reached = true;
+                    break 'run;
+                }
+                self.handle(ev);
             }
-            self.handle(ev);
             self.pump();
             if self.apps.iter().all(|a| a.done()) {
                 break;

@@ -3,7 +3,32 @@
 //! Events that can be invalidated by state changes (batch completions,
 //! quantum expiries) carry a generation counter; handlers drop events whose
 //! generation no longer matches — the standard DES cancellation idiom,
-//! cheaper than removing entries from the heap.
+//! cheaper than removing entries from the queue.
+//!
+//! # The calendar queue
+//!
+//! [`EventQueue`] is a two-level calendar/bucket queue, replacing the
+//! original `BinaryHeap<Reverse<(Nanos, u64, Event)>>` whose O(log n)
+//! push/pop dominated the per-event loop at high event counts:
+//!
+//! * **Ring level** — [`EventQueue::NUM_BUCKETS`] FIFO lanes, each
+//!   covering a [`EventQueue::BUCKET_NS`]-wide window of virtual time.
+//!   The ring spans `NUM_BUCKETS * BUCKET_NS` (~4 ms) starting at `base`;
+//!   push and pop on the ring are O(1) amortised (an occupancy bitmap
+//!   jumps empty stretches in O(ring/64) words).
+//! * **Overflow level** — events beyond the ring's window park in a small
+//!   binary heap and migrate into the ring exactly once, when the window
+//!   slides over them. The O(log n) tax is only paid by the rare far
+//!   -future event (horizon markers, pathological stalls), never by the
+//!   steady-state launch/complete traffic.
+//!
+//! **Determinism contract:** the queue pops in exactly ascending
+//! `(time, insertion-seq)` order — identical to the heap it replaces, so
+//! whole runs stay bit-reproducible (pinned by the golden-trace suite and
+//! by the randomized heap-equivalence tests below). Within a bucket,
+//! multiple distinct timestamps may coexist; pop scans the head bucket
+//! for the `(time, seq)` minimum, which is unique because `seq` is. The
+//! ring + bitmap layout never influences pop order, only its cost.
 
 use crate::util::{AppId, BlockUid, Nanos, OpUid};
 use std::cmp::Reverse;
@@ -45,51 +70,271 @@ pub enum Event {
     Horizon,
 }
 
-/// Min-heap of (time, seq, event). The monotonically increasing sequence
-/// number makes ordering of simultaneous events deterministic (insertion
-/// order), which keeps whole runs bit-reproducible.
-#[derive(Debug, Default)]
+/// One scheduled entry: (time, insertion seq, event).
+type Entry = (Nanos, u64, Event);
+
+/// log2 of the lane width: 4096 ns per lane. Steady-state engine events
+/// (launch overheads, block batches, lock wakes) land within a few
+/// microseconds-to-milliseconds of `now`, i.e. inside the ring.
+const BUCKET_SHIFT: u32 = 12;
+/// Number of ring lanes (power of two for mask indexing).
+const NUM_BUCKETS: usize = 1024;
+/// Occupancy bitmap words (one bit per lane).
+const OCC_WORDS: usize = NUM_BUCKETS / 64;
+
+/// Calendar/bucket queue of (time, seq, event) — see the module docs for
+/// the two-level layout and the determinism contract. The monotonically
+/// increasing sequence number makes ordering of simultaneous events
+/// deterministic (insertion order), which keeps whole runs
+/// bit-reproducible.
+#[derive(Debug)]
 pub struct EventQueue {
-    heap: BinaryHeap<Reverse<(Nanos, u64, Event)>>,
+    /// The ring: `NUM_BUCKETS` FIFO lanes of `BUCKET_NS`-wide windows,
+    /// lane `(t / BUCKET_NS) % NUM_BUCKETS`. Lanes are unsorted; pop
+    /// scans the head lane for the (time, seq) minimum.
+    buckets: Vec<Vec<Entry>>,
+    /// One bit per lane: set iff the lane is non-empty (O(words) skip of
+    /// empty stretches when the clock jumps).
+    occ: [u64; OCC_WORDS],
+    /// Events at or beyond `base + WINDOW_NS`; migrate into the ring when
+    /// the window slides over them (each pays the heap tax once).
+    overflow: BinaryHeap<Reverse<Entry>>,
+    /// Aligned start of the head lane's window. Monotone non-decreasing.
+    base: Nanos,
+    /// Events currently in the ring (vs. `len` = ring + overflow).
+    ring_len: usize,
+    len: usize,
     seq: u64,
+    /// Reusable buffer for `pop_batch` (same-instant seq sort).
+    scratch: Vec<(u64, Event)>,
 }
 
 impl EventQueue {
+    /// Width of one lane's time window, ns.
+    pub const BUCKET_NS: Nanos = 1 << BUCKET_SHIFT;
+    /// Number of lanes.
+    pub const NUM_BUCKETS: usize = NUM_BUCKETS;
+    /// Virtual-time span covered by the ring (~4.2 ms).
+    pub const WINDOW_NS: Nanos = (NUM_BUCKETS as Nanos) << BUCKET_SHIFT;
+
     pub fn new() -> Self {
-        Self::default()
+        Self::with_capacity(0)
     }
 
-    /// Pre-sized queue (capacity derived from the run's op count so the
-    /// steady-state heap never reallocates).
+    /// Pre-sized queue. The ring is fixed-size by design; the hint sizes
+    /// the overflow heap and the batch scratch so the steady state never
+    /// reallocates.
     pub fn with_capacity(cap: usize) -> Self {
-        Self { heap: BinaryHeap::with_capacity(cap), seq: 0 }
+        Self {
+            buckets: (0..NUM_BUCKETS).map(|_| Vec::new()).collect(),
+            occ: [0; OCC_WORDS],
+            overflow: BinaryHeap::with_capacity(cap.min(1024)),
+            base: 0,
+            ring_len: 0,
+            len: 0,
+            seq: 0,
+            scratch: Vec::with_capacity(16),
+        }
+    }
+
+    /// Lane holding the window `[base, base + BUCKET_NS)`.
+    #[inline]
+    fn head(&self) -> usize {
+        ((self.base >> BUCKET_SHIFT) as usize) & (NUM_BUCKETS - 1)
+    }
+
+    #[inline]
+    fn set_occ(&mut self, lane: usize) {
+        self.occ[lane >> 6] |= 1u64 << (lane & 63);
+    }
+
+    #[inline]
+    fn clear_occ(&mut self, lane: usize) {
+        self.occ[lane >> 6] &= !(1u64 << (lane & 63));
+    }
+
+    /// First occupied lane at/after `from` in circular order, or None.
+    fn next_occupied(&self, from: usize) -> Option<usize> {
+        let (w0, b0) = (from >> 6, from & 63);
+        let first = self.occ[w0] & (u64::MAX << b0);
+        if first != 0 {
+            return Some((w0 << 6) + first.trailing_zeros() as usize);
+        }
+        for k in 1..=OCC_WORDS {
+            let w = (w0 + k) % OCC_WORDS;
+            let mut word = self.occ[w];
+            if w == w0 {
+                // Wrapped all the way around: only bits below `from`.
+                word &= (1u64 << b0) - 1;
+            }
+            if word != 0 {
+                return Some((w << 6) + word.trailing_zeros() as usize);
+            }
+        }
+        None
+    }
+
+    /// Drop an entry into its ring lane. Late entries (`t < base`, legal
+    /// for arbitrary workloads; the engine never produces them) share the
+    /// head lane — the head-lane min-scan orders them correctly.
+    fn place(&mut self, entry: Entry) {
+        let lane = if entry.0 <= self.base {
+            self.head()
+        } else {
+            ((entry.0 >> BUCKET_SHIFT) as usize) & (NUM_BUCKETS - 1)
+        };
+        if self.buckets[lane].is_empty() {
+            self.set_occ(lane);
+        }
+        self.buckets[lane].push(entry);
+        self.ring_len += 1;
+    }
+
+    /// Migrate every overflow entry the current window now covers.
+    /// (`t - base < WINDOW` as a subtraction so `base + WINDOW` can never
+    /// overflow near `Nanos::MAX`.)
+    fn drain_overflow(&mut self) {
+        while let Some(&Reverse((t, _, _))) = self.overflow.peek() {
+            if t.saturating_sub(self.base) >= Self::WINDOW_NS {
+                break;
+            }
+            let Reverse(entry) = self.overflow.pop().expect("peeked");
+            self.place(entry);
+        }
+    }
+
+    /// Slide the window until the head lane is non-empty. Requires
+    /// `len > 0`. Invariant used throughout: ring entries all lie below
+    /// `base + WINDOW_NS`, overflow entries all at/above it — so the ring
+    /// always holds the global minimum when non-empty, and the first
+    /// occupied lane from `head` (circular order == window time order)
+    /// holds it.
+    fn ensure_front(&mut self) {
+        debug_assert!(self.len > 0);
+        if self.ring_len == 0 {
+            // Ring drained: jump the window straight to the earliest
+            // overflow event (no lane-by-lane crawl across idle time).
+            let &Reverse((t, _, _)) = self.overflow.peek().expect("len > 0");
+            self.base = (t >> BUCKET_SHIFT) << BUCKET_SHIFT;
+            self.drain_overflow();
+            debug_assert!(self.ring_len > 0);
+            return;
+        }
+        let h = self.head();
+        if !self.buckets[h].is_empty() {
+            return;
+        }
+        let next = self.next_occupied(h).expect("ring_len > 0");
+        let steps = (next + NUM_BUCKETS - h) % NUM_BUCKETS;
+        debug_assert!(steps > 0, "head lane empty but its bit set");
+        self.base += (steps as Nanos) << BUCKET_SHIFT;
+        // Entries pulled in here are ≥ the old window end, hence later
+        // than every ring entry; they land behind the new head.
+        self.drain_overflow();
     }
 
     pub fn push(&mut self, at: Nanos, ev: Event) {
         self.seq += 1;
-        self.heap.push(Reverse((at, self.seq, ev)));
+        self.len += 1;
+        if at.saturating_sub(self.base) >= Self::WINDOW_NS {
+            self.overflow.push(Reverse((at, self.seq, ev)));
+        } else {
+            self.place((at, self.seq, ev));
+        }
     }
 
     pub fn pop(&mut self) -> Option<(Nanos, Event)> {
-        self.heap.pop().map(|Reverse((t, _, e))| (t, e))
+        if self.len == 0 {
+            return None;
+        }
+        self.ensure_front();
+        let h = self.head();
+        let b = &mut self.buckets[h];
+        let mut mi = 0;
+        let mut best = (b[0].0, b[0].1);
+        for (i, &(t, s, _)) in b.iter().enumerate().skip(1) {
+            if (t, s) < best {
+                best = (t, s);
+                mi = i;
+            }
+        }
+        let (t, _, e) = b.swap_remove(mi);
+        let emptied = b.is_empty();
+        self.len -= 1;
+        self.ring_len -= 1;
+        if emptied {
+            self.clear_occ(h);
+        }
+        Some((t, e))
     }
 
-    pub fn peek_time(&self) -> Option<Nanos> {
-        self.heap.peek().map(|Reverse((t, _, _))| *t)
+    /// Drain **every** event scheduled at the next instant into `out`
+    /// (in insertion order — exactly the order `pop` would yield them)
+    /// and return that instant; `None` iff the queue is empty.
+    ///
+    /// Same-timestamp events always share one lane, so one scan collects
+    /// the whole instant. The engine runs its dirty-set pump once per
+    /// returned batch instead of once per event.
+    pub fn pop_batch(&mut self, out: &mut Vec<Event>) -> Option<Nanos> {
+        out.clear();
+        if self.len == 0 {
+            return None;
+        }
+        self.ensure_front();
+        let h = self.head();
+        let b = &mut self.buckets[h];
+        let t = b.iter().map(|&(t, _, _)| t).min().expect("head lane non-empty");
+        self.scratch.clear();
+        let mut i = 0;
+        while i < b.len() {
+            if b[i].0 == t {
+                let (_, s, e) = b.swap_remove(i);
+                self.scratch.push((s, e));
+            } else {
+                i += 1;
+            }
+        }
+        let emptied = b.is_empty();
+        let n = self.scratch.len();
+        self.len -= n;
+        self.ring_len -= n;
+        if emptied {
+            self.clear_occ(h);
+        }
+        self.scratch.sort_unstable_by_key(|&(s, _)| s);
+        out.extend(self.scratch.iter().map(|&(_, e)| e));
+        Some(t)
+    }
+
+    /// Time of the next event. Slides the window (hence `&mut`); pop
+    /// order is unaffected.
+    pub fn peek_time(&mut self) -> Option<Nanos> {
+        if self.len == 0 {
+            return None;
+        }
+        self.ensure_front();
+        self.buckets[self.head()].iter().map(|&(t, _, _)| t).min()
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len == 0
+    }
+}
+
+impl Default for EventQueue {
+    fn default() -> Self {
+        Self::new()
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::DetRng;
 
     #[test]
     fn pops_in_time_order() {
@@ -129,5 +374,218 @@ mod tests {
         assert!(q.is_empty());
         q.push(1, Event::Horizon);
         assert_eq!(q.pop(), Some((1, Event::Horizon)));
+    }
+
+    #[test]
+    fn far_future_events_cross_the_overflow_level() {
+        let mut q = EventQueue::new();
+        // Far beyond the ring window: must park in overflow...
+        let far = 10 * EventQueue::WINDOW_NS + 17;
+        q.push(far, Event::Horizon);
+        q.push(3, Event::HostReady(AppId(0)));
+        assert_eq!(q.pop(), Some((3, Event::HostReady(AppId(0)))));
+        // ...and migrate back when the window jumps over the idle gap.
+        assert_eq!(q.pop(), Some((far, Event::Horizon)));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pop_batch_drains_one_instant_in_seq_order() {
+        let mut q = EventQueue::new();
+        q.push(7, Event::HostReady(AppId(0)));
+        q.push(9, Event::Horizon);
+        q.push(7, Event::WorkerReady(AppId(1)));
+        q.push(7, Event::HostReady(AppId(2)));
+        let mut out = Vec::new();
+        assert_eq!(q.pop_batch(&mut out), Some(7));
+        assert_eq!(
+            out,
+            vec![
+                Event::HostReady(AppId(0)),
+                Event::WorkerReady(AppId(1)),
+                Event::HostReady(AppId(2)),
+            ]
+        );
+        assert_eq!(q.pop_batch(&mut out), Some(9));
+        assert_eq!(out, vec![Event::Horizon]);
+        assert_eq!(q.pop_batch(&mut out), None);
+        assert!(out.is_empty());
+    }
+
+    // ------------------------------------------------------------------
+    // determinism equivalence suite: the calendar queue must yield the
+    // IDENTICAL pop sequence as the reference heap it replaced, under
+    // randomized (seeded) push/pop workloads — simultaneous-timestamp
+    // FIFO order and far-future overflow events included.
+    // ------------------------------------------------------------------
+
+    /// The original `BinaryHeap<Reverse<(Nanos, u64, Event)>>` queue,
+    /// kept verbatim as the ordering oracle.
+    #[derive(Default)]
+    struct RefHeapQueue {
+        heap: BinaryHeap<Reverse<Entry>>,
+        seq: u64,
+    }
+
+    impl RefHeapQueue {
+        fn push(&mut self, at: Nanos, ev: Event) {
+            self.seq += 1;
+            self.heap.push(Reverse((at, self.seq, ev)));
+        }
+
+        fn pop(&mut self) -> Option<(Nanos, Event)> {
+            self.heap.pop().map(|Reverse((t, _, e))| (t, e))
+        }
+    }
+
+    /// A seeded event zoo: the uid payloads double as identity markers so
+    /// any ordering divergence is visible in the comparison.
+    fn random_event(rng: &mut DetRng, k: u64) -> Event {
+        match rng.next_u64() % 6 {
+            0 => Event::HostReady(AppId((k % 64) as usize)),
+            1 => Event::WorkerReady(AppId((k % 64) as usize)),
+            2 => Event::CallbackStart(OpUid(k)),
+            3 => Event::BatchDone { slot: (k % 97) as u32, uid: BlockUid(k) },
+            4 => Event::LockWake { shard: (k % 4) as u32 },
+            _ => Event::StallDone(OpUid(k)),
+        }
+    }
+
+    /// Random push time relative to the virtual clock: mostly near-term
+    /// (inside the ring), sometimes same-instant (FIFO ties), sometimes
+    /// far future (overflow level), occasionally in the "past" (legal
+    /// for the queue even though the engine never does it).
+    fn random_time(rng: &mut DetRng, now: Nanos) -> Nanos {
+        match rng.next_u64() % 10 {
+            0 => now, // same instant: exercises FIFO tie-break
+            1..=5 => now + rng.next_u64() % (EventQueue::BUCKET_NS * 3), // near
+            6 | 7 => now + rng.next_u64() % EventQueue::WINDOW_NS, // mid-ring
+            // far future: exercises the overflow level
+            8 => now + EventQueue::WINDOW_NS + rng.next_u64() % (50 * EventQueue::WINDOW_NS),
+            _ => now.saturating_sub(rng.next_u64() % 1000), // late
+        }
+    }
+
+    /// Drive both queues through an identical randomized push/pop script
+    /// and demand identical pop sequences, including the final drain.
+    fn run_equivalence(seed: u64, steps: usize) {
+        let mut rng = DetRng::new(seed);
+        let mut cal = EventQueue::new();
+        let mut heap = RefHeapQueue::default();
+        let mut now: Nanos = 0;
+        for k in 0..steps as u64 {
+            // Biased toward pushes so the queues stay populated.
+            if rng.next_u64() % 3 != 0 {
+                let t = random_time(&mut rng, now);
+                let ev = random_event(&mut rng, k);
+                cal.push(t, ev);
+                heap.push(t, ev);
+            } else {
+                let a = cal.pop();
+                let b = heap.pop();
+                assert_eq!(a, b, "divergence at step {k} (seed {seed})");
+                if let Some((t, _)) = a {
+                    now = now.max(t);
+                }
+            }
+        }
+        loop {
+            let a = cal.pop();
+            let b = heap.pop();
+            assert_eq!(a, b, "divergence in final drain (seed {seed})");
+            if a.is_none() {
+                break;
+            }
+        }
+        assert!(cal.is_empty());
+    }
+
+    #[test]
+    fn matches_reference_heap_on_random_workloads() {
+        for seed in 0..8 {
+            run_equivalence(seed, 4_000);
+        }
+    }
+
+    #[test]
+    fn matches_reference_heap_on_overflow_heavy_workload() {
+        // Skew every push far ahead so the overflow level and the
+        // window-jump path carry the whole run.
+        let mut rng = DetRng::new(99);
+        let mut cal = EventQueue::new();
+        let mut heap = RefHeapQueue::default();
+        for k in 0..2_000u64 {
+            let t = (rng.next_u64() % 200) * EventQueue::WINDOW_NS
+                + rng.next_u64() % EventQueue::BUCKET_NS;
+            let ev = random_event(&mut rng, k);
+            cal.push(t, ev);
+            heap.push(t, ev);
+        }
+        loop {
+            let a = cal.pop();
+            let b = heap.pop();
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn pop_batch_equals_consecutive_pops() {
+        // Two identically-fed queues: draining one via pop_batch must
+        // reproduce the other's pop stream exactly, batch boundaries
+        // falling precisely on timestamp changes.
+        let mut rng = DetRng::new(1234);
+        let mut a = EventQueue::new();
+        let mut b = EventQueue::new();
+        let mut now = 0;
+        for k in 0..3_000u64 {
+            let t = random_time(&mut rng, now);
+            now = now.max(t.saturating_sub(EventQueue::BUCKET_NS));
+            let ev = random_event(&mut rng, k);
+            a.push(t, ev);
+            b.push(t, ev);
+        }
+        let mut batch = Vec::new();
+        while let Some(t) = a.pop_batch(&mut batch) {
+            assert!(!batch.is_empty());
+            for &ev in &batch {
+                assert_eq!(b.pop(), Some((t, ev)));
+            }
+            // The next event (if any) is at a strictly later instant.
+            if let Some(nt) = b.peek_time() {
+                assert!(nt > t, "batch at {t} missed a same-instant event");
+            }
+        }
+        assert_eq!(b.pop(), None);
+    }
+
+    #[test]
+    fn interleaved_same_instant_pushes_stay_fifo() {
+        // Pushing at the instant currently being drained must order the
+        // new event after everything already popped but before later
+        // times — exactly what the heap did.
+        let mut q = EventQueue::new();
+        q.push(100, Event::HostReady(AppId(0)));
+        q.push(200, Event::Horizon);
+        assert_eq!(q.pop(), Some((100, Event::HostReady(AppId(0)))));
+        q.push(100, Event::WorkerReady(AppId(1))); // same instant, mid-drain
+        q.push(150, Event::HostReady(AppId(2)));
+        assert_eq!(q.pop(), Some((100, Event::WorkerReady(AppId(1)))));
+        assert_eq!(q.pop(), Some((150, Event::HostReady(AppId(2)))));
+        assert_eq!(q.pop(), Some((200, Event::Horizon)));
+    }
+
+    #[test]
+    fn len_tracks_ring_and_overflow() {
+        let mut q = EventQueue::new();
+        q.push(1, Event::Horizon);
+        q.push(EventQueue::WINDOW_NS * 3, Event::Horizon);
+        assert_eq!(q.len(), 2);
+        q.pop();
+        assert_eq!(q.len(), 1);
+        q.pop();
+        assert!(q.is_empty());
     }
 }

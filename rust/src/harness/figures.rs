@@ -287,7 +287,7 @@ pub fn saturation_figure(seed: u64) -> (String, Vec<LoadPoint>) {
         let mut lat_ms: Vec<f64> = (0..APPS)
             .flat_map(|a| sim.arrival_latencies(AppId(a)).iter().map(|&ns| ns as f64 / 1e6))
             .collect();
-        lat_ms.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        lat_ms.sort_by(f64::total_cmp);
         let (offered, shed) = (0..APPS)
             .map(|a| sim.arrival_counts(AppId(a)))
             .fold((0, 0), |acc, c| (acc.0 + c.0, acc.1 + c.1));

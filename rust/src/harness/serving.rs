@@ -59,7 +59,7 @@ pub fn serve_sweep(
             r.ips(),
             r.latency_p(0.50),
             r.latency_p(0.95),
-            r.latencies_ms.last().copied().unwrap_or(0.0),
+            r.latency.max(),
             gw,
             gh,
         );
@@ -108,7 +108,7 @@ pub fn fleet_sweep(
             ips,
             r.latency_p(0.50),
             r.latency_p(0.95),
-            r.latencies_ms.last().copied().unwrap_or(0.0),
+            r.latency.max(),
             r.active_shards(),
             ips / baseline.max(1e-9),
         );
@@ -169,7 +169,7 @@ pub fn load_sweep(
             r.latency_p(0.50),
             r.latency_p(0.95),
             r.latency_p(0.99),
-            r.latencies_ms.last().copied().unwrap_or(0.0),
+            r.latency.max(),
         );
         reports.push(r);
     }

@@ -79,14 +79,15 @@ fn print_usage() {
          \x20       [--shards N] [--placement rr|least-loaded|affinity] [--shard-sweep N[,N]]\n\
          \x20       [--arrivals closed|poisson:R|bursty:R@ON/OFF|ramp:A-B]\n\
          \x20       [--queue-cap N] [--shed block|reject|timeout:MS] [--slo-ms X]\n\
-         \x20       [--load-sweep R[,R...]]\n\
+         \x20       [--load-sweep R[,R...]] [--exact-quantiles]\n\
          \x20       serve payload inferences through the access-control layer\n\
          \x20       (--sweep tabulates all strategies; --synthetic needs no artifacts;\n\
          \x20        --shards N routes clients across a fleet of per-GPU gates;\n\
          \x20        --shard-sweep tabulates scaling across fleet sizes;\n\
          \x20        --arrivals opens the loop: generated load, bounded admission\n\
          \x20        queues, SLO accounting from arrival; --load-sweep emits the\n\
-         \x20        latency-vs-offered-load saturation curve)\n\
+         \x20        latency-vs-offered-load saturation curve; --exact-quantiles\n\
+         \x20        keeps exact latency vectors instead of the streaming sketch)\n\
          \n\
          benches: cuda_mmult, onnx_dna;  isolation|parallel;\n\
          strategies: none, callback, synced, worker, ptb;\n\
@@ -282,6 +283,9 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .collect();
     let synthetic = rest.iter().any(|a| a == "--synthetic");
     let sweep = rest.iter().any(|a| a == "--sweep");
+    // Exact nearest-rank quantiles (O(n log n) report sort) instead of
+    // the default streaming sketch (<= 2% relative error, O(1) records).
+    let exact_quantiles = rest.iter().any(|a| a == "--exact-quantiles");
     let shards: usize = flag(rest, "--shards").and_then(|s| s.parse().ok()).unwrap_or(1);
     if shards == 0 {
         bail!("--shards must be >= 1");
@@ -362,7 +366,8 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .with_clients(clients)
         .with_requests(requests)
         .with_batch(batch)
-        .with_traffic(traffic);
+        .with_traffic(traffic)
+        .with_exact_quantiles(exact_quantiles);
     if sweep {
         if flag(rest, "--strategy").is_some() {
             bail!("--sweep runs every strategy; drop --strategy or drop --sweep");

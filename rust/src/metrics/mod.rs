@@ -7,4 +7,4 @@ pub mod stats;
 
 pub use ips::{ips, ips_series, ips_with_warmup};
 pub use net::{net_all_apps, net_per_kernel};
-pub use stats::{quantile, BoxStats, Histogram};
+pub use stats::{nearest_rank, quantile, BoxStats, Histogram, LatencyStats, QuantileSketch};

@@ -78,7 +78,7 @@ mod tests {
         push(&mut t, 0, "k", 200, 300); // 100 -> NET 1.0
         push(&mut t, 0, "k", 400, 650); // 250 -> NET 2.5
         let mut v = net_per_kernel(&t, AppId(0));
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
         assert_eq!(v, vec![1.0, 1.0, 2.5]);
     }
 

@@ -1,12 +1,38 @@
 //! Distribution statistics for the evaluation figures: quantiles and the
-//! boxplot summaries of Figures 9/10 (median box, p0.5-p99.5 whiskers).
+//! boxplot summaries of Figures 9/10 (median box, p0.5-p99.5 whiskers) —
+//! plus the streaming quantile machinery the serving layers report with:
+//! [`Histogram`] (integer nanoseconds, log2 buckets), [`QuantileSketch`]
+//! (f64 samples, fine-grained log buckets) and [`LatencyStats`] (a sketch
+//! with an optional exact-vector cross-check path).
+//!
+//! Every sort in this module orders by [`f64::total_cmp`]: a single NaN
+//! sample must degrade one reading, never panic a whole report.
 
 /// Linear-interpolated quantile of an unsorted slice (q in [0, 1]).
 pub fn quantile(values: &[f64], q: f64) -> f64 {
     assert!(!values.is_empty(), "quantile of empty slice");
     let mut v: Vec<f64> = values.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(f64::total_cmp);
     quantile_sorted(&v, q)
+}
+
+/// Nearest-rank quantile (rank `ceil(q*n)`) of a sorted slice; 0.0 when
+/// empty. The serving/fleet layers report this flavour (exact sample, no
+/// interpolation); the debug assertion keeps a future merge path from
+/// silently feeding unsorted data (ISSUE 4).
+pub fn nearest_rank(sorted: &[f64], q: f64) -> f64 {
+    debug_assert!(
+        sorted
+            .windows(2)
+            .all(|w| w[0].total_cmp(&w[1]) != std::cmp::Ordering::Greater),
+        "nearest_rank requires sorted input"
+    );
+    let n = sorted.len();
+    if n == 0 {
+        return 0.0;
+    }
+    let rank = ((q.clamp(0.0, 1.0) * n as f64).ceil() as usize).clamp(1, n);
+    sorted[rank - 1]
 }
 
 /// Quantile of an already-sorted slice.
@@ -44,7 +70,7 @@ impl BoxStats {
     pub fn from(values: &[f64]) -> Self {
         assert!(!values.is_empty(), "BoxStats of empty slice");
         let mut v: Vec<f64> = values.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(f64::total_cmp);
         let mean = v.iter().sum::<f64>() / v.len() as f64;
         Self {
             min: v[0],
@@ -208,6 +234,264 @@ impl Default for Histogram {
     }
 }
 
+/// A streaming quantile sketch over f64 samples: a fixed array of
+/// log-spaced buckets (ratio [`QuantileSketch::GAMMA`] between bucket
+/// bounds) with nearest-rank extraction, mergeable like
+/// [`Histogram::merge`].
+///
+/// Recording is O(1) and allocation-free; a quantile read walks the
+/// fixed bucket array. The extracted value is the upper bound of the
+/// bucket holding the nearest-rank sample, clamped to the observed
+/// min/max — so its **relative error is at most `GAMMA - 1` (2%)** for
+/// any sample in the trackable range `[1e-9, ~1e12]` (values outside
+/// clamp to the range ends; min/max/mean/count are always exact). The
+/// fleet property test cross-checks this bound against the exact
+/// nearest-rank quantiles ([`LatencyStats`]'s `--exact-quantiles` path).
+#[derive(Debug, Clone)]
+pub struct QuantileSketch {
+    /// counts[0] holds v <= MIN_VALUE (and non-finite junk); counts[i]
+    /// (i >= 1) holds v in (MIN_VALUE*GAMMA^(i-1), MIN_VALUE*GAMMA^i],
+    /// with the last bucket open-ended.
+    counts: Vec<u32>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl QuantileSketch {
+    /// Ratio between consecutive bucket upper bounds: the relative error
+    /// bound of a quantile read is `GAMMA - 1`.
+    pub const GAMMA: f64 = 1.02;
+    /// Smallest trackable positive value. Latencies are recorded in
+    /// milliseconds, so this is one femtosecond — far below clock
+    /// resolution.
+    const MIN_VALUE: f64 = 1e-9;
+    /// Buckets needed to span MIN_VALUE..~1e12 at GAMMA spacing (the
+    /// last bucket is an open-ended catch-all): ln(1e21)/ln(1.02) ~ 2442.
+    const NUM_BUCKETS: usize = 2448;
+
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; Self::NUM_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket_of(v: f64) -> usize {
+        if v.is_nan() || v <= Self::MIN_VALUE {
+            // A poisoned (NaN) sample degrades one reading in the bottom
+            // bucket; it never panics a report.
+            return 0;
+        }
+        let i = ((v / Self::MIN_VALUE).ln() / Self::GAMMA.ln()).ceil();
+        if i.is_finite() && i >= 1.0 {
+            (i as usize).min(Self::NUM_BUCKETS - 1)
+        } else {
+            Self::NUM_BUCKETS - 1 // +inf and fp fallout: top catch-all
+        }
+    }
+
+    /// Upper bound of bucket `i` (the extracted representative before
+    /// min/max clamping).
+    fn bucket_upper(i: usize) -> f64 {
+        if i == 0 {
+            Self::MIN_VALUE
+        } else {
+            Self::MIN_VALUE * Self::GAMMA.powi(i as i32)
+        }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.counts[Self::bucket_of(v)] += 1;
+        self.count += 1;
+        if v.is_finite() {
+            self.sum += v;
+            if v < self.min {
+                self.min = v;
+            }
+            if v > self.max {
+                self.max = v;
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Exact observed minimum (0.0 when empty or all-NaN).
+    pub fn min(&self) -> f64 {
+        if self.min.is_finite() {
+            self.min
+        } else {
+            0.0
+        }
+    }
+
+    /// Exact observed maximum (0.0 when empty or all-NaN).
+    pub fn max(&self) -> f64 {
+        if self.max.is_finite() {
+            self.max
+        } else {
+            0.0
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Approximate nearest-rank quantile: the upper bound of the bucket
+    /// holding the rank-`ceil(q*n)` sample, clamped to the exact
+    /// observed [min, max]. Relative error <= `GAMMA - 1`.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        if q <= 0.0 {
+            return self.min();
+        }
+        if q >= 1.0 {
+            return self.max();
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c as u64;
+            if seen >= rank {
+                return Self::bucket_upper(i).clamp(self.min(), self.max());
+            }
+        }
+        self.max()
+    }
+
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+impl Default for QuantileSketch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The serving layers' latency accumulator: a [`QuantileSketch`] fed
+/// per-request (no accumulate-then-sort tax on the report path), plus an
+/// optional **exact** sample vector retained only when the run asked for
+/// it (`--exact-quantiles` / `ServeSpec::exact_quantiles`) — the
+/// cross-check path the fleet property test uses to pin the sketch's
+/// error bound.
+#[derive(Debug, Clone)]
+pub struct LatencyStats {
+    pub sketch: QuantileSketch,
+    /// Exact samples; sorted once [`LatencyStats::seal`]ed. `None` on
+    /// the default (sketch-only) path.
+    exact: Option<Vec<f64>>,
+}
+
+impl LatencyStats {
+    pub fn new(keep_exact: bool) -> Self {
+        Self {
+            sketch: QuantileSketch::new(),
+            exact: keep_exact.then(Vec::new),
+        }
+    }
+
+    /// Build from a finished sample set (sealed and ready to query).
+    pub fn from_values(values: &[f64], keep_exact: bool) -> Self {
+        let mut s = Self::new(keep_exact);
+        for &v in values {
+            s.record(v);
+        }
+        s.seal();
+        s
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.sketch.record(v);
+        if let Some(e) = &mut self.exact {
+            e.push(v);
+        }
+    }
+
+    /// Fold another stats object in. The exact vector survives only when
+    /// both sides carry one (all shards of a run share the flag); call
+    /// [`LatencyStats::seal`] after the last merge.
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.sketch.merge(&other.sketch);
+        match (&mut self.exact, &other.exact) {
+            (Some(a), Some(b)) => a.extend_from_slice(b),
+            (e, _) => *e = None,
+        }
+    }
+
+    /// Sort the exact vector (NaN-safe total order). Idempotent; every
+    /// construction path calls this before the stats are queried.
+    pub fn seal(&mut self) {
+        if let Some(e) = &mut self.exact {
+            e.sort_by(f64::total_cmp);
+        }
+    }
+
+    pub fn count(&self) -> usize {
+        self.sketch.count() as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sketch.is_empty()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.sketch.min()
+    }
+
+    pub fn max(&self) -> f64 {
+        self.sketch.max()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.sketch.mean()
+    }
+
+    /// Nearest-rank quantile: **exact** when the run kept the exact
+    /// vector, sketch extraction (<= 2% relative error) otherwise.
+    pub fn quantile(&self, q: f64) -> f64 {
+        match &self.exact {
+            Some(sorted) => nearest_rank(sorted, q),
+            None => self.sketch.quantile(q),
+        }
+    }
+
+    /// The sorted exact samples, when this run kept them.
+    pub fn exact_values(&self) -> Option<&[f64]> {
+        self.exact.as_deref()
+    }
+
+    pub fn is_exact(&self) -> bool {
+        self.exact.is_some()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -331,5 +615,183 @@ mod tests {
         let mut h = Histogram::new();
         h.record(5_000_000);
         assert!(h.render_ms().contains("n=1"));
+    }
+
+    // ------------------------------------------------ quantile sketch --
+
+    #[test]
+    fn sketch_empty_is_zeroed() {
+        let s = QuantileSketch::new();
+        assert!(s.is_empty());
+        assert_eq!(s.count(), 0);
+        assert_eq!(s.min(), 0.0);
+        assert_eq!(s.max(), 0.0);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn sketch_exact_scalars() {
+        let mut s = QuantileSketch::new();
+        for v in [0.5, 1.5, 2.0, 8.0] {
+            s.record(v);
+        }
+        assert_eq!(s.count(), 4);
+        assert_eq!(s.min(), 0.5);
+        assert_eq!(s.max(), 8.0);
+        assert!((s.mean() - 3.0).abs() < 1e-12);
+        // q=0 / q=1 are the exact extremes.
+        assert_eq!(s.quantile(0.0), 0.5);
+        assert_eq!(s.quantile(1.0), 8.0);
+    }
+
+    #[test]
+    fn sketch_quantiles_within_documented_error_bound() {
+        // Samples across six decades; every sketch quantile must agree
+        // with the exact nearest-rank quantile within GAMMA - 1 relative
+        // error (clamping can only tighten it).
+        let values: Vec<f64> = (1..=4000)
+            .map(|i| 0.001 * 1.004f64.powi(i % 3500))
+            .collect();
+        let mut s = QuantileSketch::new();
+        for &v in &values {
+            s.record(v);
+        }
+        let mut sorted = values.clone();
+        sorted.sort_by(f64::total_cmp);
+        for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 0.999] {
+            let exact = nearest_rank(&sorted, q);
+            let approx = s.quantile(q);
+            let rel = (approx - exact).abs() / exact;
+            assert!(
+                rel <= QuantileSketch::GAMMA - 1.0 + 1e-9,
+                "q={q}: sketch {approx} vs exact {exact} (rel {rel})"
+            );
+        }
+    }
+
+    #[test]
+    fn sketch_quantiles_are_monotone_in_q() {
+        let mut s = QuantileSketch::new();
+        let mut x = 17u64;
+        for _ in 0..500 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            s.record((x % 100_000) as f64 / 7.0);
+        }
+        let qs = [0.0, 0.1, 0.3, 0.5, 0.7, 0.9, 0.99, 1.0];
+        for w in qs.windows(2) {
+            assert!(
+                s.quantile(w[0]) <= s.quantile(w[1]),
+                "quantiles not monotone at {:?}",
+                w
+            );
+        }
+    }
+
+    #[test]
+    fn sketch_merge_equals_pooled_recording() {
+        let (mut a, mut b, mut pooled) =
+            (QuantileSketch::new(), QuantileSketch::new(), QuantileSketch::new());
+        for i in 0..300 {
+            let v = (i * i % 997) as f64 * 0.25;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            pooled.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), pooled.count());
+        assert_eq!(a.min(), pooled.min());
+        assert_eq!(a.max(), pooled.max());
+        for q in [0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(a.quantile(q), pooled.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn sketch_survives_nan_and_extremes() {
+        let mut s = QuantileSketch::new();
+        s.record(f64::NAN);
+        s.record(0.0);
+        s.record(-3.0);
+        s.record(f64::INFINITY);
+        s.record(1e30); // beyond the top bucket: clamped to max
+        s.record(5.0);
+        assert_eq!(s.count(), 6);
+        assert_eq!(s.min(), -3.0);
+        assert_eq!(s.max(), 1e30);
+        // Quantiles stay finite and ordered — no panic, no NaN output.
+        let p50 = s.quantile(0.5);
+        assert!(p50.is_finite());
+        assert!(s.quantile(0.9) >= p50);
+    }
+
+    // ------------------------------------------------- latency stats --
+
+    #[test]
+    fn latency_stats_exact_path_is_nearest_rank() {
+        let s = LatencyStats::from_values(&[4.0, 1.0, 3.0, 2.0], true);
+        assert!(s.is_exact());
+        assert_eq!(s.quantile(0.50), 2.0);
+        assert_eq!(s.quantile(0.25), 1.0);
+        assert_eq!(s.quantile(1.00), 4.0);
+        assert_eq!(s.exact_values().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn latency_stats_sketch_path_tracks_exact_within_bound() {
+        let values: Vec<f64> = (1..1000).map(|i| (i as f64).sqrt() * 3.7).collect();
+        let sketchy = LatencyStats::from_values(&values, false);
+        let exact = LatencyStats::from_values(&values, true);
+        assert!(!sketchy.is_exact());
+        assert_eq!(sketchy.count(), exact.count());
+        assert_eq!(sketchy.max(), exact.max());
+        for q in [0.1, 0.5, 0.95, 0.99] {
+            let (a, e) = (sketchy.quantile(q), exact.quantile(q));
+            assert!(
+                (a - e).abs() / e <= QuantileSketch::GAMMA - 1.0 + 1e-9,
+                "q={q}: {a} vs {e}"
+            );
+        }
+    }
+
+    #[test]
+    fn latency_stats_merge_drops_exact_unless_both_sides_have_it() {
+        let mut a = LatencyStats::from_values(&[1.0, 2.0], true);
+        let b = LatencyStats::from_values(&[3.0], true);
+        a.merge(&b);
+        a.seal();
+        assert_eq!(a.count(), 3);
+        assert_eq!(a.exact_values().unwrap(), &[1.0, 2.0, 3.0]);
+        assert_eq!(a.quantile(1.0), 3.0);
+
+        let sketch_only = LatencyStats::from_values(&[9.0], false);
+        a.merge(&sketch_only);
+        assert!(!a.is_exact(), "exact vector cannot survive a sketch-only merge");
+        assert_eq!(a.count(), 4);
+        assert_eq!(a.max(), 9.0);
+    }
+
+    #[test]
+    fn latency_stats_nan_does_not_panic_report() {
+        // Regression for the satellite fix: one NaN latency used to
+        // panic the whole report inside sort_by(partial_cmp().unwrap()).
+        let s = LatencyStats::from_values(&[1.0, f64::NAN, 2.0], true);
+        assert_eq!(s.count(), 3);
+        let p50 = s.quantile(0.5);
+        assert!(p50.is_finite(), "median must come from the finite samples");
+        let sketchy = LatencyStats::from_values(&[1.0, f64::NAN, 2.0], false);
+        assert!(sketchy.quantile(0.5).is_finite());
+    }
+
+    #[test]
+    fn nearest_rank_basics() {
+        assert_eq!(nearest_rank(&[], 0.5), 0.0);
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(nearest_rank(&v, 0.5), 2.0);
+        assert_eq!(nearest_rank(&v, 0.0), 1.0);
+        assert_eq!(nearest_rank(&v, 1.0), 4.0);
     }
 }

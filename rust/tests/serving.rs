@@ -66,7 +66,7 @@ fn batching_preserves_totals_across_strategies() {
             .with_requests(7)
             .with_batch(3); // 3 + 3 + 1 per client
         let r = serve(&spec, &backend()).unwrap();
-        assert_eq!(r.latencies_ms.len(), 14, "{strategy}");
+        assert_eq!(r.latency.count(), 14, "{strategy}");
     }
 }
 
@@ -114,6 +114,23 @@ fn cli_serve_sweep_tabulates_all_strategies() {
         assert!(text.contains(s.name()), "sweep missing {s}: {text}");
     }
     assert!(text.contains("gate-w"), "{text}");
+}
+
+#[test]
+fn cli_serve_exact_quantiles_flag() {
+    // ISSUE 5: the exact-vector path stays reachable behind a flag while
+    // the default reports from the streaming sketch.
+    let out = cli()
+        .args([
+            "serve", "--synthetic", "--exact-quantiles", "--strategy", "worker",
+            "--clients", "2", "--requests", "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("IPS"), "{text}");
+    assert!(text.contains("p99"), "{text}");
 }
 
 #[test]
