@@ -69,6 +69,45 @@ fn fmt_f64(v: f64) -> String {
     }
 }
 
+fn fleet_horizon_ns() -> u64 {
+    if smoke() {
+        50_000_000
+    } else {
+        1_000_000_000
+    }
+}
+
+/// One fleet run: `num_gpus` shards, 2 looping apps per shard, executed
+/// with an explicit thread cap (1 = the sequential partition walk).
+/// Returns (total trace ops, wall seconds).
+fn fleet_sim_once(num_gpus: usize, threads: usize) -> (usize, f64) {
+    let mut cfg = SimConfig::default()
+        .with_strategy(StrategyKind::Synced)
+        .with_seed(1)
+        .with_num_gpus(num_gpus);
+    cfg.horizon_ns = fleet_horizon_ns();
+    let progs = (0..2 * num_gpus).map(|_| dna::program()).collect();
+    let mut sim = Sim::new(cfg, progs);
+    let t0 = std::time::Instant::now();
+    sim.run_with_sim_threads(threads);
+    let dt = t0.elapsed().as_secs_f64();
+    (sim.trace.ops.len(), dt)
+}
+
+/// Median-of-3 fleet throughput in simulated ops per wall second.
+fn fleet_throughput(num_gpus: usize, threads: usize) -> (usize, f64, f64) {
+    let mut times = Vec::with_capacity(3);
+    let mut ops = 0;
+    for _ in 0..3 {
+        let (o, dt) = fleet_sim_once(num_gpus, threads);
+        ops = o;
+        times.push(dt);
+    }
+    times.sort_by(f64::total_cmp);
+    let median = times[times.len() / 2];
+    (ops, median, ops as f64 / median.max(1e-9))
+}
+
 /// Event-core churn in the DES hot loop's shape (hold model: pop one,
 /// push one at a near-future time, occasionally far-future so the
 /// overflow level sees traffic). Returns ops/s (pushes + pops).
@@ -246,11 +285,35 @@ fn main() {
              exact sort {rp_exact_ms:.2} ms"
         );
 
+        // 8. Fleet simulation (ISSUE 6): the shard-parallel partition
+        //    engine vs the same partition walked sequentially, at
+        //    growing fleet sizes (2 looping apps per shard). g1 has a
+        //    single shard — no parallelism to exploit — so only the
+        //    sequential number is recorded there.
+        let par_threads = cook::harness::sim_threads().max(2);
+        let mut fleet = Vec::new();
+        for (key, num_gpus, threads) in [
+            ("g1_seq", 1usize, 1usize),
+            ("g4_seq", 4, 1),
+            ("g4_par", 4, par_threads),
+            ("g16_seq", 16, 1),
+            ("g16_par", 16, par_threads),
+        ] {
+            let (ops, median_s, ops_per_s) = fleet_throughput(num_gpus, threads);
+            let _ = writeln!(
+                out,
+                "fleet-sim {key:<8} ({num_gpus:>2} gpus, {threads:>2} thr) \
+                 {ops:>7} ops, median {median_s:>7.3}s -> {ops_per_s:>9.0} ops/s"
+            );
+            fleet.push((key, ops_per_s));
+        }
+
         // Machine-readable trajectory: always to target/bench-results/;
         // the committed repo-root file only on FULL runs — smoke numbers
         // are not comparable and must not rotate the real baseline away.
         let json = render_json(
             &des,
+            &fleet,
             &mmult_t,
             &hookgen_t,
             &net_t,
@@ -324,6 +387,13 @@ fn throughput_regressions(json_text: &str) -> Vec<String> {
             check(format!("des_ops_per_s.{k}"), Some(v), pd.get(k));
         }
     }
+    if let (Some(Json::Obj(cf)), Some(pf)) =
+        (cur.get("fleet_sim_ops_per_s"), prev.get("fleet_sim_ops_per_s"))
+    {
+        for (k, v) in cf {
+            check(format!("fleet_sim_ops_per_s.{k}"), Some(v), pf.get(k));
+        }
+    }
     check(
         "event_queue_ops_per_s.calendar".to_string(),
         cur.get("event_queue_ops_per_s").and_then(|o| o.get("calendar")),
@@ -337,6 +407,7 @@ fn throughput_regressions(json_text: &str) -> Vec<String> {
 /// one step of perf history across PRs.
 fn render_json(
     des: &[(&str, f64)],
+    fleet: &[(&str, f64)],
     mmult_t: &std::time::Duration,
     hookgen_t: &std::time::Duration,
     net_t: &std::time::Duration,
@@ -348,6 +419,12 @@ fn render_json(
     cur.push_str("{\n    \"des_ops_per_s\": {\n");
     for (i, (name, v)) in des.iter().enumerate() {
         let comma = if i + 1 < des.len() { "," } else { "" };
+        let _ = writeln!(cur, "      \"{name}\": {}{comma}", fmt_f64(*v));
+    }
+    cur.push_str("    },\n");
+    cur.push_str("    \"fleet_sim_ops_per_s\": {\n");
+    for (i, (name, v)) in fleet.iter().enumerate() {
+        let comma = if i + 1 < fleet.len() { "," } else { "" };
         let _ = writeln!(cur, "      \"{name}\": {}{comma}", fmt_f64(*v));
     }
     cur.push_str("    },\n");

@@ -26,7 +26,8 @@ use crate::metrics::stats::Histogram;
 // holding a mutex must not leave the FIFO wedged behind a poisoned lock:
 // every lock site recovers via `lock_recover`.
 use crate::util::{lock_recover, Nanos};
-use std::sync::{Condvar, Mutex, PoisonError};
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::time::Instant;
 
 #[derive(Debug)]
@@ -35,6 +36,16 @@ struct GateState {
     next_ticket: u64,
     /// Ticket currently allowed through.
     now_serving: u64,
+    /// Parked waiters in ticket order (front = next to admit), each with
+    /// its own condvar. Release wakes exactly the front waiter — one
+    /// futex wake per grant — instead of `notify_all` on one shared
+    /// condvar stampeding all N waiters awake so N−1 immediately
+    /// re-sleep (the thundering herd the single-condvar design paid on
+    /// every handoff). A ticket holder is either being served or has an
+    /// entry here: the ticket take and the park happen under one lock
+    /// acquisition, so the front entry is always the lowest outstanding
+    /// ticket and FIFO grant order is unchanged.
+    waiters: VecDeque<(u64, Arc<Condvar>)>,
 }
 
 /// Wait/hold statistics of one gate, in nanoseconds.
@@ -85,8 +96,21 @@ impl Drop for GateGrant<'_> {
         lock_recover(&self.gate.stats)
             .hold
             .record(held.as_nanos().min(u64::MAX as u128) as Nanos);
-        lock_recover(&self.gate.state).now_serving += 1;
-        self.gate.cv.notify_all();
+        let next = {
+            let mut st = lock_recover(&self.gate.state);
+            st.now_serving += 1;
+            // Wake ONLY the next ticket holder (the queue front; lower
+            // tickets are impossible — see `GateState::waiters`). Waking
+            // outside the critical section avoids the hurry-up-and-wait
+            // pattern where the woken thread immediately blocks on the
+            // mutex the waker still holds. No lost wakeup either way:
+            // `now_serving` was published under the lock, and the waiter
+            // re-checks it under the same lock around every wait.
+            st.waiters.front().map(|(_, cv)| Arc::clone(cv))
+        };
+        if let Some(cv) = next {
+            cv.notify_one();
+        }
     }
 }
 
@@ -113,15 +137,17 @@ impl Drop for GateGrant<'_> {
 #[derive(Debug)]
 pub struct GpuGate {
     state: Mutex<GateState>,
-    cv: Condvar,
     stats: Mutex<GateStats>,
 }
 
 impl GpuGate {
     pub fn new() -> Self {
         Self {
-            state: Mutex::new(GateState { next_ticket: 0, now_serving: 0 }),
-            cv: Condvar::new(),
+            state: Mutex::new(GateState {
+                next_ticket: 0,
+                now_serving: 0,
+                waiters: VecDeque::new(),
+            }),
             stats: Mutex::new(GateStats::default()),
         }
     }
@@ -132,8 +158,20 @@ impl GpuGate {
         let mut st = lock_recover(&self.state);
         let ticket = st.next_ticket;
         st.next_ticket += 1;
-        while st.now_serving != ticket {
-            st = self.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+        if st.now_serving != ticket {
+            // Park on a private condvar, registered in the same critical
+            // section that took the ticket (so a releasing grant always
+            // finds the next ticket holder at the queue front).
+            let cv = Arc::new(Condvar::new());
+            st.waiters.push_back((ticket, Arc::clone(&cv)));
+            while st.now_serving != ticket {
+                st = cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+            // Admitted: retire our queue entry (at the front, by FIFO;
+            // scan defensively anyway — it is 0 or 1 positions deep).
+            if let Some(pos) = st.waiters.iter().position(|(t, _)| *t == ticket) {
+                st.waiters.remove(pos);
+            }
         }
         drop(st);
         let waited = arrived.elapsed();
@@ -293,6 +331,44 @@ mod tests {
         gate.release(first);
         assert_eq!(waiter.join().unwrap(), 7);
         assert_eq!(gate.stats().grants(), 3);
+    }
+
+    #[test]
+    fn single_wakeup_preserves_grant_order_and_histograms() {
+        // ISSUE 6 satellite: release wakes only the next ticket holder
+        // (per-waiter condvars) instead of notify_all. Under sustained
+        // contention the observable contract must be exactly what the
+        // herd version produced: strict FIFO grant order, and wait/hold
+        // histograms recording one entry per grant.
+        let gate = Arc::new(GpuGate::new());
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let first = gate.acquire();
+        let mut handles = Vec::new();
+        for i in 0..8 {
+            let gate = Arc::clone(&gate);
+            let order = Arc::clone(&order);
+            handles.push(std::thread::spawn(move || {
+                let g = gate.acquire();
+                order.lock().unwrap().push(i);
+                // Hold briefly so later tickets genuinely queue behind us.
+                std::thread::sleep(std::time::Duration::from_micros(50));
+                gate.release(g);
+            }));
+            // Serialise arrival so ticket order == spawn order.
+            std::thread::sleep(std::time::Duration::from_millis(15));
+        }
+        // All 8 queued behind the held grant: the deepest herd window.
+        assert_eq!(lock_recover(&gate.state).waiters.len(), 8);
+        gate.release(first);
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(*order.lock().unwrap(), (0..8).collect::<Vec<_>>());
+        let stats = gate.stats();
+        assert_eq!(stats.grants(), 9, "one hold record per grant");
+        assert_eq!(stats.wait.count(), 9, "one wait record per grant");
+        // The queue fully drained: no waiter entry leaks past its grant.
+        assert!(lock_recover(&gate.state).waiters.is_empty());
     }
 
     #[test]

@@ -869,23 +869,26 @@ pub(crate) fn open_worker(
     warm.wait();
     let Some(exec) = exec.filter(|_| out.error.is_none()) else {
         // Unhealthy: drain so blocking/timeout pushes cannot deadlock.
-        while queue.pop().is_some() {
-            out.failed += 1;
+        loop {
+            let dropped = queue.pop_batch(batch.max(1));
+            if dropped.is_empty() {
+                return out;
+            }
+            out.failed += dropped.len();
             if let Some(f) = done {
-                f();
+                for _ in 0..dropped.len() {
+                    f();
+                }
             }
         }
-        return out;
     };
-    while let Some(first) = queue.pop() {
-        // Burst collection: the first request plus whatever backlog is
-        // already waiting, up to `batch` per admission.
-        let mut burst = vec![first];
-        while burst.len() < batch {
-            match queue.try_pop() {
-                Some(p) => burst.push(p),
-                None => break,
-            }
+    loop {
+        // Burst collection: block for the first request, then take
+        // whatever backlog is already waiting, up to `batch` — one lock
+        // acquisition total, not one per request (DESIGN.md §8).
+        let burst = queue.pop_batch(batch.max(1));
+        if burst.is_empty() {
+            break; // closed and drained
         }
         // Dequeue-side accounting happens HERE, before any gate wait:
         // the queue-delay histogram measures arrival-to-dequeue only

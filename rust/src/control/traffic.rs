@@ -440,6 +440,35 @@ impl<T> AdmissionQueue<T> {
         }
     }
 
+    /// Blocking batched dequeue: wait for at least one item, then drain
+    /// up to `max` under the SAME lock acquisition — the open-loop
+    /// workers' burst collection in one mutex round-trip instead of a
+    /// `pop` plus up to `max − 1` `try_pop`s (each a lock+notify cycle).
+    /// Returns an empty vec only after close **and** drain, mirroring
+    /// [`AdmissionQueue::pop`]'s end-of-stream contract: a close racing a
+    /// batched drain still hands out every admitted item exactly once
+    /// (the state mutex serialises the two), preserving `accounted()`
+    /// conservation. Producers get one `not_full` wake per item removed.
+    pub fn pop_batch(&self, max: usize) -> Vec<T> {
+        assert!(max >= 1, "pop_batch needs max >= 1");
+        let mut st = lock_recover(&self.state);
+        loop {
+            if !st.q.is_empty() {
+                let take = st.q.len().min(max);
+                let batch: Vec<T> = st.q.drain(..take).collect();
+                drop(st);
+                for _ in 0..take {
+                    self.not_full.notify_one();
+                }
+                return batch;
+            }
+            if st.closed {
+                return Vec::new();
+            }
+            st = self.not_empty.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+    }
+
     /// Non-blocking dequeue (burst collection under one gate grant).
     pub fn try_pop(&self) -> Option<T> {
         let mut st = lock_recover(&self.state);
@@ -723,6 +752,78 @@ mod tests {
         std::thread::sleep(Duration::from_millis(20));
         q.try_push(42).unwrap();
         assert_eq!(h.join().unwrap(), Some(42));
+    }
+
+    #[test]
+    fn pop_batch_drains_up_to_max_and_wakes_producers() {
+        let q = std::sync::Arc::new(AdmissionQueue::new(4));
+        for i in 0..4 {
+            q.try_push(i).unwrap();
+        }
+        // Two producers blocked on the full queue: the batched drain's
+        // per-item not_full wakes must release both.
+        let handles: Vec<_> = (4..6)
+            .map(|i| {
+                let q2 = std::sync::Arc::clone(&q);
+                std::thread::spawn(move || q2.push_blocking(i))
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.pop_batch(3), vec![0, 1, 2], "FIFO prefix, capped at max");
+        for h in handles {
+            assert!(h.join().unwrap());
+        }
+        let mut rest = q.pop_batch(10);
+        rest.sort_unstable(); // producer arrival order is racy
+        assert_eq!(rest, vec![3, 4, 5], "batch takes whatever is queued");
+    }
+
+    #[test]
+    fn pop_batch_blocks_until_item_then_ends_after_close() {
+        let q = std::sync::Arc::new(AdmissionQueue::new(2));
+        let q2 = std::sync::Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.pop_batch(8));
+        std::thread::sleep(Duration::from_millis(20));
+        q.try_push(1).unwrap();
+        assert_eq!(h.join().unwrap(), vec![1], "wakes on first item");
+        q.try_push(2).unwrap();
+        q.close();
+        assert_eq!(q.pop_batch(8), vec![2], "backlog drains after close");
+        assert!(q.pop_batch(8).is_empty(), "empty vec = end of stream");
+    }
+
+    #[test]
+    fn pop_batch_racing_close_conserves_items() {
+        // Hammer a batched consumer against a producer that closes the
+        // queue mid-stream: every admitted item must come out exactly
+        // once — the accounted() conservation law the serving workers
+        // rely on (DESIGN.md §8).
+        for trial in 0..20u64 {
+            let q = std::sync::Arc::new(AdmissionQueue::new(8));
+            let qc = std::sync::Arc::clone(&q);
+            let consumer = std::thread::spawn(move || {
+                let mut got = Vec::new();
+                loop {
+                    let batch = qc.pop_batch(3);
+                    if batch.is_empty() {
+                        return got;
+                    }
+                    got.extend(batch);
+                }
+            });
+            let mut admitted = Vec::new();
+            for i in 0..50 {
+                if q.try_push(trial * 1000 + i).is_ok() {
+                    admitted.push(trial * 1000 + i);
+                }
+                if i % 7 == 0 {
+                    std::thread::yield_now();
+                }
+            }
+            q.close();
+            let got = consumer.join().unwrap();
+            assert_eq!(got, admitted, "trial {trial}: items lost or reordered");
+        }
     }
 
     // ----------------------------------------------------------- report --

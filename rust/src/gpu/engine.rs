@@ -281,7 +281,19 @@ pub struct Sim {
     arrivals_offered: Vec<usize>,
     /// Open-loop arrivals shed per app (backlog at `arrival_queue_cap`).
     arrivals_shed: Vec<usize>,
+    /// Source programs retained for the shard partitioner (`num_gpus > 1`
+    /// only): `run` re-compiles each shard's subset into an independent
+    /// sub-simulation. `None` for single-GPU runs and after a fleet run.
+    fleet_programs: Option<Vec<Program>>,
 }
+
+/// Tag base for per-shard child seeds ("SHAR" | shard index): shard `s`
+/// of a fleet run draws every stream from
+/// `DetRng::new(cfg.seed).child_seed(SHARD_SEED_TAG | s)`, so shard
+/// streams are independent of each other and of how many draws any
+/// other shard makes (each shard's seed mixes only the root seed and
+/// its own index).
+const SHARD_SEED_TAG: u64 = 0x5348_4152_0000_0000;
 
 impl Sim {
     /// Build a simulator running `programs`, one application per program,
@@ -310,7 +322,7 @@ impl Sim {
         // events); looping programs get a generous starting block and the
         // vectors amortise from there.
         let mut op_hint = 0usize;
-        for (i, prog) in programs.into_iter().enumerate() {
+        for (i, prog) in programs.iter().enumerate() {
             let ctx_id = CtxId(i);
             let mut ctx = GpuContext::new(ctx_id, cfg.platform.callback_threads);
             let stream = ctx.default_stream();
@@ -396,6 +408,7 @@ impl Sim {
             arrival_schedule,
             arrivals_offered: vec![0; n],
             arrivals_shed: vec![0; n],
+            fleet_programs: (num_gpus > 1).then_some(programs),
         }
     }
 
@@ -438,7 +451,153 @@ impl Sim {
     }
 
     /// Run to completion: all apps done, or the horizon, whichever first.
+    ///
+    /// A single-GPU run (`num_gpus == 1`, the paper's testbed) executes
+    /// the one sequential event loop it always has. A fleet run
+    /// (`num_gpus > 1`) is *partitioned*: each shard becomes an
+    /// independent single-GPU sub-simulation (DESIGN.md §11) and the
+    /// sub-sims execute on a worker pool capped by `COOK_SIM_THREADS`
+    /// (or `--sim-threads`; default: available cores), then merge back in
+    /// canonical shard order. The merged result is a pure function of
+    /// (config, seed) — bit-identical at EVERY pool size, including 1.
     pub fn run(&mut self) {
+        self.run_with_sim_threads(crate::harness::parallel::sim_threads());
+    }
+
+    /// [`Sim::run`] with an explicit sub-simulation pool size instead of
+    /// the `COOK_SIM_THREADS` environment cap (tests pin thread counts
+    /// without racing on the process environment; the result does not
+    /// depend on `threads`). Ignored for single-GPU runs.
+    pub fn run_with_sim_threads(&mut self, threads: usize) {
+        if self.num_gpus() > 1 {
+            self.run_sharded(threads.max(1));
+        } else {
+            self.run_single();
+        }
+    }
+
+    /// Partitioned fleet run: split into per-shard sub-sims, execute on
+    /// `threads` workers, merge in shard order. See DESIGN.md §11 for the
+    /// partition contract; the shard-independence invariant it leans on
+    /// (per-shard locks, SM banks, L2, copy engines; stall exposure and
+    /// PTB partitions scoped to same-shard peers) is §8's.
+    fn run_sharded(&mut self, threads: usize) {
+        let Some(programs) = self.fleet_programs.take() else {
+            return; // fleet Sim already ran (run() is idempotent when done)
+        };
+        let n = self.num_gpus();
+        let root = DetRng::new(self.cfg.seed);
+        let mut subs: Vec<(usize, Sim)> = Vec::with_capacity(n);
+        for shard in 0..n {
+            // Global apps of this shard, ascending (local j <-> global
+            // shard + j*n — the round-robin placement inverted).
+            let globals: Vec<usize> = (shard..self.apps.len()).step_by(n).collect();
+            if globals.is_empty() {
+                // num_gpus > apps: an idle GPU simulates nothing (its
+                // lone Horizon event must not flag the merged run).
+                continue;
+            }
+            let mut cfg = self.cfg.clone();
+            cfg.num_gpus = 1;
+            cfg.seed = root.child_seed(SHARD_SEED_TAG | shard as u64);
+            let progs: Vec<Program> =
+                globals.iter().map(|&g| programs[g].clone()).collect();
+            let mut sub = Sim::new(cfg, progs);
+            // The sub-sim regenerated an arrival schedule from its own
+            // (local) app set and seed; overwrite it with this shard's
+            // slice of the GLOBAL stream, so the fleet-wide dealing
+            // (`k % serving_apps`, one seeded stream — DESIGN.md §9) is
+            // preserved exactly under partitioning.
+            for (j, &g) in globals.iter().enumerate() {
+                sub.arrival_schedule[j] = std::mem::take(&mut self.arrival_schedule[g]);
+            }
+            subs.push((shard, sub));
+        }
+        // Sub-sims are embarrassingly parallel: no shared mutable state,
+        // each a pure function of its (config, seed, arrival slice).
+        // `parallel_map_with` returns them in input order, so the merge
+        // below is canonical (shard, time, seq) at ANY pool size.
+        let done = crate::harness::parallel::parallel_map_with(threads, subs, |(s, mut sub)| {
+            sub.run_single();
+            (s, sub)
+        });
+        for (shard, sub) in done {
+            self.merge_shard(shard, sub);
+        }
+    }
+
+    /// Fold one finished sub-simulation back into the fleet view. Records
+    /// are appended shard-major (each sub's trace is already in (time,
+    /// seq) order), op uids are renumbered into one dense global space,
+    /// local app/ctx ids map back through the round-robin placement, and
+    /// kernel-name symbols re-intern into the fleet table.
+    fn merge_shard(&mut self, shard: usize, mut sub: Sim) {
+        let n = self.num_gpus();
+        let base = self.ops.len() as u64;
+        let to_app = |a: AppId| AppId(shard + a.0 * n);
+        let to_ctx = |c: CtxId| CtxId(shard + c.0 * n);
+        let sym_remap = self.trace.merge_syms(&sub.trace);
+        for r in sub.trace.ops.drain(..) {
+            self.trace.ops.push(OpRecord {
+                op: OpUid(r.op.0 + base),
+                app: to_app(r.app),
+                sym: r.sym.map(|s| sym_remap[s.0 as usize]),
+                ..r
+            });
+        }
+        for b in sub.trace.blocks.drain(..) {
+            // SM ids are per-shard bank indices on both sides: no remap.
+            self.trace.blocks.push(BlockRecord {
+                op: OpUid(b.op.0 + base),
+                app: to_app(b.app),
+                ..b
+            });
+        }
+        for sw in sub.trace.switches.drain(..) {
+            self.trace.switches.push(SwitchRecord {
+                from: sw.from.map(to_ctx),
+                to: to_ctx(sw.to),
+                ..sw
+            });
+        }
+        for st in sub.trace.stalls.drain(..) {
+            self.trace.stalls.push(StallRecord { op: OpUid(st.op.0 + base), ..st });
+        }
+        for mut o in sub.ops.drain(..) {
+            o.uid = OpUid(o.uid.0 + base);
+            o.app = to_app(o.app);
+            o.ctx = to_ctx(o.ctx);
+            o.stream.ctx = to_ctx(o.stream.ctx);
+            self.ops.push(o);
+            self.op_flags.push(0);
+        }
+        // Per-app host state comes back whole (completions, arrival
+        // backlog/in-flight/latencies, block accounting); only its ctx
+        // identity needs the local -> global rename.
+        for (j, mut a) in sub.apps.drain(..).enumerate() {
+            let g = shard + j * n;
+            a.ctx = CtxId(g);
+            a.stream.ctx = CtxId(g);
+            self.arrivals_offered[g] = sub.arrivals_offered[j];
+            self.arrivals_shed[g] = sub.arrivals_shed[j];
+            self.apps[g] = a;
+        }
+        for (j, w) in sub.workers.drain(..).enumerate() {
+            let g = shard + j * n;
+            self.workers[g] = w.map(|mut w| {
+                w.stream.ctx = CtxId(g);
+                w
+            });
+        }
+        self.locks[shard] = std::mem::take(&mut sub.locks).into_iter().next().unwrap();
+        self.now = self.now.max(sub.now);
+        self.horizon_reached |= sub.horizon_reached;
+    }
+
+    /// The sequential event loop: one virtual clock over one event queue
+    /// (single-GPU runs take this path whole; every fleet shard runs it
+    /// inside its own sub-simulation).
+    fn run_single(&mut self) {
         self.events.push(self.cfg.horizon_ns, Event::Horizon);
         // Open-loop traffic: the full arrival stream is scheduled up
         // front (it is independent of service progress by definition).

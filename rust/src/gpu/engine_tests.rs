@@ -416,6 +416,41 @@ fn fleet_per_shard_locks_are_independent() {
     }
 }
 
+#[test]
+fn fleet_empty_shards_are_benign() {
+    // num_gpus > #apps leaves trailing shards with no work: the
+    // partitioner must skip them (an empty sub-sim would run straight
+    // to its Horizon event and spuriously flag the merged run), and the
+    // populated shards must behave exactly as in a tighter fleet.
+    let progs: Vec<Program> = (0..2).map(|_| burst_program(4)).collect();
+    let mut sim = Sim::new(fleet_cfg(StrategyKind::None, 4), progs);
+    sim.run();
+    assert!(!sim.horizon_reached(), "empty shard leaked a horizon flag");
+    for a in 0..2 {
+        assert_eq!(sim.completions(AppId(a)).len(), 1, "app {a}");
+        assert_eq!(sim.shard_of(AppId(a)), a);
+    }
+    assert!(sim.shard_apps(2).is_empty());
+    assert!(sim.shard_apps(3).is_empty());
+}
+
+#[test]
+fn fleet_thread_count_is_invisible() {
+    // The partition/merge contract (DESIGN.md §11): COOK_SIM_THREADS is
+    // a throughput knob, never a semantics knob. Pin it through the
+    // explicit API so parallel test binaries can't race on the env var.
+    let mk = |threads| {
+        let progs = (0..5).map(|_| burst_program(7)).collect();
+        let mut sim = Sim::new(fleet_cfg(StrategyKind::Callback, 3), progs);
+        sim.run_with_sim_threads(threads);
+        trace_fingerprint(&sim)
+    };
+    let seq = mk(1);
+    assert!(!seq.is_empty());
+    assert_eq!(seq, mk(2), "2 threads changed the fleet trace");
+    assert_eq!(seq, mk(8), "8 threads changed the fleet trace");
+}
+
 // ---------------------------------------------------------------------
 // open-loop arrivals (SimConfig::arrivals)
 // ---------------------------------------------------------------------

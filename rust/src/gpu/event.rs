@@ -29,6 +29,12 @@
 //! multiple distinct timestamps may coexist; pop scans the head bucket
 //! for the `(time, seq)` minimum, which is unique because `seq` is. The
 //! ring + bitmap layout never influences pop order, only its cost.
+//!
+//! **Per-shard queues:** a partitioned fleet run (DESIGN.md §11) gives
+//! every shard's sub-simulation its own private `EventQueue` — the
+//! calendar is engine-local state, never shared across threads, so the
+//! (time, seq) contract above holds independently per shard and the
+//! shard-major merge order is deterministic by construction.
 
 use crate::util::{AppId, BlockUid, Nanos, OpUid};
 use std::cmp::Reverse;

@@ -7,7 +7,7 @@ pub mod runner;
 pub mod serving;
 pub mod spec;
 
-pub use parallel::{max_threads, parallel_map};
+pub use parallel::{max_threads, parallel_map, parallel_map_with, sim_threads};
 pub use runner::{result_from_sim, run_spec, run_spec_pooled, RunResult};
 pub use serving::{fleet_sweep, load_sweep, serve_sweep};
 pub use spec::{Bench, ExperimentSpec, Isol, RunProtocol};

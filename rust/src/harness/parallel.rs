@@ -21,7 +21,21 @@ use std::sync::Mutex;
 
 /// Worker-pool size: `COOK_THREADS` override, else available cores.
 pub fn max_threads() -> usize {
-    if let Ok(v) = std::env::var("COOK_THREADS") {
+    env_threads("COOK_THREADS")
+}
+
+/// Worker-pool size for *shard-parallel fleet simulation* (the per-shard
+/// sub-sims of one `num_gpus > 1` `Sim::run`): `COOK_SIM_THREADS`
+/// override, else available cores. A separate knob from `COOK_THREADS`
+/// because the two pools nest — an experiment grid fanned out by
+/// [`parallel_map`] may itself contain fleet runs, and capping one axis
+/// must not cap the other.
+pub fn sim_threads() -> usize {
+    env_threads("COOK_SIM_THREADS")
+}
+
+fn env_threads(var: &str) -> usize {
+    if let Ok(v) = std::env::var(var) {
         if let Ok(n) = v.trim().parse::<usize>() {
             return n.max(1);
         }
@@ -38,8 +52,24 @@ where
     R: Send,
     F: Fn(T) -> R + Sync,
 {
+    parallel_map_with(max_threads(), inputs, f)
+}
+
+/// [`parallel_map`] with an explicit pool size instead of the
+/// `COOK_THREADS` environment cap. `threads <= 1` runs inline on the
+/// caller's thread. The explicit form exists so callers with their own
+/// cap (the fleet simulator's `COOK_SIM_THREADS`, tests pinning a thread
+/// count without racing on the process environment) share one pool
+/// implementation — and one determinism guarantee: result slot `i` holds
+/// `f(inputs[i])` at ANY pool size.
+pub fn parallel_map_with<T, R, F>(threads: usize, inputs: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
     let n = inputs.len();
-    let threads = max_threads().min(n);
+    let threads = threads.min(n);
     if threads <= 1 {
         return inputs.into_iter().map(f).collect();
     }
@@ -100,6 +130,18 @@ mod tests {
     #[test]
     fn single_item_runs_inline() {
         assert_eq!(parallel_map(vec![41usize], |i| i + 1), vec![42]);
+    }
+
+    #[test]
+    fn explicit_thread_counts_agree() {
+        // The determinism guarantee, parameterised: every pool size
+        // yields the same result vector (and 1 runs inline).
+        let inputs: Vec<usize> = (0..37).collect();
+        let expect: Vec<usize> = inputs.iter().map(|i| i * 3 + 1).collect();
+        for threads in [1, 2, 8, 64] {
+            let out = parallel_map_with(threads, inputs.clone(), |i| i * 3 + 1);
+            assert_eq!(out, expect, "{threads} threads");
+        }
     }
 
     #[test]

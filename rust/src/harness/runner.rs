@@ -63,6 +63,12 @@ impl RunResult {
 }
 
 /// Run one experiment configuration.
+///
+/// Fleet specs (`num_gpus > 1`) execute shard-parallel inside
+/// [`Sim::run`] under the `COOK_SIM_THREADS` cap — a second, *nested*
+/// level of parallelism below the [`super::parallel::parallel_map`]
+/// fan-out over specs/seeds; the result is identical at any setting of
+/// either knob (DESIGN.md §11).
 pub fn run_spec(spec: ExperimentSpec, seed: u64) -> RunResult {
     let mut sim = Sim::new(spec.sim_config(seed), spec.programs());
     sim.run();

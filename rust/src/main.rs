@@ -45,6 +45,14 @@ fn dispatch(args: &[String]) -> Result<()> {
         return Ok(());
     };
     let rest = &args[1..];
+    // Global knob: `--sim-threads N` caps the shard-parallel fleet
+    // engine (DESIGN.md §11) for every command, same as setting
+    // COOK_SIM_THREADS in the environment. 1 forces sequential.
+    if let Some(n) = flag(rest, "--sim-threads") {
+        n.parse::<usize>()
+            .map_err(|_| anyhow!("--sim-threads wants a positive integer, got '{n}'"))?;
+        std::env::set_var("COOK_SIM_THREADS", n);
+    }
     match cmd.as_str() {
         "run" => cmd_run(rest),
         "experiment" => cmd_experiment(rest),
@@ -88,6 +96,11 @@ fn print_usage() {
          \x20        queues, SLO accounting from arrival; --load-sweep emits the\n\
          \x20        latency-vs-offered-load saturation curve; --exact-quantiles\n\
          \x20        keeps exact latency vectors instead of the streaming sketch)\n\
+         \n\
+         global options:\n\
+         \x20 --sim-threads N   thread cap for the shard-parallel fleet engine\n\
+         \x20                   (equivalent to COOK_SIM_THREADS; 1 = sequential;\n\
+         \x20                    results are bit-identical at every setting)\n\
          \n\
          benches: cuda_mmult, onnx_dna;  isolation|parallel;\n\
          strategies: none, callback, synced, worker, ptb;\n\

@@ -104,6 +104,16 @@ impl TraceCollector {
         self.names.len()
     }
 
+    /// Merge `other`'s interned name table into this collector, returning
+    /// the remap table indexed by `other`'s `SymId`s: entry `i` is the id
+    /// the name `other` knows as `SymId(i)` carries here. Names already
+    /// present keep their id (intern dedupes), so merging a shard trace
+    /// whose programs were compiled against a different collector costs
+    /// one table walk, never a rename of existing records.
+    pub fn merge_syms(&mut self, other: &TraceCollector) -> Vec<SymId> {
+        other.names.iter().map(|n| self.intern(n)).collect()
+    }
+
     /// Resolve a record's symbol back to the kernel name ("?" when the
     /// op carries no symbol or the id is unknown to this collector).
     pub fn sym_name(&self, sym: Option<SymId>) -> &str {
@@ -232,6 +242,25 @@ mod tests {
         t.ops.push(rec(1, 0, 20));
         t.ops.push(rec(0, 30, 70));
         assert_eq!(t.kernel_exec_times(AppId(0)), vec![10, 40]);
+    }
+
+    #[test]
+    fn merge_syms_remaps_and_dedupes() {
+        let mut a = TraceCollector::new(false);
+        let conv = a.intern("conv0");
+        let _dense = a.intern("dense");
+        let mut b = TraceCollector::new(false);
+        let b_relu = b.intern("relu"); // new to a
+        let b_conv = b.intern("conv0"); // already in a, different id
+        let remap = a.merge_syms(&b);
+        assert_eq!(remap.len(), 2);
+        assert_eq!(remap[b_conv.0 as usize], conv, "shared name keeps a's id");
+        assert_eq!(a.sym_name(Some(remap[b_relu.0 as usize])), "relu");
+        assert_eq!(a.num_syms(), 3);
+        // Idempotent: merging again adds nothing.
+        let again = a.merge_syms(&b);
+        assert_eq!(again, remap);
+        assert_eq!(a.num_syms(), 3);
     }
 
     #[test]

@@ -41,7 +41,15 @@ impl DetRng {
     /// Children depend only on (root seed, tag), never on how many draws
     /// the parent has made.
     pub fn child(&self, tag: u64) -> Self {
-        Self::new(self.seed ^ tag.wrapping_mul(0xA24B_AED4_963E_E407).rotate_left(17))
+        Self::new(self.child_seed(tag))
+    }
+
+    /// The seed `child(tag)` reseeds with — for carrying a derived stream
+    /// identity across an API boundary that takes a `u64` seed (e.g. the
+    /// per-shard `SimConfig`s of a partitioned fleet run) while keeping
+    /// the (root seed, tag)-only dependence of `child`.
+    pub fn child_seed(&self, tag: u64) -> u64 {
+        self.seed ^ tag.wrapping_mul(0xA24B_AED4_963E_E407).rotate_left(17)
     }
 
     /// Next raw 64-bit value (xoshiro256**).
@@ -121,6 +129,17 @@ mod tests {
         let _ = root2.next_u64(); // extra parent draw must not matter
         let mut c2 = root2.child(42);
         assert_eq!(c1.next_u64(), c2.next_u64());
+    }
+
+    #[test]
+    fn child_seed_matches_child_stream() {
+        let root = DetRng::new(11);
+        let via_seed = DetRng::new(root.child_seed(7));
+        let mut direct = root.child(7);
+        let mut indirect = via_seed;
+        for _ in 0..16 {
+            assert_eq!(direct.next_u64(), indirect.next_u64());
+        }
     }
 
     #[test]

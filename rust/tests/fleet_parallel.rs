@@ -1,0 +1,268 @@
+//! Shard-parallel fleet equivalence suite (DESIGN.md §11).
+//!
+//! For `num_gpus > 1` the simulator partitions a run into per-shard
+//! sub-simulations and executes them on a `COOK_SIM_THREADS`-capped
+//! thread pool. The contract pinned here: the thread count is a pure
+//! throughput knob — every observable of a fleet run (full trace, op
+//! table, completions, open-loop arrival latencies and shed counts) is
+//! **bit-identical** across `COOK_SIM_THREADS ∈ {1, 2, 8}`, and a
+//! `num_gpus == 1` run takes the untouched single-loop path no matter
+//! what the knob says. Thread counts are pinned through the explicit
+//! [`Sim::run_with_sim_threads`] API, not the env var, so parallel test
+//! binaries cannot race on process state.
+
+use cook::config::{SimConfig, StrategyKind};
+use cook::control::traffic::ArrivalProcess;
+use cook::gpu::Sim;
+use cook::util::AppId;
+
+// ---------------------------------------------------------------------
+// stable hashing (FNV-1a 64, same scheme as the golden_trace suite)
+// ---------------------------------------------------------------------
+
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf29ce484222325)
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        for &x in b {
+            self.0 ^= x as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+    fn bool(&mut self, v: bool) {
+        self.bytes(&[v as u8]);
+    }
+}
+
+/// Hash everything observable about a finished run — the trace tables,
+/// per-app completions, AND the open-loop arrival report (latencies,
+/// offered/shed counts), so an arrival-slice bug can't hide behind an
+/// unchanged kernel timeline.
+fn full_hash(sim: &Sim) -> u64 {
+    let mut h = Fnv::new();
+    let t = &sim.trace;
+    h.usize(t.ops.len());
+    for r in &t.ops {
+        h.u64(r.op.0);
+        h.usize(r.app.0);
+        h.bytes(t.sym_name(r.sym).as_bytes());
+        h.bool(r.is_kernel);
+        h.bool(r.is_copy);
+        h.u64(r.enqueued_at);
+        h.u64(r.started_at);
+        h.u64(r.completed_at);
+        h.usize(r.burst);
+    }
+    h.usize(t.blocks.len());
+    for b in &t.blocks {
+        h.u64(b.op.0);
+        h.usize(b.app.0);
+        h.usize(b.sm.0);
+        h.u64(b.blocks as u64);
+        h.u64(b.start);
+        h.u64(b.end);
+        h.bool(b.resumed);
+    }
+    h.usize(t.switches.len());
+    for s in &t.switches {
+        h.u64(s.at);
+        h.u64(s.from.map(|c| c.0 as u64 + 1).unwrap_or(0));
+        h.usize(s.to.0);
+        h.u64(s.cost_ns);
+    }
+    h.usize(t.stalls.len());
+    for s in &t.stalls {
+        h.u64(s.op.0);
+        h.u64(s.at);
+        h.u64(s.duration_ns);
+    }
+    for a in 0..sim.apps.len() {
+        let app = AppId(a);
+        let comps = sim.completions(app);
+        h.usize(comps.len());
+        for &c in comps {
+            h.u64(c);
+        }
+        let lat = sim.arrival_latencies(app);
+        h.usize(lat.len());
+        for &l in lat {
+            h.u64(l);
+        }
+        let (offered, shed) = sim.arrival_counts(app);
+        h.usize(offered);
+        h.usize(shed);
+        h.usize(sim.shard_of(app));
+    }
+    h.bool(sim.horizon_reached());
+    h.0
+}
+
+fn looping_fleet_cfg(strategy: StrategyKind, num_gpus: usize, seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::default()
+        .with_strategy(strategy)
+        .with_seed(seed)
+        .with_num_gpus(num_gpus);
+    cfg.horizon_ns = 150_000_000;
+    cfg
+}
+
+fn hash_at_threads(cfg: SimConfig, apps: usize, threads: usize) -> u64 {
+    let programs = (0..apps).map(|_| cook::apps::dna::program()).collect();
+    let mut sim = Sim::new(cfg, programs);
+    sim.run_with_sim_threads(threads);
+    assert!(!sim.trace.ops.is_empty(), "degenerate run");
+    full_hash(&sim)
+}
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+// ---------------------------------------------------------------------
+// tests
+// ---------------------------------------------------------------------
+
+#[test]
+fn closed_loop_fleet_identical_across_thread_counts() {
+    for strategy in [StrategyKind::None, StrategyKind::Synced, StrategyKind::Ptb] {
+        for num_gpus in [2usize, 4] {
+            let cfg = || looping_fleet_cfg(strategy, num_gpus, 11);
+            let seq = hash_at_threads(cfg(), 4, 1);
+            for threads in [2usize, 8] {
+                assert_eq!(
+                    seq,
+                    hash_at_threads(cfg(), 4, threads),
+                    "{strategy} x{num_gpus}: {threads} threads changed the run"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn open_loop_fleet_identical_across_thread_counts() {
+    // Open-loop arrivals are the hard case: the parent deals ONE global
+    // arrival stream across serving apps (`k % n`), so each sub-sim
+    // must receive its exact slice of the parent schedule rather than
+    // regenerating arrivals locally. The hash covers per-app arrival
+    // latencies and offered/shed counts, so a mis-dealt slice fails here
+    // even if kernels still line up.
+    for num_gpus in [2usize, 4] {
+        let cfg = || {
+            looping_fleet_cfg(StrategyKind::Worker, num_gpus, 23)
+                .with_arrivals(ArrivalProcess::Poisson { rate_hz: 3_000.0 })
+                .with_arrival_queue_cap(8)
+        };
+        let seq = hash_at_threads(cfg(), 4, 1);
+        for threads in [2usize, 8] {
+            assert_eq!(
+                seq,
+                hash_at_threads(cfg(), 4, threads),
+                "open-loop x{num_gpus}: {threads} threads changed the run"
+            );
+        }
+        // The dealt stream really reached the shards: some app on each
+        // shard saw offered arrivals.
+        let programs = (0..4).map(|_| cook::apps::dna::program()).collect();
+        let mut sim = Sim::new(cfg(), programs);
+        sim.run_with_sim_threads(2);
+        for a in 0..4 {
+            let (offered, _) = sim.arrival_counts(AppId(a));
+            assert!(offered > 0, "app {a} never saw its arrival slice");
+        }
+    }
+}
+
+#[test]
+fn open_loop_fleet_conserves_arrivals() {
+    // Conservation after the merge: every offered arrival is completed,
+    // shed, still backlogged, or in flight — per app, at any thread
+    // count. A double-counted or dropped slice breaks this.
+    for threads in THREAD_COUNTS {
+        let cfg = looping_fleet_cfg(StrategyKind::Worker, 2, 29)
+            .with_arrivals(ArrivalProcess::Poisson { rate_hz: 2_000.0 })
+            .with_arrival_queue_cap(8);
+        let programs = (0..4).map(|_| cook::apps::dna::program()).collect();
+        let mut sim = Sim::new(cfg, programs);
+        sim.run_with_sim_threads(threads);
+        for a in 0..4 {
+            let app = AppId(a);
+            let (offered, shed) = sim.arrival_counts(app);
+            let done = sim.arrival_latencies(app).len();
+            let backlog = sim.apps[a].arrival_backlog.len();
+            let inflight = sim.apps[a].arrival_inflight.len();
+            assert_eq!(
+                done + shed + backlog + inflight,
+                offered,
+                "app {a} @ {threads} threads: arrivals not conserved \
+                 (done={done} shed={shed} backlog={backlog} inflight={inflight})"
+            );
+        }
+    }
+}
+
+#[test]
+fn single_gpu_ignores_the_thread_knob() {
+    // num_gpus == 1 must take the pre-existing single-loop path whatever
+    // the cap says — including the env-default `run()` entry point.
+    let mk = |threads: Option<usize>| {
+        let mut cfg = SimConfig::default()
+            .with_strategy(StrategyKind::Synced)
+            .with_seed(3);
+        cfg.horizon_ns = 150_000_000;
+        let mut sim = Sim::new(cfg, vec![cook::apps::dna::program(), cook::apps::dna::program()]);
+        match threads {
+            Some(t) => sim.run_with_sim_threads(t),
+            None => sim.run(),
+        }
+        full_hash(&sim)
+    };
+    let base = mk(None);
+    for t in THREAD_COUNTS {
+        assert_eq!(base, mk(Some(t)), "single-GPU run changed under {t} threads");
+    }
+}
+
+#[test]
+fn env_default_run_matches_pinned_threads() {
+    // `Sim::run()` reads COOK_SIM_THREADS; whatever the ambient value,
+    // the result must equal the explicitly sequential run.
+    let cfg = || looping_fleet_cfg(StrategyKind::Callback, 3, 17);
+    let programs = || (0..5).map(|_| cook::apps::dna::program()).collect();
+    let mut ambient = Sim::new(cfg(), programs());
+    ambient.run();
+    let mut pinned = Sim::new(cfg(), programs());
+    pinned.run_with_sim_threads(1);
+    assert_eq!(full_hash(&ambient), full_hash(&pinned));
+}
+
+#[test]
+fn one_shot_fleet_identical_across_thread_counts() {
+    // One-shot (RepeatMode::Once) programs finish before the horizon;
+    // the merged fleet must agree at every thread count and never set
+    // the horizon flag — even with empty shards (6 GPUs, 4 apps).
+    let mk = |threads: usize| {
+        let cfg = SimConfig::default()
+            .with_strategy(StrategyKind::Synced)
+            .with_seed(41)
+            .with_num_gpus(6);
+        let programs = (0..4).map(|_| cook::apps::mmult::program()).collect();
+        let mut sim = Sim::new(cfg, programs);
+        sim.run_with_sim_threads(threads);
+        assert!(!sim.horizon_reached(), "one-shot fleet hit the horizon");
+        for a in 0..4 {
+            assert!(!sim.completions(AppId(a)).is_empty(), "app {a} incomplete");
+        }
+        full_hash(&sim)
+    };
+    let seq = mk(1);
+    assert_eq!(seq, mk(2));
+    assert_eq!(seq, mk(8));
+}
