@@ -71,6 +71,7 @@ fn set_key(cfg: &mut SimConfig, key: &str, v: &str) -> Result<(), String> {
             cfg.num_gpus = g;
         }
         "arrivals" => cfg.arrivals = v.parse()?,
+        "faults" => cfg.faults = v.parse()?,
         "arrival_queue_cap" => {
             let c: usize = parse(key, v)?;
             if c == 0 {
@@ -129,6 +130,7 @@ pub const KEYS: &[&str] = &[
     "num_gpus",
     "arrivals",
     "arrival_queue_cap",
+    "faults",
     "timing.launch_overhead_ns",
     "timing.memcpy_call_extra_ns",
     "timing.sync_wakeup_ns",
@@ -215,10 +217,21 @@ mod tests {
             let v = match *key {
                 "strategy" => "synced",
                 "arrivals" => "poisson:200",
+                "faults" => "error:p=0.01",
                 _ => "1",
             };
             set_key(&mut cfg, key, v).unwrap_or_else(|e| panic!("{key}: {e}"));
         }
+    }
+
+    #[test]
+    fn fault_key_parses_and_validates() {
+        let mut cfg = SimConfig::default();
+        apply_overrides(&mut cfg, "faults = hang:period=10:ms=2,error:p=0.05\n").unwrap();
+        assert!(cfg.faults.has_sim_clauses());
+        assert!(apply_overrides(&mut cfg, "faults = melt:p=1").is_err());
+        apply_overrides(&mut cfg, "faults = none").unwrap();
+        assert!(cfg.faults.is_empty());
     }
 
     #[test]

@@ -12,6 +12,7 @@ pub use platform::PlatformConfig;
 pub use strategy::StrategyKind;
 pub use timing::TimingConfig;
 
+use crate::control::fault::FaultSpec;
 use crate::control::traffic::ArrivalProcess;
 
 /// Full simulator configuration for one run.
@@ -41,6 +42,12 @@ pub struct SimConfig {
     /// arrivals (the simulator mirror of the live admission queue);
     /// arrivals past the bound are shed and counted.
     pub arrival_queue_cap: usize,
+    /// Seeded fault injections addressed at virtual time (DESIGN.md
+    /// §12): `hang` clauses with `at=`/`period=` selectors stretch the
+    /// victim app's next kernel batch, deterministically in (spec,
+    /// seed) and invariant under the sharded runner's thread count.
+    /// Empty (the default) injects nothing.
+    pub faults: FaultSpec,
 }
 
 impl Default for SimConfig {
@@ -54,6 +61,7 @@ impl Default for SimConfig {
             num_gpus: 1,
             arrivals: ArrivalProcess::ClosedLoop,
             arrival_queue_cap: 64,
+            faults: FaultSpec::default(),
         }
     }
 }
@@ -88,6 +96,11 @@ impl SimConfig {
         self.arrival_queue_cap = cap;
         self
     }
+
+    pub fn with_faults(mut self, faults: FaultSpec) -> Self {
+        self.faults = faults;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -111,13 +124,15 @@ mod tests {
             .with_horizon_ns(123)
             .with_num_gpus(4)
             .with_arrivals(ArrivalProcess::Poisson { rate_hz: 200.0 })
-            .with_arrival_queue_cap(16);
+            .with_arrival_queue_cap(16)
+            .with_faults("hang:period=100:ms=5".parse().unwrap());
         assert_eq!(cfg.strategy, StrategyKind::Worker);
         assert_eq!(cfg.seed, 9);
         assert_eq!(cfg.horizon_ns, 123);
         assert_eq!(cfg.num_gpus, 4);
         assert_eq!(cfg.arrivals, ArrivalProcess::Poisson { rate_hz: 200.0 });
         assert_eq!(cfg.arrival_queue_cap, 16);
+        assert!(cfg.faults.has_sim_clauses());
     }
 
     #[test]

@@ -1,0 +1,1224 @@
+//! Fault injection and self-healing: the robustness layer.
+//!
+//! COOK's whole thesis is serializing GPU access through a gate — which
+//! makes the gate a single point of failure: one hung or crashed holder
+//! wedges every waiter, and a panicking shard used to abort the entire
+//! fleet run. This module supplies the machinery to *provoke* those
+//! failures deterministically and to *survive* them:
+//!
+//! * [`FaultSpec`]/[`FaultPlan`] — a seeded, deterministic fault schedule
+//!   parsed from a spec string (`cook serve --faults <spec>`). Every
+//!   injection decision is a **pure hash** of `(seed, request seq,
+//!   attempt)` — never a draw from shared sequential RNG state — so the
+//!   set of injected faults is identical regardless of how many worker
+//!   threads race over the request stream. That is the retry determinism
+//!   contract (DESIGN.md §12).
+//! * [`FaultyBackend`] — a [`ServeBackend`](crate::control::serving::ServeBackend)
+//!   wrapper whose executors inject errors, hangs and panics at the
+//!   points the plan selects.
+//! * [`RetryPolicy`] — bounded exponential backoff with deterministic
+//!   seeded jitter and a per-request attempt budget.
+//! * [`ShardHealth`] — the per-shard circuit breaker driving the
+//!   Healthy → Degraded → Ejected → Probing → Reinstated state machine
+//!   the fleet router consults before placing an arrival.
+//! * [`FaultReport`] — injected/detected/retried/recovered/gave-up
+//!   accounting plus time-to-detect / time-to-recover
+//!   [`QuantileSketch`]es, surfaced in `ServeReport`/`FleetReport`.
+//!
+//! The simulator mirrors the same spec: `hang` clauses carrying `at=MS`
+//! or `period=MS` become seeded `Event::FaultDue` kernel-slowdown events
+//! in [`crate::gpu::Sim`], replayable bit-identically at any
+//! `COOK_SIM_THREADS` (the sharded runner deals per-app fault schedules
+//! exactly like arrival schedules).
+//!
+//! # Spec grammar
+//!
+//! Comma-separated clauses, first match wins:
+//!
+//! ```text
+//! error:p=0.01                 1% of attempts fail with an injected error
+//! error:req=7                  request seq 7 fails (first attempt only)
+//! hang:ms=50:p=0.02            2% of attempts stall 50 ms before executing
+//! hang:shard=2@req=500:ms=50   request 500 on shard 2 stalls 50 ms
+//! crash:payload=1@req=100      request 100 of payload slot 1 panics (once)
+//! crash:shard=1                shard 1 panics at serve start (boot crash)
+//! hang:at=20:ms=5              simulator: one 5 ms kernel stall at t=20 ms
+//! hang:period=100:ms=3         simulator: ~every 100 ms, a 3 ms stall
+//! ```
+//!
+//! Selector tokens (`shard=`, `payload=`, `req=`, and the combined
+//! `shard=N@req=M` form) restrict where a clause fires; `p=` makes it
+//! probabilistic per attempt; `req=`-selected faults fire on attempt 0
+//! only, so a retry can recover. `at=`/`period=` address virtual time
+//! and are consumed only by the simulator.
+
+use crate::control::serving::{PayloadExecutor, ResolvedPayload, ServeBackend};
+use crate::metrics::stats::QuantileSketch;
+use crate::util::{lock_recover, DetRng};
+use anyhow::{anyhow, Result};
+use std::fmt;
+use std::str::FromStr;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// RNG stream tag for simulator fault schedules (independent of the
+/// engine's `EXEC`/`STAL` and the traffic generator's `TRFF` streams).
+const FAULT_RNG_TAG: u64 = 0x4641_4C54; // "FALT"
+
+/// Runaway backstop on per-app simulator fault events.
+const SIM_FAULT_CAP: usize = 4096;
+
+// ---------------------------------------------------------------------
+// spec
+// ---------------------------------------------------------------------
+
+/// What kind of misbehaviour a clause injects.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The attempt returns an injected `Err`.
+    Error,
+    /// The attempt stalls for `ms` before executing normally (a hung or
+    /// slow kernel; long enough, it trips the gate-lease watchdog).
+    Hang,
+    /// The attempt panics (a crashing client/shard).
+    Crash,
+}
+
+impl FaultKind {
+    fn name(&self) -> &'static str {
+        match self {
+            Self::Error => "error",
+            Self::Hang => "hang",
+            Self::Crash => "crash",
+        }
+    }
+}
+
+/// One parsed fault clause: a kind plus its selectors and parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultClause {
+    pub kind: FaultKind,
+    /// Per-attempt firing probability (hashed, not drawn — see module
+    /// docs). `None` with no `req=` selector means "always".
+    pub p: Option<f64>,
+    /// Stall duration for `hang` clauses, milliseconds.
+    pub ms: u64,
+    /// Fire exactly at this global request seq, attempt 0 only.
+    pub req: Option<u64>,
+    /// Restrict to one shard.
+    pub shard: Option<usize>,
+    /// Restrict to one payload slot (index into `ServeSpec::payloads`).
+    pub payload: Option<usize>,
+    /// Simulator: one injection at this virtual time, milliseconds.
+    pub at_ms: Option<u64>,
+    /// Simulator: recurring injections with this mean period (seeded
+    /// exponential gaps), milliseconds.
+    pub period_ms: Option<u64>,
+}
+
+impl FaultClause {
+    fn new(kind: FaultKind) -> Self {
+        Self {
+            kind,
+            p: None,
+            ms: 10,
+            req: None,
+            shard: None,
+            payload: None,
+            at_ms: None,
+            period_ms: None,
+        }
+    }
+
+    /// Is this clause addressed at virtual time (simulator-only)?
+    pub fn is_sim(&self) -> bool {
+        self.at_ms.is_some() || self.period_ms.is_some()
+    }
+
+    /// A `crash` clause with no probability, request or virtual-time
+    /// selector: the whole serve (or the selected shard) panics at
+    /// startup — the "crashing shard process" scenario.
+    pub fn is_boot_crash(&self) -> bool {
+        self.kind == FaultKind::Crash
+            && self.p.is_none()
+            && self.req.is_none()
+            && self.payload.is_none()
+            && !self.is_sim()
+    }
+}
+
+impl fmt::Display for FaultClause {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.kind.name())?;
+        if let Some(s) = self.shard {
+            write!(f, ":shard={s}")?;
+        }
+        if let Some(p) = self.payload {
+            write!(f, ":payload={p}")?;
+        }
+        if let Some(r) = self.req {
+            write!(f, ":req={r}")?;
+        }
+        if let Some(p) = self.p {
+            write!(f, ":p={p}")?;
+        }
+        if let Some(at) = self.at_ms {
+            write!(f, ":at={at}")?;
+        }
+        if let Some(per) = self.period_ms {
+            write!(f, ":period={per}")?;
+        }
+        if self.kind == FaultKind::Hang {
+            write!(f, ":ms={}", self.ms)?;
+        }
+        Ok(())
+    }
+}
+
+/// A parsed fault specification: an ordered clause list (first matching
+/// clause fires). Empty = no faults (the default).
+///
+/// # Example
+///
+/// ```
+/// use cook::control::fault::FaultSpec;
+///
+/// let spec: FaultSpec = "error:p=0.01,hang:shard=2@req=500:ms=50".parse().unwrap();
+/// assert_eq!(spec.clauses.len(), 2);
+/// // Display/parse round-trips.
+/// assert_eq!(spec.to_string().parse::<FaultSpec>().unwrap(), spec);
+/// ```
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultSpec {
+    pub clauses: Vec<FaultClause>,
+}
+
+impl FaultSpec {
+    pub fn is_empty(&self) -> bool {
+        self.clauses.is_empty()
+    }
+
+    /// Any clause addressed at the simulator's virtual time?
+    pub fn has_sim_clauses(&self) -> bool {
+        self.clauses.iter().any(|c| c.is_sim())
+    }
+
+    /// The simulator's per-app fault schedule: sorted `(t_ns, extra_ns)`
+    /// injections for app `app` on shard `shard`, strictly before
+    /// `horizon_ns`. Pure function of `(spec, app, shard, horizon,
+    /// seed)` — the sharded runner deals these per app exactly like
+    /// arrival schedules, so the merged trace is thread-count-invariant.
+    pub fn sim_schedule(
+        &self,
+        app: usize,
+        shard: usize,
+        horizon_ns: u64,
+        seed: u64,
+    ) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        for (idx, c) in self.clauses.iter().enumerate() {
+            if c.kind != FaultKind::Hang || !c.is_sim() {
+                continue;
+            }
+            if c.shard.is_some_and(|s| s != shard) || c.payload.is_some_and(|p| p != app) {
+                continue;
+            }
+            let extra = c.ms.saturating_mul(1_000_000);
+            if let Some(at) = c.at_ms {
+                let t = at.saturating_mul(1_000_000);
+                if t < horizon_ns {
+                    out.push((t, extra));
+                }
+            }
+            if let Some(period) = c.period_ms {
+                let mut rng = DetRng::new(seed)
+                    .child(FAULT_RNG_TAG)
+                    .child(((app as u64) << 16) | idx as u64);
+                let mean_ns = period as f64 * 1e6;
+                let mut t = 0.0f64;
+                while out.len() < SIM_FAULT_CAP {
+                    // u in [0,1) => (1-u) in (0,1]: ln never sees 0.
+                    t += -(1.0 - rng.f64()).ln() * mean_ns;
+                    if t >= horizon_ns as f64 {
+                        break;
+                    }
+                    out.push((t as u64, extra));
+                }
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+}
+
+impl fmt::Display for FaultSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, c) in self.clauses.iter().enumerate() {
+            if i > 0 {
+                f.write_str(",")?;
+            }
+            write!(f, "{c}")?;
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for FaultSpec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let s = s.trim();
+        if s.is_empty() || s == "none" {
+            return Ok(Self::default());
+        }
+        let mut clauses = Vec::new();
+        for clause_text in s.split(',') {
+            let mut parts = clause_text.trim().split(':');
+            let kind = match parts.next().unwrap_or("") {
+                "error" => FaultKind::Error,
+                "hang" | "slow" => FaultKind::Hang,
+                "crash" | "panic" => FaultKind::Crash,
+                other => {
+                    return Err(format!(
+                        "bad fault clause '{clause_text}': unknown kind '{other}' \
+                         (expected error|hang|crash)"
+                    ))
+                }
+            };
+            let mut c = FaultClause::new(kind);
+            for token in parts {
+                // The combined form `shard=N@req=M` (and `payload=N@req=M`)
+                // is two key=value pairs joined by '@'.
+                for kv in token.split('@') {
+                    let (key, value) = kv
+                        .split_once('=')
+                        .ok_or_else(|| format!("bad fault token '{token}' in '{clause_text}'"))?;
+                    let bad = |what: &str| format!("bad {key} '{value}' in '{clause_text}': {what}");
+                    match key {
+                        "p" => {
+                            let p: f64 =
+                                value.parse().map_err(|_| bad("expected a probability"))?;
+                            if !(0.0..=1.0).contains(&p) {
+                                return Err(bad("must be in [0, 1]"));
+                            }
+                            c.p = Some(p);
+                        }
+                        "ms" => c.ms = value.parse().map_err(|_| bad("expected milliseconds"))?,
+                        "req" => c.req = Some(value.parse().map_err(|_| bad("expected a seq"))?),
+                        "shard" => {
+                            c.shard = Some(value.parse().map_err(|_| bad("expected a shard id"))?)
+                        }
+                        "payload" => {
+                            c.payload =
+                                Some(value.parse().map_err(|_| bad("expected a payload slot"))?)
+                        }
+                        "at" => c.at_ms = Some(value.parse().map_err(|_| bad("expected ms"))?),
+                        "period" => {
+                            let per: u64 = value.parse().map_err(|_| bad("expected ms"))?;
+                            if per == 0 {
+                                return Err(bad("period must be >= 1 ms"));
+                            }
+                            c.period_ms = Some(per);
+                        }
+                        other => {
+                            return Err(format!(
+                                "unknown fault token '{other}' in '{clause_text}' \
+                                 (expected p|ms|req|shard|payload|at|period)"
+                            ))
+                        }
+                    }
+                }
+            }
+            clauses.push(c);
+        }
+        Ok(Self { clauses })
+    }
+}
+
+// ---------------------------------------------------------------------
+// deterministic decisions
+// ---------------------------------------------------------------------
+
+/// SplitMix64 finalizer: the avalanche step behind every injection and
+/// jitter decision.
+fn mix(mut x: u64) -> u64 {
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Uniform [0, 1) as a pure function of its inputs. NOT a sequential RNG
+/// draw: two threads evaluating the same `(seed, stream, seq, attempt)`
+/// get the same value, which is what makes chaos runs thread-count
+/// -invariant.
+fn hash_unit(seed: u64, stream: u64, seq: u64, attempt: u64) -> f64 {
+    let h = mix(
+        seed ^ mix(stream.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+            ^ mix(seq.wrapping_add(0x517C_C1B7_2722_0A95))
+            ^ mix(attempt.wrapping_add(0x6A09_E667_F3BC_C909)),
+    );
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Identity of one execution attempt: which request, where, which try.
+/// Everything an injection decision may depend on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RequestTag {
+    /// Shard the attempt executes on.
+    pub shard: usize,
+    /// Payload slot (index into `ServeSpec::payloads`).
+    pub slot: usize,
+    /// Global arrival/request sequence number.
+    pub seq: u64,
+    /// 0 for the first try, +1 per retry.
+    pub attempt: u32,
+}
+
+/// What the plan decided for one attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    Error,
+    Hang { ms: u64 },
+    Crash,
+}
+
+/// Injection counters of one plan, by kind.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultCounts {
+    pub errors: usize,
+    pub hangs: usize,
+    pub crashes: usize,
+}
+
+impl FaultCounts {
+    pub fn total(&self) -> usize {
+        self.errors + self.hangs + self.crashes
+    }
+
+    pub fn merge(&mut self, other: &FaultCounts) {
+        self.errors += other.errors;
+        self.hangs += other.hangs;
+        self.crashes += other.crashes;
+    }
+}
+
+/// A live fault plan: the parsed spec, the decision seed, and per-shard
+/// injection counters. Shared (via `Arc`) between the [`FaultyBackend`]
+/// and the report assembly.
+#[derive(Debug)]
+pub struct FaultPlan {
+    spec: FaultSpec,
+    seed: u64,
+    /// Injection counts indexed by shard (grown on demand; counting
+    /// locks only when a fault actually fires).
+    counts: Mutex<Vec<FaultCounts>>,
+}
+
+impl FaultPlan {
+    pub fn new(spec: FaultSpec, seed: u64) -> Self {
+        Self { spec, seed, counts: Mutex::new(Vec::new()) }
+    }
+
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Decide (and count) what happens to one attempt. First matching
+    /// clause wins; `req=`-selected clauses fire on attempt 0 only (so a
+    /// retry recovers), probabilistic clauses re-roll per attempt via
+    /// the pure hash.
+    pub fn decide(&self, tag: RequestTag) -> Option<FaultAction> {
+        for (idx, c) in self.spec.clauses.iter().enumerate() {
+            if c.is_sim() || c.is_boot_crash() {
+                continue; // virtual-time / startup clauses: not per-request
+            }
+            if c.shard.is_some_and(|s| s != tag.shard)
+                || c.payload.is_some_and(|p| p != tag.slot)
+            {
+                continue;
+            }
+            let fires = match (c.req, c.p) {
+                (Some(req), _) => tag.seq == req && tag.attempt == 0,
+                (None, Some(p)) => {
+                    hash_unit(self.seed, idx as u64, tag.seq, tag.attempt as u64) < p
+                }
+                (None, None) => true,
+            };
+            if !fires {
+                continue;
+            }
+            self.count(tag.shard, c.kind);
+            return Some(match c.kind {
+                FaultKind::Error => FaultAction::Error,
+                FaultKind::Hang => FaultAction::Hang { ms: c.ms },
+                FaultKind::Crash => FaultAction::Crash,
+            });
+        }
+        None
+    }
+
+    /// Panic if a boot-crash clause targets `shard` (the crashing-shard
+    /// -process scenario the fleet's `catch_unwind` must contain).
+    pub fn check_boot(&self, shard: usize) {
+        for c in &self.spec.clauses {
+            if c.is_boot_crash() && c.shard.is_none_or(|s| s == shard) {
+                self.count(shard, FaultKind::Crash);
+                panic!("injected boot crash on shard {shard}");
+            }
+        }
+    }
+
+    fn count(&self, shard: usize, kind: FaultKind) {
+        let mut counts = lock_recover(&self.counts);
+        if counts.len() <= shard {
+            counts.resize(shard + 1, FaultCounts::default());
+        }
+        match kind {
+            FaultKind::Error => counts[shard].errors += 1,
+            FaultKind::Hang => counts[shard].hangs += 1,
+            FaultKind::Crash => counts[shard].crashes += 1,
+        }
+    }
+
+    /// Injections attributed to `shard` so far.
+    pub fn counts_for(&self, shard: usize) -> FaultCounts {
+        lock_recover(&self.counts).get(shard).copied().unwrap_or_default()
+    }
+
+    /// Injections across every shard.
+    pub fn counts_total(&self) -> FaultCounts {
+        let mut total = FaultCounts::default();
+        for c in lock_recover(&self.counts).iter() {
+            total.merge(c);
+        }
+        total
+    }
+}
+
+// ---------------------------------------------------------------------
+// faulty backend
+// ---------------------------------------------------------------------
+
+/// A [`ServeBackend`] wrapper injecting the plan's faults into every
+/// tagged execution. Warm-ups (untagged `execute`) pass through clean:
+/// faults target the recorded request stream, where the accounting can
+/// see them.
+pub struct FaultyBackend<B> {
+    inner: B,
+    plan: Arc<FaultPlan>,
+}
+
+impl<B> FaultyBackend<B> {
+    pub fn new(inner: B, plan: Arc<FaultPlan>) -> Self {
+        Self { inner, plan }
+    }
+
+    pub fn plan(&self) -> &Arc<FaultPlan> {
+        &self.plan
+    }
+}
+
+impl<B: ServeBackend> ServeBackend for FaultyBackend<B> {
+    fn resolve(&self, payload: &str) -> Result<ResolvedPayload> {
+        self.inner.resolve(payload)
+    }
+
+    fn executor(&self) -> Result<Box<dyn PayloadExecutor>> {
+        Ok(Box::new(FaultyExecutor {
+            inner: self.inner.executor()?,
+            plan: Arc::clone(&self.plan),
+        }))
+    }
+
+    fn fault_plan(&self) -> Option<&FaultPlan> {
+        Some(&self.plan)
+    }
+}
+
+struct FaultyExecutor {
+    inner: Box<dyn PayloadExecutor>,
+    plan: Arc<FaultPlan>,
+}
+
+impl PayloadExecutor for FaultyExecutor {
+    fn execute(&self, payload: usize, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        // Untagged path (warm-ups): no injection.
+        self.inner.execute(payload, inputs)
+    }
+
+    fn execute_tagged(
+        &self,
+        payload: usize,
+        inputs: &[Vec<f32>],
+        tag: RequestTag,
+    ) -> Result<Vec<f32>> {
+        match self.plan.decide(tag) {
+            Some(FaultAction::Error) => Err(anyhow!(
+                "injected fault: error at shard {} seq {} attempt {}",
+                tag.shard,
+                tag.seq,
+                tag.attempt
+            )),
+            Some(FaultAction::Crash) => panic!(
+                "injected fault: crash at shard {} seq {} attempt {}",
+                tag.shard, tag.seq, tag.attempt
+            ),
+            Some(FaultAction::Hang { ms }) => {
+                // A hung/slow kernel: stall, then execute normally. Long
+                // enough, this overstays a gate lease and the watchdog
+                // revokes the grant out from under us — which is safe for
+                // a CPU-bound backend (see DESIGN.md §12).
+                std::thread::sleep(Duration::from_millis(ms));
+                self.inner.execute_tagged(payload, inputs, tag)
+            }
+            None => self.inner.execute_tagged(payload, inputs, tag),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// retries
+// ---------------------------------------------------------------------
+
+/// Request-level retry policy: a per-request attempt budget with bounded
+/// exponential backoff and deterministic seeded jitter (a pure hash of
+/// `(seed, seq, attempt)`, like every fault decision).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Retries per request beyond the first attempt (0 = no retries).
+    pub budget: u32,
+    /// Backoff before retry k: `base_ms * 2^k`, jittered, capped.
+    pub base_ms: f64,
+    /// Backoff ceiling, milliseconds.
+    pub cap_ms: f64,
+    /// Jitter seed.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self { budget: 0, base_ms: 1.0, cap_ms: 50.0, seed: 0 }
+    }
+}
+
+impl RetryPolicy {
+    pub fn with_budget(budget: u32) -> Self {
+        Self { budget, ..Self::default() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.budget > 0
+    }
+
+    /// Backoff before retrying `seq`'s attempt number `attempt` (the one
+    /// that just failed). Deterministic: the same `(policy, seq,
+    /// attempt)` always sleeps the same duration.
+    pub fn backoff(&self, seq: u64, attempt: u32) -> Duration {
+        let exp = (self.base_ms * 2f64.powi(attempt.min(30) as i32)).min(self.cap_ms);
+        // Jitter in [0.5, 1.5): decorrelates retry storms without
+        // sacrificing replayability.
+        let jitter = 0.5 + hash_unit(self.seed, u64::MAX, seq, attempt as u64);
+        Duration::from_secs_f64(exp * jitter / 1e3)
+    }
+}
+
+// ---------------------------------------------------------------------
+// per-shard health
+// ---------------------------------------------------------------------
+
+/// The health state machine of one shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    /// Serving normally.
+    Healthy,
+    /// Consecutive failures crossed the degrade threshold; still
+    /// accepting, one breaker step from ejection.
+    Degraded,
+    /// Out of rotation: the router places no new work here. Admitted
+    /// work keeps draining (drain-then-eject, DESIGN.md §8).
+    Ejected,
+    /// Cooldown elapsed: exactly one probe request is in flight.
+    Probing,
+    /// The probe succeeded; back in rotation, one success from Healthy.
+    Reinstated,
+}
+
+impl fmt::Display for HealthState {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Self::Healthy => "healthy",
+            Self::Degraded => "degraded",
+            Self::Ejected => "ejected",
+            Self::Probing => "probing",
+            Self::Reinstated => "reinstated",
+        })
+    }
+}
+
+/// Circuit-breaker thresholds of the health machine.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Breaker {
+    /// Consecutive failures before Healthy -> Degraded.
+    pub degrade_after: u32,
+    /// Consecutive failures before -> Ejected (a panic ejects at once).
+    pub eject_after: u32,
+    /// Time out of rotation before the first probe is allowed.
+    pub cooldown: Duration,
+}
+
+impl Default for Breaker {
+    fn default() -> Self {
+        Self { degrade_after: 2, eject_after: 5, cooldown: Duration::from_millis(50) }
+    }
+}
+
+#[derive(Debug)]
+struct HealthCore {
+    state: HealthState,
+    consecutive: u32,
+    /// Set on the eject that *started* the current outage; cleared on
+    /// reinstatement (time-to-recover spans the whole outage, including
+    /// failed probes).
+    outage_from: Option<std::time::Instant>,
+    /// Reset on every (re-)ejection: the cooldown clock.
+    cooled_from: Option<std::time::Instant>,
+    probe_inflight: bool,
+    ejections: usize,
+    reinstatements: usize,
+    /// Outage durations (ms), drained into the shard's FaultReport.
+    recoveries_ms: Vec<f64>,
+}
+
+/// Per-shard breaker state. The fleet dispatcher calls
+/// [`ShardHealth::accepting`] before routing an arrival (which is also
+/// how cooldown probes get admitted); workers report
+/// [`ShardHealth::on_success`]/[`ShardHealth::on_failure`]/
+/// [`ShardHealth::on_panic`] per executed request.
+#[derive(Debug)]
+pub struct ShardHealth {
+    breaker: Breaker,
+    core: Mutex<HealthCore>,
+}
+
+impl ShardHealth {
+    pub fn new(breaker: Breaker) -> Self {
+        Self {
+            breaker,
+            core: Mutex::new(HealthCore {
+                state: HealthState::Healthy,
+                consecutive: 0,
+                outage_from: None,
+                cooled_from: None,
+                probe_inflight: false,
+                ejections: 0,
+                reinstatements: 0,
+                recoveries_ms: Vec::new(),
+            }),
+        }
+    }
+
+    pub fn state(&self) -> HealthState {
+        lock_recover(&self.core).state
+    }
+
+    /// May new work be placed here right now? Ejected shards flip to
+    /// Probing (admitting exactly one probe) once the cooldown elapsed.
+    pub fn accepting(&self) -> bool {
+        let mut core = lock_recover(&self.core);
+        match core.state {
+            HealthState::Healthy | HealthState::Degraded | HealthState::Reinstated => true,
+            HealthState::Ejected => {
+                let cooled = core
+                    .cooled_from
+                    .is_some_and(|t| t.elapsed() >= self.breaker.cooldown);
+                if cooled {
+                    core.state = HealthState::Probing;
+                    core.probe_inflight = true;
+                    true
+                } else {
+                    false
+                }
+            }
+            HealthState::Probing => {
+                // One probe at a time; if the previous probe vanished
+                // (shed/timed out before executing), admit another.
+                if core.probe_inflight {
+                    false
+                } else {
+                    core.probe_inflight = true;
+                    true
+                }
+            }
+        }
+    }
+
+    pub fn on_success(&self) {
+        let mut core = lock_recover(&self.core);
+        core.consecutive = 0;
+        core.state = match core.state {
+            HealthState::Probing => {
+                core.probe_inflight = false;
+                core.reinstatements += 1;
+                if let Some(from) = core.outage_from.take() {
+                    core.recoveries_ms.push(from.elapsed().as_secs_f64() * 1e3);
+                }
+                core.cooled_from = None;
+                HealthState::Reinstated
+            }
+            HealthState::Reinstated | HealthState::Healthy | HealthState::Degraded => {
+                HealthState::Healthy
+            }
+            // A straggler success from before the eject: stay out.
+            HealthState::Ejected => HealthState::Ejected,
+        };
+    }
+
+    /// One failed request; returns the new state.
+    pub fn on_failure(&self) -> HealthState {
+        self.fail(false)
+    }
+
+    /// One panicked request: ejects immediately.
+    pub fn on_panic(&self) -> HealthState {
+        self.fail(true)
+    }
+
+    fn fail(&self, panicked: bool) -> HealthState {
+        let mut core = lock_recover(&self.core);
+        core.consecutive = core.consecutive.saturating_add(1);
+        let eject = panicked
+            || core.consecutive >= self.breaker.eject_after
+            || core.state == HealthState::Probing;
+        core.state = if eject {
+            if core.state != HealthState::Ejected {
+                core.ejections += 1;
+            }
+            core.probe_inflight = false;
+            if core.outage_from.is_none() {
+                core.outage_from = Some(std::time::Instant::now());
+            }
+            core.cooled_from = Some(std::time::Instant::now());
+            HealthState::Ejected
+        } else if core.consecutive >= self.breaker.degrade_after {
+            HealthState::Degraded
+        } else {
+            core.state
+        };
+        core.state
+    }
+
+    /// Outage durations closed since the last drain (ms).
+    pub fn drain_recoveries_ms(&self) -> Vec<f64> {
+        std::mem::take(&mut lock_recover(&self.core).recoveries_ms)
+    }
+
+    pub fn snapshot(&self) -> HealthSnapshot {
+        let core = lock_recover(&self.core);
+        HealthSnapshot {
+            state: core.state,
+            ejections: core.ejections,
+            reinstatements: core.reinstatements,
+        }
+    }
+}
+
+impl Default for ShardHealth {
+    fn default() -> Self {
+        Self::new(Breaker::default())
+    }
+}
+
+/// Point-in-time health of one shard, surfaced in `ShardReport`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HealthSnapshot {
+    pub state: HealthState,
+    pub ejections: usize,
+    pub reinstatements: usize,
+}
+
+// ---------------------------------------------------------------------
+// report
+// ---------------------------------------------------------------------
+
+/// Fault accounting of one serving run (or one shard's slice): what was
+/// injected, what the serving layer saw, and how recovery went.
+#[derive(Debug, Clone, Default)]
+pub struct FaultReport {
+    /// Faults the plan injected (by kind).
+    pub injected: FaultCounts,
+    /// Failures the serving layer observed (injected or organic;
+    /// includes every failed attempt).
+    pub detected: usize,
+    /// Retry attempts issued (local re-executions and re-routes).
+    pub retried: usize,
+    /// Requests that failed at least once, then completed.
+    pub recovered: usize,
+    /// Requests that exhausted the retry budget.
+    pub gave_up: usize,
+    /// Gate-lease revocations (hung holders the watchdog cut off).
+    pub revocations: u64,
+    /// Shard ejections / reinstatements across the run.
+    pub ejections: usize,
+    pub reinstatements: usize,
+    /// Time from attempt start to failure detection, ms.
+    pub detect_ms: QuantileSketch,
+    /// Time from first failure to recovery, ms (request recoveries and
+    /// shard outage recoveries both land here).
+    pub recover_ms: QuantileSketch,
+}
+
+impl FaultReport {
+    /// Nothing injected, detected or revoked?
+    pub fn is_empty(&self) -> bool {
+        self.injected.total() == 0
+            && self.detected == 0
+            && self.retried == 0
+            && self.gave_up == 0
+            && self.revocations == 0
+            && self.ejections == 0
+    }
+
+    /// Record one observed failure.
+    pub fn record_failure(&mut self, detect_ms: f64) {
+        self.detected += 1;
+        self.detect_ms.record(detect_ms);
+    }
+
+    /// Record one request that recovered after failing.
+    pub fn record_recovery(&mut self, recover_ms: f64) {
+        self.recovered += 1;
+        self.recover_ms.record(recover_ms);
+    }
+
+    pub fn merge(&mut self, other: &FaultReport) {
+        self.injected.merge(&other.injected);
+        self.detected += other.detected;
+        self.retried += other.retried;
+        self.recovered += other.recovered;
+        self.gave_up += other.gave_up;
+        self.revocations += other.revocations;
+        self.ejections += other.ejections;
+        self.reinstatements += other.reinstatements;
+        self.detect_ms.merge(&other.detect_ms);
+        self.recover_ms.merge(&other.recover_ms);
+    }
+
+    /// Two-line human rendering (serving reports).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "faults: injected={} (errors={} hangs={} crashes={}) detected={} \
+             retried={} recovered={} gave-up={} revoked={} ejected={} reinstated={}",
+            self.injected.total(),
+            self.injected.errors,
+            self.injected.hangs,
+            self.injected.crashes,
+            self.detected,
+            self.retried,
+            self.recovered,
+            self.gave_up,
+            self.revocations,
+            self.ejections,
+            self.reinstatements,
+        );
+        if self.detect_ms.count() > 0 || self.recover_ms.count() > 0 {
+            out.push_str(&format!(
+                "\ndetect ms p50={:.2} p99={:.2}; recover ms p50={:.2} p99={:.2}",
+                self.detect_ms.quantile(0.50),
+                self.detect_ms.quantile(0.99),
+                self.recover_ms.quantile(0.50),
+                self.recover_ms.quantile(0.99),
+            ));
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// panic payloads
+// ---------------------------------------------------------------------
+
+/// Recover the human-readable message from a caught panic payload
+/// (thread joins used to discard it — ISSUE 7 satellite).
+pub fn panic_msg(e: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::control::serving::SyntheticBackend;
+
+    // ------------------------------------------------------------ spec --
+
+    #[test]
+    fn parse_display_roundtrip() {
+        for text in [
+            "error:p=0.01",
+            "hang:shard=2@req=500:ms=50",
+            "crash:payload=1@req=100",
+            "error:p=0.01,hang:shard=2@req=500:ms=50,crash:payload=1@req=100",
+            "crash:shard=1",
+            "hang:at=20:ms=5",
+            "hang:period=100:ms=3",
+        ] {
+            let spec: FaultSpec = text.parse().unwrap_or_else(|e| panic!("{text}: {e}"));
+            let rendered = spec.to_string();
+            let reparsed: FaultSpec = rendered.parse().unwrap();
+            assert_eq!(reparsed, spec, "{text} -> {rendered}");
+        }
+        assert!("".parse::<FaultSpec>().unwrap().is_empty());
+        assert!("none".parse::<FaultSpec>().unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rejects_nonsense() {
+        assert!("explode:p=0.1".parse::<FaultSpec>().is_err());
+        assert!("error:p=1.5".parse::<FaultSpec>().is_err());
+        assert!("error:p=x".parse::<FaultSpec>().is_err());
+        assert!("error:frob=1".parse::<FaultSpec>().is_err());
+        assert!("hang:period=0".parse::<FaultSpec>().is_err());
+        assert!("error:p".parse::<FaultSpec>().is_err());
+    }
+
+    #[test]
+    fn clause_classification() {
+        let spec: FaultSpec = "crash:shard=1,hang:at=5:ms=2,error:p=0.5".parse().unwrap();
+        assert!(spec.clauses[0].is_boot_crash());
+        assert!(spec.clauses[1].is_sim());
+        assert!(spec.has_sim_clauses());
+        assert!(!spec.clauses[2].is_sim());
+        assert!(!spec.clauses[2].is_boot_crash());
+    }
+
+    // ------------------------------------------------------- decisions --
+
+    fn tag(shard: usize, slot: usize, seq: u64, attempt: u32) -> RequestTag {
+        RequestTag { shard, slot, seq, attempt }
+    }
+
+    #[test]
+    fn decisions_are_pure_functions_of_the_tag() {
+        let plan = FaultPlan::new("error:p=0.3".parse().unwrap(), 7);
+        let a: Vec<_> = (0..200).map(|s| plan.decide(tag(0, 0, s, 0))).collect();
+        let b: Vec<_> = (0..200).map(|s| plan.decide(tag(0, 0, s, 0))).collect();
+        assert_eq!(a, b, "same tag, same decision — regardless of call order");
+        let hits = a.iter().filter(|d| d.is_some()).count();
+        assert!((30..90).contains(&hits), "p=0.3 over 200: got {hits}");
+        // A different seed decides differently somewhere.
+        let other = FaultPlan::new("error:p=0.3".parse().unwrap(), 8);
+        let c: Vec<_> = (0..200).map(|s| other.decide(tag(0, 0, s, 0))).collect();
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn selectors_restrict_and_req_fires_once() {
+        let plan =
+            FaultPlan::new("hang:shard=2@req=500:ms=50,crash:payload=1@req=100".parse().unwrap(), 0);
+        assert_eq!(
+            plan.decide(tag(2, 0, 500, 0)),
+            Some(FaultAction::Hang { ms: 50 })
+        );
+        assert_eq!(plan.decide(tag(1, 0, 500, 0)), None, "wrong shard");
+        assert_eq!(plan.decide(tag(2, 0, 501, 0)), None, "wrong seq");
+        assert_eq!(plan.decide(tag(2, 0, 500, 1)), None, "req fires on attempt 0 only");
+        assert_eq!(plan.decide(tag(0, 1, 100, 0)), Some(FaultAction::Crash));
+        assert_eq!(plan.decide(tag(0, 0, 100, 0)), None, "wrong payload slot");
+        let c = plan.counts_total();
+        assert_eq!((c.hangs, c.crashes, c.errors), (1, 1, 0));
+        assert_eq!(plan.counts_for(2).hangs, 1);
+        assert_eq!(plan.counts_for(0).crashes, 1);
+    }
+
+    #[test]
+    fn p_zero_never_fires_p_one_always() {
+        let never = FaultPlan::new("error:p=0".parse().unwrap(), 3);
+        let always = FaultPlan::new("error:p=1".parse().unwrap(), 3);
+        for s in 0..100 {
+            assert_eq!(never.decide(tag(0, 0, s, 0)), None);
+            assert_eq!(always.decide(tag(0, 0, s, 0)), Some(FaultAction::Error));
+        }
+    }
+
+    #[test]
+    fn boot_crash_clauses_skip_per_request_matching() {
+        let plan = FaultPlan::new("crash:shard=1".parse().unwrap(), 0);
+        assert_eq!(plan.decide(tag(1, 0, 0, 0)), None);
+        let contained = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            plan.check_boot(1);
+        }));
+        assert!(contained.is_err(), "boot crash must panic for its shard");
+        let ok = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            plan.check_boot(0);
+        }));
+        assert!(ok.is_ok(), "other shards boot fine");
+        assert_eq!(plan.counts_for(1).crashes, 1);
+    }
+
+    // --------------------------------------------------- faulty backend --
+
+    #[test]
+    fn faulty_backend_injects_errors_and_passes_warmups() {
+        let plan = Arc::new(FaultPlan::new("error:p=1".parse().unwrap(), 0));
+        let fb = FaultyBackend::new(SyntheticBackend::new(5), Arc::clone(&plan));
+        assert!(fb.fault_plan().is_some());
+        let rp = fb.resolve("dna").unwrap();
+        let exec = fb.executor().unwrap();
+        // Warm-up (untagged): clean.
+        assert!(exec.execute(rp.index, &rp.base_inputs).is_ok());
+        // Tagged: injected.
+        let err = exec
+            .execute_tagged(rp.index, &rp.base_inputs, tag(0, 0, 1, 0))
+            .unwrap_err();
+        assert!(err.to_string().contains("injected fault"), "{err}");
+        assert_eq!(plan.counts_total().errors, 1);
+    }
+
+    #[test]
+    fn faulty_backend_crash_panics() {
+        let plan = Arc::new(FaultPlan::new("crash:req=0".parse().unwrap(), 0));
+        let fb = FaultyBackend::new(SyntheticBackend::new(5), plan);
+        let rp = fb.resolve("dna").unwrap();
+        let exec = fb.executor().unwrap();
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = exec.execute_tagged(rp.index, &rp.base_inputs, tag(0, 0, 0, 0));
+        }));
+        assert!(caught.is_err());
+        assert_eq!(panic_msg(caught.unwrap_err()), "injected fault: crash at shard 0 seq 0 attempt 0");
+    }
+
+    // ----------------------------------------------------------- retry --
+
+    #[test]
+    fn backoff_is_bounded_exponential_and_deterministic() {
+        let rp = RetryPolicy { budget: 5, base_ms: 2.0, cap_ms: 10.0, seed: 1 };
+        assert!(rp.enabled());
+        assert_eq!(rp.backoff(9, 2), rp.backoff(9, 2), "deterministic jitter");
+        for attempt in 0..6 {
+            let d = rp.backoff(9, attempt).as_secs_f64() * 1e3;
+            let exp = (2.0 * 2f64.powi(attempt as i32)).min(10.0);
+            assert!(d >= exp * 0.5 - 1e-9 && d < exp * 1.5 + 1e-9, "attempt {attempt}: {d} ms");
+        }
+        assert_ne!(rp.backoff(9, 1), rp.backoff(10, 1), "jitter varies by seq");
+        assert!(!RetryPolicy::default().enabled());
+    }
+
+    // ---------------------------------------------------------- health --
+
+    fn fast_breaker() -> Breaker {
+        Breaker { degrade_after: 2, eject_after: 3, cooldown: Duration::from_millis(5) }
+    }
+
+    #[test]
+    fn breaker_walks_the_full_state_machine() {
+        let h = ShardHealth::new(fast_breaker());
+        assert_eq!(h.state(), HealthState::Healthy);
+        assert!(h.accepting());
+        h.on_failure();
+        assert_eq!(h.state(), HealthState::Healthy, "one failure is noise");
+        h.on_failure();
+        assert_eq!(h.state(), HealthState::Degraded);
+        assert!(h.accepting(), "degraded still serves");
+        h.on_failure();
+        assert_eq!(h.state(), HealthState::Ejected);
+        assert!(!h.accepting(), "no routing before cooldown");
+        std::thread::sleep(Duration::from_millis(8));
+        assert!(h.accepting(), "cooldown over: one probe admitted");
+        assert_eq!(h.state(), HealthState::Probing);
+        assert!(!h.accepting(), "only one probe in flight");
+        h.on_success();
+        assert_eq!(h.state(), HealthState::Reinstated);
+        assert!(h.accepting());
+        h.on_success();
+        assert_eq!(h.state(), HealthState::Healthy);
+        let snap = h.snapshot();
+        assert_eq!((snap.ejections, snap.reinstatements), (1, 1));
+        let rec = h.drain_recoveries_ms();
+        assert_eq!(rec.len(), 1);
+        assert!(rec[0] >= 5.0, "outage spanned at least the cooldown: {rec:?}");
+        assert!(h.drain_recoveries_ms().is_empty(), "drain is once");
+    }
+
+    #[test]
+    fn panic_ejects_immediately_and_failed_probe_re_ejects() {
+        let h = ShardHealth::new(fast_breaker());
+        assert_eq!(h.on_panic(), HealthState::Ejected);
+        assert_eq!(h.snapshot().ejections, 1);
+        std::thread::sleep(Duration::from_millis(8));
+        assert!(h.accepting());
+        assert_eq!(h.on_failure(), HealthState::Ejected, "failed probe goes back out");
+        assert_eq!(h.snapshot().ejections, 2);
+        assert!(!h.accepting(), "cooldown restarts");
+        std::thread::sleep(Duration::from_millis(8));
+        assert!(h.accepting());
+        h.on_success();
+        assert_eq!(h.state(), HealthState::Reinstated);
+        // One outage, spanning both ejections.
+        assert_eq!(h.drain_recoveries_ms().len(), 1);
+    }
+
+    // ------------------------------------------------------- sim mirror --
+
+    #[test]
+    fn sim_schedule_is_seeded_sorted_and_filtered() {
+        let spec: FaultSpec = "hang:at=20:ms=5,hang:period=50:ms=3:shard=1".parse().unwrap();
+        let horizon = 1_000_000_000; // 1 s
+        let a = spec.sim_schedule(0, 0, horizon, 42);
+        assert_eq!(a, vec![(20_000_000, 5_000_000)], "shard 0 sees only the at= clause");
+        let b = spec.sim_schedule(0, 1, horizon, 42);
+        assert!(b.len() > 2, "periodic clause fires repeatedly: {}", b.len());
+        assert!(b.windows(2).all(|w| w[0].0 <= w[1].0), "sorted by time");
+        assert!(b.iter().all(|&(t, _)| t < horizon));
+        assert_eq!(b, spec.sim_schedule(0, 1, horizon, 42), "seed-deterministic");
+        assert_ne!(b, spec.sim_schedule(0, 1, horizon, 43));
+        // Per-request clauses contribute nothing to virtual time.
+        let live: FaultSpec = "error:p=0.5,crash:req=3".parse().unwrap();
+        assert!(live.sim_schedule(0, 0, horizon, 1).is_empty());
+    }
+
+    // ---------------------------------------------------------- report --
+
+    #[test]
+    fn report_merge_and_render() {
+        let mut r = FaultReport::default();
+        assert!(r.is_empty());
+        r.injected.errors = 3;
+        r.injected.hangs = 1;
+        r.record_failure(4.0);
+        r.record_failure(6.0);
+        r.retried = 2;
+        r.record_recovery(12.0);
+        r.gave_up = 1;
+        r.revocations = 1;
+        r.ejections = 1;
+        r.reinstatements = 1;
+        assert!(!r.is_empty());
+        let mut m = r.clone();
+        m.merge(&r);
+        assert_eq!(m.injected.total(), 8);
+        assert_eq!(m.detected, 4);
+        assert_eq!(m.recovered, 2);
+        assert_eq!(m.revocations, 2);
+        assert_eq!(m.detect_ms.count(), 4);
+        let text = m.render();
+        assert!(text.contains("injected=8"), "{text}");
+        assert!(text.contains("gave-up=2"), "{text}");
+        assert!(text.contains("revoked=2"), "{text}");
+        assert!(text.contains("recover ms"), "{text}");
+    }
+
+    #[test]
+    fn panic_msg_downcasts_common_payloads() {
+        let s = std::panic::catch_unwind(|| panic!("static str")).unwrap_err();
+        assert_eq!(panic_msg(s), "static str");
+        let owned = std::panic::catch_unwind(|| panic!("{}", String::from("formatted"))).unwrap_err();
+        assert_eq!(panic_msg(owned), "formatted");
+        let odd = std::panic::catch_unwind(|| std::panic::panic_any(17u32)).unwrap_err();
+        assert_eq!(panic_msg(odd), "non-string panic payload");
+    }
+}

@@ -60,17 +60,21 @@
 //! ```
 
 use crate::config::StrategyKind;
+use crate::control::fault::{
+    panic_msg, Breaker, FaultReport, HealthSnapshot, ShardHealth,
+};
 use crate::control::gate::{GateStats, GpuGate};
 use crate::control::policy::AccessPolicy;
 use crate::control::serving::{
-    admit, build_latency_stats, fold_open_outs, offered_rate_hz, open_worker, serve,
-    OpenWorkerOut, Pending, ServeBackend, ServeReport, ServeSpec,
+    admit, build_latency_stats, fold_open_outs, make_gate, offered_rate_hz, open_worker, serve,
+    OpenWorkerCtx, OpenWorkerOut, Pending, ServeBackend, ServeReport, ServeSpec,
 };
 use crate::control::traffic::{AdmissionQueue, ShedPolicy, TrafficReport};
 use crate::metrics::stats::LatencyStats;
 use anyhow::{anyhow, Result};
 use std::collections::HashMap;
 use std::fmt;
+use std::panic::AssertUnwindSafe;
 use std::str::FromStr;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Barrier, PoisonError, RwLock};
@@ -281,11 +285,20 @@ pub struct FleetSpec {
     pub base: ServeSpec,
     pub shards: usize,
     pub placement: Placement,
+    /// Circuit-breaker thresholds applied per shard (open-loop fleets;
+    /// DESIGN.md §12).
+    pub breaker: Breaker,
 }
 
 impl FleetSpec {
     pub fn new(base: ServeSpec, shards: usize, placement: Placement) -> Self {
-        Self { base, shards, placement }
+        Self { base, shards, placement, breaker: Breaker::default() }
+    }
+
+    /// Override the per-shard circuit-breaker thresholds.
+    pub fn with_breaker(mut self, breaker: Breaker) -> Self {
+        self.breaker = breaker;
+        self
     }
 
     fn validate(&self) -> Result<()> {
@@ -303,8 +316,13 @@ pub struct ShardReport {
     /// Clients routed to this shard (0 = the shard idled all run).
     pub clients: usize,
     /// The shard's full serving report; `None` when no client was routed
-    /// here.
+    /// here (or, under a fault plan, when the whole shard crashed).
     pub report: Option<ServeReport>,
+    /// Why the shard failed (panic or infrastructure error), when a
+    /// fault plan let the fleet survive it instead of aborting.
+    pub error: Option<String>,
+    /// Final breaker state (health-managed open-loop fleets only).
+    pub health: Option<HealthSnapshot>,
 }
 
 /// Result of a fleet serving run: per-shard breakdowns plus merged
@@ -331,6 +349,9 @@ pub struct FleetReport {
     /// runs); `shed` counts requests that found **every** shard's
     /// admission queue full.
     pub traffic: Option<TrafficReport>,
+    /// Fault/recovery accounting merged across shards (Some whenever a
+    /// fault plan was active or the watchdog/breakers fired).
+    pub fault: Option<FaultReport>,
 }
 
 impl FleetReport {
@@ -384,7 +405,21 @@ impl FleetReport {
                     r.latency_p(0.95),
                     r.latency.max(),
                 )),
+                None if s.error.is_some() => {
+                    out.push_str(&format!("\n  shard {}: FAILED", s.shard))
+                }
                 None => out.push_str(&format!("\n  shard {}: idle (no clients routed)", s.shard)),
+            }
+            if let Some(h) = &s.health {
+                if h.ejections > 0 {
+                    out.push_str(&format!(
+                        " [health {}: ejected {}x, reinstated {}x]",
+                        h.state, h.ejections, h.reinstatements
+                    ));
+                }
+            }
+            if let Some(e) = &s.error {
+                out.push_str(&format!(" — {e}"));
             }
         }
         if let Some(g) = &self.gate {
@@ -397,6 +432,14 @@ impl FleetReport {
             for line in t.render(self.wall_s).lines() {
                 out.push_str("\n  fleet ");
                 out.push_str(line);
+            }
+        }
+        if let Some(f) = &self.fault {
+            if !f.is_empty() {
+                for line in f.render().lines() {
+                    out.push_str("\n  fleet ");
+                    out.push_str(line);
+                }
             }
         }
         out
@@ -440,7 +483,8 @@ pub fn serve_fleet(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result<Fleet
     // client.
     let subs: Vec<Option<ServeSpec>> = assigned
         .iter()
-        .map(|slots| {
+        .enumerate()
+        .map(|(shard, slots)| {
             if slots.is_empty() {
                 return None;
             }
@@ -452,42 +496,94 @@ pub fn serve_fleet(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result<Fleet
             let mut sub = base.clone();
             sub.payloads = names[..period].iter().map(|s| s.to_string()).collect();
             sub.clients = slots.len();
+            // The shard id selects shard-scoped fault clauses and keys
+            // the plan's injection counters.
+            sub.shard = shard;
             Some(sub)
         })
         .collect();
 
     let t0 = Instant::now();
     // Shards model independent GPUs: fan them out. Within a shard the
-    // ordinary serve loop spawns that shard's client/stream threads.
+    // ordinary serve loop spawns that shard's client/stream threads. A
+    // shard that panics (an injected boot crash, or any organic panic)
+    // is contained here: the fleet survives with a failed ShardReport.
     let results: Vec<Option<Result<ServeReport>>> = crate::harness::parallel::parallel_map(
         subs,
-        |sub| sub.map(|s| serve(&s, backend)),
+        |sub| {
+            sub.map(|s| {
+                match std::panic::catch_unwind(AssertUnwindSafe(|| serve(&s, backend))) {
+                    Ok(r) => r,
+                    Err(p) => Err(anyhow!("shard panicked: {}", panic_msg(p))),
+                }
+            })
+        },
     );
     let wall_s = t0.elapsed().as_secs_f64();
 
+    // Under a fault plan, a failed shard is an expected outcome: record
+    // it and keep the fleet's report. Without one, fail fast as before.
+    let tolerate = backend.fault_plan().is_some();
     let mut shards = Vec::with_capacity(spec.shards);
     let mut latency = LatencyStats::new(base.exact_quantiles);
     let mut gate: Option<GateStats> = None;
+    let mut fault = FaultReport::default();
+    let mut any_ok = false;
+    let mut first_err: Option<anyhow::Error> = None;
     for (shard, result) in results.into_iter().enumerate() {
-        let report = match result {
-            None => None,
-            Some(r) => {
-                let r = r.map_err(|e| anyhow!("shard {shard}: {e}"))?;
+        let (report, error) = match result {
+            None => (None, None),
+            Some(Ok(r)) => {
+                any_ok = true;
                 latency.merge(&r.latency);
                 if let Some(g) = &r.gate {
                     match &mut gate {
-                        Some(merged) => {
-                            merged.wait.merge(&g.wait);
-                            merged.hold.merge(&g.hold);
-                        }
+                        Some(merged) => merged.merge(g),
                         None => gate = Some(g.clone()),
                     }
                 }
-                Some(r)
+                if let Some(f) = &r.fault {
+                    fault.merge(f);
+                }
+                (Some(r), None)
+            }
+            Some(Err(e)) => {
+                let e = anyhow!("shard {shard}: {e}");
+                if !tolerate {
+                    return Err(e);
+                }
+                let msg = e.to_string();
+                first_err.get_or_insert(e);
+                (None, Some(msg))
             }
         };
-        shards.push(ShardReport { shard, clients: assigned[shard].len(), report });
+        // A crashed shard shows up ejected, so the report reads like the
+        // open-loop breaker view.
+        let health = error.as_ref().map(|_| {
+            let h = ShardHealth::new(spec.breaker);
+            h.on_panic();
+            h.snapshot()
+        });
+        shards.push(ShardReport {
+            shard,
+            clients: assigned[shard].len(),
+            report,
+            error,
+            health,
+        });
     }
+    if !any_ok {
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+    }
+    if let Some(plan) = backend.fault_plan() {
+        // Totals from the plan, not the per-shard sum: a shard that
+        // crashed at boot counted its injection but returned no report.
+        fault.injected = plan.counts_total();
+    }
+    fault.ejections += shards.iter().filter(|s| s.error.is_some()).count();
+    let fault = (tolerate || !fault.is_empty()).then_some(fault);
     latency.seal();
     Ok(FleetReport {
         strategy: base.strategy,
@@ -500,6 +596,7 @@ pub fn serve_fleet(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result<Fleet
         shards,
         gate,
         traffic: None,
+        fault,
     })
 }
 
@@ -513,6 +610,7 @@ pub fn serve_fleet(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result<Fleet
 fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result<FleetReport> {
     let base = &spec.base;
     let policy = AccessPolicy::new(base.strategy);
+    let tolerate = backend.fault_plan().is_some();
     let resolved: Vec<crate::control::serving::ResolvedPayload> = base
         .payloads
         .iter()
@@ -524,8 +622,22 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
     let router = ShardRouter::new(active, spec.placement);
     let queues: Vec<AdmissionQueue<Pending>> =
         (0..active).map(|_| AdmissionQueue::new(base.traffic.queue_cap)).collect();
-    let gates: Vec<Option<GpuGate>> =
-        (0..active).map(|_| policy.gated().then(GpuGate::new)).collect();
+    let gates: Vec<Option<GpuGate>> = (0..active).map(|_| make_gate(base, policy)).collect();
+    // Per-shard circuit breakers. A shard whose boot-crash clause fires
+    // starts the run ejected ("the process died"); after the breaker's
+    // cooldown a probe request re-admits it — the self-healing loop of
+    // DESIGN.md §12.
+    let healths: Vec<ShardHealth> =
+        (0..active).map(|_| ShardHealth::new(spec.breaker)).collect();
+    let mut boot_err: Vec<Option<String>> = (0..active).map(|_| None).collect();
+    if let Some(plan) = backend.fault_plan() {
+        for s in 0..active {
+            if let Err(p) = std::panic::catch_unwind(AssertUnwindSafe(|| plan.check_boot(s))) {
+                healths[s].on_panic();
+                boot_err[s] = Some(panic_msg(p));
+            }
+        }
+    }
     // Worker c drains shard c % active; PTB's SM-share fallback divides
     // by the shard-local worker count (partitions never span shards).
     let shard_of_worker: Vec<usize> = (0..base.clients).map(|c| c % active).collect();
@@ -546,31 +658,72 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
     let done: Vec<Box<dyn Fn() + Sync + '_>> = (0..active)
         .map(|s| Box::new(move || router_ref.complete(s)) as Box<dyn Fn() + Sync + '_>)
         .collect();
+    // Per-shard re-route hooks: a worker whose request failed offers it
+    // to the shallowest *other* accepting shard. Depth and per-shard
+    // offered counts follow the request; the receiving shard's done hook
+    // will account it. False = nobody would take it (retry locally).
+    let (queues_ref, healths_ref, routed_ref) = (&queues, &healths, &routed);
+    let requeue: Vec<Box<dyn Fn(Pending) -> bool + Sync + '_>> = (0..active)
+        .map(|from| {
+            Box::new(move |p: Pending| {
+                let mut order: Vec<usize> =
+                    (0..queues_ref.len()).filter(|&x| x != from).collect();
+                order.sort_by_key(|&x| (queues_ref[x].len(), x));
+                let mut pending = Some(p);
+                for to in order {
+                    if !healths_ref[to].accepting() {
+                        continue;
+                    }
+                    match queues_ref[to].try_push(pending.take().unwrap()) {
+                        Ok(()) => {
+                            let _ = routed_ref[from].fetch_update(
+                                Ordering::Relaxed,
+                                Ordering::Relaxed,
+                                |d| d.checked_sub(1),
+                            );
+                            routed_ref[to].fetch_add(1, Ordering::Relaxed);
+                            router_ref.transfer(from, to);
+                            return true;
+                        }
+                        Err(back) => pending = Some(back),
+                    }
+                }
+                false
+            }) as Box<dyn Fn(Pending) -> bool + Sync + '_>
+        })
+        .collect();
 
     let (outs, wall_s) = std::thread::scope(|s| {
         let mut handles = Vec::new();
         for (c, &shard) in shard_of_worker.iter().enumerate() {
-            let (queue, gate, warm, resolved, done) = (
+            let (queue, gate, warm, resolved, done, health, req) = (
                 &queues[shard],
                 gates[shard].as_ref(),
                 &warm,
                 &resolved,
                 &*done[shard],
+                &healths[shard],
+                &*requeue[shard],
             );
             let share = policy.sm_share(workers_of_shard[shard]);
             let handle = s.spawn(move || {
-                let out = open_worker(
+                let ctx = OpenWorkerCtx {
                     backend,
                     resolved,
                     queue,
                     gate,
-                    base.batch,
+                    batch: base.batch,
                     timeout,
                     share,
-                    warm,
-                    c,
-                    Some(done),
-                );
+                    client: c,
+                    shard,
+                    retry: base.retry,
+                    tolerate,
+                    done: Some(done),
+                    health: Some(health),
+                    requeue: Some(req),
+                };
+                let out = open_worker(&ctx, warm);
                 (shard, out)
             });
             handles.push((shard, handle));
@@ -585,17 +738,25 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
             }
             let slot = seq % resolved.len();
             let primary = router.route(slot);
-            let mut pending = Some(Pending { slot, seq, arrival_at });
+            let mut pending = Some(Pending { slot, seq, arrival_at, attempt: 0 });
             let mut placed: Option<usize> = None;
-            match queues[primary].try_push(pending.take().unwrap()) {
-                Ok(()) => placed = Some(primary),
-                Err(back) => pending = Some(back),
+            // Health-aware placement: an ejected shard takes no new work
+            // (its queue keeps draining); `accepting` also admits the
+            // single probe that re-tests a cooled-down shard.
+            if healths[primary].accepting() {
+                match queues[primary].try_push(pending.take().unwrap()) {
+                    Ok(()) => placed = Some(primary),
+                    Err(back) => pending = Some(back),
+                }
             }
             if placed.is_none() {
-                // Divert: shallowest other queue with room, ties by id.
+                // Divert: shallowest other accepting queue with room.
                 let mut order: Vec<usize> = (0..active).filter(|&x| x != primary).collect();
                 order.sort_by_key(|&x| (queues[x].len(), x));
                 for cand in order {
+                    if !healths[cand].accepting() {
+                        continue;
+                    }
                     match queues[cand].try_push(pending.take().unwrap()) {
                         Ok(()) => {
                             placed = Some(cand);
@@ -653,14 +814,19 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
     let mut fleet_latency = LatencyStats::new(base.exact_quantiles);
     let mut fleet_gate: Option<GateStats> = None;
     let mut fleet_traffic: Option<TrafficReport> = None;
+    let mut fleet_fault = FaultReport::default();
     // Span of the arrival schedule: per-shard offered rates are that
     // shard's admitted count over the same span, so the per-shard and
     // fleet-level renders stay mutually consistent.
     let span_s = offsets.last().map(|&l| l as f64 / 1e9).unwrap_or(0.0);
     for (shard, outs) in per_shard.into_iter().enumerate() {
         let o = fold_open_outs(outs, base.traffic.slo_ms);
+        let mut shard_err = boot_err[shard].take();
         if let Some(e) = o.error {
-            return Err(anyhow!("shard {shard}: {e}"));
+            if !tolerate {
+                return Err(anyhow!("shard {shard}: {e}"));
+            }
+            shard_err.get_or_insert(e.to_string());
         }
         let (queue_delay, timed_out, within_slo) = (o.queue_delay, o.timed_out, o.within_slo);
         let completed = o.samples.len();
@@ -670,13 +836,27 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
         let gate_stats = gates[shard].as_ref().map(|g| g.stats());
         if let Some(g) = &gate_stats {
             match &mut fleet_gate {
-                Some(merged) => {
-                    merged.wait.merge(&g.wait);
-                    merged.hold.merge(&g.hold);
-                }
+                Some(merged) => merged.merge(g),
                 None => fleet_gate = Some(g.clone()),
             }
         }
+        // The shard's fault ledger: what the workers saw, what the plan
+        // injected here, what the watchdog revoked, how the breaker
+        // moved — and how long each closed outage lasted.
+        let mut fault = o.fault;
+        if let Some(plan) = backend.fault_plan() {
+            fault.injected.merge(&plan.counts_for(shard));
+        }
+        if let Some(g) = &gate_stats {
+            fault.revocations += g.revocations;
+        }
+        let health = healths[shard].snapshot();
+        fault.ejections += health.ejections;
+        fault.reinstatements += health.reinstatements;
+        for ms in healths[shard].drain_recoveries_ms() {
+            fault.recover_ms.record(ms);
+        }
+        fleet_fault.merge(&fault);
         // Per shard, "offered" is what the router admitted here (the
         // fleet-level report accounts for generator-side sheds), and the
         // offered rate is that count over the schedule span — not the
@@ -691,6 +871,8 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
             completed,
             shed: 0,
             timed_out,
+            failed: o.failed,
+            retried: fault.retried,
             within_slo,
             queue_delay,
             offered_rate_hz: if span_s > 0.0 { shard_offered as f64 / span_s } else { 0.0 },
@@ -712,11 +894,14 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
                 per_payload,
                 gate: gate_stats,
                 traffic: Some(shard_traffic),
+                fault: (tolerate || !fault.is_empty()).then_some(fault),
             }),
+            error: shard_err,
+            health: Some(health),
         });
     }
     for shard in active..spec.shards {
-        shards.push(ShardReport { shard, clients: 0, report: None });
+        shards.push(ShardReport { shard, clients: 0, report: None, error: None, health: None });
     }
     if let Some(t) = &mut fleet_traffic {
         t.offered = total;
@@ -726,6 +911,7 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
         t.offered_rate_hz = offered_rate_hz(&offsets);
     }
     fleet_latency.seal();
+    let fleet_fault = (tolerate || !fleet_fault.is_empty()).then_some(fleet_fault);
     Ok(FleetReport {
         strategy: base.strategy,
         placement: spec.placement,
@@ -737,12 +923,14 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
         shards,
         gate: fleet_gate,
         traffic: fleet_traffic,
+        fault: fleet_fault,
     })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::control::fault::HealthState;
     use crate::control::policy::AccessPolicy;
     use crate::control::serving::SyntheticBackend;
 
@@ -1014,7 +1202,7 @@ mod tests {
             .unwrap();
         let t = r.traffic.as_ref().expect("open-loop fleet must report traffic");
         assert_eq!(t.offered, 20);
-        assert!(t.accounted(0), "requests leaked across the fleet");
+        assert!(t.accounted(), "requests leaked across the fleet");
         assert_eq!(t.completed, 20, "blocking policy completes everything");
         assert_eq!(r.latency.count(), 20);
         assert_eq!(r.shards.len(), 2);
@@ -1024,7 +1212,12 @@ mod tests {
             let rep = s.report.as_ref().unwrap();
             assert!(rep.gate.is_some(), "shard {} must gate", s.shard);
             let st = rep.traffic.as_ref().unwrap();
-            assert_eq!(st.completed + st.timed_out, st.offered, "shard {}", s.shard);
+            assert_eq!(
+                st.completed + st.timed_out + st.failed,
+                st.offered,
+                "shard {}",
+                s.shard
+            );
             shard_offered += st.offered;
         }
         assert_eq!(shard_offered, 20, "router must place every admitted arrival");
@@ -1055,7 +1248,7 @@ mod tests {
         let t = r.traffic.as_ref().unwrap();
         assert_eq!(t.offered, 60);
         assert!(t.shed > 0, "flood against cap-2 queues must shed");
-        assert!(t.accounted(0));
+        assert!(t.accounted());
         assert!(t.completed < t.offered);
     }
 
@@ -1077,6 +1270,58 @@ mod tests {
         assert_eq!(r.shards.len(), 4);
         assert_eq!(r.active_shards(), 2, "workerless shards must stay idle");
         assert_eq!(r.traffic.as_ref().unwrap().completed, 6);
+    }
+
+    // --------------------------------------------------- fault paths --
+
+    fn faulty(spec: &str) -> crate::control::fault::FaultyBackend<SyntheticBackend> {
+        let plan = crate::control::fault::FaultPlan::new(spec.parse().unwrap(), 11);
+        crate::control::fault::FaultyBackend::new(backend(), std::sync::Arc::new(plan))
+    }
+
+    #[test]
+    fn fleet_survives_a_boot_crashing_shard() {
+        // `crash:shard=1` kills shard 1's serve() at boot. The fleet must
+        // contain the panic: shard 1 reports FAILED (and ejected), shard
+        // 0 serves its half untouched.
+        let base = ServeSpec::new(StrategyKind::Worker, "dna")
+            .with_clients(4)
+            .with_requests(3);
+        let fb = faulty("crash:shard=1");
+        let r = serve_fleet(&FleetSpec::new(base, 2, Placement::RoundRobin), &fb).unwrap();
+        let failed = &r.shards[1];
+        assert!(failed.report.is_none());
+        let msg = failed.error.as_ref().expect("crashed shard must carry its error");
+        assert!(msg.contains("boot crash"), "{msg}");
+        assert_eq!(failed.health.unwrap().state, HealthState::Ejected);
+        let ok = &r.shards[0];
+        assert_eq!(ok.report.as_ref().unwrap().latency.count(), 6);
+        assert_eq!(r.latency.count(), 6, "survivor's work still counts");
+        let f = r.fault.as_ref().unwrap();
+        assert_eq!(f.injected.crashes, 1);
+        assert!(f.ejections >= 1);
+        let text = r.render();
+        assert!(text.contains("FAILED"), "{text}");
+    }
+
+    #[test]
+    fn fleet_without_faults_still_fails_fast() {
+        // No fault plan: a shard error aborts the fleet as before.
+        struct BrokenBackend;
+        impl ServeBackend for BrokenBackend {
+            fn resolve(&self, payload: &str) -> Result<crate::control::serving::ResolvedPayload> {
+                SyntheticBackend::new(10).resolve(payload)
+            }
+            fn executor(&self) -> Result<Box<dyn crate::control::serving::PayloadExecutor>> {
+                Err(anyhow!("no executor today"))
+            }
+        }
+        let base = ServeSpec::new(StrategyKind::None, "dna")
+            .with_clients(2)
+            .with_requests(1);
+        let err = serve_fleet(&FleetSpec::new(base, 2, Placement::RoundRobin), &BrokenBackend)
+            .unwrap_err();
+        assert!(err.to_string().contains("shard"), "{err}");
     }
 
     #[test]

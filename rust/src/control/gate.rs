@@ -28,7 +28,7 @@ use crate::metrics::stats::Histogram;
 use crate::util::{lock_recover, Nanos};
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 #[derive(Debug)]
 struct GateState {
@@ -36,6 +36,11 @@ struct GateState {
     next_ticket: u64,
     /// Ticket currently allowed through.
     now_serving: u64,
+    /// The admitted ticket and its grant time, while someone holds the
+    /// gate. `None` between handoffs — and after a lease revocation,
+    /// which is how a revoked grant's Drop knows not to advance
+    /// `now_serving` a second time.
+    holder: Option<(u64, Instant)>,
     /// Parked waiters in ticket order (front = next to admit), each with
     /// its own condvar. Release wakes exactly the front waiter — one
     /// futex wake per grant — instead of `notify_all` on one shared
@@ -55,6 +60,10 @@ pub struct GateStats {
     pub wait: Histogram,
     /// Time from grant to release, per grant.
     pub hold: Histogram,
+    /// Grants the lease watchdog revoked from an overstaying holder.
+    pub revocations: u64,
+    /// How far past its lease each revoked holder was when cut off.
+    pub revoke_lag: Histogram,
 }
 
 impl GateStats {
@@ -62,13 +71,30 @@ impl GateStats {
         self.hold.count()
     }
 
-    /// Two-line human rendering (serving reports).
+    /// Fold another gate's statistics into this one (fleet aggregation).
+    pub fn merge(&mut self, other: &GateStats) {
+        self.wait.merge(&other.wait);
+        self.hold.merge(&other.hold);
+        self.revocations += other.revocations;
+        self.revoke_lag.merge(&other.revoke_lag);
+    }
+
+    /// Two-line human rendering (serving reports); a third line appears
+    /// only when the watchdog actually revoked something.
     pub fn render(&self) -> String {
-        format!(
+        let mut out = format!(
             "gate wait: {}\ngate hold: {}",
             self.wait.render_ms(),
             self.hold.render_ms()
-        )
+        );
+        if self.revocations > 0 {
+            out.push_str(&format!(
+                "\ngate revocations: {} (overstay {})",
+                self.revocations,
+                self.revoke_lag.render_ms()
+            ));
+        }
+        out
     }
 }
 
@@ -82,6 +108,18 @@ impl GateStats {
 pub struct GateGrant<'a> {
     gate: &'a GpuGate,
     granted_at: Instant,
+    ticket: u64,
+}
+
+impl GateGrant<'_> {
+    /// Did the lease watchdog revoke this grant out from under us? A
+    /// revoked holder has already lost the gate — the FIFO moved on — so
+    /// its results must be treated as suspect (the serving layer counts
+    /// the request failed and lets the health breaker see it).
+    pub fn is_revoked(&self) -> bool {
+        let st = lock_recover(&self.gate.state);
+        !matches!(st.holder, Some((t, _)) if t == self.ticket)
+    }
 }
 
 impl Drop for GateGrant<'_> {
@@ -98,15 +136,28 @@ impl Drop for GateGrant<'_> {
             .record(held.as_nanos().min(u64::MAX as u128) as Nanos);
         let next = {
             let mut st = lock_recover(&self.gate.state);
-            st.now_serving += 1;
-            // Wake ONLY the next ticket holder (the queue front; lower
-            // tickets are impossible — see `GateState::waiters`). Waking
-            // outside the critical section avoids the hurry-up-and-wait
-            // pattern where the woken thread immediately blocks on the
-            // mutex the waker still holds. No lost wakeup either way:
-            // `now_serving` was published under the lock, and the waiter
-            // re-checks it under the same lock around every wait.
-            st.waiters.front().map(|(_, cv)| Arc::clone(cv))
+            match st.holder {
+                // Normal release: we still hold the gate. Clear the
+                // holder, advance, and wake the next ticket.
+                Some((t, _)) if t == self.ticket => {
+                    st.holder = None;
+                    st.now_serving += 1;
+                    // Wake ONLY the next ticket holder (the queue front;
+                    // lower tickets are impossible — see
+                    // `GateState::waiters`). Waking outside the critical
+                    // section avoids the hurry-up-and-wait pattern where
+                    // the woken thread immediately blocks on the mutex the
+                    // waker still holds. No lost wakeup either way:
+                    // `now_serving` was published under the lock, and the
+                    // waiter re-checks it under the same lock around every
+                    // wait.
+                    st.waiters.front().map(|(_, cv)| Arc::clone(cv))
+                }
+                // The watchdog revoked us while we overstayed: the FIFO
+                // already advanced past our ticket (possibly several
+                // grants ago). Touch nothing.
+                _ => None,
+            }
         };
         if let Some(cv) = next {
             cv.notify_one();
@@ -138,6 +189,9 @@ impl Drop for GateGrant<'_> {
 pub struct GpuGate {
     state: Mutex<GateState>,
     stats: Mutex<GateStats>,
+    /// Maximum hold time before parked waiters may revoke the grant.
+    /// `None` (the default) disables the watchdog entirely.
+    lease: Option<Duration>,
 }
 
 impl GpuGate {
@@ -146,13 +200,39 @@ impl GpuGate {
             state: Mutex::new(GateState {
                 next_ticket: 0,
                 now_serving: 0,
+                holder: None,
                 waiters: VecDeque::new(),
             }),
             stats: Mutex::new(GateStats::default()),
+            lease: None,
         }
     }
 
+    /// A gate whose grants carry a lease: a holder exceeding `lease` is
+    /// revoked by the waiters it is blocking (see [`GpuGate::acquire`]).
+    pub fn with_lease(lease: Duration) -> Self {
+        Self { lease: Some(lease), ..Self::new() }
+    }
+
+    /// The configured lease, if any.
+    pub fn lease(&self) -> Option<Duration> {
+        self.lease
+    }
+
     /// Block until admitted (strict arrival order), recording the wait.
+    ///
+    /// # The waiter-driven lease watchdog
+    ///
+    /// When the gate has a lease, parked waiters double as the watchdog:
+    /// instead of sleeping unconditionally, each waiter wakes at the
+    /// holder's lease deadline and — under the state lock — checks
+    /// whether the holder overstayed. If so it revokes the grant: clears
+    /// the holder, force-advances `now_serving`, records the revocation
+    /// (and how far past the lease the holder was), and wakes the new
+    /// front ticket. The revoked grant's own Drop sees the holder
+    /// mismatch and touches nothing, so the FIFO never double-advances.
+    /// No background thread exists to babysit an idle gate — which is
+    /// exactly right: a hung holder with no waiters is blocking no one.
     pub fn acquire(&self) -> GateGrant<'_> {
         let arrived = Instant::now();
         let mut st = lock_recover(&self.state);
@@ -165,7 +245,55 @@ impl GpuGate {
             let cv = Arc::new(Condvar::new());
             st.waiters.push_back((ticket, Arc::clone(&cv)));
             while st.now_serving != ticket {
-                st = cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+                let Some(lease) = self.lease else {
+                    st = cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+                    continue;
+                };
+                match st.holder {
+                    Some((held, since)) if since.elapsed() >= lease => {
+                        // Revoke the overstaying holder.
+                        debug_assert_eq!(held, st.now_serving, "holder is always now_serving");
+                        st.holder = None;
+                        st.now_serving += 1;
+                        let lag = since.elapsed().saturating_sub(lease);
+                        {
+                            let mut stats = lock_recover(&self.stats);
+                            stats.revocations += 1;
+                            stats
+                                .revoke_lag
+                                .record(lag.as_nanos().min(u64::MAX as u128) as Nanos);
+                        }
+                        // The revoker need not be the front ticket: hand
+                        // the gate to whoever is (unless it is us — the
+                        // loop condition takes care of that case).
+                        if st.now_serving != ticket {
+                            if let Some((_, front)) = st.waiters.front() {
+                                let front = Arc::clone(front);
+                                front.notify_one();
+                            }
+                        }
+                    }
+                    Some((_, since)) => {
+                        // Sleep until this holder's lease deadline (a
+                        // release wakes the front sooner).
+                        let remaining = lease
+                            .saturating_sub(since.elapsed())
+                            .max(Duration::from_micros(100));
+                        let (g, _) = cv
+                            .wait_timeout(st, remaining)
+                            .unwrap_or_else(PoisonError::into_inner);
+                        st = g;
+                    }
+                    None => {
+                        // Between handoffs: the next admission sets the
+                        // holder; re-check at lease granularity in case
+                        // that wakeup is lost to a race.
+                        let (g, _) = cv
+                            .wait_timeout(st, lease)
+                            .unwrap_or_else(PoisonError::into_inner);
+                        st = g;
+                    }
+                }
             }
             // Admitted: retire our queue entry (at the front, by FIFO;
             // scan defensively anyway — it is 0 or 1 positions deep).
@@ -173,12 +301,14 @@ impl GpuGate {
                 st.waiters.remove(pos);
             }
         }
+        let granted_at = Instant::now();
+        st.holder = Some((ticket, granted_at));
         drop(st);
         let waited = arrived.elapsed();
         lock_recover(&self.stats)
             .wait
             .record(waited.as_nanos().min(u64::MAX as u128) as Nanos);
-        GateGrant { gate: self, granted_at: Instant::now() }
+        GateGrant { gate: self, granted_at, ticket }
     }
 
     /// Release an admission, recording the hold time and waking the next
@@ -379,5 +509,99 @@ mod tests {
         let s = gate.stats();
         assert_eq!(s.grants(), 1);
         assert!(s.render().contains("gate wait"));
+        assert!(
+            !s.render().contains("revocations"),
+            "no revocation line without revocations"
+        );
+    }
+
+    #[test]
+    fn hung_holder_is_revoked_by_a_waiter() {
+        // ISSUE 7 tentpole: a holder exceeding its lease must cost one
+        // lease period, not the fleet. The waiter doubles as watchdog.
+        let gate = Arc::new(GpuGate::with_lease(std::time::Duration::from_millis(20)));
+        let hung = gate.acquire();
+        let waiter = {
+            let gate = Arc::clone(&gate);
+            std::thread::spawn(move || gate.with(|| 7))
+        };
+        // The waiter revokes the hung grant and proceeds on its own —
+        // nobody ever releases `hung` for it.
+        assert_eq!(waiter.join().unwrap(), 7);
+        assert!(hung.is_revoked());
+        let s = gate.stats();
+        assert_eq!(s.revocations, 1);
+        assert_eq!(s.revoke_lag.count(), 1);
+        assert!(s.render().contains("gate revocations: 1"), "{}", s.render());
+        // The revoked grant's Drop must NOT advance the FIFO again: the
+        // gate still works, and grants line up (hung + waiter + this).
+        drop(hung);
+        gate.with(|| ());
+        assert_eq!(gate.stats().grants(), 3);
+        assert_eq!(gate.stats().revocations, 1);
+    }
+
+    #[test]
+    fn revocation_hands_off_in_fifo_order_with_multiple_waiters() {
+        let gate = Arc::new(GpuGate::with_lease(std::time::Duration::from_millis(20)));
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let hung = gate.acquire();
+        let mut handles = Vec::new();
+        for i in 0..3 {
+            let gate = Arc::clone(&gate);
+            let order = Arc::clone(&order);
+            handles.push(std::thread::spawn(move || {
+                let g = gate.acquire();
+                order.lock().unwrap().push(i);
+                assert!(!g.is_revoked(), "a fresh grant is not revoked");
+                gate.release(g);
+            }));
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Every waiter got through (exactly one revocation was needed)
+        // and strict ticket order survived the force-advance.
+        assert_eq!(*order.lock().unwrap(), vec![0, 1, 2]);
+        assert_eq!(gate.stats().revocations, 1);
+        drop(hung);
+        assert_eq!(gate.stats().grants(), 4, "revoked holder still records its hold");
+    }
+
+    #[test]
+    fn well_behaved_holders_are_never_revoked() {
+        let gate = Arc::new(GpuGate::with_lease(std::time::Duration::from_millis(250)));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let gate = Arc::clone(&gate);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..10 {
+                    gate.with(|| std::thread::sleep(std::time::Duration::from_micros(200)));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = gate.stats();
+        assert_eq!(s.revocations, 0);
+        assert_eq!(s.grants(), 40);
+    }
+
+    #[test]
+    fn stats_merge_sums_everything() {
+        let a = GpuGate::new();
+        a.with(|| ());
+        let mut sa = a.stats();
+        let b = GpuGate::new();
+        b.with(|| ());
+        b.with(|| ());
+        let mut sb = b.stats();
+        sb.revocations = 2;
+        sa.merge(&sb);
+        assert_eq!(sa.grants(), 3);
+        assert_eq!(sa.wait.count(), 3);
+        assert_eq!(sa.revocations, 2);
     }
 }

@@ -13,7 +13,11 @@
 //! survives fleet-scale serving. The [`traffic`] module opens the load
 //! axis: seeded arrival processes, bounded admission queues with shed
 //! policies, and SLO accounting measured from arrival (DESIGN.md §9).
+//! The [`fault`] module closes the loop on failure: deterministic fault
+//! injection, request retries, per-shard health breakers, and the gate's
+//! lease watchdog accounting (DESIGN.md §12).
 
+pub mod fault;
 pub mod fleet;
 pub mod gate;
 pub mod lock;
@@ -22,6 +26,10 @@ pub mod serving;
 pub mod traffic;
 pub mod worker;
 
+pub use fault::{
+    panic_msg, Breaker, FaultPlan, FaultReport, FaultSpec, FaultyBackend, HealthSnapshot,
+    HealthState, RequestTag, RetryPolicy, ShardHealth,
+};
 pub use fleet::{serve_fleet, FleetReport, FleetSpec, Placement, ShardReport, ShardRouter};
 pub use gate::{GateGrant, GateStats, GpuGate};
 pub use lock::{GpuLock, LockClient};

@@ -27,6 +27,7 @@
 //! process with its own CUDA context.
 
 use crate::config::StrategyKind;
+use crate::control::fault::{panic_msg, FaultPlan, FaultReport, RequestTag, RetryPolicy};
 use crate::control::gate::{GateStats, GpuGate};
 use crate::control::policy::{AccessPolicy, Admission};
 use crate::control::traffic::{
@@ -47,6 +48,19 @@ use std::time::{Duration, Instant};
 pub trait PayloadExecutor {
     /// Execute artifact `payload` with flat f32 inputs.
     fn execute(&self, payload: usize, inputs: &[Vec<f32>]) -> Result<Vec<f32>>;
+
+    /// Execute one *identified* request. Fault-injecting executors key
+    /// their decisions off the tag; everything else ignores it. Warm-ups
+    /// go through the untagged [`PayloadExecutor::execute`], which is
+    /// what keeps them outside the fault domain.
+    fn execute_tagged(
+        &self,
+        payload: usize,
+        inputs: &[Vec<f32>],
+        _tag: RequestTag,
+    ) -> Result<Vec<f32>> {
+        self.execute(payload, inputs)
+    }
 }
 
 /// A payload resolved against the backend: everything a client needs to
@@ -68,6 +82,29 @@ pub trait ServeBackend: Sync {
     fn resolve(&self, payload: &str) -> Result<ResolvedPayload>;
     /// Build a fresh executor owned by the calling thread.
     fn executor(&self) -> Result<Box<dyn PayloadExecutor>>;
+    /// The active fault plan, if this backend injects faults (see
+    /// [`crate::control::fault::FaultyBackend`]). The serving layer uses
+    /// this to attach injection counts to reports and to *tolerate*
+    /// terminal request failures (count them instead of failing the run).
+    fn fault_plan(&self) -> Option<&FaultPlan> {
+        None
+    }
+}
+
+/// Boxed backends serve like their contents (the CLI holds a
+/// `Box<dyn ServeBackend>` and may wrap it in a `FaultyBackend`).
+impl<B: ServeBackend + ?Sized> ServeBackend for Box<B> {
+    fn resolve(&self, payload: &str) -> Result<ResolvedPayload> {
+        (**self).resolve(payload)
+    }
+
+    fn executor(&self) -> Result<Box<dyn PayloadExecutor>> {
+        (**self).executor()
+    }
+
+    fn fault_plan(&self) -> Option<&FaultPlan> {
+        (**self).fault_plan()
+    }
 }
 
 /// The real backend: AOT artifacts under a manifest directory, executed
@@ -86,11 +123,16 @@ impl ManifestBackend {
     }
 
     fn manifest(&self) -> Result<&crate::runtime::Manifest> {
-        if self.manifest.get().is_none() {
-            let m = crate::runtime::Manifest::load(&self.dir)?;
-            let _ = self.manifest.set(m);
+        if let Some(m) = self.manifest.get() {
+            return Ok(m);
         }
-        Ok(self.manifest.get().expect("manifest just set"))
+        let m = crate::runtime::Manifest::load(&self.dir)?;
+        // Another thread may have won the set race — either way a value
+        // is present now; report (don't panic) if somehow not (ISSUE 7).
+        let _ = self.manifest.set(m);
+        self.manifest
+            .get()
+            .ok_or_else(|| anyhow!("manifest cell empty after set (load race)"))
     }
 }
 
@@ -238,6 +280,15 @@ pub struct ServeSpec {
     /// default — the sketch's <= 2% relative error is ample for latency
     /// reporting, and recording stays O(1) per request.
     pub exact_quantiles: bool,
+    /// Request-level retry policy (`--retries`). Disabled by default.
+    pub retry: RetryPolicy,
+    /// Gate lease in milliseconds (`--lease-ms`): holders exceeding it
+    /// are revoked by the waiter-driven watchdog. None = no watchdog.
+    pub lease_ms: Option<u64>,
+    /// Which fleet shard this spec serves (0 for standalone runs; set by
+    /// [`crate::control::fleet`] so fault selectors and per-shard
+    /// injection counters address the right shard).
+    pub shard: usize,
 }
 
 impl ServeSpec {
@@ -250,6 +301,9 @@ impl ServeSpec {
             batch: 1,
             traffic: TrafficSpec::default(),
             exact_quantiles: false,
+            retry: RetryPolicy::default(),
+            lease_ms: None,
+            shard: 0,
         }
     }
 
@@ -285,6 +339,16 @@ impl ServeSpec {
 
     pub fn with_exact_quantiles(mut self, exact: bool) -> Self {
         self.exact_quantiles = exact;
+        self
+    }
+
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
+    }
+
+    pub fn with_lease_ms(mut self, lease_ms: u64) -> Self {
+        self.lease_ms = Some(lease_ms);
         self
     }
 
@@ -340,6 +404,9 @@ pub struct ServeReport {
     pub gate: Option<GateStats>,
     /// Traffic/SLO accounting (Some for open-loop runs).
     pub traffic: Option<TrafficReport>,
+    /// Fault/recovery accounting (Some when a fault plan was active or
+    /// anything fault-shaped — failures, revocations — happened).
+    pub fault: Option<FaultReport>,
 }
 
 impl ServeReport {
@@ -401,6 +468,14 @@ impl ServeReport {
                 out.push_str(line);
             }
         }
+        if let Some(f) = &self.fault {
+            if !f.is_empty() {
+                for line in f.render().lines() {
+                    out.push_str("\n  ");
+                    out.push_str(line);
+                }
+            }
+        }
         out
     }
 }
@@ -429,6 +504,8 @@ enum StreamJob {
     Exec {
         payload: usize,
         slot: usize,
+        /// Global request seq (fault decisions + retry jitter).
+        seq: u64,
         inputs: Vec<Vec<f32>>,
         out_elems: usize,
         enqueued: Instant,
@@ -475,6 +552,12 @@ pub(crate) fn build_latency_stats(
 /// fixed worker pool, with latency measured from arrival (DESIGN.md §9).
 pub fn serve(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<ServeReport> {
     spec.validate()?;
+    // Injected boot crash (`crash:shard=N` with no other selector): this
+    // serve dies at startup, the way a crashing shard process would. The
+    // fleet's catch_unwind turns it into a failed ShardReport.
+    if let Some(plan) = backend.fault_plan() {
+        plan.check_boot(spec.shard);
+    }
     if spec.traffic.arrivals.is_open_loop() {
         return serve_open_loop(spec, backend);
     }
@@ -484,10 +567,10 @@ pub fn serve(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<ServeReport
         .iter()
         .map(|p| backend.resolve(p))
         .collect::<Result<_>>()?;
-    let gate = if policy.gated() { Some(GpuGate::new()) } else { None };
+    let gate = make_gate(spec, policy);
 
     let t0 = Instant::now();
-    let joined: Vec<Result<Vec<Sample>>> = std::thread::scope(|s| {
+    let joined: Vec<Result<(Vec<Sample>, FaultReport)>> = std::thread::scope(|s| {
         let mut handles = Vec::new();
         for c in 0..spec.clients {
             let slot = c % resolved.len();
@@ -499,16 +582,27 @@ pub fn serve(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<ServeReport
             .into_iter()
             .map(|h| match h.join() {
                 Ok(r) => r,
-                Err(_) => Err(anyhow!("client thread panicked")),
+                Err(p) => Err(anyhow!("client thread panicked: {}", panic_msg(p))),
             })
             .collect()
     });
     let wall_s = t0.elapsed().as_secs_f64();
 
     let mut samples = Vec::new();
+    let mut fault = FaultReport::default();
     for r in joined {
-        samples.extend(r?);
+        let (s, f) = r?;
+        samples.extend(s);
+        fault.merge(&f);
     }
+    if let Some(plan) = backend.fault_plan() {
+        fault.injected.merge(&plan.counts_for(spec.shard));
+    }
+    let gate_stats = gate.map(|g| g.stats());
+    if let Some(g) = &gate_stats {
+        fault.revocations += g.revocations;
+    }
+    let fault = (backend.fault_plan().is_some() || !fault.is_empty()).then_some(fault);
     let (latency, per_payload) = build_latency_stats(samples, &spec.payloads, spec.exact_quantiles);
     Ok(ServeReport {
         strategy: spec.strategy,
@@ -518,9 +612,90 @@ pub fn serve(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<ServeReport
         wall_s,
         latency,
         per_payload,
-        gate: gate.map(|g| g.stats()),
+        gate: gate_stats,
         traffic: None,
+        fault,
     })
+}
+
+/// The shard's gate for a run: leased (watchdog-armed) when the spec
+/// asks for it, plain otherwise; None for ungated strategies.
+pub(crate) fn make_gate(spec: &ServeSpec, policy: AccessPolicy) -> Option<GpuGate> {
+    if !policy.gated() {
+        return None;
+    }
+    Some(match spec.lease_ms {
+        Some(ms) => GpuGate::with_lease(Duration::from_millis(ms)),
+        None => GpuGate::new(),
+    })
+}
+
+/// One failed execution attempt: the error plus whether it was a panic
+/// (panics skip local retry — the "process" died — and hit the health
+/// breaker harder than an error does).
+pub(crate) struct ExecFailure {
+    pub error: anyhow::Error,
+    pub panicked: bool,
+}
+
+/// One contained execution attempt: panics are caught and folded into
+/// the failure (the executor state is a shared borrow of valid data —
+/// unwind safety holds because nothing is observed mid-mutation).
+pub(crate) fn execute_attempt(
+    exec: &dyn PayloadExecutor,
+    rp: &ResolvedPayload,
+    inputs: &[Vec<f32>],
+    tag: RequestTag,
+) -> Result<(), ExecFailure> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        exec.execute_tagged(rp.index, inputs, tag)
+    })) {
+        Ok(result) => result
+            .and_then(|r| check_out(rp, &r))
+            .map_err(|error| ExecFailure { error, panicked: false }),
+        Err(p) => Err(ExecFailure {
+            error: anyhow!("payload execution panicked: {}", panic_msg(p)),
+            panicked: true,
+        }),
+    }
+}
+
+/// Execute one request to completion: contained attempts with bounded
+/// backoff between them, up to the retry budget. Every failure, retry,
+/// recovery and give-up lands in `tally`. Closed-loop retries back off
+/// in place (possibly while holding the gate grant — see DESIGN.md §12
+/// for why the open-loop fleet retries after release instead).
+pub(crate) fn execute_faulted(
+    exec: &dyn PayloadExecutor,
+    rp: &ResolvedPayload,
+    inputs: &[Vec<f32>],
+    mut tag: RequestTag,
+    retry: RetryPolicy,
+    tally: &mut FaultReport,
+) -> Result<(), ExecFailure> {
+    let mut first_failure: Option<Instant> = None;
+    loop {
+        let t = Instant::now();
+        match execute_attempt(exec, rp, inputs, tag) {
+            Ok(()) => {
+                if let Some(f0) = first_failure {
+                    tally.record_recovery(f0.elapsed().as_secs_f64() * 1e3);
+                }
+                return Ok(());
+            }
+            Err(fail) => {
+                tally.record_failure(t.elapsed().as_secs_f64() * 1e3);
+                first_failure.get_or_insert(t);
+                if fail.panicked || tag.attempt >= retry.budget {
+                    tally.gave_up += 1;
+                    return Err(fail);
+                }
+                tally.retried += 1;
+                std::thread::sleep(retry.backoff(tag.seq, tag.attempt));
+                tag.attempt += 1;
+            }
+        }
+    }
 }
 
 /// One client: interprets the policy's admission plan with real threads.
@@ -532,7 +707,19 @@ fn run_client(
     slot: usize,
     rp: &ResolvedPayload,
     gate: Option<&GpuGate>,
-) -> Result<Vec<Sample>> {
+) -> Result<(Vec<Sample>, FaultReport)> {
+    // With a fault plan active, terminal request failures are expected
+    // outcomes: count them (the report carries them) instead of failing
+    // the run. Without one, behave exactly as before — propagate.
+    let tolerate = backend.fault_plan().is_some();
+    let seq_of = |r: usize| (client * spec.requests + r) as u64;
+    let tag_of = |r: usize| RequestTag {
+        shard: spec.shard,
+        slot,
+        seq: seq_of(r),
+        attempt: 0,
+    };
+    let mut tally = FaultReport::default();
     match policy.admission() {
         Admission::Direct => {
             // Unmitigated (`none`) or spatially-shared (`ptb`) execution
@@ -546,17 +733,23 @@ fn run_client(
                 let mut inputs = rp.base_inputs.clone();
                 perturb(&mut inputs, client, r);
                 let t = Instant::now();
-                let result = exec.execute(rp.index, &inputs)?;
-                let exec_dt = t.elapsed();
-                if share < 1.0 {
-                    // PTB SM-share simulation fallback: with 1/N of the
-                    // SMs, a device-bound request takes ~N times longer.
-                    std::thread::sleep(exec_dt.mul_f64(1.0 / share - 1.0));
+                match execute_faulted(&*exec, rp, &inputs, tag_of(r), spec.retry, &mut tally) {
+                    Ok(()) => {
+                        if share < 1.0 {
+                            // PTB SM-share simulation fallback: with 1/N
+                            // of the SMs, a device-bound request takes ~N
+                            // times longer.
+                            std::thread::sleep(t.elapsed().mul_f64(1.0 / share - 1.0));
+                        }
+                        out.push((slot, t.elapsed().as_secs_f64() * 1e3));
+                    }
+                    Err(fail) if tolerate => {
+                        let _ = fail; // tallied; the report carries it
+                    }
+                    Err(fail) => return Err(fail.error),
                 }
-                check_out(rp, &result)?;
-                out.push((slot, t.elapsed().as_secs_f64() * 1e3));
             }
-            Ok(out)
+            Ok((out, tally))
         }
         Admission::AcquireSyncRelease => {
             // Alg. 4 on the client thread: acquire, run the batch
@@ -578,13 +771,23 @@ fn run_client(
                 for i in 0..burst {
                     let mut inputs = rp.base_inputs.clone();
                     perturb(&mut inputs, client, r + i);
-                    burst_result = exec
-                        .execute(rp.index, &inputs)
-                        .and_then(|result| check_out(rp, &result));
-                    if burst_result.is_err() {
-                        break;
+                    match execute_faulted(
+                        &*exec,
+                        rp,
+                        &inputs,
+                        tag_of(r + i),
+                        spec.retry,
+                        &mut tally,
+                    ) {
+                        Ok(()) => out.push((slot, tb.elapsed().as_secs_f64() * 1e3)),
+                        Err(fail) if tolerate => {
+                            let _ = fail;
+                        }
+                        Err(fail) => {
+                            burst_result = Err(fail.error);
+                            break;
+                        }
                     }
-                    out.push((slot, tb.elapsed().as_secs_f64() * 1e3));
                 }
                 if let (Some(g), Some(grant)) = (gate, grant) {
                     g.release(grant);
@@ -592,7 +795,7 @@ fn run_client(
                 burst_result?;
                 r += burst;
             }
-            Ok(out)
+            Ok((out, tally))
         }
         Admission::CallbackBracket => {
             // Alg. 3: acquire/exec/release ride the client's stream as
@@ -619,7 +822,7 @@ fn stream_client(
     rp: &ResolvedPayload,
     gate: Option<&GpuGate>,
     blocking: bool,
-) -> Result<Vec<Sample>> {
+) -> Result<(Vec<Sample>, FaultReport)> {
     // Bounded pipeline: a real driver stream has finite depth, so the
     // callback strategy's non-blocking host must not run unboundedly
     // ahead of the device (that would hold every pending request's
@@ -629,8 +832,8 @@ fn stream_client(
     let depth = 2 * (spec.batch + 2);
     let (tx, rx) = mpsc::sync_channel::<StreamJob>(depth);
     let (done_tx, done_rx) = mpsc::channel::<()>();
-    std::thread::scope(|s| -> Result<Vec<Sample>> {
-        let stream = s.spawn(move || run_stream(backend, gate, rx, done_tx));
+    std::thread::scope(|s| -> Result<(Vec<Sample>, FaultReport)> {
+        let stream = s.spawn(move || run_stream(spec, backend, gate, rx, done_tx));
         // Feed the stream; a send/recv failure means the stream thread
         // died — its own Result (joined below) carries the real cause.
         let feed = || -> Result<()> {
@@ -640,6 +843,7 @@ fn stream_client(
             tx.send(StreamJob::Exec {
                 payload: rp.index,
                 slot,
+                seq: 0,
                 inputs: rp.base_inputs.clone(),
                 out_elems: rp.out_elems,
                 enqueued: Instant::now(),
@@ -659,6 +863,7 @@ fn stream_client(
                     tx.send(StreamJob::Exec {
                         payload: rp.index,
                         slot,
+                        seq: (client * spec.requests + r + i) as u64,
                         inputs,
                         out_elems: rp.out_elems,
                         enqueued: Instant::now(),
@@ -678,7 +883,9 @@ fn stream_client(
         };
         let fed = feed();
         drop(tx); // close the stream; the thread drains and exits
-        let streamed = stream.join().map_err(|_| anyhow!("stream thread panicked"))?;
+        let streamed = stream
+            .join()
+            .map_err(|p| anyhow!("stream thread panicked: {}", panic_msg(p)))?;
         match (fed, streamed) {
             (Ok(()), r) => r,
             (Err(_), Err(stream_err)) => Err(stream_err),
@@ -694,14 +901,17 @@ fn stream_client(
 /// (so other clients never deadlock on a grant that would otherwise be
 /// dropped unreleased); the first error is reported at the end.
 fn run_stream(
+    spec: &ServeSpec,
     backend: &dyn ServeBackend,
     gate: Option<&GpuGate>,
     rx: mpsc::Receiver<StreamJob>,
     done_tx: mpsc::Sender<()>,
-) -> Result<Vec<Sample>> {
+) -> Result<(Vec<Sample>, FaultReport)> {
+    let tolerate = backend.fault_plan().is_some();
     let exec = backend.executor()?;
     let mut grant = None;
     let mut out = Vec::new();
+    let mut tally = FaultReport::default();
     let mut failure: Option<anyhow::Error> = None;
     while let Ok(job) = rx.recv() {
         match job {
@@ -712,23 +922,32 @@ fn run_stream(
                     }
                 }
             }
-            StreamJob::Exec { payload, slot, inputs, out_elems, enqueued, record } => {
+            StreamJob::Exec { payload, slot, seq, inputs, out_elems, enqueued, record } => {
                 if failure.is_some() {
                     continue;
                 }
-                match exec.execute(payload, &inputs) {
-                    Ok(result) if result.len() != out_elems => {
-                        failure = Some(anyhow!(
-                            "bad output size {} (expected {out_elems})",
-                            result.len()
-                        ));
+                let rp = ResolvedPayload {
+                    index: payload,
+                    name: format!("slot {slot}"),
+                    base_inputs: Vec::new(),
+                    out_elems,
+                };
+                if record {
+                    let tag = RequestTag { shard: spec.shard, slot, seq, attempt: 0 };
+                    match execute_faulted(&*exec, &rp, &inputs, tag, spec.retry, &mut tally) {
+                        Ok(()) => out.push((slot, enqueued.elapsed().as_secs_f64() * 1e3)),
+                        // Terminal failure under an active fault plan:
+                        // tallied; the stream keeps serving.
+                        Err(_) if tolerate => {}
+                        Err(fail) => failure = Some(fail.error),
                     }
-                    Ok(_) => {
-                        if record {
-                            out.push((slot, enqueued.elapsed().as_secs_f64() * 1e3));
-                        }
+                } else {
+                    // Warm-up: untagged (outside the fault domain); a
+                    // failure here is genuine and fails the client.
+                    if let Err(e) = exec.execute(payload, &inputs).and_then(|r| check_out(&rp, &r))
+                    {
+                        failure = Some(e);
                     }
-                    Err(e) => failure = Some(e),
                 }
             }
             StreamJob::Release => {
@@ -746,7 +965,7 @@ fn run_stream(
     }
     match failure {
         Some(e) => Err(e),
-        None => Ok(out),
+        None => Ok((out, tally)),
     }
 }
 
@@ -777,6 +996,9 @@ pub(crate) struct Pending {
     /// Global arrival sequence number (input perturbation).
     pub seq: usize,
     pub arrival_at: Instant,
+    /// Attempt number: 0 at generation, +1 per retry (a re-routed
+    /// request arrives in the next shard's queue with its count intact).
+    pub attempt: u32,
 }
 
 /// What one open-loop worker brings home.
@@ -787,8 +1009,10 @@ pub(crate) struct OpenWorkerOut {
     pub queue_delay: Histogram,
     /// Requests dropped at dequeue (timeout shed policy).
     pub timed_out: usize,
-    /// Requests whose execution failed (first error reported below).
+    /// Requests that failed terminally (after any retries).
     pub failed: usize,
+    /// Failure/retry/recovery accounting.
+    pub fault: FaultReport,
     pub error: Option<anyhow::Error>,
 }
 
@@ -797,10 +1021,17 @@ pub(crate) struct OpenOutcome {
     pub samples: Vec<Sample>,
     pub queue_delay: Histogram,
     pub timed_out: usize,
+    /// Terminal request failures (conservation: these are offered
+    /// requests that neither completed, shed, nor timed out).
+    pub failed: usize,
     /// Samples meeting the SLO (arrival-to-completion <= slo_ms).
     pub within_slo: usize,
-    /// First worker error, if any (failed-request counts always come
-    /// with one).
+    /// Merged fault accounting across the pool.
+    pub fault: FaultReport,
+    /// First worker error, if any. Under an active fault plan terminal
+    /// request failures are tolerated (counted in `failed`, not here);
+    /// infrastructure failures (executor build, warm-up) always land
+    /// here.
     pub error: Option<anyhow::Error>,
 }
 
@@ -811,41 +1042,86 @@ pub(crate) fn fold_open_outs(outs: Vec<OpenWorkerOut>, slo_ms: f64) -> OpenOutco
     let mut samples = Vec::new();
     let mut queue_delay = Histogram::new();
     let (mut timed_out, mut failed) = (0usize, 0usize);
+    let mut fault = FaultReport::default();
     let mut error = None;
     for o in outs {
         samples.extend(o.samples);
         queue_delay.merge(&o.queue_delay);
         timed_out += o.timed_out;
         failed += o.failed;
+        fault.merge(&o.fault);
         if error.is_none() {
             error = o.error;
         }
     }
-    debug_assert!(error.is_some() || failed == 0, "failed requests must come with an error");
     let within_slo = samples.iter().filter(|(_, ms)| *ms <= slo_ms).count();
-    OpenOutcome { samples, queue_delay, timed_out, within_slo, error }
+    OpenOutcome { samples, queue_delay, timed_out, failed, within_slo, fault, error }
+}
+
+/// Everything an open-loop worker needs (the parameter list outgrew a
+/// flat signature when faults arrived): the serving plumbing, the retry
+/// policy, and the fleet's health/re-route hooks.
+pub(crate) struct OpenWorkerCtx<'a> {
+    pub backend: &'a dyn ServeBackend,
+    pub resolved: &'a [ResolvedPayload],
+    pub queue: &'a AdmissionQueue<Pending>,
+    pub gate: Option<&'a GpuGate>,
+    pub batch: usize,
+    pub timeout: Option<Duration>,
+    pub share: f64,
+    pub client: usize,
+    /// Shard this worker drains (fault selectors + injection counters).
+    pub shard: usize,
+    pub retry: RetryPolicy,
+    /// Count terminal request failures instead of erroring the run
+    /// (true when a fault plan is active).
+    pub tolerate: bool,
+    /// Runs once per finally-accounted request — the fleet uses it to
+    /// release router depth. A successfully re-routed request does NOT
+    /// fire it here (the receiving shard owns the request now).
+    pub done: Option<&'a (dyn Fn() + Sync)>,
+    /// This shard's circuit breaker, if the fleet is health-managed.
+    pub health: Option<&'a crate::control::fault::ShardHealth>,
+    /// Fleet re-route hook: offer a failed request to a different
+    /// healthy shard. Returns false when no shard would take it (then
+    /// the worker retries locally instead).
+    pub requeue: Option<&'a (dyn Fn(Pending) -> bool + Sync)>,
+}
+
+impl OpenWorkerCtx<'_> {
+    fn on_success(&self) {
+        if let Some(h) = self.health {
+            h.on_success();
+        }
+    }
+
+    fn on_failure(&self, panicked: bool) {
+        if let Some(h) = self.health {
+            if panicked {
+                h.on_panic();
+            } else {
+                h.on_failure();
+            }
+        }
+    }
+
+    fn done(&self) {
+        if let Some(f) = self.done {
+            f();
+        }
+    }
 }
 
 /// An open-loop serving worker: drains an [`AdmissionQueue`], admitting
-/// bursts of up to `batch` requests per gate grant. `done` (when given)
-/// runs once per dequeued request — the fleet uses it to release router
-/// depth. An erroring worker keeps draining (so blocking producers can
-/// never wedge) and reports the first error at the end.
-#[allow(clippy::too_many_arguments)]
-pub(crate) fn open_worker(
-    backend: &dyn ServeBackend,
-    resolved: &[ResolvedPayload],
-    queue: &AdmissionQueue<Pending>,
-    gate: Option<&GpuGate>,
-    batch: usize,
-    timeout: Option<Duration>,
-    share: f64,
-    warm: &Barrier,
-    client: usize,
-    done: Option<&(dyn Fn() + Sync)>,
-) -> OpenWorkerOut {
+/// bursts of up to `batch` requests per gate grant. An erroring worker
+/// keeps draining (so blocking producers can never wedge) and reports
+/// the first error at the end. Failed requests retry *after* the burst's
+/// grant is released — first by re-routing to another healthy shard
+/// (fleet), then locally with backoff under a fresh grant — so a backoff
+/// sleep can never sit on the gate and trip the lease watchdog.
+pub(crate) fn open_worker(ctx: &OpenWorkerCtx<'_>, warm: &Barrier) -> OpenWorkerOut {
     let mut out = OpenWorkerOut::default();
-    let exec = match backend.executor() {
+    let exec = match ctx.backend.executor() {
         Ok(e) => Some(e),
         Err(e) => {
             out.error = Some(e);
@@ -855,8 +1131,8 @@ pub(crate) fn open_worker(
     if let Some(exec) = &exec {
         // Warm-up (first-use compile) outside the recorded window,
         // through the gate so grant accounting matches the closed loop.
-        let rp = &resolved[client % resolved.len()];
-        let warmed = match gate {
+        let rp = &ctx.resolved[ctx.client % ctx.resolved.len()];
+        let warmed = match ctx.gate {
             Some(g) => g.with(|| exec.execute(rp.index, &rp.base_inputs)),
             None => exec.execute(rp.index, &rp.base_inputs),
         };
@@ -870,15 +1146,13 @@ pub(crate) fn open_worker(
     let Some(exec) = exec.filter(|_| out.error.is_none()) else {
         // Unhealthy: drain so blocking/timeout pushes cannot deadlock.
         loop {
-            let dropped = queue.pop_batch(batch.max(1));
+            let dropped = ctx.queue.pop_batch(ctx.batch.max(1));
             if dropped.is_empty() {
                 return out;
             }
             out.failed += dropped.len();
-            if let Some(f) = done {
-                for _ in 0..dropped.len() {
-                    f();
-                }
+            for _ in 0..dropped.len() {
+                ctx.done();
             }
         }
     };
@@ -886,7 +1160,7 @@ pub(crate) fn open_worker(
         // Burst collection: block for the first request, then take
         // whatever backlog is already waiting, up to `batch` — one lock
         // acquisition total, not one per request (DESIGN.md §8).
-        let burst = queue.pop_batch(batch.max(1));
+        let burst = ctx.queue.pop_batch(ctx.batch.max(1));
         if burst.is_empty() {
             break; // closed and drained
         }
@@ -899,11 +1173,9 @@ pub(crate) fn open_worker(
         for p in burst {
             let qd = p.arrival_at.elapsed();
             out.queue_delay.record(qd.as_nanos().min(u64::MAX as u128) as u64);
-            if timeout.is_some_and(|t| qd > t) {
+            if ctx.timeout.is_some_and(|t| qd > t) {
                 out.timed_out += 1;
-                if let Some(f) = done {
-                    f();
-                }
+                ctx.done();
             } else {
                 ready.push(p);
             }
@@ -911,36 +1183,125 @@ pub(crate) fn open_worker(
         if ready.is_empty() {
             continue;
         }
-        let grant = gate.map(|g| g.acquire());
+        let grant = ctx.gate.map(|g| g.acquire());
+        // Failures collected here retry after the grant is gone.
+        let mut retry_later: Vec<(Pending, ExecFailure)> = Vec::new();
         for p in ready {
-            let rp = &resolved[p.slot];
+            let rp = &ctx.resolved[p.slot];
             let mut inputs = rp.base_inputs.clone();
             perturb(&mut inputs, p.seq, p.seq);
+            let tag = RequestTag {
+                shard: ctx.shard,
+                slot: p.slot,
+                seq: p.seq as u64,
+                attempt: p.attempt,
+            };
             let t = Instant::now();
-            match exec.execute(rp.index, &inputs).and_then(|r| check_out(rp, &r)) {
+            match execute_attempt(&**exec, rp, &inputs, tag) {
                 Ok(()) => {
-                    if share < 1.0 {
+                    if ctx.share < 1.0 {
                         // PTB SM-share simulation (see run_client).
-                        std::thread::sleep(t.elapsed().mul_f64(1.0 / share - 1.0));
+                        std::thread::sleep(t.elapsed().mul_f64(1.0 / ctx.share - 1.0));
                     }
                     out.samples.push((p.slot, p.arrival_at.elapsed().as_secs_f64() * 1e3));
-                }
-                Err(e) => {
-                    out.failed += 1;
-                    if out.error.is_none() {
-                        out.error = Some(e);
+                    if p.attempt > 0 {
+                        // A re-routed request completing here closes its
+                        // recovery (measured from arrival — the original
+                        // failure instant stayed on the other shard).
+                        out.fault.record_recovery(p.arrival_at.elapsed().as_secs_f64() * 1e3);
                     }
+                    ctx.on_success();
+                    ctx.done();
                 }
-            }
-            if let Some(f) = done {
-                f();
+                Err(fail) => {
+                    out.fault.record_failure(t.elapsed().as_secs_f64() * 1e3);
+                    ctx.on_failure(fail.panicked);
+                    retry_later.push((p, fail));
+                }
             }
         }
-        if let (Some(g), Some(grant)) = (gate, grant) {
-            g.release(grant);
+        // A revoked grant means *we* overstayed the lease (a hung or
+        // injected-slow request): the watchdog quarantined us, so the
+        // breaker takes a hit too.
+        if grant.as_ref().is_some_and(|g| g.is_revoked()) {
+            ctx.on_failure(false);
+        }
+        drop(grant);
+        for (p, fail) in retry_later {
+            retry_pending(ctx, &**exec, p, fail, &mut out);
         }
     }
     out
+}
+
+/// Drive one failed request to its conclusion: re-route to another
+/// healthy shard if the fleet will take it, otherwise retry locally
+/// (backoff, fresh grant) until the budget runs out.
+fn retry_pending(
+    ctx: &OpenWorkerCtx<'_>,
+    exec: &dyn PayloadExecutor,
+    mut p: Pending,
+    mut last: ExecFailure,
+    out: &mut OpenWorkerOut,
+) {
+    loop {
+        if p.attempt >= ctx.retry.budget {
+            // Budget spent (or zero): terminal failure.
+            out.failed += 1;
+            out.fault.gave_up += 1;
+            if !ctx.tolerate && out.error.is_none() {
+                out.error = Some(last.error);
+            }
+            ctx.done();
+            return;
+        }
+        // Re-route first: a different healthy shard owns the request
+        // from here on (it will fire ITS done hook; ours must not).
+        if let Some(requeue) = ctx.requeue {
+            let candidate = Pending {
+                slot: p.slot,
+                seq: p.seq,
+                arrival_at: p.arrival_at,
+                attempt: p.attempt + 1,
+            };
+            if requeue(candidate) {
+                out.fault.retried += 1;
+                return;
+            }
+        }
+        // Local retry: back off (no grant held), then one more contained
+        // attempt under a fresh grant.
+        out.fault.retried += 1;
+        std::thread::sleep(ctx.retry.backoff(p.seq as u64, p.attempt));
+        p.attempt += 1;
+        let rp = &ctx.resolved[p.slot];
+        let mut inputs = rp.base_inputs.clone();
+        perturb(&mut inputs, p.seq, p.seq);
+        let tag = RequestTag {
+            shard: ctx.shard,
+            slot: p.slot,
+            seq: p.seq as u64,
+            attempt: p.attempt,
+        };
+        let grant = ctx.gate.map(|g| g.acquire());
+        let t = Instant::now();
+        let result = execute_attempt(exec, rp, &inputs, tag);
+        drop(grant);
+        match result {
+            Ok(()) => {
+                out.fault.record_recovery(p.arrival_at.elapsed().as_secs_f64() * 1e3);
+                out.samples.push((p.slot, p.arrival_at.elapsed().as_secs_f64() * 1e3));
+                ctx.on_success();
+                ctx.done();
+                return;
+            }
+            Err(fail) => {
+                out.fault.record_failure(t.elapsed().as_secs_f64() * 1e3);
+                ctx.on_failure(fail.panicked);
+                last = fail;
+            }
+        }
+    }
 }
 
 /// Push one request into `queue` per the shed policy; false = shed.
@@ -967,12 +1328,16 @@ pub(crate) fn offered_rate_hz(offsets: &[crate::util::Nanos]) -> f64 {
 /// execution with the FIFO gate directly (one grant per burst).
 fn serve_open_loop(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<ServeReport> {
     let policy = AccessPolicy::new(spec.strategy);
+    if let Some(plan) = backend.fault_plan() {
+        plan.check_boot(spec.shard);
+    }
     let resolved: Vec<ResolvedPayload> = spec
         .payloads
         .iter()
         .map(|p| backend.resolve(p))
         .collect::<Result<_>>()?;
-    let gate = if policy.gated() { Some(GpuGate::new()) } else { None };
+    let gate = make_gate(spec, policy);
+    let tolerate = backend.fault_plan().is_some();
     let total = spec.clients * spec.requests;
     let offsets = spec.traffic.arrivals.schedule_n(total, spec.traffic.seed);
     let queue: AdmissionQueue<Pending> = AdmissionQueue::new(spec.traffic.queue_cap);
@@ -989,9 +1354,23 @@ fn serve_open_loop(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<Serve
         for c in 0..spec.clients {
             let (queue, gate, warm, resolved) = (&queue, gate.as_ref(), &warm, &resolved);
             handles.push(s.spawn(move || {
-                open_worker(
-                    backend, resolved, queue, gate, spec.batch, timeout, share, warm, c, None,
-                )
+                let ctx = OpenWorkerCtx {
+                    backend,
+                    resolved,
+                    queue,
+                    gate,
+                    batch: spec.batch,
+                    timeout,
+                    share,
+                    client: c,
+                    shard: spec.shard,
+                    retry: spec.retry,
+                    tolerate,
+                    done: None,
+                    health: None,
+                    requeue: None,
+                };
+                open_worker(&ctx, warm)
             }));
         }
         warm.wait();
@@ -1002,7 +1381,7 @@ fn serve_open_loop(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<Serve
             if arrival_at > now {
                 std::thread::sleep(arrival_at - now);
             }
-            let p = Pending { slot: seq % resolved.len(), seq, arrival_at };
+            let p = Pending { slot: seq % resolved.len(), seq, arrival_at, attempt: 0 };
             if !admit(&queue, p, spec.traffic.shed) {
                 shed.fetch_add(1, Ordering::Relaxed);
             }
@@ -1026,6 +1405,15 @@ fn serve_open_loop(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<Serve
         return Err(e);
     }
     let (queue_delay, timed_out, within_slo) = (o.queue_delay, o.timed_out, o.within_slo);
+    let gate_stats = gate.map(|g| g.stats());
+    let mut fault = o.fault;
+    if let Some(plan) = backend.fault_plan() {
+        fault.injected.merge(&plan.counts_for(spec.shard));
+    }
+    if let Some(g) = &gate_stats {
+        fault.revocations += g.revocations;
+    }
+    let fault = (backend.fault_plan().is_some() || !fault.is_empty()).then_some(fault);
     let completed = o.samples.len();
     let (latency, per_payload) =
         build_latency_stats(o.samples, &spec.payloads, spec.exact_quantiles);
@@ -1037,7 +1425,7 @@ fn serve_open_loop(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<Serve
         wall_s,
         latency,
         per_payload,
-        gate: gate.map(|g| g.stats()),
+        gate: gate_stats,
         traffic: Some(TrafficReport {
             arrivals: spec.traffic.arrivals,
             queue_cap: spec.traffic.queue_cap,
@@ -1047,10 +1435,13 @@ fn serve_open_loop(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<Serve
             completed,
             shed: shed.into_inner(),
             timed_out,
+            failed: o.failed,
+            retried: fault.as_ref().map_or(0, |f| f.retried),
             within_slo,
             queue_delay,
             offered_rate_hz: offered_rate_hz(&offsets),
         }),
+        fault,
     })
 }
 
@@ -1152,6 +1543,7 @@ mod tests {
             per_payload: vec![],
             gate: None,
             traffic: None,
+            fault: None,
         };
         assert_eq!(empty.latency_p(0.5), 0.0);
         assert_eq!(empty.latency_p(0.99), 0.0);
@@ -1236,7 +1628,7 @@ mod tests {
             let r = serve(&spec, &backend()).unwrap_or_else(|e| panic!("{strategy}: {e}"));
             let t = r.traffic.as_ref().expect("open loop must report traffic");
             assert_eq!(t.offered, 10, "{strategy}");
-            assert!(t.accounted(0), "{strategy}: requests leaked");
+            assert!(t.accounted(), "{strategy}: requests leaked");
             // Blocking shed policy + generous SLO: everything completes.
             assert_eq!(t.completed, 10, "{strategy}");
             assert_eq!(t.shed, 0, "{strategy}");
@@ -1264,7 +1656,7 @@ mod tests {
         let t = r.traffic.as_ref().unwrap();
         assert_eq!(t.offered, 40);
         assert!(t.shed > 0, "overload against cap 2 must shed");
-        assert!(t.accounted(0));
+        assert!(t.accounted());
         assert_eq!(t.completed, r.latency.count());
         assert!(t.completed < t.offered);
     }
@@ -1306,7 +1698,7 @@ mod tests {
         let r = serve(&spec, &SyntheticBackend::new(3_000)).unwrap();
         let t = r.traffic.as_ref().unwrap();
         assert!(t.shed + t.timed_out > 0, "saturation must age requests out");
-        assert!(t.accounted(0));
+        assert!(t.accounted());
     }
 
     #[test]
@@ -1346,5 +1738,99 @@ mod tests {
             ..open_traffic(100.0)
         });
         assert!(serve(&bad_slo, &b).is_err());
+    }
+
+    // -- fault injection through the serving stack ---------------------
+
+    fn faulty(spec: &str, seed: u64) -> crate::control::fault::FaultyBackend<SyntheticBackend> {
+        let plan = FaultPlan::new(spec.parse().unwrap(), seed);
+        crate::control::fault::FaultyBackend::new(backend(), std::sync::Arc::new(plan))
+    }
+
+    fn fast_retry(budget: u32) -> RetryPolicy {
+        RetryPolicy { budget, base_ms: 0.1, cap_ms: 0.5, seed: 9 }
+    }
+
+    #[test]
+    fn closed_loop_retry_recovers_injected_error() {
+        // `req=2` fires exactly once (attempt 0 of global seq 2); one
+        // retry heals it, so every request still completes.
+        let fb = faulty("error:req=2", 7);
+        let spec = ServeSpec::new(StrategyKind::None, "dna")
+            .with_clients(1)
+            .with_requests(5)
+            .with_retry(fast_retry(2));
+        let r = serve(&spec, &fb).unwrap();
+        assert_eq!(r.latency.count(), 5, "the faulted request must recover");
+        let f = r.fault.expect("active fault plan implies a report");
+        assert_eq!(f.injected.errors, 1);
+        assert_eq!(f.detected, 1);
+        assert_eq!(f.retried, 1);
+        assert_eq!(f.recovered, 1);
+        assert_eq!(f.gave_up, 0);
+        assert!(r.render().contains("faults:"), "{}", r.render());
+    }
+
+    #[test]
+    fn closed_loop_tolerates_terminal_failures_under_a_plan() {
+        // No retry budget: the injected failure is terminal, but with a
+        // fault plan active it is tallied instead of erroring the run.
+        let fb = faulty("error:req=1", 7);
+        let spec = ServeSpec::new(StrategyKind::Synced, "dna")
+            .with_clients(1)
+            .with_requests(4);
+        let r = serve(&spec, &fb).unwrap();
+        assert_eq!(r.latency.count(), 3);
+        let f = r.fault.unwrap();
+        assert_eq!(f.gave_up, 1);
+        assert_eq!(f.recovered, 0);
+    }
+
+    #[test]
+    fn open_loop_conserves_requests_when_every_attempt_fails() {
+        // p=1 with zero retries: nothing completes, everything is a
+        // counted terminal failure — conservation must still balance.
+        let fb = faulty("error:p=1", 7);
+        let spec = ServeSpec::new(StrategyKind::Worker, "dna")
+            .with_clients(2)
+            .with_requests(5)
+            .with_traffic(open_traffic(5_000.0));
+        let r = serve(&spec, &fb).unwrap();
+        let t = r.traffic.as_ref().unwrap();
+        assert_eq!(t.completed, 0);
+        assert_eq!(t.failed, t.offered);
+        assert!(t.accounted(), "offered={} failed={}", t.offered, t.failed);
+        let f = r.fault.unwrap();
+        assert_eq!(f.gave_up, t.offered);
+        assert_eq!(f.injected.errors, t.offered);
+    }
+
+    #[test]
+    fn open_loop_retries_recover_a_point_fault() {
+        let fb = faulty("error:req=3", 7);
+        let spec = ServeSpec::new(StrategyKind::Synced, "dna")
+            .with_clients(2)
+            .with_requests(5)
+            .with_retry(fast_retry(2))
+            .with_traffic(open_traffic(5_000.0));
+        let r = serve(&spec, &fb).unwrap();
+        let t = r.traffic.as_ref().unwrap();
+        assert_eq!(t.completed, t.offered, "retry must heal the point fault");
+        assert_eq!(t.retried, 1);
+        assert!(t.accounted());
+        let f = r.fault.unwrap();
+        assert_eq!(f.recovered, 1);
+        assert_eq!(f.gave_up, 0);
+    }
+
+    #[test]
+    fn boot_crash_clause_panics_at_serve_start() {
+        // A bare `crash` clause models a process that dies on boot; the
+        // panic escapes serve() (the fleet contains it per shard).
+        let fb = faulty("crash", 7);
+        let spec = ServeSpec::new(StrategyKind::None, "dna").with_requests(1);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| serve(&spec, &fb)));
+        assert!(caught.is_err(), "boot crash must panic, not error");
+        assert_eq!(fb.plan().counts_total().crashes, 1);
     }
 }

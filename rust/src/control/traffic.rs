@@ -512,6 +512,13 @@ pub struct TrafficReport {
     pub shed: usize,
     /// Requests dropped at dequeue after exceeding the timeout budget.
     pub timed_out: usize,
+    /// Requests that failed terminally (execution error after exhausting
+    /// any retry budget). Non-zero only under faults/chaos.
+    pub failed: usize,
+    /// Retry attempts issued across all requests (re-executions and
+    /// re-routes; informational — retries are attempts, not requests, so
+    /// they sit outside the conservation sum).
+    pub retried: usize,
     /// Completed requests whose arrival-to-completion latency met the SLO.
     pub within_slo: usize,
     /// Arrival-to-dequeue delay histogram (ns).
@@ -532,9 +539,11 @@ impl TrafficReport {
         self.within_slo as f64 / wall_s.max(1e-9)
     }
 
-    /// Conservation check: every offered request is accounted for once.
-    pub fn accounted(&self, failed: usize) -> bool {
-        self.completed + self.shed + self.timed_out + failed == self.offered
+    /// Conservation check: every offered request is accounted for exactly
+    /// once — completed, shed at admission, timed out at dequeue, or
+    /// failed after retries. Must hold even under chaos (ISSUE 7).
+    pub fn accounted(&self) -> bool {
+        self.completed + self.shed + self.timed_out + self.failed == self.offered
     }
 
     /// Fold another shard's slice into this one (fleet aggregation).
@@ -543,6 +552,8 @@ impl TrafficReport {
         self.completed += other.completed;
         self.shed += other.shed;
         self.timed_out += other.timed_out;
+        self.failed += other.failed;
+        self.retried += other.retried;
         self.within_slo += other.within_slo;
         self.queue_delay.merge(&other.queue_delay);
     }
@@ -551,7 +562,7 @@ impl TrafficReport {
     pub fn render(&self, wall_s: f64) -> String {
         format!(
             "traffic {} (offered {:.1}/s, queue cap {}, shed policy {}): \
-             offered={} completed={} shed={} timed-out={}\n\
+             offered={} completed={} shed={} timed-out={} failed={} retried={}\n\
              SLO {:.1} ms: attainment {:.1}% of offered, goodput {:.1}/s; \
              queue delay: {}",
             self.arrivals,
@@ -562,6 +573,8 @@ impl TrafficReport {
             self.completed,
             self.shed,
             self.timed_out,
+            self.failed,
+            self.retried,
             self.slo_ms,
             self.slo_attainment_pct(),
             self.goodput(wall_s),
@@ -836,14 +849,16 @@ mod tests {
             shed_policy: ShedPolicy::Reject,
             slo_ms: 50.0,
             offered: 100,
-            completed: 90,
+            completed: 89,
             shed: 8,
             timed_out: 2,
+            failed: 1,
+            retried: 3,
             within_slo: 81,
             queue_delay: Histogram::new(),
             offered_rate_hz: 198.5,
         };
-        assert!(r.accounted(0));
+        assert!(r.accounted());
         assert!((r.slo_attainment_pct() - 81.0).abs() < 1e-9);
         assert!((r.goodput(2.0) - 40.5).abs() < 1e-9);
         let text = r.render(2.0);
@@ -851,11 +866,15 @@ mod tests {
         assert!(text.contains("attainment"), "{text}");
         assert!(text.contains("shed=8"), "{text}");
         assert!(text.contains("timed-out=2"), "{text}");
+        assert!(text.contains("failed=1"), "{text}");
+        assert!(text.contains("retried=3"), "{text}");
 
         let other = r.clone();
         r.merge(&other);
         assert_eq!(r.offered, 200);
         assert_eq!(r.within_slo, 162);
-        assert!(r.accounted(0));
+        assert_eq!(r.failed, 2);
+        assert_eq!(r.retried, 6);
+        assert!(r.accounted());
     }
 }

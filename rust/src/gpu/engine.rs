@@ -281,6 +281,18 @@ pub struct Sim {
     arrivals_offered: Vec<usize>,
     /// Open-loop arrivals shed per app (backlog at `arrival_queue_cap`).
     arrivals_shed: Vec<usize>,
+    /// Per-app kernel-hang injection schedule (`SimConfig::faults`):
+    /// sorted `(t_ns, extra_ns)` pairs, turned into `FaultDue` events at
+    /// the start of `run` and popped in order as they fire. The sharded
+    /// runner deals these per app exactly like arrival schedules, so the
+    /// merged trace is a pure function of (config, seed).
+    fault_schedule: Vec<std::collections::VecDeque<(Nanos, Nanos)>>,
+    /// Injected hang nanoseconds waiting to stretch the app's next
+    /// dispatched batch (a hang needs a victim kernel; an idle app's
+    /// hang waits for its next dispatch).
+    pending_fault_ns: Vec<Nanos>,
+    /// Fault injections fired per app.
+    faults_injected: Vec<usize>,
     /// Source programs retained for the shard partitioner (`num_gpus > 1`
     /// only): `run` re-compiles each shard's subset into an independent
     /// sub-simulation. `None` for single-GPU runs and after a fleet run.
@@ -367,6 +379,20 @@ impl Sim {
                 arrival_schedule[serving_apps[k % serving_apps.len()]].push(t);
             }
         }
+        // Seeded kernel-hang injections (`SimConfig::faults`, DESIGN.md
+        // §12): a per-app schedule of (fire time, extra ns), a pure
+        // function of (spec, app, shard, horizon, seed) — the simulator
+        // mirror of the live `FaultyExecutor`'s hangs.
+        let mut fault_schedule: Vec<std::collections::VecDeque<(Nanos, Nanos)>> =
+            vec![std::collections::VecDeque::new(); n];
+        if cfg.faults.has_sim_clauses() {
+            for i in 0..n {
+                fault_schedule[i] = cfg
+                    .faults
+                    .sim_schedule(i, shard_of_ctx[i], cfg.horizon_ns, cfg.seed)
+                    .into();
+            }
+        }
         let num_sms = cfg.platform.num_sms;
         // Spatial policies (PTB) pin each application to its SM share —
         // partitioned among the apps that share its *shard*: every GPU of
@@ -408,6 +434,9 @@ impl Sim {
             arrival_schedule,
             arrivals_offered: vec![0; n],
             arrivals_shed: vec![0; n],
+            fault_schedule,
+            pending_fault_ns: vec![0; n],
+            faults_injected: vec![0; n],
             fleet_programs: (num_gpus > 1).then_some(programs),
         }
     }
@@ -510,6 +539,11 @@ impl Sim {
             // preserved exactly under partitioning.
             for (j, &g) in globals.iter().enumerate() {
                 sub.arrival_schedule[j] = std::mem::take(&mut self.arrival_schedule[g]);
+                // Fault schedules deal the same way: the parent computed
+                // them per GLOBAL app index (and the fleet's root seed),
+                // so the sub-sim must not regenerate them from its local
+                // view — thread-count invariance depends on it.
+                sub.fault_schedule[j] = std::mem::take(&mut self.fault_schedule[g]);
             }
             subs.push((shard, sub));
         }
@@ -580,6 +614,7 @@ impl Sim {
             a.stream.ctx = CtxId(g);
             self.arrivals_offered[g] = sub.arrivals_offered[j];
             self.arrivals_shed[g] = sub.arrivals_shed[j];
+            self.faults_injected[g] = sub.faults_injected[j];
             self.apps[g] = a;
         }
         for (j, w) in sub.workers.drain(..).enumerate() {
@@ -605,6 +640,14 @@ impl Sim {
         for (i, times) in schedule.into_iter().enumerate() {
             for t in times {
                 self.events.push(t, Event::ArrivalDue(AppId(i)));
+            }
+        }
+        // Fault injections are scheduled up front too; the per-app deque
+        // stays in place — each FaultDue pops its front entry (both are
+        // sorted by fire time, so they stay in lock-step).
+        for i in 0..self.fault_schedule.len() {
+            for &(t, _) in self.fault_schedule[i].iter() {
+                self.events.push(t, Event::FaultDue(AppId(i)));
             }
         }
         for i in 0..self.apps.len() {
@@ -683,7 +726,21 @@ impl Sim {
             }
             Event::LockWake { shard } => self.lock_wake(shard as usize),
             Event::ArrivalDue(app) => self.arrival_due(app),
+            Event::FaultDue(app) => self.fault_due(app),
             Event::Horizon => unreachable!("handled in run()"),
+        }
+    }
+
+    /// A scheduled kernel-hang injection fires for `app`: its next
+    /// dispatched batch is stretched by the scheduled extra nanoseconds
+    /// (the simulator mirror of the live `FaultyExecutor` hang). A hang
+    /// needs a victim kernel, so an idle app's hang waits, accumulated,
+    /// until its next dispatch.
+    fn fault_due(&mut self, app: AppId) {
+        if let Some((_, extra)) = self.fault_schedule[app.0].pop_front() {
+            self.pending_fault_ns[app.0] += extra;
+            self.faults_injected[app.0] += 1;
+            self.mark(D_GPU);
         }
     }
 
@@ -1643,7 +1700,10 @@ impl Sim {
                 };
                 let dur = (cost as f64 * jit * tail) as Nanos
                     + cold
-                    + (self.cfg.timing.crpd_ns as f64 * cold_frac) as Nanos;
+                    + (self.cfg.timing.crpd_ns as f64 * cold_frac) as Nanos
+                    // Pending hang injection (`SimConfig::faults`): the
+                    // whole accumulated stretch lands on this batch.
+                    + std::mem::take(&mut self.pending_fault_ns[app.0]);
                 self.gpus[shard].run_pool[i].dispatched += fit as u32;
                 if self.ops[op.0 as usize].started_at.is_none() {
                     self.ops[op.0 as usize].started_at = Some(self.now);
@@ -1894,5 +1954,16 @@ impl Sim {
     /// closed-loop runs.
     pub fn arrival_counts(&self, app: AppId) -> (usize, usize) {
         (self.arrivals_offered[app.0], self.arrivals_shed[app.0])
+    }
+
+    /// Kernel-hang injections fired for `app` (`SimConfig::faults`);
+    /// zero when no sim-addressed fault clause is configured.
+    pub fn fault_count(&self, app: AppId) -> usize {
+        self.faults_injected[app.0]
+    }
+
+    /// Fault injections fired across every application.
+    pub fn faults_total(&self) -> usize {
+        self.faults_injected.iter().sum()
     }
 }

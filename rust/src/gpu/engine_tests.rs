@@ -555,3 +555,85 @@ fn open_loop_leaves_once_programs_ungated() {
     sim.run();
     assert_eq!(sim.completions(AppId(0)).len(), 1);
 }
+
+// ---------------------------------------------------------------------
+// seeded fault injection (SimConfig::faults, DESIGN.md §12)
+// ---------------------------------------------------------------------
+
+use crate::control::fault::FaultSpec;
+
+fn faults(spec: &str) -> FaultSpec {
+    spec.parse().expect("test fault spec must parse")
+}
+
+#[test]
+fn one_shot_hang_stretches_the_faulted_run() {
+    let clean = run(StrategyKind::None, vec![burst_program(10)]);
+    assert_eq!(clean.faults_total(), 0, "no spec, no injections");
+    let mut sim = Sim::new(
+        cfg(StrategyKind::None).with_faults(faults("hang:at=0:ms=5")),
+        vec![burst_program(10)],
+    );
+    sim.run();
+    assert_eq!(sim.fault_count(AppId(0)), 1);
+    assert_eq!(sim.faults_total(), 1);
+    let clean_end = *clean.completions(AppId(0)).last().unwrap();
+    let hung_end = *sim.completions(AppId(0)).last().unwrap();
+    assert!(
+        hung_end >= clean_end + 4_000_000,
+        "a 5 ms kernel hang must delay completion (clean {clean_end}, hung {hung_end})"
+    );
+}
+
+#[test]
+fn payload_selector_confines_the_hang_to_its_victim() {
+    let mut sim = Sim::new(
+        cfg(StrategyKind::Synced).with_faults(faults("hang:payload=1@at=0:ms=3")),
+        vec![burst_program(8), burst_program(8)],
+    );
+    sim.run();
+    assert_eq!(sim.fault_count(AppId(0)), 0, "non-victim stays clean");
+    assert_eq!(sim.fault_count(AppId(1)), 1);
+    // Both apps still complete their full workload under injection.
+    for a in 0..2 {
+        assert_eq!(sim.trace.kernel_ops(AppId(a)).count(), 8, "app {a}");
+        assert_eq!(sim.completions(AppId(a)).len(), 1, "app {a}");
+    }
+}
+
+#[test]
+fn periodic_hangs_are_seed_deterministic() {
+    let mk = |seed: u64| {
+        let c = cfg(StrategyKind::Worker)
+            .with_seed(seed)
+            .with_horizon_ns(500_000_000)
+            .with_faults(faults("hang:period=10:ms=1"));
+        let mut sim = Sim::new(c, vec![serving_program()]);
+        sim.run();
+        (sim.faults_total(), trace_fingerprint(&sim))
+    };
+    let (n, fp) = mk(7);
+    assert!(n > 0, "a 10 ms period over 500 ms must fire");
+    assert_eq!((n, fp.clone()), mk(7), "identical seeds must replay exactly");
+    assert_ne!(fp, mk(8).1, "different seeds must draw different schedules");
+}
+
+#[test]
+fn fleet_fault_schedule_is_thread_count_invariant() {
+    // Faults ride the same deal/merge contract as arrivals (§11):
+    // COOK_SIM_THREADS must never change where or how often they land.
+    let mk = |threads| {
+        let progs = (0..5).map(|_| burst_program(7)).collect();
+        let c = fleet_cfg(StrategyKind::Callback, 3)
+            .with_horizon_ns(500_000_000)
+            .with_faults(faults("hang:period=5:ms=1,hang:shard=1@at=1:ms=2"));
+        let mut sim = Sim::new(c, progs);
+        sim.run_with_sim_threads(threads);
+        let counts: Vec<usize> = (0..5).map(|a| sim.fault_count(AppId(a))).collect();
+        (counts, trace_fingerprint(&sim))
+    };
+    let seq = mk(1);
+    assert!(seq.0.iter().sum::<usize>() > 0, "fleet spec must inject");
+    assert_eq!(seq, mk(2), "2 threads changed the faulted fleet trace");
+    assert_eq!(seq, mk(8), "8 threads changed the faulted fleet trace");
+}

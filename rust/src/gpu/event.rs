@@ -72,6 +72,11 @@ pub enum Event {
     /// injection, `SimConfig::arrivals`): admitted into the app's
     /// bounded backlog or shed, mirroring the live admission queue.
     ArrivalDue(AppId),
+    /// A seeded kernel-hang injection fires for an application
+    /// (`SimConfig::faults`): the app's next dispatched batch is
+    /// stretched by the scheduled extra nanoseconds, mirroring the live
+    /// `FaultyExecutor` hang (DESIGN.md §12).
+    FaultDue(AppId),
     /// End of the measurement horizon.
     Horizon,
 }

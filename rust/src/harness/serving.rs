@@ -215,7 +215,7 @@ mod tests {
         for r in &reports {
             let t = r.traffic.as_ref().unwrap();
             assert_eq!(t.offered, 10);
-            assert!(t.accounted(0));
+            assert!(t.accounted());
         }
         assert!(text.contains("load sweep"), "{text}");
         assert!(text.contains("goodput"), "{text}");

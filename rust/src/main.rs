@@ -19,6 +19,7 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 use cook::config::StrategyKind;
+use cook::control::fault::{FaultPlan, FaultSpec, FaultyBackend, RetryPolicy};
 use cook::control::fleet::{serve_fleet, FleetSpec, Placement};
 use cook::control::serving::{serve, ManifestBackend, ServeBackend, ServeSpec, SyntheticBackend};
 use cook::control::traffic::{ArrivalProcess, ShedPolicy, TrafficSpec};
@@ -88,6 +89,7 @@ fn print_usage() {
          \x20       [--arrivals closed|poisson:R|bursty:R@ON/OFF|ramp:A-B]\n\
          \x20       [--queue-cap N] [--shed block|reject|timeout:MS] [--slo-ms X]\n\
          \x20       [--load-sweep R[,R...]] [--exact-quantiles]\n\
+         \x20       [--faults SPEC] [--retries N] [--lease-ms MS]\n\
          \x20       serve payload inferences through the access-control layer\n\
          \x20       (--sweep tabulates all strategies; --synthetic needs no artifacts;\n\
          \x20        --shards N routes clients across a fleet of per-GPU gates;\n\
@@ -95,7 +97,11 @@ fn print_usage() {
          \x20        --arrivals opens the loop: generated load, bounded admission\n\
          \x20        queues, SLO accounting from arrival; --load-sweep emits the\n\
          \x20        latency-vs-offered-load saturation curve; --exact-quantiles\n\
-         \x20        keeps exact latency vectors instead of the streaming sketch)\n\
+         \x20        keeps exact latency vectors instead of the streaming sketch;\n\
+         \x20        --faults injects seeded chaos, e.g.\n\
+         \x20        'error:p=0.01,hang:shard=2@req=500:ms=50,crash:payload=1@req=100';\n\
+         \x20        --retries N retries failed requests with backoff; --lease-ms\n\
+         \x20        arms the gate-lease watchdog that revokes hung holders)\n\
          \n\
          global options:\n\
          \x20 --sim-threads N   thread cap for the shard-parallel fleet engine\n\
@@ -350,7 +356,20 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         None => None,
     };
 
-    let backend: Box<dyn ServeBackend> = if synthetic {
+    // Robustness knobs (ISSUE 7): fault injection, retries, gate leases.
+    let fault_spec: FaultSpec = flag(rest, "--faults")
+        .unwrap_or("")
+        .parse()
+        .map_err(|e: String| anyhow!(e))?;
+    let retries: u32 = flag(rest, "--retries")
+        .map(|s| s.parse().map_err(|_| anyhow!("--retries wants an integer, got '{s}'")))
+        .transpose()?
+        .unwrap_or(0);
+    let lease_ms: Option<u64> = flag(rest, "--lease-ms")
+        .map(|s| s.parse().map_err(|_| anyhow!("--lease-ms wants milliseconds, got '{s}'")))
+        .transpose()?;
+
+    let mut backend: Box<dyn ServeBackend> = if synthetic {
         println!("serving synthetic payloads (no artifacts required)");
         Box::new(SyntheticBackend::new(200))
     } else {
@@ -373,14 +392,25 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         drop(engine);
         Box::new(ManifestBackend::new(Manifest::default_dir()))
     };
+    if !fault_spec.is_empty() {
+        println!("fault injection armed: {fault_spec} (seed {})", seed_of(rest));
+        let plan = std::sync::Arc::new(FaultPlan::new(fault_spec, seed_of(rest)));
+        backend = Box::new(FaultyBackend::new(backend, plan));
+    }
 
-    let base = ServeSpec::new(StrategyKind::None, "dna")
+    let mut base = ServeSpec::new(StrategyKind::None, "dna")
         .with_payloads(payloads)
         .with_clients(clients)
         .with_requests(requests)
         .with_batch(batch)
         .with_traffic(traffic)
         .with_exact_quantiles(exact_quantiles);
+    if retries > 0 {
+        base = base.with_retry(RetryPolicy { seed: seed_of(rest), ..RetryPolicy::with_budget(retries) });
+    }
+    if let Some(ms) = lease_ms {
+        base = base.with_lease_ms(ms);
+    }
     if sweep {
         if flag(rest, "--strategy").is_some() {
             bail!("--sweep runs every strategy; drop --strategy or drop --sweep");

@@ -1,0 +1,183 @@
+//! Chaos integration (ISSUE 7): seeded fault injection, the gate-lease
+//! watchdog, retries, and the self-healing fleet exercised end-to-end.
+//!
+//! The acceptance scenario runs one open-loop fleet under three
+//! simultaneous faults — a gate-holder hang, a boot-crashing shard, and
+//! a background error rate — and checks that the run completes with a
+//! revocation, an ejection-then-reinstatement, and a conserved request
+//! ledger.
+
+use cook::config::StrategyKind;
+use cook::control::fault::{Breaker, FaultPlan, FaultyBackend, RetryPolicy};
+use cook::control::fleet::{serve_fleet, FleetSpec, Placement};
+use cook::control::serving::{serve, ServeSpec, SyntheticBackend};
+use cook::control::traffic::{ArrivalProcess, ShedPolicy, TrafficSpec};
+use std::process::Command;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn cli() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_cook"))
+}
+
+fn chaos_backend(spec: &str, seed: u64) -> FaultyBackend<SyntheticBackend> {
+    let plan = Arc::new(FaultPlan::new(spec.parse().unwrap(), seed));
+    FaultyBackend::new(SyntheticBackend::new(100), plan)
+}
+
+fn open_traffic(rate_hz: f64, seed: u64) -> TrafficSpec {
+    TrafficSpec {
+        arrivals: ArrivalProcess::Poisson { rate_hz },
+        queue_cap: 64,
+        shed: ShedPolicy::Block,
+        slo_ms: 1_000.0,
+        seed,
+    }
+}
+
+#[test]
+fn chaos_fleet_survives_hang_crash_and_error_rate() {
+    // One fleet, three faults at once: request seq 3 hangs its gate
+    // holder for 40 ms against a 5 ms lease (watchdog must revoke);
+    // shard 1 crashes at boot (must be ejected, then reinstated by a
+    // cooldown probe); and 5% of attempts error (retries must absorb
+    // nearly all of them).
+    let base = ServeSpec::new(StrategyKind::Worker, "dna")
+        .with_clients(6)
+        .with_requests(50)
+        .with_traffic(open_traffic(2_000.0, 7))
+        .with_retry(RetryPolicy { budget: 2, base_ms: 0.1, cap_ms: 1.0, seed: 7 })
+        .with_lease_ms(5);
+    // eject_after stays high so the 5% error clause cannot eject a
+    // healthy shard mid-test; only the boot crash trips the breaker.
+    let fleet = FleetSpec::new(base, 3, Placement::RoundRobin).with_breaker(Breaker {
+        degrade_after: 2,
+        eject_after: 8,
+        cooldown: Duration::from_millis(10),
+    });
+    let backend = chaos_backend("error:p=0.05,hang:req=3:ms=40,crash:shard=1", 7);
+    let r = serve_fleet(&fleet, &backend).unwrap();
+
+    let t = r.traffic.as_ref().expect("open-loop fleet must report traffic");
+    assert_eq!(t.offered, 300);
+    assert!(t.accounted(), "conservation under chaos: {t:?}");
+    assert_eq!(t.shed, 0, "Block admission must not shed");
+    assert_eq!(t.timed_out, 0);
+
+    let f = r.fault.as_ref().expect("a faulted run must carry a FaultReport");
+    assert_eq!(f.injected.crashes, 1, "one boot crash");
+    assert_eq!(f.injected.hangs, 1, "req= hang fires on attempt 0 only");
+    assert!(f.injected.errors > 0, "5% of 300+ attempts must error");
+    assert!(f.revocations >= 1, "the 40 ms hang must trip the 5 ms lease");
+    assert!(f.ejections >= 1, "the boot crash must eject shard 1");
+    assert!(f.reinstatements >= 1, "the cooldown probe must reinstate it");
+    assert!(f.retried >= f.injected.errors.saturating_sub(f.gave_up));
+    // Every terminal failure traces back to an exhausted retry budget:
+    // non-faulted requests all completed.
+    assert_eq!(t.failed, f.gave_up, "only budget-exhausted requests may fail");
+    assert_eq!(t.completed, t.offered - t.failed);
+
+    let s1 = &r.shards[1];
+    assert_eq!(s1.shard, 1);
+    let msg = s1.error.as_ref().expect("boot crash must be recorded");
+    assert!(msg.contains("boot crash"), "{msg}");
+    let h = s1.health.as_ref().expect("fleet shards must report health");
+    assert!(h.ejections >= 1, "{h:?}");
+    assert!(h.reinstatements >= 1, "shard 1 never came back: {h:?}");
+
+    let text = r.render();
+    assert!(text.contains("fleet fault"), "{text}");
+    assert!(text.contains("health"), "{text}");
+}
+
+/// Deterministic chaos ledger of one single-shard open-loop run. Error
+/// injections are pure hashes of `(seed, clause, seq, attempt)`, so
+/// every count here is a function of the spec alone — never of thread
+/// scheduling or wall-clock timing.
+fn chaos_ledger() -> (usize, usize, usize, usize, usize, usize) {
+    let spec = ServeSpec::new(StrategyKind::Worker, "dna")
+        .with_clients(4)
+        .with_requests(25)
+        .with_traffic(open_traffic(5_000.0, 11))
+        .with_retry(RetryPolicy { budget: 2, base_ms: 0.1, cap_ms: 0.5, seed: 11 });
+    let r = serve(&spec, &chaos_backend("error:p=0.05", 11)).unwrap();
+    let t = r.traffic.as_ref().unwrap();
+    let f = r.fault.as_ref().unwrap();
+    assert!(t.accounted(), "{t:?}");
+    (f.injected.errors, f.detected, f.retried, f.gave_up, t.failed, t.completed)
+}
+
+#[test]
+fn chaos_ledger_is_run_and_thread_count_invariant() {
+    // COOK_THREADS / COOK_SIM_THREADS are throughput knobs everywhere in
+    // the codebase; the chaos ledger must not become the exception.
+    std::env::set_var("COOK_THREADS", "1");
+    std::env::set_var("COOK_SIM_THREADS", "1");
+    let a = chaos_ledger();
+    std::env::set_var("COOK_THREADS", "4");
+    std::env::set_var("COOK_SIM_THREADS", "4");
+    let b = chaos_ledger();
+    std::env::remove_var("COOK_THREADS");
+    std::env::remove_var("COOK_SIM_THREADS");
+    assert_eq!(a, b, "chaos outcomes drifted across thread counts");
+    assert!(a.0 > 0, "the 5% error clause must fire across 100 requests");
+    assert_eq!(a.0, a.1, "every injected error must be detected");
+}
+
+#[test]
+fn closed_loop_fleet_tolerates_a_panicking_shard() {
+    // Satellite (a): a shard whose backend panics becomes a FAILED
+    // ShardReport, not a fleet abort.
+    let base = ServeSpec::new(StrategyKind::Synced, "dna").with_clients(4).with_requests(3);
+    let fleet = FleetSpec::new(base, 2, Placement::RoundRobin);
+    let backend = chaos_backend("crash:shard=1", 3);
+    let r = serve_fleet(&fleet, &backend).unwrap();
+    assert!(r.shards[1].report.is_none());
+    assert!(r.shards[1].error.is_some());
+    assert_eq!(r.total(), 6, "healthy shard's requests all served");
+    assert!(r.render().contains("FAILED"), "{}", r.render());
+}
+
+// ---------------------------------------------------------------------
+// CLI chaos smoke (mirrors the CI step)
+// ---------------------------------------------------------------------
+
+#[test]
+fn cli_chaos_smoke_exits_zero_with_fault_report() {
+    let out = cli()
+        .args([
+            "serve", "--synthetic", "--faults", "error:p=0.05", "--retries", "2",
+            "--clients", "2", "--requests", "25",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("fault injection armed"), "{text}");
+    assert!(text.contains("faults:"), "{text}");
+}
+
+#[test]
+fn cli_chaos_fleet_marks_crashed_shard_failed() {
+    let out = cli()
+        .args([
+            "serve", "--synthetic", "--shards", "2", "--faults", "crash:shard=1",
+            "--clients", "2", "--requests", "2",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("FAILED"), "{text}");
+}
+
+#[test]
+fn cli_rejects_malformed_fault_spec() {
+    let out = cli()
+        .args(["serve", "--synthetic", "--faults", "meltdown:p=1"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown kind"), "{err}");
+}
