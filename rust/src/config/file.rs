@@ -72,6 +72,8 @@ fn set_key(cfg: &mut SimConfig, key: &str, v: &str) -> Result<(), String> {
         }
         "arrivals" => cfg.arrivals = v.parse()?,
         "faults" => cfg.faults = v.parse()?,
+        "arbiter" => cfg.arbiter = v.parse()?,
+        "classes" => cfg.classes = crate::control::arbiter::parse_classes(v)?,
         "arrival_queue_cap" => {
             let c: usize = parse(key, v)?;
             if c == 0 {
@@ -131,6 +133,8 @@ pub const KEYS: &[&str] = &[
     "arrivals",
     "arrival_queue_cap",
     "faults",
+    "arbiter",
+    "classes",
     "timing.launch_overhead_ns",
     "timing.memcpy_call_extra_ns",
     "timing.sync_wakeup_ns",
@@ -218,6 +222,8 @@ mod tests {
                 "strategy" => "synced",
                 "arrivals" => "poisson:200",
                 "faults" => "error:p=0.01",
+                "arbiter" => "wrr",
+                "classes" => "gold:weight=2,free",
                 _ => "1",
             };
             set_key(&mut cfg, key, v).unwrap_or_else(|e| panic!("{key}: {e}"));
@@ -243,6 +249,26 @@ mod tests {
         assert_eq!(cfg.arrival_queue_cap, 8);
         assert!(apply_overrides(&mut cfg, "arrivals = warp:9").is_err());
         assert!(apply_overrides(&mut cfg, "arrival_queue_cap = 0").is_err());
+    }
+
+    #[test]
+    fn arbiter_keys_parse_and_validate() {
+        use crate::control::arbiter::ArbiterKind;
+        let mut cfg = SimConfig::default();
+        apply_overrides(
+            &mut cfg,
+            "arbiter = edf\nclasses = rt:deadline=5:weight=4,batch:slo=50\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.arbiter, ArbiterKind::Edf);
+        assert_eq!(cfg.classes.len(), 2);
+        assert_eq!(cfg.classes[0].name, "rt");
+        assert_eq!(cfg.classes[0].deadline_ms, Some(5));
+        assert_eq!(cfg.classes[0].weight, 4);
+        assert!(apply_overrides(&mut cfg, "arbiter = lifo").is_err());
+        assert!(apply_overrides(&mut cfg, "classes = gold:weight=zero").is_err());
+        apply_overrides(&mut cfg, "classes = none").unwrap();
+        assert!(cfg.classes.is_empty());
     }
 
     #[test]

@@ -12,6 +12,7 @@ pub use platform::PlatformConfig;
 pub use strategy::StrategyKind;
 pub use timing::TimingConfig;
 
+use crate::control::arbiter::{ArbiterKind, TenantClass};
 use crate::control::fault::FaultSpec;
 use crate::control::traffic::ArrivalProcess;
 
@@ -48,6 +49,16 @@ pub struct SimConfig {
     /// seed) and invariant under the sharded runner's thread count.
     /// Empty (the default) injects nothing.
     pub faults: FaultSpec,
+    /// Grant-ordering policy for every shard's `GPU_LOCK` wake path
+    /// (DESIGN.md §13). `Fifo` (the default) reproduces the paper's
+    /// semaphore exactly — golden traces are pinned against it.
+    pub arbiter: ArbiterKind,
+    /// QoS tenant classes; applications map to classes round-robin
+    /// (`app i -> class i % classes.len()`), the same assignment the
+    /// live serving path uses for clients/requests, so sim and serving
+    /// agree on which class starves under overload. Empty (the
+    /// default): every app is class 0 and arbitration is degenerate.
+    pub classes: Vec<TenantClass>,
 }
 
 impl Default for SimConfig {
@@ -62,6 +73,8 @@ impl Default for SimConfig {
             arrivals: ArrivalProcess::ClosedLoop,
             arrival_queue_cap: 64,
             faults: FaultSpec::default(),
+            arbiter: ArbiterKind::Fifo,
+            classes: Vec::new(),
         }
     }
 }
@@ -101,6 +114,16 @@ impl SimConfig {
         self.faults = faults;
         self
     }
+
+    pub fn with_arbiter(mut self, arbiter: ArbiterKind) -> Self {
+        self.arbiter = arbiter;
+        self
+    }
+
+    pub fn with_classes(mut self, classes: Vec<TenantClass>) -> Self {
+        self.classes = classes;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -125,7 +148,9 @@ mod tests {
             .with_num_gpus(4)
             .with_arrivals(ArrivalProcess::Poisson { rate_hz: 200.0 })
             .with_arrival_queue_cap(16)
-            .with_faults("hang:period=100:ms=5".parse().unwrap());
+            .with_faults("hang:period=100:ms=5".parse().unwrap())
+            .with_arbiter(ArbiterKind::Wrr)
+            .with_classes(crate::control::arbiter::parse_classes("gold:weight=3,free").unwrap());
         assert_eq!(cfg.strategy, StrategyKind::Worker);
         assert_eq!(cfg.seed, 9);
         assert_eq!(cfg.horizon_ns, 123);
@@ -133,6 +158,16 @@ mod tests {
         assert_eq!(cfg.arrivals, ArrivalProcess::Poisson { rate_hz: 200.0 });
         assert_eq!(cfg.arrival_queue_cap, 16);
         assert!(cfg.faults.has_sim_clauses());
+        assert_eq!(cfg.arbiter, ArbiterKind::Wrr);
+        assert_eq!(cfg.classes.len(), 2);
+        assert_eq!(cfg.classes[0].weight, 3);
+    }
+
+    #[test]
+    fn default_arbiter_is_fifo_with_no_classes() {
+        let cfg = SimConfig::default();
+        assert_eq!(cfg.arbiter, ArbiterKind::Fifo);
+        assert!(cfg.classes.is_empty());
     }
 
     #[test]

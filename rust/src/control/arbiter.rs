@@ -1,0 +1,735 @@
+//! Pluggable grant arbitration for the live gate and the simulator lock.
+//!
+//! The paper's `GPU_LOCK` admits strictly in arrival order — every client
+//! is equal. Production fleets are not: tenants carry weights, credit
+//! budgets, deadlines, and SLOs. This module extracts the *grant-ordering
+//! decision* out of [`crate::control::gate::GpuGate`] (and out of the
+//! simulator's `LockWake` handler) behind one [`Arbiter`] trait, so both
+//! layers answer "who runs next?" with the same policy and the same
+//! tie-breaks — sim and live serving must agree on who starves under
+//! overload (DESIGN.md §13).
+//!
+//! Four policies ship:
+//! * [`Fifo`] — today's behaviour, bit-identical (pinned by
+//!   `tests/arbitration.rs`): always pick the front of the queue.
+//! * [`WeightedRoundRobin`] — pick the waiter whose class has received
+//!   the smallest weight-normalised share of grants so far; long-run
+//!   grant shares converge to the configured weights.
+//! * [`CreditBased`] — FIFO *at the gate*; the policy acts at admission
+//!   instead, where a [`CreditBank`] bounds each class's in-flight
+//!   requests (the per-tenant generalisation of the PR 4 bounded queue).
+//! * [`EarliestDeadlineFirst`] — pick the waiter with the earliest
+//!   absolute deadline; deadline-less waiters rank last; ties break FIFO.
+//!
+//! Every policy is a pure function of the waiter list and its own grant
+//! history — never of wall-clock time or thread identity — so arbitration
+//! decisions are deterministic and the simulator mirror is exact.
+
+use crate::util::lock_recover;
+use std::fmt;
+use std::str::FromStr;
+use std::sync::{Condvar, Mutex, PoisonError};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------
+// tenant classes
+// ---------------------------------------------------------------------
+
+/// One tenant class: a named QoS tier with an arbitration weight and
+/// optional credit budget, deadline, and SLO overrides.
+///
+/// Parsed from `name[:weight=W][:credits=C][:deadline=MS][:slo=MS]`,
+/// comma-separated into a class list (the same clause grammar shape as
+/// [`crate::control::fault::FaultSpec`]):
+///
+/// ```
+/// use cook::control::arbiter::{parse_classes, render_classes};
+///
+/// let classes = parse_classes("gold:weight=4:credits=16:deadline=10:slo=5,free").unwrap();
+/// assert_eq!(classes.len(), 2);
+/// assert_eq!(classes[0].weight, 4);
+/// assert_eq!(classes[1].weight, 1);
+/// // Display/parse round-trips.
+/// assert_eq!(parse_classes(&render_classes(&classes)).unwrap(), classes);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantClass {
+    /// Class name (report labels; must be unique within a spec).
+    pub name: String,
+    /// Arbitration weight (WRR); >= 1. Default 1.
+    pub weight: u32,
+    /// Credit budget: max in-flight requests admitted for this class
+    /// (credit arbiter). `None` = the spec-level default.
+    pub credits: Option<u32>,
+    /// Relative deadline in ms from enqueue (EDF). `None` = best-effort
+    /// (ranks after every deadlined waiter).
+    pub deadline_ms: Option<u64>,
+    /// Per-class SLO override in ms for SLO-attainment reporting.
+    /// `None` = the run-level `TrafficSpec::slo_ms`.
+    pub slo_ms: Option<f64>,
+}
+
+impl TenantClass {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), weight: 1, credits: None, deadline_ms: None, slo_ms: None }
+    }
+}
+
+impl fmt::Display for TenantClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.name)?;
+        if self.weight != 1 {
+            write!(f, ":weight={}", self.weight)?;
+        }
+        if let Some(c) = self.credits {
+            write!(f, ":credits={c}")?;
+        }
+        if let Some(d) = self.deadline_ms {
+            write!(f, ":deadline={d}")?;
+        }
+        if let Some(s) = self.slo_ms {
+            write!(f, ":slo={s}")?;
+        }
+        Ok(())
+    }
+}
+
+/// Parse a comma-separated tenant-class list (see [`TenantClass`]).
+/// Empty input (or `"none"`) is the default single implicit class.
+pub fn parse_classes(s: &str) -> Result<Vec<TenantClass>, String> {
+    let s = s.trim();
+    if s.is_empty() || s == "none" {
+        return Ok(Vec::new());
+    }
+    let mut out: Vec<TenantClass> = Vec::new();
+    for clause in s.split(',') {
+        let clause = clause.trim();
+        let mut parts = clause.split(':');
+        let name = parts.next().unwrap_or("").trim();
+        if name.is_empty() || name.contains('=') {
+            return Err(format!(
+                "bad class clause '{clause}': expected name[:weight=W][:credits=C][:deadline=MS][:slo=MS]"
+            ));
+        }
+        if out.iter().any(|c| c.name == name) {
+            return Err(format!("duplicate class name '{name}'"));
+        }
+        let mut c = TenantClass::new(name);
+        for token in parts {
+            let (key, value) = token
+                .split_once('=')
+                .ok_or_else(|| format!("bad class token '{token}' in '{clause}'"))?;
+            let bad = |what: &str| format!("bad {key} '{value}' in '{clause}': {what}");
+            match key {
+                "weight" => {
+                    let w: u32 = value.parse().map_err(|_| bad("expected an integer"))?;
+                    if w == 0 {
+                        return Err(bad("weight must be >= 1"));
+                    }
+                    c.weight = w;
+                }
+                "credits" => {
+                    let n: u32 = value.parse().map_err(|_| bad("expected an integer"))?;
+                    if n == 0 {
+                        return Err(bad("credits must be >= 1"));
+                    }
+                    c.credits = Some(n);
+                }
+                "deadline" => {
+                    let d: u64 = value.parse().map_err(|_| bad("expected milliseconds"))?;
+                    if d == 0 {
+                        return Err(bad("deadline must be >= 1 ms"));
+                    }
+                    c.deadline_ms = Some(d);
+                }
+                "slo" => {
+                    let s: f64 = value.parse().map_err(|_| bad("expected milliseconds"))?;
+                    if !(s > 0.0) {
+                        return Err(bad("slo must be > 0"));
+                    }
+                    c.slo_ms = Some(s);
+                }
+                other => {
+                    return Err(format!(
+                        "unknown class token '{other}' in '{clause}' \
+                         (expected weight|credits|deadline|slo)"
+                    ))
+                }
+            }
+        }
+        out.push(c);
+    }
+    Ok(out)
+}
+
+/// Render a class list back to the [`parse_classes`] grammar.
+pub fn render_classes(classes: &[TenantClass]) -> String {
+    classes.iter().map(|c| c.to_string()).collect::<Vec<_>>().join(",")
+}
+
+/// The one class-assignment rule, shared by live serving (clients and
+/// open-loop request sequence numbers) and the simulator (application
+/// index): round-robin over the configured classes. Keeping this a
+/// single function is what makes the sim-vs-serving starvation
+/// agreement hold by construction.
+#[inline]
+pub fn class_of(index: usize, num_classes: usize) -> usize {
+    if num_classes == 0 {
+        0
+    } else {
+        index % num_classes
+    }
+}
+
+// ---------------------------------------------------------------------
+// the arbiter trait
+// ---------------------------------------------------------------------
+
+/// Which arbitration policy a gate (or the simulator's lock) runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ArbiterKind {
+    /// Strict arrival order (the paper's `GPU_LOCK`; the default).
+    #[default]
+    Fifo,
+    /// Weighted round-robin over tenant classes.
+    Wrr,
+    /// FIFO at the gate, per-class credit backpressure at admission.
+    Credit,
+    /// Earliest (absolute) deadline first, FIFO tie-break.
+    Edf,
+}
+
+impl ArbiterKind {
+    pub const ALL: [ArbiterKind; 4] =
+        [ArbiterKind::Fifo, ArbiterKind::Wrr, ArbiterKind::Credit, ArbiterKind::Edf];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArbiterKind::Fifo => "fifo",
+            ArbiterKind::Wrr => "wrr",
+            ArbiterKind::Credit => "credit",
+            ArbiterKind::Edf => "edf",
+        }
+    }
+
+    /// Does this policy ever pick anything but the queue front? FIFO and
+    /// credit (which acts at admission, not at the gate) never do — the
+    /// gate's release path skips the waiter-snapshot allocation for them.
+    pub fn is_fifo_order(&self) -> bool {
+        matches!(self, ArbiterKind::Fifo | ArbiterKind::Credit)
+    }
+}
+
+impl fmt::Display for ArbiterKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for ArbiterKind {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim() {
+            "fifo" => Ok(ArbiterKind::Fifo),
+            "wrr" | "weighted" => Ok(ArbiterKind::Wrr),
+            "credit" | "credits" => Ok(ArbiterKind::Credit),
+            "edf" | "deadline" => Ok(ArbiterKind::Edf),
+            other => Err(format!("unknown arbiter '{other}' (expected fifo|wrr|credit|edf)")),
+        }
+    }
+}
+
+/// One parked waiter, as the arbiter sees it. The list handed to
+/// [`Arbiter::pick`] is always in FIFO (ticket-ascending) order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Waiter {
+    /// Monotonic arrival ticket (FIFO order and tie-breaks).
+    pub ticket: u64,
+    /// Tenant class index.
+    pub class: usize,
+    /// Absolute deadline in ns on the owning gate's clock (enqueue time
+    /// plus the class's relative deadline); `None` = best-effort.
+    pub deadline_ns: Option<u64>,
+}
+
+/// The grant-ordering decision, extracted from the gate (DESIGN.md §13).
+///
+/// Contract:
+/// * `pick` is called with a non-empty, FIFO-ordered waiter list and
+///   returns an index into it. It must be a *pure function* of the list
+///   and of grant history accumulated via `on_grant` — no clocks, no
+///   randomness — so the same contention script always produces the same
+///   grant order (the determinism the simulator mirror relies on).
+/// * `pick` takes `&self`: release paths may peek (e.g. to classify the
+///   wake-up latency of the next grantee) without committing; state
+///   moves only in `on_grant`, called exactly once per issued grant.
+pub trait Arbiter: Send + fmt::Debug {
+    fn kind(&self) -> ArbiterKind;
+
+    /// Index of the waiter to grant next. `waiters` is non-empty.
+    fn pick(&self, waiters: &[Waiter]) -> usize;
+
+    /// A grant was issued to `class` (immediate admits included).
+    fn on_grant(&mut self, class: usize) {
+        let _ = class;
+    }
+}
+
+/// Strict arrival order: always the queue front.
+#[derive(Debug, Default, Clone)]
+pub struct Fifo;
+
+impl Arbiter for Fifo {
+    fn kind(&self) -> ArbiterKind {
+        ArbiterKind::Fifo
+    }
+
+    fn pick(&self, _waiters: &[Waiter]) -> usize {
+        0
+    }
+}
+
+/// Weighted round-robin: grant the waiter whose class has so far
+/// received the smallest weight-normalised share of grants
+/// (`issued[c] / weight[c]`, compared by cross-multiplication so no
+/// floats enter the decision). Ties break FIFO — the earliest waiter of
+/// the chosen share wins. Long-run grant shares converge to the weights
+/// whenever every class keeps a waiter queued (pinned by the law suite).
+#[derive(Debug, Clone)]
+pub struct WeightedRoundRobin {
+    weights: Vec<u64>,
+    issued: Vec<u64>,
+}
+
+impl WeightedRoundRobin {
+    pub fn new(classes: &[TenantClass]) -> Self {
+        let weights: Vec<u64> = if classes.is_empty() {
+            vec![1]
+        } else {
+            classes.iter().map(|c| u64::from(c.weight.max(1))).collect()
+        };
+        let issued = vec![0; weights.len()];
+        Self { weights, issued }
+    }
+
+    /// Grants issued per class so far (share-convergence tests).
+    pub fn issued(&self) -> &[u64] {
+        &self.issued
+    }
+
+    #[inline]
+    fn clamp(&self, class: usize) -> usize {
+        class.min(self.weights.len() - 1)
+    }
+}
+
+impl Arbiter for WeightedRoundRobin {
+    fn kind(&self) -> ArbiterKind {
+        ArbiterKind::Wrr
+    }
+
+    fn pick(&self, waiters: &[Waiter]) -> usize {
+        let mut best = 0;
+        let bc = self.clamp(waiters[0].class);
+        let (mut bi, mut bw) = (self.issued[bc] as u128, self.weights[bc] as u128);
+        for (i, w) in waiters.iter().enumerate().skip(1) {
+            let c = self.clamp(w.class);
+            let (ci, cw) = (self.issued[c] as u128, self.weights[c] as u128);
+            // issued[c]/weight[c] < issued[best]/weight[best], cross-multiplied.
+            if ci * bw < bi * cw {
+                best = i;
+                bi = ci;
+                bw = cw;
+            }
+        }
+        best
+    }
+
+    fn on_grant(&mut self, class: usize) {
+        let c = self.clamp(class);
+        self.issued[c] += 1;
+    }
+}
+
+/// Credit-based flow control is FIFO *at the gate* by design: credits
+/// bound how many requests per class are in flight at all (see
+/// [`CreditBank`], consumed at admission and returned at terminal
+/// accounting), so by the time a request reaches the gate its class has
+/// already paid. Re-ordering grants here would double-charge.
+#[derive(Debug, Default, Clone)]
+pub struct CreditBased;
+
+impl Arbiter for CreditBased {
+    fn kind(&self) -> ArbiterKind {
+        ArbiterKind::Credit
+    }
+
+    fn pick(&self, _waiters: &[Waiter]) -> usize {
+        0
+    }
+}
+
+/// Earliest (absolute) deadline first. Deadline-less waiters rank after
+/// every deadlined one; within equal deadlines (and among the
+/// deadline-less) the earliest ticket wins — the scan keeps the first
+/// minimum, and the waiter list is FIFO-ordered.
+#[derive(Debug, Default, Clone)]
+pub struct EarliestDeadlineFirst;
+
+impl Arbiter for EarliestDeadlineFirst {
+    fn kind(&self) -> ArbiterKind {
+        ArbiterKind::Edf
+    }
+
+    fn pick(&self, waiters: &[Waiter]) -> usize {
+        let mut best = 0;
+        let mut bd = waiters[0].deadline_ns.unwrap_or(u64::MAX);
+        for (i, w) in waiters.iter().enumerate().skip(1) {
+            let d = w.deadline_ns.unwrap_or(u64::MAX);
+            if d < bd {
+                best = i;
+                bd = d;
+            }
+        }
+        best
+    }
+}
+
+/// Build the arbiter for `kind` over `classes`.
+pub fn make_arbiter(kind: ArbiterKind, classes: &[TenantClass]) -> Box<dyn Arbiter> {
+    match kind {
+        ArbiterKind::Fifo => Box::new(Fifo),
+        ArbiterKind::Wrr => Box::new(WeightedRoundRobin::new(classes)),
+        ArbiterKind::Credit => Box::new(CreditBased),
+        ArbiterKind::Edf => Box::new(EarliestDeadlineFirst),
+    }
+}
+
+// ---------------------------------------------------------------------
+// credit bank (admission-side flow control)
+// ---------------------------------------------------------------------
+
+/// Per-class credit pool: the admission-side backpressure of the credit
+/// arbiter, generalising the PR 4 bounded queue to per-tenant budgets.
+///
+/// A request *takes* one credit of its class at admission (blocking,
+/// failing, or timing out per the shed policy) and the credit is *put*
+/// back exactly once, at the request's terminal accounting — completion,
+/// terminal failure, in-queue timeout, or drain. A retry or a cross-shard
+/// requeue keeps its credit outstanding (the request is still in
+/// flight), and a lease revocation returns the credit only when the
+/// request finally gives up or completes — so at every instant
+/// `taken == returned + outstanding` and
+/// `available + outstanding == total` (the conservation law pinned by
+/// `tests/arbitration.rs`).
+#[derive(Debug)]
+pub struct CreditBank {
+    state: Mutex<CreditState>,
+    returned_cv: Condvar,
+}
+
+#[derive(Debug, Clone)]
+struct CreditState {
+    total: Vec<u32>,
+    available: Vec<u32>,
+    taken: Vec<u64>,
+    returned: Vec<u64>,
+}
+
+/// A point-in-time copy of the bank's counters (law tests, reports).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CreditSnapshot {
+    pub total: Vec<u32>,
+    pub available: Vec<u32>,
+    pub taken: Vec<u64>,
+    pub returned: Vec<u64>,
+}
+
+impl CreditSnapshot {
+    /// Credits currently held by in-flight requests of `class`.
+    pub fn outstanding(&self, class: usize) -> u64 {
+        self.taken[class] - self.returned[class]
+    }
+
+    /// The conservation law, checked across every class.
+    pub fn conserved(&self) -> bool {
+        (0..self.total.len()).all(|c| {
+            self.taken[c] >= self.returned[c]
+                && u64::from(self.available[c]) + self.outstanding(c) == u64::from(self.total[c])
+        })
+    }
+}
+
+impl CreditBank {
+    /// One pool per class; a class without an explicit `credits=` budget
+    /// gets `default_credits` (the serving layer passes its queue cap —
+    /// exactly the old single-tenant bound).
+    pub fn new(classes: &[TenantClass], default_credits: u32) -> Self {
+        let default_credits = default_credits.max(1);
+        let total: Vec<u32> = if classes.is_empty() {
+            vec![default_credits]
+        } else {
+            classes.iter().map(|c| c.credits.unwrap_or(default_credits).max(1)).collect()
+        };
+        Self {
+            state: Mutex::new(CreditState {
+                available: total.clone(),
+                taken: vec![0; total.len()],
+                returned: vec![0; total.len()],
+                total,
+            }),
+            returned_cv: Condvar::new(),
+        }
+    }
+
+    #[inline]
+    fn idx(&self, st: &CreditState, class: usize) -> usize {
+        class.min(st.total.len() - 1)
+    }
+
+    /// Take one credit if the class has any; never blocks.
+    pub fn try_take(&self, class: usize) -> bool {
+        let mut st = lock_recover(&self.state);
+        let c = self.idx(&st, class);
+        if st.available[c] == 0 {
+            return false;
+        }
+        st.available[c] -= 1;
+        st.taken[c] += 1;
+        true
+    }
+
+    /// Take one credit, blocking until one is returned.
+    pub fn take_blocking(&self, class: usize) {
+        let mut st = lock_recover(&self.state);
+        let c = self.idx(&st, class);
+        while st.available[c] == 0 {
+            st = self.returned_cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+        }
+        st.available[c] -= 1;
+        st.taken[c] += 1;
+    }
+
+    /// Take one credit, waiting at most `timeout`; false on expiry.
+    pub fn take_timeout(&self, class: usize, timeout: Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut st = lock_recover(&self.state);
+        let c = self.idx(&st, class);
+        while st.available[c] == 0 {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (g, _) = self
+                .returned_cv
+                .wait_timeout(st, deadline - now)
+                .unwrap_or_else(PoisonError::into_inner);
+            st = g;
+        }
+        st.available[c] -= 1;
+        st.taken[c] += 1;
+        true
+    }
+
+    /// Return one credit (terminal accounting; exactly once per take).
+    pub fn put(&self, class: usize) {
+        let mut st = lock_recover(&self.state);
+        let c = self.idx(&st, class);
+        debug_assert!(st.available[c] < st.total[c], "credit returned twice");
+        st.available[c] = (st.available[c] + 1).min(st.total[c]);
+        st.returned[c] += 1;
+        drop(st);
+        self.returned_cv.notify_one();
+    }
+
+    pub fn snapshot(&self) -> CreditSnapshot {
+        let st = lock_recover(&self.state);
+        CreditSnapshot {
+            total: st.total.clone(),
+            available: st.available.clone(),
+            taken: st.taken.clone(),
+            returned: st.returned.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w(ticket: u64, class: usize) -> Waiter {
+        Waiter { ticket, class, deadline_ns: None }
+    }
+
+    fn wd(ticket: u64, class: usize, deadline_ns: u64) -> Waiter {
+        Waiter { ticket, class, deadline_ns: Some(deadline_ns) }
+    }
+
+    // ------------------------------------------------------- grammar --
+
+    #[test]
+    fn class_parse_display_roundtrip() {
+        for text in [
+            "gold",
+            "gold:weight=4",
+            "gold:weight=4:credits=16:deadline=10:slo=5",
+            "gold:credits=2,silver:weight=2,free",
+            "a:deadline=3,b:deadline=7,c",
+            "batch:slo=12.5",
+        ] {
+            let classes = parse_classes(text).unwrap_or_else(|e| panic!("{text}: {e}"));
+            let rendered = render_classes(&classes);
+            let reparsed = parse_classes(&rendered).unwrap();
+            assert_eq!(reparsed, classes, "{text} -> {rendered}");
+        }
+        assert!(parse_classes("").unwrap().is_empty());
+        assert!(parse_classes("none").unwrap().is_empty());
+    }
+
+    #[test]
+    fn class_parse_rejects_nonsense() {
+        assert!(parse_classes(":weight=2").is_err(), "empty name");
+        assert!(parse_classes("a,a").is_err(), "duplicate name");
+        assert!(parse_classes("a:weight=0").is_err(), "zero weight");
+        assert!(parse_classes("a:credits=0").is_err(), "zero credits");
+        assert!(parse_classes("a:deadline=0").is_err(), "zero deadline");
+        assert!(parse_classes("a:slo=-1").is_err(), "negative slo");
+        assert!(parse_classes("a:frob=1").is_err(), "unknown key");
+        assert!(parse_classes("a:weight").is_err(), "missing value");
+        assert!(parse_classes("weight=2").is_err(), "key=value as a name");
+    }
+
+    #[test]
+    fn arbiter_kind_roundtrip_and_aliases() {
+        for kind in ArbiterKind::ALL {
+            assert_eq!(kind.name().parse::<ArbiterKind>().unwrap(), kind);
+        }
+        assert_eq!("weighted".parse::<ArbiterKind>().unwrap(), ArbiterKind::Wrr);
+        assert_eq!("deadline".parse::<ArbiterKind>().unwrap(), ArbiterKind::Edf);
+        assert!("lifo".parse::<ArbiterKind>().is_err());
+        assert_eq!(ArbiterKind::default(), ArbiterKind::Fifo);
+        assert!(ArbiterKind::Fifo.is_fifo_order());
+        assert!(ArbiterKind::Credit.is_fifo_order());
+        assert!(!ArbiterKind::Wrr.is_fifo_order());
+    }
+
+    // ------------------------------------------------------- policies --
+
+    #[test]
+    fn fifo_and_credit_always_pick_the_front() {
+        let waiters = [w(3, 1), w(4, 0), w(5, 2)];
+        assert_eq!(Fifo.pick(&waiters), 0);
+        assert_eq!(CreditBased.pick(&waiters), 0);
+    }
+
+    #[test]
+    fn wrr_share_tracks_weights_under_saturation() {
+        // Both classes always have a waiter queued; after N grants the
+        // issued counts must match the 3:1 weights within one grant.
+        let classes = parse_classes("gold:weight=3,free").unwrap();
+        let mut arb = WeightedRoundRobin::new(&classes);
+        for t in 0..4000u64 {
+            let waiters = [w(t * 2, 0), w(t * 2 + 1, 1)];
+            let i = arb.pick(&waiters);
+            arb.on_grant(waiters[i].class);
+        }
+        let issued = arb.issued();
+        assert_eq!(issued[0] + issued[1], 4000);
+        assert_eq!(issued[0], 3000, "gold gets 3/4 of grants: {issued:?}");
+    }
+
+    #[test]
+    fn wrr_ties_break_fifo() {
+        // Equal weights, equal issued: the earliest ticket must win.
+        let mut arb = WeightedRoundRobin::new(&parse_classes("a,b").unwrap());
+        let waiters = [w(10, 1), w(11, 0)];
+        assert_eq!(arb.pick(&waiters), 0);
+        arb.on_grant(1);
+        // Class 1 now ahead: the class-0 waiter wins regardless of order.
+        assert_eq!(arb.pick(&[w(12, 1), w(13, 0)]), 1);
+    }
+
+    #[test]
+    fn edf_orders_by_deadline_with_fifo_tiebreak() {
+        let edf = EarliestDeadlineFirst;
+        assert_eq!(edf.pick(&[wd(0, 0, 500), wd(1, 1, 100), wd(2, 2, 300)]), 1);
+        // Best-effort (no deadline) ranks after any deadline.
+        assert_eq!(edf.pick(&[w(0, 0), wd(1, 1, 900)]), 1);
+        // Equal deadlines: first (earliest ticket) wins.
+        assert_eq!(edf.pick(&[wd(5, 0, 200), wd(6, 1, 200)]), 0);
+        // All best-effort: pure FIFO.
+        assert_eq!(edf.pick(&[w(7, 0), w(8, 1)]), 0);
+    }
+
+    #[test]
+    fn make_arbiter_dispatches_every_kind() {
+        for kind in ArbiterKind::ALL {
+            let arb = make_arbiter(kind, &parse_classes("a,b").unwrap());
+            assert_eq!(arb.kind(), kind);
+            assert_eq!(arb.pick(&[w(0, 0)]), 0, "singleton pick is always 0");
+        }
+    }
+
+    // -------------------------------------------------------- credits --
+
+    #[test]
+    fn credit_bank_conserves_across_take_and_put() {
+        let bank = CreditBank::new(&parse_classes("a:credits=2,b:credits=1").unwrap(), 8);
+        assert!(bank.try_take(0));
+        assert!(bank.try_take(0));
+        assert!(!bank.try_take(0), "class a exhausted");
+        assert!(bank.try_take(1));
+        assert!(!bank.try_take(1));
+        let s = bank.snapshot();
+        assert!(s.conserved(), "{s:?}");
+        assert_eq!(s.outstanding(0), 2);
+        bank.put(0);
+        assert!(bank.try_take(0));
+        let s = bank.snapshot();
+        assert!(s.conserved(), "{s:?}");
+        assert_eq!(s.taken, vec![3, 1]);
+        assert_eq!(s.returned, vec![1, 0]);
+    }
+
+    #[test]
+    fn credit_bank_blocking_take_waits_for_put() {
+        let bank = std::sync::Arc::new(CreditBank::new(&[], 1));
+        assert!(bank.try_take(0));
+        let taker = {
+            let bank = std::sync::Arc::clone(&bank);
+            std::thread::spawn(move || bank.take_blocking(0))
+        };
+        std::thread::sleep(Duration::from_millis(20));
+        bank.put(0);
+        taker.join().unwrap();
+        let s = bank.snapshot();
+        assert_eq!(s.outstanding(0), 1);
+        assert!(s.conserved());
+    }
+
+    #[test]
+    fn credit_bank_timeout_take_expires() {
+        let bank = CreditBank::new(&[], 1);
+        assert!(bank.take_timeout(0, Duration::from_millis(5)));
+        assert!(!bank.take_timeout(0, Duration::from_millis(5)), "pool empty");
+        bank.put(0);
+        assert!(bank.take_timeout(0, Duration::from_millis(5)));
+        assert!(bank.snapshot().conserved());
+    }
+
+    #[test]
+    fn default_credit_budget_applies_to_unbudgeted_classes() {
+        let bank = CreditBank::new(&parse_classes("a:credits=1,b").unwrap(), 3);
+        let s = bank.snapshot();
+        assert_eq!(s.total, vec![1, 3]);
+    }
+
+    #[test]
+    fn class_of_deals_round_robin() {
+        assert_eq!(class_of(0, 2), 0);
+        assert_eq!(class_of(5, 2), 1);
+        assert_eq!(class_of(7, 0), 0, "no classes = one implicit class");
+        assert_eq!(class_of(7, 1), 0);
+    }
+}

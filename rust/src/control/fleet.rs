@@ -60,14 +60,16 @@
 //! ```
 
 use crate::config::StrategyKind;
+use crate::control::arbiter::{class_of, ArbiterKind, CreditBank, CreditSnapshot};
 use crate::control::fault::{
     panic_msg, Breaker, FaultReport, HealthSnapshot, ShardHealth,
 };
 use crate::control::gate::{GateStats, GpuGate};
 use crate::control::policy::AccessPolicy;
 use crate::control::serving::{
-    admit, build_latency_stats, fold_open_outs, make_gate, offered_rate_hz, open_worker, serve,
-    OpenWorkerCtx, OpenWorkerOut, Pending, ServeBackend, ServeReport, ServeSpec,
+    admit, build_class_reports, build_latency_stats, fold_open_outs, make_gate, offered_rate_hz,
+    open_worker, serve, ClassReport, OpenWorkerCtx, OpenWorkerOut, Pending, ServeBackend,
+    ServeReport, ServeSpec,
 };
 use crate::control::traffic::{AdmissionQueue, ShedPolicy, TrafficReport};
 use crate::metrics::stats::LatencyStats;
@@ -342,9 +344,16 @@ pub struct FleetReport {
     pub latency: LatencyStats,
     /// One entry per shard, in shard-id order.
     pub shards: Vec<ShardReport>,
+    /// Per-tenant-class breakdowns merged across shards (empty unless
+    /// classes are configured).
+    pub classes: Vec<ClassReport>,
     /// Gate wait/hold statistics merged across shards (None for ungated
     /// strategies).
     pub gate: Option<GateStats>,
+    /// Fleet-wide credit-bank counters (credit arbiter, open loop only —
+    /// one bank is shared by every shard's admission, so per-tenant
+    /// budgets hold fleet-wide, not per shard).
+    pub credits: Option<CreditSnapshot>,
     /// Traffic/SLO accounting merged across shards (Some for open-loop
     /// runs); `shed` counts requests that found **every** shard's
     /// admission queue full.
@@ -421,6 +430,20 @@ impl FleetReport {
             if let Some(e) = &s.error {
                 out.push_str(&format!(" — {e}"));
             }
+        }
+        for c in &self.classes {
+            out.push_str(&format!(
+                "\n  class {:<8} completed={}/{} goodput {:.1}/s; \
+                 p50={:.2} p95={:.2} ms; SLO {:.0} ms attainment {:.1}%",
+                c.name,
+                c.completed,
+                c.offered,
+                c.goodput(self.wall_s),
+                c.latency.quantile(0.50),
+                c.latency.quantile(0.95),
+                c.slo_ms,
+                c.slo_attainment_pct(),
+            ));
         }
         if let Some(g) = &self.gate {
             for line in g.render().lines() {
@@ -527,6 +550,7 @@ pub fn serve_fleet(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result<Fleet
     let mut shards = Vec::with_capacity(spec.shards);
     let mut latency = LatencyStats::new(base.exact_quantiles);
     let mut gate: Option<GateStats> = None;
+    let mut classes: Vec<ClassReport> = Vec::new();
     let mut fault = FaultReport::default();
     let mut any_ok = false;
     let mut first_err: Option<anyhow::Error> = None;
@@ -540,6 +564,13 @@ pub fn serve_fleet(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result<Fleet
                     match &mut gate {
                         Some(merged) => merged.merge(g),
                         None => gate = Some(g.clone()),
+                    }
+                }
+                // Every shard ran the same class list; merge by position.
+                for (i, c) in r.classes.iter().enumerate() {
+                    match classes.get_mut(i) {
+                        Some(m) => m.merge(c),
+                        None => classes.push(c.clone()),
                     }
                 }
                 if let Some(f) = &r.fault {
@@ -594,7 +625,9 @@ pub fn serve_fleet(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result<Fleet
         wall_s,
         latency,
         shards,
+        classes,
         gate,
+        credits: None,
         traffic: None,
         fault,
     })
@@ -649,6 +682,17 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
     };
     let total = base.clients * base.requests;
     let offsets = base.traffic.arrivals.schedule_n(total, base.traffic.seed);
+    let k = base.classes.len();
+    // The credit arbiter's bank is ONE fleet-wide pool per class, shared
+    // by every shard's admission and settle path — a tenant's budget
+    // bounds its fleet-wide in-flight count, and a request re-routed to
+    // another shard keeps the same credit outstanding.
+    let credits = (base.arbiter == ArbiterKind::Credit).then(|| {
+        CreditBank::new(
+            &base.classes,
+            u32::try_from(base.traffic.queue_cap).unwrap_or(u32::MAX),
+        )
+    });
     let shed = AtomicUsize::new(0);
     let routed: Vec<AtomicUsize> = (0..active).map(|_| AtomicUsize::new(0)).collect();
     let warm = Barrier::new(base.clients + 1);
@@ -706,6 +750,7 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
                 &*requeue[shard],
             );
             let share = policy.sm_share(workers_of_shard[shard]);
+            let credits = credits.as_ref();
             let handle = s.spawn(move || {
                 let ctx = OpenWorkerCtx {
                     backend,
@@ -722,6 +767,8 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
                     done: Some(done),
                     health: Some(health),
                     requeue: Some(req),
+                    credits,
+                    classes: k,
                 };
                 let out = open_worker(&ctx, warm);
                 (shard, out)
@@ -737,8 +784,26 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
                 std::thread::sleep(arrival_at - now);
             }
             let slot = seq % resolved.len();
+            let class = class_of(seq, k);
+            // Credit admission comes before routing: a class out of
+            // credits sheds without touching router depth accounting.
+            let granted = match (credits.as_ref(), base.traffic.shed) {
+                (None, _) => true,
+                (Some(b), ShedPolicy::Block) => {
+                    b.take_blocking(class);
+                    true
+                }
+                (Some(b), ShedPolicy::Reject) => b.try_take(class),
+                (Some(b), ShedPolicy::Timeout { ms }) => {
+                    b.take_timeout(class, Duration::from_millis(ms))
+                }
+            };
+            if !granted {
+                shed.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
             let primary = router.route(slot);
-            let mut pending = Some(Pending { slot, seq, arrival_at, attempt: 0 });
+            let mut pending = Some(Pending { slot, seq, arrival_at, attempt: 0, class });
             let mut placed: Option<usize> = None;
             // Health-aware placement: an ejected shard takes no new work
             // (its queue keeps draining); `accepting` also admits the
@@ -779,6 +844,9 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
                     if admit(&queues[primary], pending.take().unwrap(), base.traffic.shed) {
                         routed[primary].fetch_add(1, Ordering::Relaxed);
                     } else {
+                        if let Some(b) = credits.as_ref() {
+                            b.put(class);
+                        }
                         shed.fetch_add(1, Ordering::Relaxed);
                         router.complete(primary);
                     }
@@ -815,6 +883,7 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
     let mut fleet_gate: Option<GateStats> = None;
     let mut fleet_traffic: Option<TrafficReport> = None;
     let mut fleet_fault = FaultReport::default();
+    let mut fleet_class_samples: Vec<(usize, f64)> = Vec::new();
     // Span of the arrival schedule: per-shard offered rates are that
     // shard's admitted count over the same span, so the per-shard and
     // fleet-level renders stay mutually consistent.
@@ -833,6 +902,17 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
         let (latency, per_payload) =
             build_latency_stats(o.samples, &base.payloads, base.exact_quantiles);
         fleet_latency.merge(&latency);
+        // Shard-level class rows carry completions only (offered falls
+        // back to completed): arrivals are routed — and re-routed —
+        // fleet-wide, so per-class offered counts are a fleet-level fact.
+        let shard_classes = build_class_reports(
+            &base.classes,
+            o.class_samples.clone(),
+            &[],
+            base.traffic.slo_ms,
+            base.exact_quantiles,
+        );
+        fleet_class_samples.extend(o.class_samples);
         let gate_stats = gates[shard].as_ref().map(|g| g.stats());
         if let Some(g) = &gate_stats {
             match &mut fleet_gate {
@@ -892,7 +972,9 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
                 wall_s,
                 latency,
                 per_payload,
+                classes: shard_classes,
                 gate: gate_stats,
+                credits: None,
                 traffic: Some(shard_traffic),
                 fault: (tolerate || !fault.is_empty()).then_some(fault),
             }),
@@ -911,6 +993,19 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
         t.offered_rate_hz = offered_rate_hz(&offsets);
     }
     fleet_latency.seal();
+    let mut fleet_offered_by_class = vec![0usize; k];
+    if k > 0 {
+        for seq in 0..total {
+            fleet_offered_by_class[class_of(seq, k)] += 1;
+        }
+    }
+    let fleet_classes = build_class_reports(
+        &base.classes,
+        fleet_class_samples,
+        &fleet_offered_by_class,
+        base.traffic.slo_ms,
+        base.exact_quantiles,
+    );
     let fleet_fault = (tolerate || !fleet_fault.is_empty()).then_some(fleet_fault);
     Ok(FleetReport {
         strategy: base.strategy,
@@ -921,7 +1016,9 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
         wall_s,
         latency: fleet_latency,
         shards,
+        classes: fleet_classes,
         gate: fleet_gate,
+        credits: credits.map(|b| b.snapshot()),
         traffic: fleet_traffic,
         fault: fleet_fault,
     })

@@ -1,4 +1,4 @@
-//! The live GPU gate: a FIFO-fair, instrumented replacement for the bare
+//! The live GPU gate: a fair, instrumented replacement for the bare
 //! `Mutex<()>` the first serving path used as its "GPU lock".
 //!
 //! A plain mutex has two problems for serving:
@@ -9,10 +9,13 @@
 //! * no observability — wait and hold times, the paper's lock-occupancy
 //!   metrics, are invisible.
 //!
-//! `GpuGate` grants strictly in arrival (ticket) order and records every
-//! grant's wait time and hold time into [`crate::metrics::stats::Histogram`]s,
-//! so a serving run can report admission latency separately from payload
-//! execution time.
+//! The *grant order* is delegated to an [`Arbiter`]
+//! (see [`crate::control::arbiter`]): FIFO by default — strictly in
+//! arrival (ticket) order, bit-identical to the pre-arbiter gate — or
+//! weighted round-robin / credit-based / earliest-deadline-first for
+//! multi-tenant serving. Every grant's wait and hold time is recorded
+//! into [`crate::metrics::stats::Histogram`]s, so a serving run can
+//! report admission latency separately from payload execution time.
 //!
 //! Unlike a `MutexGuard`, acquisition is *not* tied to a stack frame:
 //! [`GpuGate::acquire`] returns a [`GateGrant`] token that may be carried
@@ -20,37 +23,81 @@
 //! shape — its acquire and release run as separate deferred closures in
 //! stream order (Alg. 3).
 
+use crate::control::arbiter::{make_arbiter, Arbiter, ArbiterKind, TenantClass, Waiter};
 use crate::metrics::stats::Histogram;
 // The gate's protected state is a pair of monotonic counters (or a
 // histogram) — valid after any panic — so a client that panicked while
-// holding a mutex must not leave the FIFO wedged behind a poisoned lock:
-// every lock site recovers via `lock_recover`.
+// holding a mutex must not leave the queue wedged behind a poisoned
+// lock: every lock site recovers via `lock_recover`.
 use crate::util::{lock_recover, Nanos};
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
+/// One parked waiter: its ticket, arbitration metadata, and the private
+/// condvar a handoff wakes it through.
+#[derive(Debug)]
+struct WaitEntry {
+    ticket: u64,
+    class: usize,
+    deadline_ns: Option<u64>,
+    cv: Arc<Condvar>,
+}
+
 #[derive(Debug)]
 struct GateState {
     /// Next ticket to hand out.
     next_ticket: u64,
-    /// Ticket currently allowed through.
-    now_serving: u64,
+    /// The ticket the arbiter picked to run next: set when a release (or
+    /// revocation) hands the gate off, consumed when that waiter admits
+    /// itself. `None` while someone holds the gate or the gate is idle.
+    baton: Option<u64>,
     /// The admitted ticket and its grant time, while someone holds the
     /// gate. `None` between handoffs — and after a lease revocation,
-    /// which is how a revoked grant's Drop knows not to advance
-    /// `now_serving` a second time.
+    /// which is how a revoked grant's Drop knows not to hand off a
+    /// second time.
     holder: Option<(u64, Instant)>,
-    /// Parked waiters in ticket order (front = next to admit), each with
-    /// its own condvar. Release wakes exactly the front waiter — one
-    /// futex wake per grant — instead of `notify_all` on one shared
-    /// condvar stampeding all N waiters awake so N−1 immediately
-    /// re-sleep (the thundering herd the single-condvar design paid on
-    /// every handoff). A ticket holder is either being served or has an
+    /// Parked waiters in ticket order, each with its own condvar. A
+    /// release wakes exactly the waiter the arbiter picked — one futex
+    /// wake per grant — instead of `notify_all` on one shared condvar
+    /// stampeding all N waiters awake so N−1 immediately re-sleep (the
+    /// thundering herd the single-condvar design paid on every handoff).
+    /// A ticket holder is either being served, baton-in-hand, or has an
     /// entry here: the ticket take and the park happen under one lock
-    /// acquisition, so the front entry is always the lowest outstanding
-    /// ticket and FIFO grant order is unchanged.
-    waiters: VecDeque<(u64, Arc<Condvar>)>,
+    /// acquisition, so the deque is always in arrival order — exactly
+    /// the FIFO-ordered snapshot [`Arbiter::pick`] is specified over.
+    waiters: VecDeque<WaitEntry>,
+    /// The grant-ordering policy (FIFO unless configured otherwise).
+    arbiter: Box<dyn Arbiter>,
+}
+
+/// Pick the next grantee among the parked waiters (arbiter order), hand
+/// it the baton, and return its condvar for the wake-up. `None` when
+/// nobody waits. The caller must have cleared the holder first.
+fn issue_baton(st: &mut GateState) -> Option<Arc<Condvar>> {
+    debug_assert!(st.holder.is_none(), "baton issued while held");
+    debug_assert!(st.baton.is_none(), "baton issued twice");
+    if st.waiters.is_empty() {
+        return None;
+    }
+    // FIFO-order policies (and a lone waiter) skip the snapshot: the
+    // release hot path stays allocation-free in the default config.
+    let idx = if st.arbiter.kind().is_fifo_order() || st.waiters.len() == 1 {
+        0
+    } else {
+        let snap: Vec<Waiter> = st
+            .waiters
+            .iter()
+            .map(|e| Waiter { ticket: e.ticket, class: e.class, deadline_ns: e.deadline_ns })
+            .collect();
+        st.arbiter.pick(&snap).min(snap.len() - 1)
+    };
+    let e = &st.waiters[idx];
+    st.baton = Some(e.ticket);
+    let cv = Arc::clone(&e.cv);
+    let class = e.class;
+    st.arbiter.on_grant(class);
+    Some(cv)
 }
 
 /// Wait/hold statistics of one gate, in nanoseconds.
@@ -58,12 +105,17 @@ struct GateState {
 pub struct GateStats {
     /// Time from arrival to grant, per grant.
     pub wait: Histogram,
-    /// Time from grant to release, per grant.
+    /// Time from grant to release, per grant. A revoked grant's hold is
+    /// recorded at revocation time (when it lost the gate), never again
+    /// at its eventual Drop — exactly one entry per grant.
     pub hold: Histogram,
     /// Grants the lease watchdog revoked from an overstaying holder.
     pub revocations: u64,
     /// How far past its lease each revoked holder was when cut off.
     pub revoke_lag: Histogram,
+    /// Grants issued per tenant class (index = class). Single-class
+    /// gates keep this at length <= 1 and reports omit it.
+    pub by_class: Vec<u64>,
 }
 
 impl GateStats {
@@ -77,10 +129,16 @@ impl GateStats {
         self.hold.merge(&other.hold);
         self.revocations += other.revocations;
         self.revoke_lag.merge(&other.revoke_lag);
+        if self.by_class.len() < other.by_class.len() {
+            self.by_class.resize(other.by_class.len(), 0);
+        }
+        for (c, n) in other.by_class.iter().enumerate() {
+            self.by_class[c] += n;
+        }
     }
 
-    /// Two-line human rendering (serving reports); a third line appears
-    /// only when the watchdog actually revoked something.
+    /// Two-line human rendering (serving reports); extra lines appear
+    /// only when the watchdog revoked something or classes are in play.
     pub fn render(&self) -> String {
         let mut out = format!(
             "gate wait: {}\ngate hold: {}",
@@ -94,13 +152,16 @@ impl GateStats {
                 self.revoke_lag.render_ms()
             ));
         }
+        if self.by_class.len() > 1 {
+            out.push_str(&format!("\ngate grants by class: {:?}", self.by_class));
+        }
         out
     }
 }
 
 /// Proof of admission. Releasing happens on drop (recording the hold
-/// time and waking the next ticket), so a panic while the grant is held
-/// unwinds into a clean FIFO handoff instead of wedging every other
+/// time and waking the arbiter's next pick), so a panic while the grant
+/// is held unwinds into a clean handoff instead of wedging every other
 /// client; [`GpuGate::release`] is the explicit form. `#[must_use]`
 /// because an unbound grant releases immediately.
 #[must_use = "an unbound GateGrant releases immediately; hold it for the critical section"]
@@ -113,7 +174,7 @@ pub struct GateGrant<'a> {
 
 impl GateGrant<'_> {
     /// Did the lease watchdog revoke this grant out from under us? A
-    /// revoked holder has already lost the gate — the FIFO moved on — so
+    /// revoked holder has already lost the gate — the queue moved on — so
     /// its results must be treated as suspect (the serving layer counts
     /// the request failed and lets the health breaker see it).
     pub fn is_revoked(&self) -> bool {
@@ -124,38 +185,37 @@ impl GateGrant<'_> {
 
 impl Drop for GateGrant<'_> {
     fn drop(&mut self) {
-        let held = self.granted_at.elapsed();
         // Regression (ISSUE 4): this used `if let Ok(..) = lock()`, which
-        // silently skipped the `now_serving` bump whenever the state mutex
-        // was poisoned — wedging every queued waiter forever. The state is
-        // a pair of counters, always valid, so recover the guard instead.
+        // silently skipped the handoff whenever the state mutex was
+        // poisoned — wedging every queued waiter forever. The state is a
+        // handful of counters, always valid, so recover the guard instead.
         // (`lock_recover` never panics, which also keeps this Drop safe
         // during unwinding.)
-        lock_recover(&self.gate.stats)
-            .hold
-            .record(held.as_nanos().min(u64::MAX as u128) as Nanos);
         let next = {
             let mut st = lock_recover(&self.gate.state);
             match st.holder {
-                // Normal release: we still hold the gate. Clear the
-                // holder, advance, and wake the next ticket.
+                // Normal release: we still hold the gate. Record the
+                // hold, clear the holder, and hand off. (A revoked
+                // grant's hold was already recorded at revocation time —
+                // exactly one hold entry per grant either way, so
+                // per-class stats can never double-count.)
                 Some((t, _)) if t == self.ticket => {
+                    lock_recover(&self.gate.stats)
+                        .hold
+                        .record(self.granted_at.elapsed().as_nanos().min(u64::MAX as u128)
+                            as Nanos);
                     st.holder = None;
-                    st.now_serving += 1;
-                    // Wake ONLY the next ticket holder (the queue front;
-                    // lower tickets are impossible — see
-                    // `GateState::waiters`). Waking outside the critical
-                    // section avoids the hurry-up-and-wait pattern where
-                    // the woken thread immediately blocks on the mutex the
-                    // waker still holds. No lost wakeup either way:
-                    // `now_serving` was published under the lock, and the
-                    // waiter re-checks it under the same lock around every
-                    // wait.
-                    st.waiters.front().map(|(_, cv)| Arc::clone(cv))
+                    // Waking outside the critical section avoids the
+                    // hurry-up-and-wait pattern where the woken thread
+                    // immediately blocks on the mutex the waker still
+                    // holds. No lost wakeup either way: the baton was
+                    // published under the lock, and the waiter re-checks
+                    // it under the same lock around every wait.
+                    issue_baton(&mut st)
                 }
-                // The watchdog revoked us while we overstayed: the FIFO
-                // already advanced past our ticket (possibly several
-                // grants ago). Touch nothing.
+                // The watchdog revoked us while we overstayed: the queue
+                // already moved past our ticket (possibly several grants
+                // ago). Touch nothing.
                 _ => None,
             }
         };
@@ -165,7 +225,7 @@ impl Drop for GateGrant<'_> {
     }
 }
 
-/// FIFO-fair gate serialising GPU access across serving threads.
+/// Arbitrated gate serialising GPU access across serving threads.
 ///
 /// One gate = one GPU's admission queue: the live counterpart of the
 /// paper's `GPU_LOCK`. A serving fleet holds one per shard (see
@@ -192,26 +252,47 @@ pub struct GpuGate {
     /// Maximum hold time before parked waiters may revoke the grant.
     /// `None` (the default) disables the watchdog entirely.
     lease: Option<Duration>,
+    /// The gate's clock origin: absolute waiter deadlines (EDF) are
+    /// nanoseconds since this instant.
+    epoch: Instant,
+    /// Per-class relative deadline, from the tenant-class config.
+    class_deadline: Vec<Option<Duration>>,
 }
 
 impl GpuGate {
     pub fn new() -> Self {
-        Self {
-            state: Mutex::new(GateState {
-                next_ticket: 0,
-                now_serving: 0,
-                holder: None,
-                waiters: VecDeque::new(),
-            }),
-            stats: Mutex::new(GateStats::default()),
-            lease: None,
-        }
+        Self::with_config(ArbiterKind::Fifo, &[], None)
     }
 
     /// A gate whose grants carry a lease: a holder exceeding `lease` is
     /// revoked by the waiters it is blocking (see [`GpuGate::acquire`]).
     pub fn with_lease(lease: Duration) -> Self {
-        Self { lease: Some(lease), ..Self::new() }
+        Self::with_config(ArbiterKind::Fifo, &[], Some(lease))
+    }
+
+    /// The fully-configured form: an arbitration policy over `classes`,
+    /// with an optional lease watchdog.
+    pub fn with_config(
+        arbiter: ArbiterKind,
+        classes: &[TenantClass],
+        lease: Option<Duration>,
+    ) -> Self {
+        Self {
+            state: Mutex::new(GateState {
+                next_ticket: 0,
+                baton: None,
+                holder: None,
+                waiters: VecDeque::new(),
+                arbiter: make_arbiter(arbiter, classes),
+            }),
+            stats: Mutex::new(GateStats::default()),
+            lease,
+            epoch: Instant::now(),
+            class_deadline: classes
+                .iter()
+                .map(|c| c.deadline_ms.map(Duration::from_millis))
+                .collect(),
+        }
     }
 
     /// The configured lease, if any.
@@ -219,7 +300,21 @@ impl GpuGate {
         self.lease
     }
 
-    /// Block until admitted (strict arrival order), recording the wait.
+    /// The configured arbitration policy.
+    pub fn arbiter_kind(&self) -> ArbiterKind {
+        lock_recover(&self.state).arbiter.kind()
+    }
+
+    /// Block until admitted (class 0), recording the wait. See
+    /// [`GpuGate::acquire_class`].
+    pub fn acquire(&self) -> GateGrant<'_> {
+        self.acquire_class(0)
+    }
+
+    /// Block until admitted as a member of tenant `class`, recording the
+    /// wait. Under the default FIFO arbiter admission is in strict
+    /// arrival order; other arbiters re-order parked waiters (weights,
+    /// credits-at-admission, deadlines) — see [`crate::control::arbiter`].
     ///
     /// # The waiter-driven lease watchdog
     ///
@@ -227,92 +322,118 @@ impl GpuGate {
     /// instead of sleeping unconditionally, each waiter wakes at the
     /// holder's lease deadline and — under the state lock — checks
     /// whether the holder overstayed. If so it revokes the grant: clears
-    /// the holder, force-advances `now_serving`, records the revocation
-    /// (and how far past the lease the holder was), and wakes the new
-    /// front ticket. The revoked grant's own Drop sees the holder
-    /// mismatch and touches nothing, so the FIFO never double-advances.
-    /// No background thread exists to babysit an idle gate — which is
-    /// exactly right: a hung holder with no waiters is blocking no one.
-    pub fn acquire(&self) -> GateGrant<'_> {
+    /// the holder, records the revoked hold (and how far past the lease
+    /// the holder was), and hands the baton to the arbiter's next pick.
+    /// The revoked grant's own Drop sees the holder mismatch and touches
+    /// nothing, so the queue never double-advances and the hold
+    /// histogram gets exactly one entry per grant. No background thread
+    /// exists to babysit an idle gate — which is exactly right: a hung
+    /// holder with no waiters is blocking no one.
+    pub fn acquire_class(&self, class: usize) -> GateGrant<'_> {
         let arrived = Instant::now();
         let mut st = lock_recover(&self.state);
         let ticket = st.next_ticket;
         st.next_ticket += 1;
-        if st.now_serving != ticket {
-            // Park on a private condvar, registered in the same critical
-            // section that took the ticket (so a releasing grant always
-            // finds the next ticket holder at the queue front).
-            let cv = Arc::new(Condvar::new());
-            st.waiters.push_back((ticket, Arc::clone(&cv)));
-            while st.now_serving != ticket {
-                let Some(lease) = self.lease else {
-                    st = cv.wait(st).unwrap_or_else(PoisonError::into_inner);
-                    continue;
-                };
-                match st.holder {
-                    Some((held, since)) if since.elapsed() >= lease => {
-                        // Revoke the overstaying holder.
-                        debug_assert_eq!(held, st.now_serving, "holder is always now_serving");
-                        st.holder = None;
-                        st.now_serving += 1;
-                        let lag = since.elapsed().saturating_sub(lease);
-                        {
-                            let mut stats = lock_recover(&self.stats);
-                            stats.revocations += 1;
-                            stats
-                                .revoke_lag
-                                .record(lag.as_nanos().min(u64::MAX as u128) as Nanos);
-                        }
-                        // The revoker need not be the front ticket: hand
-                        // the gate to whoever is (unless it is us — the
-                        // loop condition takes care of that case).
-                        if st.now_serving != ticket {
-                            if let Some((_, front)) = st.waiters.front() {
-                                let front = Arc::clone(front);
-                                front.notify_one();
-                            }
-                        }
+        if st.holder.is_none() && st.baton.is_none() && st.waiters.is_empty() {
+            // Idle gate: admit immediately (no arbitration possible with
+            // nobody else in sight, but the grant still counts toward
+            // the class's share).
+            let granted_at = Instant::now();
+            st.holder = Some((ticket, granted_at));
+            st.arbiter.on_grant(class);
+            drop(st);
+            self.record_admit(class, arrived.elapsed());
+            return GateGrant { gate: self, granted_at, ticket };
+        }
+        // Park on a private condvar, registered in the same critical
+        // section that took the ticket (so a releasing grant always sees
+        // every earlier arrival in its arbitration snapshot).
+        let cv = Arc::new(Condvar::new());
+        let deadline_ns = self
+            .class_deadline
+            .get(class)
+            .copied()
+            .flatten()
+            .map(|d| (self.epoch.elapsed() + d).as_nanos().min(u64::MAX as u128) as u64);
+        st.waiters.push_back(WaitEntry { ticket, class, deadline_ns, cv: Arc::clone(&cv) });
+        while st.baton != Some(ticket) {
+            let Some(lease) = self.lease else {
+                st = cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+                continue;
+            };
+            match st.holder {
+                Some((_, since)) if since.elapsed() >= lease => {
+                    // Revoke the overstaying holder. Its hold ends here:
+                    // the histogram entry is recorded at revocation —
+                    // one entry per grant even if the revoked grant is
+                    // never dropped, and no post-revocation inflation of
+                    // the hold time (the latent double-accounting ISSUE 8
+                    // closes).
+                    let held = since.elapsed();
+                    st.holder = None;
+                    let lag = held.saturating_sub(lease);
+                    {
+                        let mut stats = lock_recover(&self.stats);
+                        stats.hold.record(held.as_nanos().min(u64::MAX as u128) as Nanos);
+                        stats.revocations += 1;
+                        stats
+                            .revoke_lag
+                            .record(lag.as_nanos().min(u64::MAX as u128) as Nanos);
                     }
-                    Some((_, since)) => {
-                        // Sleep until this holder's lease deadline (a
-                        // release wakes the front sooner).
-                        let remaining = lease
-                            .saturating_sub(since.elapsed())
-                            .max(Duration::from_micros(100));
-                        let (g, _) = cv
-                            .wait_timeout(st, remaining)
-                            .unwrap_or_else(PoisonError::into_inner);
-                        st = g;
-                    }
-                    None => {
-                        // Between handoffs: the next admission sets the
-                        // holder; re-check at lease granularity in case
-                        // that wakeup is lost to a race.
-                        let (g, _) = cv
-                            .wait_timeout(st, lease)
-                            .unwrap_or_else(PoisonError::into_inner);
-                        st = g;
+                    // The revoker need not be the arbiter's pick: hand
+                    // the gate to whoever is (unless it is us — the loop
+                    // condition takes care of that case).
+                    if let Some(next) = issue_baton(&mut st) {
+                        if st.baton != Some(ticket) {
+                            next.notify_one();
+                        }
                     }
                 }
+                Some((_, since)) => {
+                    // Sleep until this holder's lease deadline (a
+                    // release wakes the arbiter's pick sooner).
+                    let remaining = lease
+                        .saturating_sub(since.elapsed())
+                        .max(Duration::from_micros(100));
+                    let (g, _) = cv
+                        .wait_timeout(st, remaining)
+                        .unwrap_or_else(PoisonError::into_inner);
+                    st = g;
+                }
+                None => {
+                    // Between handoffs: the baton holder admits itself
+                    // next; re-check at lease granularity in case that
+                    // wakeup is lost to a race.
+                    let (g, _) = cv
+                        .wait_timeout(st, lease)
+                        .unwrap_or_else(PoisonError::into_inner);
+                    st = g;
+                }
             }
-            // Admitted: retire our queue entry (at the front, by FIFO;
-            // scan defensively anyway — it is 0 or 1 positions deep).
-            if let Some(pos) = st.waiters.iter().position(|(t, _)| *t == ticket) {
-                st.waiters.remove(pos);
-            }
+        }
+        // Admitted: consume the baton and retire our queue entry.
+        st.baton = None;
+        if let Some(pos) = st.waiters.iter().position(|e| e.ticket == ticket) {
+            st.waiters.remove(pos);
         }
         let granted_at = Instant::now();
         st.holder = Some((ticket, granted_at));
         drop(st);
-        let waited = arrived.elapsed();
-        lock_recover(&self.stats)
-            .wait
-            .record(waited.as_nanos().min(u64::MAX as u128) as Nanos);
+        self.record_admit(class, arrived.elapsed());
         GateGrant { gate: self, granted_at, ticket }
     }
 
-    /// Release an admission, recording the hold time and waking the next
-    /// ticket in line (explicit form of dropping the grant).
+    fn record_admit(&self, class: usize, waited: Duration) {
+        let mut stats = lock_recover(&self.stats);
+        stats.wait.record(waited.as_nanos().min(u64::MAX as u128) as Nanos);
+        if stats.by_class.len() <= class {
+            stats.by_class.resize(class + 1, 0);
+        }
+        stats.by_class[class] += 1;
+    }
+
+    /// Release an admission, recording the hold time and waking the
+    /// arbiter's next pick (explicit form of dropping the grant).
     pub fn release(&self, grant: GateGrant<'_>) {
         debug_assert!(std::ptr::eq(self, grant.gate), "grant from another gate");
         drop(grant);
@@ -321,6 +442,14 @@ impl GpuGate {
     /// Run `f` under the gate (the synced strategy's shape).
     pub fn with<T>(&self, f: impl FnOnce() -> T) -> T {
         let grant = self.acquire();
+        let out = f();
+        self.release(grant);
+        out
+    }
+
+    /// [`GpuGate::with`] as tenant `class`.
+    pub fn with_class<T>(&self, class: usize, f: impl FnOnce() -> T) -> T {
+        let grant = self.acquire_class(class);
         let out = f();
         self.release(grant);
         out
@@ -341,6 +470,7 @@ impl Default for GpuGate {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::control::arbiter::parse_classes;
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Arc;
 
@@ -419,7 +549,7 @@ mod tests {
     #[test]
     fn panic_while_holding_grant_does_not_wedge_the_gate() {
         // Regression: the grant releases on drop during unwinding, so a
-        // client panicking mid-critical-section hands the FIFO to the
+        // client panicking mid-critical-section hands the gate to the
         // next waiter instead of hanging it (the old bare Mutex<()> path
         // poisoned; a non-RAII grant would deadlock).
         let gate = GpuGate::new();
@@ -435,10 +565,10 @@ mod tests {
 
     #[test]
     fn poisoned_state_mutex_does_not_wedge_waiters() {
-        // Regression (ISSUE 4): GateGrant::Drop used to skip the
-        // `now_serving` bump when the state mutex was poisoned, wedging
-        // every queued waiter forever. Poison the mutex deliberately and
-        // check the FIFO still hands off.
+        // Regression (ISSUE 4): GateGrant::Drop used to skip the handoff
+        // when the state mutex was poisoned, wedging every queued waiter
+        // forever. Poison the mutex deliberately and check the gate
+        // still hands off.
         let gate = Arc::new(GpuGate::new());
         {
             let gate = Arc::clone(&gate);
@@ -465,7 +595,7 @@ mod tests {
 
     #[test]
     fn single_wakeup_preserves_grant_order_and_histograms() {
-        // ISSUE 6 satellite: release wakes only the next ticket holder
+        // ISSUE 6 satellite: release wakes only the next grantee
         // (per-waiter condvars) instead of notify_all. Under sustained
         // contention the observable contract must be exactly what the
         // herd version produced: strict FIFO grant order, and wait/hold
@@ -513,6 +643,10 @@ mod tests {
             !s.render().contains("revocations"),
             "no revocation line without revocations"
         );
+        assert!(
+            !s.render().contains("by class"),
+            "no class line for a single-class gate"
+        );
     }
 
     #[test]
@@ -533,7 +667,7 @@ mod tests {
         assert_eq!(s.revocations, 1);
         assert_eq!(s.revoke_lag.count(), 1);
         assert!(s.render().contains("gate revocations: 1"), "{}", s.render());
-        // The revoked grant's Drop must NOT advance the FIFO again: the
+        // The revoked grant's Drop must NOT advance the queue again: the
         // gate still works, and grants line up (hung + waiter + this).
         drop(hung);
         gate.with(|| ());
@@ -570,6 +704,33 @@ mod tests {
     }
 
     #[test]
+    fn revoked_grant_records_exactly_one_hold_entry() {
+        // ISSUE 8 satellite: the pre-arbiter gate recorded the revoked
+        // holder's hold at its (arbitrarily late) Drop — inflating the
+        // hold time past the revocation, and never recording at all if
+        // the hung thread never dropped. Now the entry lands at
+        // revocation time: exactly one hold entry per grant, bounded by
+        // the revocation instant, whether or not Drop ever runs.
+        let gate = Arc::new(GpuGate::with_lease(std::time::Duration::from_millis(10)));
+        let hung = gate.acquire();
+        let waiter = {
+            let gate = Arc::clone(&gate);
+            std::thread::spawn(move || gate.with(|| ()))
+        };
+        waiter.join().unwrap();
+        // Hold entry already present BEFORE the revoked grant drops.
+        let s = gate.stats();
+        assert_eq!(s.revocations, 1);
+        assert_eq!(s.grants(), 2, "revoked hold recorded at revocation, not Drop");
+        // Keep the revoked grant alive well past its revocation, then
+        // drop it: the count must not move.
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        drop(hung);
+        assert_eq!(gate.stats().grants(), 2, "Drop of a revoked grant records nothing");
+        assert_eq!(gate.stats().wait.count(), 2, "one wait entry per grant too");
+    }
+
+    #[test]
     fn well_behaved_holders_are_never_revoked() {
         let gate = Arc::new(GpuGate::with_lease(std::time::Duration::from_millis(250)));
         let mut handles = Vec::new();
@@ -599,9 +760,71 @@ mod tests {
         b.with(|| ());
         let mut sb = b.stats();
         sb.revocations = 2;
+        sb.by_class = vec![1, 1];
         sa.merge(&sb);
         assert_eq!(sa.grants(), 3);
         assert_eq!(sa.wait.count(), 3);
         assert_eq!(sa.revocations, 2);
+        assert_eq!(sa.by_class, vec![2, 1], "class grants merge element-wise");
+    }
+
+    #[test]
+    fn edf_class_jumps_the_queue() {
+        // A deadline-bearing class admitted after a best-effort waiter
+        // must be granted first once the holder releases.
+        let classes = parse_classes("batch,rt:deadline=5").unwrap();
+        let gate = Arc::new(GpuGate::with_config(ArbiterKind::Edf, &classes, None));
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let first = gate.acquire_class(0);
+        let mut handles = Vec::new();
+        for (i, class) in [(0usize, 0usize), (1, 0), (2, 1)] {
+            let gate = Arc::clone(&gate);
+            let order = Arc::clone(&order);
+            handles.push(std::thread::spawn(move || {
+                let g = gate.acquire_class(class);
+                order.lock().unwrap().push(i);
+                gate.release(g);
+            }));
+            std::thread::sleep(std::time::Duration::from_millis(15));
+        }
+        gate.release(first);
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Waiter 2 (class rt, deadline) beats the two earlier batch
+        // waiters; those two then drain FIFO.
+        assert_eq!(*order.lock().unwrap(), vec![2, 0, 1]);
+        let s = gate.stats();
+        assert_eq!(s.by_class, vec![3, 1], "per-class grant counts");
+        assert!(s.render().contains("by class"), "{}", s.render());
+    }
+
+    #[test]
+    fn wrr_gate_balances_classes_by_weight() {
+        // Two classes at weights 2:1, three queued waiters (a, a, b):
+        // WRR grants a, then b (a's share is ahead), then a.
+        let classes = parse_classes("a:weight=2,b").unwrap();
+        let gate = Arc::new(GpuGate::with_config(ArbiterKind::Wrr, &classes, None));
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let first = gate.acquire_class(0);
+        let mut handles = Vec::new();
+        for (i, class) in [(0usize, 0usize), (1, 0), (2, 1)] {
+            let gate = Arc::clone(&gate);
+            let order = Arc::clone(&order);
+            handles.push(std::thread::spawn(move || {
+                let g = gate.acquire_class(class);
+                order.lock().unwrap().push(i);
+                gate.release(g);
+            }));
+            std::thread::sleep(std::time::Duration::from_millis(15));
+        }
+        gate.release(first);
+        for h in handles {
+            h.join().unwrap();
+        }
+        // `first` (class a) already consumed one share: b is the most
+        // underserved at the handoff, then a, a.
+        assert_eq!(*order.lock().unwrap(), vec![2, 0, 1]);
+        assert_eq!(gate.stats().by_class, vec![3, 1]);
     }
 }

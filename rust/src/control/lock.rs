@@ -22,11 +22,24 @@ pub enum LockClient {
     Callback(OpUid),
 }
 
+/// A queued waiter: who, with an arrival ticket and enqueue time so a
+/// pluggable [`Arbiter`](crate::control::arbiter::Arbiter) can order the
+/// queue by age (FIFO), class weight, or deadline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueuedWaiter {
+    pub client: LockClient,
+    /// Monotone arrival ticket (FIFO tie-break for every policy).
+    pub ticket: u64,
+    /// Simulated time the waiter joined the queue.
+    pub enqueued: Nanos,
+}
+
 /// Counting semaphore with FIFO waiters, instrumented for the traces.
 #[derive(Debug)]
 pub struct GpuLock {
     count: u32,
-    waiters: VecDeque<LockClient>,
+    waiters: VecDeque<QueuedWaiter>,
+    next_ticket: u64,
     /// Grant log: (time, client) — drives lock-occupancy metrics.
     pub grants: Vec<(Nanos, LockClient)>,
     /// Release log: (time).
@@ -45,6 +58,7 @@ impl GpuLock {
         Self {
             count,
             waiters: VecDeque::new(),
+            next_ticket: 0,
             grants: Vec::new(),
             releases: Vec::new(),
             max_waiters: 0,
@@ -67,7 +81,9 @@ impl GpuLock {
             self.grants.push((now, client));
             true
         } else {
-            self.waiters.push_back(client);
+            let ticket = self.next_ticket;
+            self.next_ticket += 1;
+            self.waiters.push_back(QueuedWaiter { client, ticket, enqueued: now });
             self.max_waiters = self.max_waiters.max(self.waiters.len());
             false
         }
@@ -84,11 +100,20 @@ impl GpuLock {
     /// If the semaphore has capacity and someone is waiting, grant FIFO.
     /// Returns the granted client (the engine routes the wakeup).
     pub fn grant_next(&mut self, now: Nanos) -> Option<LockClient> {
-        if self.count > 0 {
-            if let Some(client) = self.waiters.pop_front() {
+        self.grant_nth(0, now)
+    }
+
+    /// Positional grant: if the semaphore has capacity, grant the waiter
+    /// at queue position `pos` (as chosen by an arbiter over
+    /// [`GpuLock::queued_waiters`]). `grant_nth(0, _)` is exactly the
+    /// FIFO `grant_next`, so the golden traces are untouched when the
+    /// FIFO arbiter drives this.
+    pub fn grant_nth(&mut self, pos: usize, now: Nanos) -> Option<LockClient> {
+        if self.count > 0 && pos < self.waiters.len() {
+            if let Some(w) = self.waiters.remove(pos) {
                 self.count -= 1;
-                self.grants.push((now, client));
-                return Some(client);
+                self.grants.push((now, w.client));
+                return Some(w.client);
             }
         }
         None
@@ -104,12 +129,22 @@ impl GpuLock {
 
     /// The next waiter in line (wake-latency selection).
     pub fn head_waiter(&self) -> Option<LockClient> {
-        self.waiters.front().copied()
+        self.waiters.front().map(|w| w.client)
+    }
+
+    /// The waiter at queue position `pos`, if any (peek, no state change).
+    pub fn waiter_at(&self, pos: usize) -> Option<LockClient> {
+        self.waiters.get(pos).map(|w| w.client)
+    }
+
+    /// Snapshot of the wait queue in arrival order, for arbiter input.
+    pub fn queued_waiters(&self) -> impl Iterator<Item = &QueuedWaiter> {
+        self.waiters.iter()
     }
 
     /// Remove a queued waiter (used only by teardown paths in tests).
     pub fn cancel_waiter(&mut self, client: LockClient) -> bool {
-        if let Some(pos) = self.waiters.iter().position(|c| *c == client) {
+        if let Some(pos) = self.waiters.iter().position(|w| w.client == client) {
             self.waiters.remove(pos);
             true
         } else {
@@ -186,6 +221,31 @@ mod tests {
         l.acquire(LockClient::Host(AppId(1)), 0);
         l.acquire(LockClient::Host(AppId(2)), 0);
         assert_eq!(l.max_waiters, 2);
+    }
+
+    #[test]
+    fn positional_grant_and_queue_snapshot() {
+        let mut l = GpuLock::new();
+        assert!(l.acquire(LockClient::Host(AppId(0)), 0));
+        assert!(!l.acquire(LockClient::Host(AppId(1)), 5));
+        assert!(!l.acquire(LockClient::Host(AppId(2)), 9));
+        let q: Vec<QueuedWaiter> = l.queued_waiters().copied().collect();
+        assert_eq!(q.len(), 2);
+        assert_eq!(q[0].ticket, 0);
+        assert_eq!(q[0].enqueued, 5);
+        assert_eq!(q[1].ticket, 1);
+        assert_eq!(q[1].enqueued, 9);
+        assert_eq!(l.waiter_at(1), Some(LockClient::Host(AppId(2))));
+        // No capacity yet: positional grant refuses like grant_next.
+        assert_eq!(l.grant_nth(1, 10), None);
+        l.release(11);
+        // An arbiter may grant out of FIFO order.
+        assert_eq!(l.grant_nth(1, 12), Some(LockClient::Host(AppId(2))));
+        assert_eq!(l.head_waiter(), Some(LockClient::Host(AppId(1))));
+        // Out-of-range position never grants.
+        l.release(13);
+        assert_eq!(l.grant_nth(7, 14), None);
+        assert_eq!(l.grant_nth(0, 15), Some(LockClient::Host(AppId(1))));
     }
 
     #[test]

@@ -15,8 +15,13 @@
 //! policies, and SLO accounting measured from arrival (DESIGN.md §9).
 //! The [`fault`] module closes the loop on failure: deterministic fault
 //! injection, request retries, per-shard health breakers, and the gate's
-//! lease watchdog accounting (DESIGN.md §12).
+//! lease watchdog accounting (DESIGN.md §12). The [`arbiter`] module
+//! extracts the grant-ordering decision behind a pluggable [`Arbiter`]
+//! trait — FIFO (golden-pinned), weighted round-robin, credit-based
+//! admission backpressure, earliest-deadline-first — shared by the live
+//! gate and the simulator's lock wake path (DESIGN.md §13).
 
+pub mod arbiter;
 pub mod fault;
 pub mod fleet;
 pub mod gate;
@@ -26,17 +31,21 @@ pub mod serving;
 pub mod traffic;
 pub mod worker;
 
+pub use arbiter::{
+    class_of, make_arbiter, parse_classes, render_classes, Arbiter, ArbiterKind, CreditBank,
+    CreditSnapshot, TenantClass, Waiter,
+};
 pub use fault::{
     panic_msg, Breaker, FaultPlan, FaultReport, FaultSpec, FaultyBackend, HealthSnapshot,
     HealthState, RequestTag, RetryPolicy, ShardHealth,
 };
 pub use fleet::{serve_fleet, FleetReport, FleetSpec, Placement, ShardReport, ShardRouter};
 pub use gate::{GateGrant, GateStats, GpuGate};
-pub use lock::{GpuLock, LockClient};
+pub use lock::{GpuLock, LockClient, QueuedWaiter};
 pub use policy::{AccessPolicy, Admission, Arbitration, OrderedOpRule};
 pub use serving::{
-    serve, serve_dna, ManifestBackend, PayloadExecutor, ResolvedPayload, ServeBackend,
-    ServeReport, ServeSpec, SyntheticBackend,
+    serve, serve_dna, ClassReport, ManifestBackend, PayloadExecutor, ResolvedPayload,
+    ServeBackend, ServeReport, ServeSpec, SyntheticBackend,
 };
 pub use traffic::{
     AdmissionQueue, ArrivalProcess, ShedPolicy, TrafficReport, TrafficSpec,

@@ -27,6 +27,7 @@
 //! process with its own CUDA context.
 
 use crate::config::StrategyKind;
+use crate::control::arbiter::{class_of, ArbiterKind, CreditBank, CreditSnapshot, TenantClass};
 use crate::control::fault::{panic_msg, FaultPlan, FaultReport, RequestTag, RetryPolicy};
 use crate::control::gate::{GateStats, GpuGate};
 use crate::control::policy::{AccessPolicy, Admission};
@@ -289,6 +290,15 @@ pub struct ServeSpec {
     /// [`crate::control::fleet`] so fault selectors and per-shard
     /// injection counters address the right shard).
     pub shard: usize,
+    /// Grant-ordering policy for the gate (`--arbiter`). FIFO — the
+    /// paper's shape — unless asked otherwise.
+    pub arbiter: ArbiterKind,
+    /// Tenant classes (`--classes`). Empty = one implicit class. Clients
+    /// (closed loop) and arrival sequence numbers (open loop) are dealt
+    /// round-robin over the list by [`class_of`] — the same rule the
+    /// simulator applies to application indices, which is what makes
+    /// sim-vs-serving starvation rankings comparable.
+    pub classes: Vec<TenantClass>,
 }
 
 impl ServeSpec {
@@ -304,6 +314,8 @@ impl ServeSpec {
             retry: RetryPolicy::default(),
             lease_ms: None,
             shard: 0,
+            arbiter: ArbiterKind::Fifo,
+            classes: Vec::new(),
         }
     }
 
@@ -352,6 +364,16 @@ impl ServeSpec {
         self
     }
 
+    pub fn with_arbiter(mut self, arbiter: ArbiterKind) -> Self {
+        self.arbiter = arbiter;
+        self
+    }
+
+    pub fn with_classes(mut self, classes: Vec<TenantClass>) -> Self {
+        self.classes = classes;
+        self
+    }
+
     pub(crate) fn validate(&self) -> Result<()> {
         if self.clients == 0 || self.requests == 0 {
             return Err(anyhow!("serve requires clients > 0 and requests > 0"));
@@ -382,6 +404,98 @@ impl PayloadReport {
     }
 }
 
+/// Per-tenant-class breakdown: latency, goodput and SLO attainment for
+/// one configured [`TenantClass`] (DESIGN.md §13). Starvation shows up
+/// here — a starved class keeps its `offered` count but loses
+/// `completed`/`within_slo`, cratering its attainment.
+#[derive(Debug, Clone)]
+pub struct ClassReport {
+    pub name: String,
+    /// Per-request latency distribution for this class, ms.
+    pub latency: LatencyStats,
+    /// Requests offered to this class (arrivals under open loop; the
+    /// class's clients x requests under closed loop).
+    pub offered: usize,
+    /// Requests completed for this class.
+    pub completed: usize,
+    /// Completions within the class SLO.
+    pub within_slo: usize,
+    /// The SLO this class was judged against, ms (its own `slo=`
+    /// override, else the run-level [`TrafficSpec::slo_ms`]).
+    pub slo_ms: f64,
+}
+
+impl ClassReport {
+    /// SLO-attaining completions per second of wall clock.
+    pub fn goodput(&self, wall_s: f64) -> f64 {
+        self.within_slo as f64 / wall_s.max(1e-9)
+    }
+
+    /// Share of *offered* requests completed within SLO. Judging against
+    /// offered (not completed) traffic means shed and starved requests
+    /// count against the class — which is the point.
+    pub fn slo_attainment_pct(&self) -> f64 {
+        if self.offered == 0 {
+            return 100.0;
+        }
+        self.within_slo as f64 / self.offered as f64 * 100.0
+    }
+
+    /// Fold another shard's breakdown of the *same* class into this one
+    /// (fleet assembly; entries are matched by position, since every
+    /// shard runs the same class list).
+    pub fn merge(&mut self, other: &ClassReport) {
+        self.latency.merge(&other.latency);
+        self.latency.seal();
+        self.offered += other.offered;
+        self.completed += other.completed;
+        self.within_slo += other.within_slo;
+    }
+}
+
+/// Fold per-class samples `(class, latency ms)` into [`ClassReport`]s
+/// (shared by the closed-loop, open-loop, and fleet assembly paths —
+/// one accounting, three callers, so per-class SLO math can't diverge).
+pub(crate) fn build_class_reports(
+    classes: &[TenantClass],
+    samples: Vec<Sample>,
+    offered: &[usize],
+    default_slo_ms: f64,
+    exact: bool,
+) -> Vec<ClassReport> {
+    if classes.is_empty() {
+        return Vec::new();
+    }
+    let slo: Vec<f64> = classes.iter().map(|c| c.slo_ms.unwrap_or(default_slo_ms)).collect();
+    let mut lat: Vec<LatencyStats> = vec![LatencyStats::new(exact); classes.len()];
+    let mut completed = vec![0usize; classes.len()];
+    let mut within = vec![0usize; classes.len()];
+    for (class, ms) in samples {
+        let c = class.min(classes.len() - 1);
+        completed[c] += 1;
+        if ms <= slo[c] {
+            within[c] += 1;
+        }
+        lat[c].record(ms);
+    }
+    classes
+        .iter()
+        .zip(lat)
+        .enumerate()
+        .map(|(c, (tc, mut l))| {
+            l.seal();
+            ClassReport {
+                name: tc.name.clone(),
+                latency: l,
+                offered: offered.get(c).copied().unwrap_or(completed[c]),
+                completed: completed[c],
+                within_slo: within[c],
+                slo_ms: slo[c],
+            }
+        })
+        .collect()
+}
+
 /// Result of a serving run: pooled + per-payload latency distributions,
 /// throughput, and (for gated strategies) the gate's wait/hold
 /// histograms. Aggregate across shards with
@@ -400,8 +514,14 @@ pub struct ServeReport {
     pub latency: LatencyStats,
     /// Per-payload breakdowns (one entry per distinct served payload).
     pub per_payload: Vec<PayloadReport>,
+    /// Per-tenant-class breakdowns (empty unless classes are configured).
+    pub classes: Vec<ClassReport>,
     /// Gate wait/hold statistics (None for ungated strategies).
     pub gate: Option<GateStats>,
+    /// Credit-bank counters at run end (credit arbiter, open loop only);
+    /// `conserved()` must hold and every class must end with zero
+    /// outstanding credits — pinned by `tests/arbitration.rs`.
+    pub credits: Option<CreditSnapshot>,
     /// Traffic/SLO accounting (Some for open-loop runs).
     pub traffic: Option<TrafficReport>,
     /// Fault/recovery accounting (Some when a fault plan was active or
@@ -455,6 +575,20 @@ impl ServeReport {
                     p.latency.quantile(0.95),
                 ));
             }
+        }
+        for c in &self.classes {
+            out.push_str(&format!(
+                "\n  class {:<8} completed={}/{} goodput {:.1}/s; \
+                 p50={:.2} p95={:.2} ms; SLO {:.0} ms attainment {:.1}%",
+                c.name,
+                c.completed,
+                c.offered,
+                c.goodput(self.wall_s),
+                c.latency.quantile(0.50),
+                c.latency.quantile(0.95),
+                c.slo_ms,
+                c.slo_attainment_pct(),
+            ));
         }
         if let Some(g) = &self.gate {
             for line in g.render().lines() {
@@ -574,9 +708,11 @@ pub fn serve(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<ServeReport
         let mut handles = Vec::new();
         for c in 0..spec.clients {
             let slot = c % resolved.len();
+            let class = class_of(c, spec.classes.len());
             let rp = &resolved[slot];
             let gate = gate.as_ref();
-            handles.push(s.spawn(move || run_client(spec, backend, policy, c, slot, rp, gate)));
+            handles
+                .push(s.spawn(move || run_client(spec, backend, policy, c, slot, class, rp, gate)));
         }
         handles
             .into_iter()
@@ -588,10 +724,16 @@ pub fn serve(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<ServeReport
     });
     let wall_s = t0.elapsed().as_secs_f64();
 
+    let k = spec.classes.len();
     let mut samples = Vec::new();
+    let mut class_samples: Vec<Sample> = Vec::new();
     let mut fault = FaultReport::default();
-    for r in joined {
+    for (c, r) in joined.into_iter().enumerate() {
         let (s, f) = r?;
+        if k > 0 {
+            let class = class_of(c, k);
+            class_samples.extend(s.iter().map(|&(_, ms)| (class, ms)));
+        }
         samples.extend(s);
         fault.merge(&f);
     }
@@ -604,6 +746,19 @@ pub fn serve(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<ServeReport
     }
     let fault = (backend.fault_plan().is_some() || !fault.is_empty()).then_some(fault);
     let (latency, per_payload) = build_latency_stats(samples, &spec.payloads, spec.exact_quantiles);
+    let mut offered = vec![0usize; k];
+    if k > 0 {
+        for c in 0..spec.clients {
+            offered[class_of(c, k)] += spec.requests;
+        }
+    }
+    let classes = build_class_reports(
+        &spec.classes,
+        class_samples,
+        &offered,
+        spec.traffic.slo_ms,
+        spec.exact_quantiles,
+    );
     Ok(ServeReport {
         strategy: spec.strategy,
         clients: spec.clients,
@@ -612,7 +767,9 @@ pub fn serve(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<ServeReport
         wall_s,
         latency,
         per_payload,
+        classes,
         gate: gate_stats,
+        credits: None,
         traffic: None,
         fault,
     })
@@ -624,10 +781,11 @@ pub(crate) fn make_gate(spec: &ServeSpec, policy: AccessPolicy) -> Option<GpuGat
     if !policy.gated() {
         return None;
     }
-    Some(match spec.lease_ms {
-        Some(ms) => GpuGate::with_lease(Duration::from_millis(ms)),
-        None => GpuGate::new(),
-    })
+    Some(GpuGate::with_config(
+        spec.arbiter,
+        &spec.classes,
+        spec.lease_ms.map(Duration::from_millis),
+    ))
 }
 
 /// One failed execution attempt: the error plus whether it was a panic
@@ -699,12 +857,14 @@ pub(crate) fn execute_faulted(
 }
 
 /// One client: interprets the policy's admission plan with real threads.
+#[allow(clippy::too_many_arguments)]
 fn run_client(
     spec: &ServeSpec,
     backend: &dyn ServeBackend,
     policy: AccessPolicy,
     client: usize,
     slot: usize,
+    class: usize,
     rp: &ResolvedPayload,
     gate: Option<&GpuGate>,
 ) -> Result<(Vec<Sample>, FaultReport)> {
@@ -757,14 +917,14 @@ fn run_client(
             // collapse into the call), release.
             let exec = backend.executor()?;
             if let Some(g) = gate {
-                g.with(|| check_out(rp, &exec.execute(rp.index, &rp.base_inputs)?))?;
+                g.with_class(class, || check_out(rp, &exec.execute(rp.index, &rp.base_inputs)?))?;
             }
             let mut out = Vec::with_capacity(spec.requests);
             let mut r = 0;
             while r < spec.requests {
                 let burst = spec.batch.min(spec.requests - r);
                 let tb = Instant::now();
-                let grant = gate.map(|g| g.acquire());
+                let grant = gate.map(|g| g.acquire_class(class));
                 // The grant MUST be released even on failure, or every
                 // other client would deadlock in the FIFO gate.
                 let mut burst_result = Ok(());
@@ -800,13 +960,13 @@ fn run_client(
         Admission::CallbackBracket => {
             // Alg. 3: acquire/exec/release ride the client's stream as
             // deferred jobs; the host thread never blocks per request.
-            stream_client(spec, backend, client, slot, rp, gate, false)
+            stream_client(spec, backend, client, slot, class, rp, gate, false)
         }
         Admission::DeferToWorker => {
             // Alg. 5-6: the worker owns the engine and serialises under
             // the gate; the host blocks awaiting each batch (Alg. 7's
             // drain shape at batch granularity).
-            stream_client(spec, backend, client, slot, rp, gate, true)
+            stream_client(spec, backend, client, slot, class, rp, gate, true)
         }
     }
 }
@@ -814,11 +974,13 @@ fn run_client(
 /// Shared machinery for the deferred strategies: a stream thread that
 /// owns the executor and processes FIFO jobs, holding the gate grant
 /// across the Acquire..Release bracket.
+#[allow(clippy::too_many_arguments)]
 fn stream_client(
     spec: &ServeSpec,
     backend: &dyn ServeBackend,
     client: usize,
     slot: usize,
+    class: usize,
     rp: &ResolvedPayload,
     gate: Option<&GpuGate>,
     blocking: bool,
@@ -833,7 +995,7 @@ fn stream_client(
     let (tx, rx) = mpsc::sync_channel::<StreamJob>(depth);
     let (done_tx, done_rx) = mpsc::channel::<()>();
     std::thread::scope(|s| -> Result<(Vec<Sample>, FaultReport)> {
-        let stream = s.spawn(move || run_stream(spec, backend, gate, rx, done_tx));
+        let stream = s.spawn(move || run_stream(spec, backend, class, gate, rx, done_tx));
         // Feed the stream; a send/recv failure means the stream thread
         // died — its own Result (joined below) carries the real cause.
         let feed = || -> Result<()> {
@@ -903,6 +1065,7 @@ fn stream_client(
 fn run_stream(
     spec: &ServeSpec,
     backend: &dyn ServeBackend,
+    class: usize,
     gate: Option<&GpuGate>,
     rx: mpsc::Receiver<StreamJob>,
     done_tx: mpsc::Sender<()>,
@@ -918,7 +1081,7 @@ fn run_stream(
             StreamJob::Acquire => {
                 if failure.is_none() {
                     if let Some(g) = gate {
-                        grant = Some(g.acquire());
+                        grant = Some(g.acquire_class(class));
                     }
                 }
             }
@@ -999,12 +1162,18 @@ pub(crate) struct Pending {
     /// Attempt number: 0 at generation, +1 per retry (a re-routed
     /// request arrives in the next shard's queue with its count intact).
     pub attempt: u32,
+    /// Tenant class (index into `ServeSpec::classes`; 0 when unclassed).
+    /// Assigned once at generation by [`class_of`] and carried across
+    /// retries and re-routes — the class owns the request for life.
+    pub class: usize,
 }
 
 /// What one open-loop worker brings home.
 #[derive(Debug, Default)]
 pub(crate) struct OpenWorkerOut {
     pub samples: Vec<Sample>,
+    /// Per-class samples `(class, latency ms)` (empty when unclassed).
+    pub class_samples: Vec<Sample>,
     /// Arrival-to-dequeue delay per dequeued request (ns).
     pub queue_delay: Histogram,
     /// Requests dropped at dequeue (timeout shed policy).
@@ -1019,6 +1188,8 @@ pub(crate) struct OpenWorkerOut {
 /// Aggregated outcome of a pool of open-loop workers (one shard's worth).
 pub(crate) struct OpenOutcome {
     pub samples: Vec<Sample>,
+    /// Per-class samples `(class, latency ms)` (empty when unclassed).
+    pub class_samples: Vec<Sample>,
     pub queue_delay: Histogram,
     pub timed_out: usize,
     /// Terminal request failures (conservation: these are offered
@@ -1040,12 +1211,14 @@ pub(crate) struct OpenOutcome {
 /// never diverge between them).
 pub(crate) fn fold_open_outs(outs: Vec<OpenWorkerOut>, slo_ms: f64) -> OpenOutcome {
     let mut samples = Vec::new();
+    let mut class_samples = Vec::new();
     let mut queue_delay = Histogram::new();
     let (mut timed_out, mut failed) = (0usize, 0usize);
     let mut fault = FaultReport::default();
     let mut error = None;
     for o in outs {
         samples.extend(o.samples);
+        class_samples.extend(o.class_samples);
         queue_delay.merge(&o.queue_delay);
         timed_out += o.timed_out;
         failed += o.failed;
@@ -1055,7 +1228,7 @@ pub(crate) fn fold_open_outs(outs: Vec<OpenWorkerOut>, slo_ms: f64) -> OpenOutco
         }
     }
     let within_slo = samples.iter().filter(|(_, ms)| *ms <= slo_ms).count();
-    OpenOutcome { samples, queue_delay, timed_out, failed, within_slo, fault, error }
+    OpenOutcome { samples, class_samples, queue_delay, timed_out, failed, within_slo, fault, error }
 }
 
 /// Everything an open-loop worker needs (the parameter list outgrew a
@@ -1086,6 +1259,13 @@ pub(crate) struct OpenWorkerCtx<'a> {
     /// healthy shard. Returns false when no shard would take it (then
     /// the worker retries locally instead).
     pub requeue: Option<&'a (dyn Fn(Pending) -> bool + Sync)>,
+    /// Per-class credit bank (credit arbiter only). Credits are taken at
+    /// admission by the generator; [`OpenWorkerCtx::settle`] returns them
+    /// exactly once at terminal accounting.
+    pub credits: Option<&'a CreditBank>,
+    /// Number of configured tenant classes (0 = unclassed; suppresses
+    /// per-class sample recording).
+    pub classes: usize,
 }
 
 impl OpenWorkerCtx<'_> {
@@ -1110,6 +1290,20 @@ impl OpenWorkerCtx<'_> {
             f();
         }
     }
+
+    /// Terminal accounting for one request: return its class credit (the
+    /// one the generator took at admission) and fire the done hook. A
+    /// request that is retried or re-routed is NOT settled — it is still
+    /// in flight and its credit stays outstanding; a request whose grant
+    /// the lease watchdog revoked settles when it finally completes or
+    /// gives up, which is what keeps the credit conservation law intact
+    /// across revocations.
+    fn settle(&self, class: usize) {
+        if let Some(b) = self.credits {
+            b.put(class);
+        }
+        self.done();
+    }
 }
 
 /// An open-loop serving worker: drains an [`AdmissionQueue`], admitting
@@ -1133,7 +1327,9 @@ pub(crate) fn open_worker(ctx: &OpenWorkerCtx<'_>, warm: &Barrier) -> OpenWorker
         // through the gate so grant accounting matches the closed loop.
         let rp = &ctx.resolved[ctx.client % ctx.resolved.len()];
         let warmed = match ctx.gate {
-            Some(g) => g.with(|| exec.execute(rp.index, &rp.base_inputs)),
+            Some(g) => g.with_class(class_of(ctx.client, ctx.classes), || {
+                exec.execute(rp.index, &rp.base_inputs)
+            }),
             None => exec.execute(rp.index, &rp.base_inputs),
         };
         if let Err(e) = warmed.and_then(|r| check_out(rp, &r)) {
@@ -1151,8 +1347,8 @@ pub(crate) fn open_worker(ctx: &OpenWorkerCtx<'_>, warm: &Barrier) -> OpenWorker
                 return out;
             }
             out.failed += dropped.len();
-            for _ in 0..dropped.len() {
-                ctx.done();
+            for p in dropped {
+                ctx.settle(p.class);
             }
         }
     };
@@ -1175,7 +1371,7 @@ pub(crate) fn open_worker(ctx: &OpenWorkerCtx<'_>, warm: &Barrier) -> OpenWorker
             out.queue_delay.record(qd.as_nanos().min(u64::MAX as u128) as u64);
             if ctx.timeout.is_some_and(|t| qd > t) {
                 out.timed_out += 1;
-                ctx.done();
+                ctx.settle(p.class);
             } else {
                 ready.push(p);
             }
@@ -1183,7 +1379,10 @@ pub(crate) fn open_worker(ctx: &OpenWorkerCtx<'_>, warm: &Barrier) -> OpenWorker
         if ready.is_empty() {
             continue;
         }
-        let grant = ctx.gate.map(|g| g.acquire());
+        // One grant covers the whole burst; it rides under the class of
+        // the burst's head request (bursts can be class-mixed — the
+        // per-request class still drives samples and credits).
+        let grant = ctx.gate.map(|g| g.acquire_class(ready[0].class));
         // Failures collected here retry after the grant is gone.
         let mut retry_later: Vec<(Pending, ExecFailure)> = Vec::new();
         for p in ready {
@@ -1203,15 +1402,19 @@ pub(crate) fn open_worker(ctx: &OpenWorkerCtx<'_>, warm: &Barrier) -> OpenWorker
                         // PTB SM-share simulation (see run_client).
                         std::thread::sleep(t.elapsed().mul_f64(1.0 / ctx.share - 1.0));
                     }
-                    out.samples.push((p.slot, p.arrival_at.elapsed().as_secs_f64() * 1e3));
+                    let ms = p.arrival_at.elapsed().as_secs_f64() * 1e3;
+                    out.samples.push((p.slot, ms));
+                    if ctx.classes > 0 {
+                        out.class_samples.push((p.class, ms));
+                    }
                     if p.attempt > 0 {
                         // A re-routed request completing here closes its
                         // recovery (measured from arrival — the original
                         // failure instant stayed on the other shard).
-                        out.fault.record_recovery(p.arrival_at.elapsed().as_secs_f64() * 1e3);
+                        out.fault.record_recovery(ms);
                     }
                     ctx.on_success();
-                    ctx.done();
+                    ctx.settle(p.class);
                 }
                 Err(fail) => {
                     out.fault.record_failure(t.elapsed().as_secs_f64() * 1e3);
@@ -1252,7 +1455,7 @@ fn retry_pending(
             if !ctx.tolerate && out.error.is_none() {
                 out.error = Some(last.error);
             }
-            ctx.done();
+            ctx.settle(p.class);
             return;
         }
         // Re-route first: a different healthy shard owns the request
@@ -1263,6 +1466,7 @@ fn retry_pending(
                 seq: p.seq,
                 arrival_at: p.arrival_at,
                 attempt: p.attempt + 1,
+                class: p.class,
             };
             if requeue(candidate) {
                 out.fault.retried += 1;
@@ -1283,16 +1487,20 @@ fn retry_pending(
             seq: p.seq as u64,
             attempt: p.attempt,
         };
-        let grant = ctx.gate.map(|g| g.acquire());
+        let grant = ctx.gate.map(|g| g.acquire_class(p.class));
         let t = Instant::now();
         let result = execute_attempt(exec, rp, &inputs, tag);
         drop(grant);
         match result {
             Ok(()) => {
-                out.fault.record_recovery(p.arrival_at.elapsed().as_secs_f64() * 1e3);
-                out.samples.push((p.slot, p.arrival_at.elapsed().as_secs_f64() * 1e3));
+                let ms = p.arrival_at.elapsed().as_secs_f64() * 1e3;
+                out.fault.record_recovery(ms);
+                out.samples.push((p.slot, ms));
+                if ctx.classes > 0 {
+                    out.class_samples.push((p.class, ms));
+                }
                 ctx.on_success();
-                ctx.done();
+                ctx.settle(p.class);
                 return;
             }
             Err(fail) => {
@@ -1341,6 +1549,16 @@ fn serve_open_loop(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<Serve
     let total = spec.clients * spec.requests;
     let offsets = spec.traffic.arrivals.schedule_n(total, spec.traffic.seed);
     let queue: AdmissionQueue<Pending> = AdmissionQueue::new(spec.traffic.queue_cap);
+    let k = spec.classes.len();
+    // The credit arbiter's admission-side backpressure: one pool per
+    // class; an unbudgeted class defaults to the queue cap (exactly the
+    // old single-tenant bound, now charged per tenant).
+    let credits = (spec.arbiter == ArbiterKind::Credit).then(|| {
+        CreditBank::new(
+            &spec.classes,
+            u32::try_from(spec.traffic.queue_cap).unwrap_or(u32::MAX),
+        )
+    });
     let shed = AtomicUsize::new(0);
     let warm = Barrier::new(spec.clients + 1);
     let share = policy.sm_share(spec.clients);
@@ -1353,6 +1571,7 @@ fn serve_open_loop(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<Serve
         let mut handles = Vec::new();
         for c in 0..spec.clients {
             let (queue, gate, warm, resolved) = (&queue, gate.as_ref(), &warm, &resolved);
+            let credits = credits.as_ref();
             handles.push(s.spawn(move || {
                 let ctx = OpenWorkerCtx {
                     backend,
@@ -1369,6 +1588,8 @@ fn serve_open_loop(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<Serve
                     done: None,
                     health: None,
                     requeue: None,
+                    credits,
+                    classes: k,
                 };
                 open_worker(&ctx, warm)
             }));
@@ -1381,8 +1602,31 @@ fn serve_open_loop(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<Serve
             if arrival_at > now {
                 std::thread::sleep(arrival_at - now);
             }
-            let p = Pending { slot: seq % resolved.len(), seq, arrival_at, attempt: 0 };
+            let class = class_of(seq, k);
+            // Credit admission (credit arbiter): a class out of credits
+            // sheds — or waits, per the shed policy — HERE, before the
+            // shared queue, so one tenant's flood can't crowd out the
+            // others' admission. The credit returns at settle.
+            let granted = match (credits.as_ref(), spec.traffic.shed) {
+                (None, _) => true,
+                (Some(b), ShedPolicy::Block) => {
+                    b.take_blocking(class);
+                    true
+                }
+                (Some(b), ShedPolicy::Reject) => b.try_take(class),
+                (Some(b), ShedPolicy::Timeout { ms }) => {
+                    b.take_timeout(class, Duration::from_millis(ms))
+                }
+            };
+            if !granted {
+                shed.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            let p = Pending { slot: seq % resolved.len(), seq, arrival_at, attempt: 0, class };
             if !admit(&queue, p, spec.traffic.shed) {
+                if let Some(b) = credits.as_ref() {
+                    b.put(class);
+                }
                 shed.fetch_add(1, Ordering::Relaxed);
             }
         }
@@ -1405,6 +1649,19 @@ fn serve_open_loop(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<Serve
         return Err(e);
     }
     let (queue_delay, timed_out, within_slo) = (o.queue_delay, o.timed_out, o.within_slo);
+    let mut offered_by_class = vec![0usize; k];
+    if k > 0 {
+        for seq in 0..total {
+            offered_by_class[class_of(seq, k)] += 1;
+        }
+    }
+    let classes = build_class_reports(
+        &spec.classes,
+        o.class_samples,
+        &offered_by_class,
+        spec.traffic.slo_ms,
+        spec.exact_quantiles,
+    );
     let gate_stats = gate.map(|g| g.stats());
     let mut fault = o.fault;
     if let Some(plan) = backend.fault_plan() {
@@ -1425,7 +1682,9 @@ fn serve_open_loop(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<Serve
         wall_s,
         latency,
         per_payload,
+        classes,
         gate: gate_stats,
+        credits: credits.map(|b| b.snapshot()),
         traffic: Some(TrafficReport {
             arrivals: spec.traffic.arrivals,
             queue_cap: spec.traffic.queue_cap,
@@ -1541,7 +1800,9 @@ mod tests {
             wall_s: 1.0,
             latency: LatencyStats::new(true),
             per_payload: vec![],
+            classes: vec![],
             gate: None,
+            credits: None,
             traffic: None,
             fault: None,
         };

@@ -10,6 +10,7 @@
 use crate::apps::host::{HostPhase, HostState};
 use crate::apps::program::{CompiledStep, Program, RepeatMode};
 use crate::config::SimConfig;
+use crate::control::arbiter::{class_of, make_arbiter, Arbiter, Waiter};
 use crate::control::lock::{GpuLock, LockClient};
 use crate::control::policy::{AccessPolicy, Admission, Arbitration, OrderedOpRule};
 use crate::control::worker::{WorkerPhase, WorkerState};
@@ -247,6 +248,16 @@ pub struct Sim {
     /// One `GPU_LOCK` semaphore per shard: the paper's serialisation
     /// guarantee holds per GPU, never across GPUs.
     pub locks: Vec<GpuLock>,
+    /// Per-shard grant arbiter driving each lock's wake path (DESIGN.md
+    /// §13). FIFO (the default) picks queue position 0, reproducing
+    /// the pre-arbiter `grant_next` bit-for-bit — the golden traces
+    /// pin that.
+    arbiters: Vec<Box<dyn Arbiter>>,
+    /// QoS class of each application: `class_of(i, classes.len())` over
+    /// GLOBAL app indices — the sharded runner deals these from the
+    /// parent, never regenerates them from a sub-sim's local view, the
+    /// same rule the live serving path applies to clients/requests.
+    class_of_app: Vec<usize>,
     /// Per-shard SM banks (`sms[shard][sm]`).
     sms: Vec<Vec<SmState>>,
     /// Per-shard scheduler/copy-engine state.
@@ -412,6 +423,8 @@ impl Sim {
             sms: vec![vec![SmState::default(); num_sms]; num_gpus],
             rng_exec: root.child(0x45584543), // "EXEC"
             rng_stall: root.child(0x5354414c), // "STAL"
+            arbiters: (0..num_gpus).map(|_| make_arbiter(cfg.arbiter, &cfg.classes)).collect(),
+            class_of_app: (0..n).map(|i| class_of(i, cfg.classes.len())).collect(),
             cfg,
             now: 0,
             events: EventQueue::with_capacity(op_hint),
@@ -538,6 +551,10 @@ impl Sim {
             // (`k % serving_apps`, one seeded stream — DESIGN.md §9) is
             // preserved exactly under partitioning.
             for (j, &g) in globals.iter().enumerate() {
+                // Class identity follows the GLOBAL app index (the
+                // sub-sim recomputed it from local indices, which would
+                // scramble class membership across shards).
+                sub.class_of_app[j] = self.class_of_app[g];
                 sub.arrival_schedule[j] = std::mem::take(&mut self.arrival_schedule[g]);
                 // Fault schedules deal the same way: the parent computed
                 // them per GLOBAL app index (and the fleet's root seed),
@@ -840,12 +857,67 @@ impl Sim {
     // lock
     // ------------------------------------------------------------------
 
+    /// The QoS class of a lock client (callbacks map through their op's
+    /// owning application).
+    fn class_of_client(&self, client: LockClient) -> usize {
+        match client {
+            LockClient::Host(app) | LockClient::Worker(app) => self.class_of_app[app.0],
+            LockClient::Callback(op) => self.class_of_app[self.ops[op.0 as usize].app.0],
+        }
+    }
+
+    /// Which queued waiter the next grant on `shard` goes to, as a
+    /// position into the lock's arrival-order queue — the simulator
+    /// mirror of the live gate's `issue_baton` pick. FIFO-order
+    /// policies (and a lone waiter) short-circuit to position 0, so the
+    /// default config's hot path allocates nothing and is bit-identical
+    /// to the pre-arbiter engine.
+    fn pick_waiter(&self, shard: usize) -> usize {
+        let lock = &self.locks[shard];
+        if self.arbiters[shard].kind().is_fifo_order() || lock.num_waiters() <= 1 {
+            return 0;
+        }
+        let k = self.cfg.classes.len();
+        let snap: Vec<Waiter> = lock
+            .queued_waiters()
+            .map(|w| {
+                let class = self.class_of_client(w.client);
+                let deadline_ns = if k > 0 {
+                    self.cfg.classes[class]
+                        .deadline_ms
+                        .map(|d| w.enqueued + d.saturating_mul(1_000_000))
+                } else {
+                    None
+                };
+                Waiter { ticket: w.ticket, class, deadline_ns }
+            })
+            .collect();
+        self.arbiters[shard].pick(&snap).min(lock.num_waiters() - 1)
+    }
+
+    /// `sem_wait` on one shard's lock. A successful (barging) grant
+    /// still counts toward the client's class share — mirroring the
+    /// live gate's idle fast path, which also feeds `on_grant`.
+    fn lock_acquire(&mut self, shard: usize, client: LockClient) -> bool {
+        if self.locks[shard].acquire(client, self.now) {
+            let class = self.class_of_client(client);
+            self.arbiters[shard].on_grant(class);
+            true
+        } else {
+            false
+        }
+    }
+
     /// A sleeping waiter's wakeup on one shard's lock completes: grant if
     /// the count survived the barging window (`GpuLock::acquire` docs).
     /// One wake event is scheduled per release; the handoff latency is
-    /// the wake delay.
+    /// the wake delay. The arbiter chooses WHICH waiter takes the grant;
+    /// FIFO always picks the head.
     fn lock_wake(&mut self, shard: usize) {
-        let Some(client) = self.locks[shard].grant_next(self.now) else { return };
+        let pos = self.pick_waiter(shard);
+        let Some(client) = self.locks[shard].grant_nth(pos, self.now) else { return };
+        let class = self.class_of_client(client);
+        self.arbiters[shard].on_grant(class);
         match client {
             LockClient::Host(app) => {
                 let a = &mut self.apps[app.0];
@@ -875,7 +947,12 @@ impl Sim {
     /// cross-process futex latency.
     fn lock_release(&mut self, shard: usize) {
         self.locks[shard].release(self.now);
-        if let Some(head) = self.locks[shard].head_waiter() {
+        // Peek-only pick to classify the wake delay (who is *likely* to
+        // take the grant); the actual winner is re-picked at wake time,
+        // when the queue may have changed. Under FIFO both picks are the
+        // head, as before the arbiter existed.
+        let pos = self.pick_waiter(shard);
+        if let Some(head) = self.locks[shard].waiter_at(pos) {
             let delay = match head {
                 LockClient::Callback(_) => self.cfg.timing.cb_wake_ns,
                 _ => self.cfg.timing.lock_handoff_ns,
@@ -1022,7 +1099,7 @@ impl Sim {
                 // shard lock — isolation is per-GPU).
                 let shard = self.shard_of_app(app);
                 if !self.apps[app.0].holds_lock {
-                    if self.locks[shard].acquire(LockClient::Host(app), self.now) {
+                    if self.lock_acquire(shard, LockClient::Host(app)) {
                         self.apps[app.0].holds_lock = true;
                     } else {
                         let now = self.now;
@@ -1144,7 +1221,7 @@ impl Sim {
         match w.phase {
             WorkerPhase::Dequeuing(op) => {
                 let shard = self.shard_of_app(app);
-                if self.locks[shard].acquire(LockClient::Worker(app), self.now) {
+                if self.lock_acquire(shard, LockClient::Worker(app)) {
                     self.worker_lock_granted_inner(app, op);
                 } else {
                     self.workers[app.0].as_mut().unwrap().phase =
@@ -1392,7 +1469,7 @@ impl Sim {
         let shard = self.shard_of_op(op);
         match action {
             LockAction::Acquire => {
-                if self.locks[shard].acquire(LockClient::Callback(op), self.now) {
+                if self.lock_acquire(shard, LockClient::Callback(op)) {
                     self.events
                         .push(self.now + self.cfg.timing.cb_exec_ns, Event::CallbackDone(op));
                 }

@@ -19,6 +19,7 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 use cook::config::StrategyKind;
+use cook::control::arbiter::{parse_classes, ArbiterKind, TenantClass};
 use cook::control::fault::{FaultPlan, FaultSpec, FaultyBackend, RetryPolicy};
 use cook::control::fleet::{serve_fleet, FleetSpec, Placement};
 use cook::control::serving::{serve, ManifestBackend, ServeBackend, ServeSpec, SyntheticBackend};
@@ -90,6 +91,7 @@ fn print_usage() {
          \x20       [--queue-cap N] [--shed block|reject|timeout:MS] [--slo-ms X]\n\
          \x20       [--load-sweep R[,R...]] [--exact-quantiles]\n\
          \x20       [--faults SPEC] [--retries N] [--lease-ms MS]\n\
+         \x20       [--arbiter fifo|wrr|credit|edf] [--classes SPEC]\n\
          \x20       serve payload inferences through the access-control layer\n\
          \x20       (--sweep tabulates all strategies; --synthetic needs no artifacts;\n\
          \x20        --shards N routes clients across a fleet of per-GPU gates;\n\
@@ -101,7 +103,12 @@ fn print_usage() {
          \x20        --faults injects seeded chaos, e.g.\n\
          \x20        'error:p=0.01,hang:shard=2@req=500:ms=50,crash:payload=1@req=100';\n\
          \x20        --retries N retries failed requests with backoff; --lease-ms\n\
-         \x20        arms the gate-lease watchdog that revokes hung holders)\n\
+         \x20        arms the gate-lease watchdog that revokes hung holders;\n\
+         \x20        --arbiter picks the gate's grant order and --classes declares\n\
+         \x20        QoS tenant classes, e.g.\n\
+         \x20        'gold:weight=3:slo=20,free:credits=8:deadline=40' —\n\
+         \x20        clients/requests map to classes round-robin and the report\n\
+         \x20        adds per-class latency/goodput/SLO attainment)\n\
          \n\
          global options:\n\
          \x20 --sim-threads N   thread cap for the shard-parallel fleet engine\n\
@@ -356,6 +363,14 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         None => None,
     };
 
+    // QoS knobs (ISSUE 8): arbitration policy + tenant classes.
+    let arbiter: ArbiterKind = flag(rest, "--arbiter")
+        .unwrap_or("fifo")
+        .parse()
+        .map_err(|e: String| anyhow!(e))?;
+    let classes: Vec<TenantClass> = parse_classes(flag(rest, "--classes").unwrap_or(""))
+        .map_err(|e: String| anyhow!(e))?;
+
     // Robustness knobs (ISSUE 7): fault injection, retries, gate leases.
     let fault_spec: FaultSpec = flag(rest, "--faults")
         .unwrap_or("")
@@ -404,7 +419,18 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .with_requests(requests)
         .with_batch(batch)
         .with_traffic(traffic)
-        .with_exact_quantiles(exact_quantiles);
+        .with_exact_quantiles(exact_quantiles)
+        .with_arbiter(arbiter)
+        .with_classes(classes.clone());
+    if !classes.is_empty() {
+        println!(
+            "arbiter {arbiter}: {} tenant classes ({})",
+            classes.len(),
+            cook::control::arbiter::render_classes(&classes)
+        );
+    } else if arbiter != ArbiterKind::Fifo {
+        println!("arbiter {arbiter}: no classes declared; every client is class 0");
+    }
     if retries > 0 {
         base = base.with_retry(RetryPolicy { seed: seed_of(rest), ..RetryPolicy::with_budget(retries) });
     }

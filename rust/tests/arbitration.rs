@@ -1,0 +1,408 @@
+//! Arbitration law suite (ISSUE 8): QoS tiers behind the pluggable
+//! `Arbiter` trait.
+//!
+//! Laws pinned here:
+//! (a) the FIFO arbiter is bit-identical to the pre-refactor gate on a
+//!     seeded contention script — same grant order, same wait/hold
+//!     histogram entry counts;
+//! (b) WRR long-run grant shares converge to the class weights;
+//! (c) credit conservation — `taken == returned + outstanding` at every
+//!     observation point, including across lease revocations and
+//!     retries, and `outstanding == 0` once the run is terminal;
+//! (d) EDF grants in deadline order with FIFO tie-break;
+//! (e) no class starves beyond a bounded window under sustained
+//!     overload;
+//! plus thread-count invariance of the per-class ledger and the
+//! sim-vs-serving agreement on which class starves.
+
+use cook::config::{SimConfig, StrategyKind};
+use cook::control::arbiter::{
+    class_of, make_arbiter, parse_classes, ArbiterKind, TenantClass, Waiter, WeightedRoundRobin,
+};
+use cook::control::arbiter::Arbiter;
+use cook::control::fault::{FaultPlan, FaultyBackend, RetryPolicy};
+use cook::control::fleet::{serve_fleet, FleetSpec, Placement};
+use cook::control::gate::GpuGate;
+use cook::control::serving::{serve, ServeSpec, SyntheticBackend};
+use cook::control::traffic::{ArrivalProcess, ShedPolicy, TrafficSpec};
+use cook::gpu::Sim;
+use cook::util::AppId;
+use std::process::Command;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+fn cli() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_cook"))
+}
+
+fn open_traffic(rate_hz: f64, seed: u64) -> TrafficSpec {
+    TrafficSpec {
+        arrivals: ArrivalProcess::Poisson { rate_hz },
+        queue_cap: 64,
+        shed: ShedPolicy::Block,
+        slo_ms: 1_000.0,
+        seed,
+    }
+}
+
+fn chaos_backend(spec: &str, seed: u64) -> FaultyBackend<SyntheticBackend> {
+    let plan = Arc::new(FaultPlan::new(spec.parse().unwrap(), seed));
+    FaultyBackend::new(SyntheticBackend::new(100), plan)
+}
+
+// ---------------------------------------------------------------------
+// (a) FIFO golden pin vs the pre-refactor gate
+// ---------------------------------------------------------------------
+
+/// One seeded contention script: hold the gate, queue `n` waiters in a
+/// deterministic arrival order, release, record the admission order.
+fn contention_script(gate: &GpuGate, n: usize) -> Vec<usize> {
+    let order = Arc::new(Mutex::new(Vec::new()));
+    std::thread::scope(|s| {
+        let first = gate.acquire();
+        let mut handles = Vec::new();
+        for i in 0..n {
+            let order = Arc::clone(&order);
+            handles.push(s.spawn(move || {
+                let g = gate.acquire();
+                order.lock().unwrap().push(i);
+                std::thread::sleep(Duration::from_micros(200));
+                gate.release(g);
+            }));
+            // Let waiter i reach the queue before spawning i+1 so the
+            // arrival order — the script — is deterministic.
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        gate.release(first);
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+    Arc::try_unwrap(order).unwrap().into_inner().unwrap()
+}
+
+#[test]
+fn fifo_arbiter_is_identical_to_the_prerefactor_gate() {
+    // `GpuGate::new()` IS the pre-refactor construction (no classes, no
+    // lease); `with_config(Fifo, ..)` is the arbiter-driven path with
+    // tenant classes declared. Same script, same grant order, and the
+    // same number of wait/hold histogram entries — one per grant (the
+    // histogram *values* are wall-clock and not comparable).
+    let classes = parse_classes("gold:weight=3,free").unwrap();
+    let legacy = GpuGate::new();
+    let pinned = GpuGate::with_config(ArbiterKind::Fifo, &classes, None);
+    let a = contention_script(&legacy, 6);
+    let b = contention_script(&pinned, 6);
+    assert_eq!(a, (0..6).collect::<Vec<_>>(), "pre-refactor gate must grant in arrival order");
+    assert_eq!(a, b, "the FIFO arbiter changed the grant order");
+    let (sa, sb) = (legacy.stats(), pinned.stats());
+    assert_eq!(sa.grants(), 7);
+    assert_eq!(sa.grants(), sb.grants());
+    assert_eq!(sa.wait.count(), sb.wait.count());
+    assert_eq!(sa.hold.count(), sb.hold.count());
+    assert_eq!(sb.hold.count(), 7, "exactly one hold entry per grant");
+}
+
+// ---------------------------------------------------------------------
+// (b) WRR share convergence
+// ---------------------------------------------------------------------
+
+#[test]
+fn wrr_long_run_shares_converge_to_weights() {
+    let classes = parse_classes("gold:weight=5,silver:weight=3,free").unwrap();
+    let mut arb = WeightedRoundRobin::new(&classes);
+    // Sustained saturation: every class always has a waiter queued.
+    let waiters: Vec<Waiter> = (0..3)
+        .map(|c| Waiter { ticket: c as u64, class: c, deadline_ns: None })
+        .collect();
+    let rounds: u64 = 9_000;
+    for _ in 0..rounds {
+        let i = arb.pick(&waiters);
+        arb.on_grant(waiters[i].class);
+    }
+    let issued = arb.issued().to_vec();
+    assert_eq!(issued.iter().sum::<u64>(), rounds);
+    for (c, w) in [5u64, 3, 1].into_iter().enumerate() {
+        let expect = rounds * w / 9;
+        let got = issued[c];
+        assert!(
+            got.abs_diff(expect) <= 2,
+            "class {c}: {got} grants, expected ~{expect} (weights 5:3:1)"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// (c) credit conservation across revocations and retries
+// ---------------------------------------------------------------------
+
+#[test]
+fn credit_conservation_holds_through_revocations_and_retries() {
+    // Chaos on top of credit admission: a 40 ms gate-holder hang against
+    // a 5 ms lease (the watchdog must revoke) plus a background error
+    // rate absorbed by retries. A revoked or retried request keeps its
+    // credit outstanding until its terminal accounting — so at the end
+    // every class's ledger must balance to zero outstanding.
+    let classes = parse_classes("gold:credits=3,free:credits=2").unwrap();
+    let spec = ServeSpec::new(StrategyKind::Worker, "dna")
+        .with_clients(4)
+        .with_requests(30)
+        .with_traffic(open_traffic(4_000.0, 13))
+        .with_retry(RetryPolicy { budget: 2, base_ms: 0.1, cap_ms: 0.5, seed: 13 })
+        .with_lease_ms(5)
+        .with_arbiter(ArbiterKind::Credit)
+        .with_classes(classes);
+    let backend = chaos_backend("error:p=0.05,hang:req=3:ms=40", 13);
+    let r = serve(&spec, &backend).unwrap();
+    let t = r.traffic.as_ref().expect("open-loop run must report traffic");
+    assert!(t.accounted(), "{t:?}");
+    let f = r.fault.as_ref().expect("faulted run must carry a FaultReport");
+    assert!(f.revocations >= 1, "the 40 ms hang must trip the 5 ms lease");
+    let credits = r.credits.as_ref().expect("the credit arbiter must report its bank");
+    assert_eq!(credits.total, vec![3, 2], "per-class budgets from the spec");
+    assert!(credits.conserved(), "conservation law violated: {credits:?}");
+    for c in 0..credits.total.len() {
+        assert!(credits.taken[c] > 0, "class {c} never took a credit: {credits:?}");
+        assert_eq!(credits.outstanding(c), 0, "class {c} leaked credits: {credits:?}");
+        assert_eq!(credits.available[c], credits.total[c]);
+    }
+    // Render surfaces the per-class rows.
+    let text = r.render();
+    assert!(text.contains("class gold"), "{text}");
+    assert!(text.contains("class free"), "{text}");
+}
+
+// ---------------------------------------------------------------------
+// (d) EDF deadline order with FIFO tie-break
+// ---------------------------------------------------------------------
+
+#[test]
+fn edf_orders_by_deadline_with_fifo_tiebreak() {
+    let arb = make_arbiter(ArbiterKind::Edf, &[]);
+    let w = |ticket, deadline_ns| Waiter { ticket, class: 0, deadline_ns };
+    // Earliest absolute deadline wins regardless of arrival order.
+    assert_eq!(arb.pick(&[w(0, Some(900)), w(1, Some(200)), w(2, Some(500))]), 1);
+    // Deadline-less waiters rank after every deadlined one.
+    assert_eq!(arb.pick(&[w(0, None), w(1, Some(10_000))]), 1);
+    // Equal deadlines break FIFO (first in arrival order wins) ...
+    assert_eq!(arb.pick(&[w(3, Some(500)), w(4, Some(500)), w(5, None)]), 0);
+    // ... and so do all-deadline-less queues.
+    assert_eq!(arb.pick(&[w(7, None), w(8, None)]), 0);
+}
+
+// ---------------------------------------------------------------------
+// (e) bounded starvation window under sustained overload
+// ---------------------------------------------------------------------
+
+#[test]
+fn wrr_never_starves_a_class_beyond_a_bounded_window() {
+    // Both classes permanently queued (sustained overload). The weight-1
+    // class must land a grant at least once in every window of
+    // (w0 + w1) consecutive grants.
+    let classes = parse_classes("gold:weight=7,free").unwrap();
+    let mut arb = WeightedRoundRobin::new(&classes);
+    let waiters = [
+        Waiter { ticket: 0, class: 0, deadline_ns: None },
+        Waiter { ticket: 1, class: 1, deadline_ns: None },
+    ];
+    let window = 8; // w0 + w1
+    let mut since_free = 0usize;
+    for _ in 0..5_000 {
+        let i = arb.pick(&waiters);
+        arb.on_grant(waiters[i].class);
+        if waiters[i].class == 1 {
+            since_free = 0;
+        } else {
+            since_free += 1;
+            assert!(since_free < window, "free class starved for {since_free} grants");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// determinism: the per-class ledger across COOK_THREADS
+// ---------------------------------------------------------------------
+
+type Ledger = (Vec<String>, Vec<usize>, Vec<usize>, Vec<u64>, Vec<u64>);
+
+/// Structural per-class outcome of one single-shard credit run: class
+/// names, offered, completed, credits taken/returned. All are pure
+/// functions of the spec (Block admission, no faults), never of thread
+/// scheduling or wall-clock timing.
+fn class_ledger() -> Ledger {
+    let classes = parse_classes("gold:weight=3:credits=4,free:credits=3").unwrap();
+    let spec = ServeSpec::new(StrategyKind::Worker, "dna")
+        .with_clients(4)
+        .with_requests(25)
+        .with_traffic(open_traffic(5_000.0, 17))
+        .with_arbiter(ArbiterKind::Credit)
+        .with_classes(classes);
+    let r = serve(&spec, &SyntheticBackend::new(100)).unwrap();
+    let credits = r.credits.as_ref().expect("credit run must snapshot its bank");
+    assert!(credits.conserved(), "{credits:?}");
+    (
+        r.classes.iter().map(|c| c.name.clone()).collect(),
+        r.classes.iter().map(|c| c.offered).collect(),
+        r.classes.iter().map(|c| c.completed).collect(),
+        credits.taken.clone(),
+        credits.returned.clone(),
+    )
+}
+
+/// The same ledger from a two-shard fleet run — one credit bank shared
+/// by every shard's admission.
+fn fleet_class_ledger() -> Ledger {
+    let classes = parse_classes("gold:credits=4,free:credits=3").unwrap();
+    let base = ServeSpec::new(StrategyKind::Worker, "dna")
+        .with_clients(4)
+        .with_requests(25)
+        .with_traffic(open_traffic(5_000.0, 19))
+        .with_arbiter(ArbiterKind::Credit)
+        .with_classes(classes);
+    let fleet = FleetSpec::new(base, 2, Placement::RoundRobin);
+    let r = serve_fleet(&fleet, &SyntheticBackend::new(100)).unwrap();
+    let credits = r.credits.as_ref().expect("fleet credit run must snapshot its bank");
+    assert!(credits.conserved(), "{credits:?}");
+    (
+        r.classes.iter().map(|c| c.name.clone()).collect(),
+        r.classes.iter().map(|c| c.offered).collect(),
+        r.classes.iter().map(|c| c.completed).collect(),
+        credits.taken.clone(),
+        credits.returned.clone(),
+    )
+}
+
+#[test]
+fn class_ledger_is_thread_count_invariant() {
+    // COOK_THREADS / COOK_SIM_THREADS are throughput knobs everywhere in
+    // the codebase; the QoS ledger must not become the exception.
+    std::env::set_var("COOK_THREADS", "1");
+    std::env::set_var("COOK_SIM_THREADS", "1");
+    let a = (class_ledger(), fleet_class_ledger());
+    std::env::set_var("COOK_THREADS", "4");
+    std::env::set_var("COOK_SIM_THREADS", "4");
+    let b = (class_ledger(), fleet_class_ledger());
+    std::env::remove_var("COOK_THREADS");
+    std::env::remove_var("COOK_SIM_THREADS");
+    assert_eq!(a, b, "per-class ledger drifted across thread counts");
+    let (names, offered, completed, taken, returned) = &a.0;
+    assert_eq!(names, &["gold".to_string(), "free".to_string()]);
+    assert_eq!(offered.iter().sum::<usize>(), 100);
+    assert_eq!(offered, completed, "Block admission: every offered request completes");
+    assert_eq!(taken, returned, "terminal runs return every credit");
+    // Fleet: same totals, one shared bank fleet-wide.
+    let (_, f_offered, f_completed, f_taken, f_returned) = &a.1;
+    assert_eq!(f_offered.iter().sum::<usize>(), 100);
+    assert_eq!(f_offered, f_completed);
+    assert_eq!(f_taken, f_returned);
+}
+
+// ---------------------------------------------------------------------
+// sim vs serving: who starves under overload
+// ---------------------------------------------------------------------
+
+/// Per-class completed iterations of a closed-loop sim run: 4 looping
+/// apps contending for one GPU lock, classes dealt `app i -> i % k` —
+/// the same rule live serving applies to clients.
+fn sim_class_throughput(arbiter: ArbiterKind, classes: &[TenantClass]) -> Vec<usize> {
+    let k = classes.len();
+    let mut cfg = SimConfig::default()
+        .with_strategy(StrategyKind::Synced)
+        .with_seed(19)
+        .with_arbiter(arbiter)
+        .with_classes(classes.to_vec());
+    cfg.horizon_ns = 200_000_000;
+    let apps = 4;
+    let programs = (0..apps).map(|_| cook::apps::dna::program()).collect();
+    let mut sim = Sim::new(cfg, programs);
+    sim.run();
+    let mut done = vec![0usize; k];
+    for a in 0..apps {
+        done[class_of(a, k)] += sim.completions(AppId(a)).len();
+    }
+    assert!(done.iter().sum::<usize>() > 0, "degenerate sim run");
+    done
+}
+
+#[test]
+fn sim_and_serving_agree_on_the_starving_class() {
+    // WRR 6:1 under sustained contention: both the simulator's lock-wake
+    // arbitration and the live gate's must rank `free` as the starving
+    // class. In the sim the signal is per-class throughput (closed-loop
+    // completions); in live serving it is per-class latency.
+    let classes = parse_classes("gold:weight=6,free").unwrap();
+    let sim_done = sim_class_throughput(ArbiterKind::Wrr, &classes);
+    assert!(
+        sim_done[0] > sim_done[1],
+        "sim: gold must outrun free under WRR 6:1, got {sim_done:?}"
+    );
+    let spec = ServeSpec::new(StrategyKind::Synced, "dna")
+        .with_clients(6)
+        .with_requests(40)
+        .with_arbiter(ArbiterKind::Wrr)
+        .with_classes(classes.clone());
+    let r = serve(&spec, &SyntheticBackend::new(300)).unwrap();
+    assert_eq!(r.classes.len(), 2);
+    assert_eq!(r.classes[0].name, "gold");
+    let p50: Vec<f64> = r.classes.iter().map(|c| c.latency.quantile(0.5)).collect();
+    assert!(
+        p50[0] < p50[1],
+        "serving: free must wait longer than gold under WRR 6:1, got p50 {p50:?}"
+    );
+    // Gate accounting agrees with the class split: grants recorded for
+    // both classes, every request granted exactly once.
+    let g = r.gate.as_ref().expect("synced serving must report gate stats");
+    assert_eq!(g.by_class.len(), 2);
+    assert!(g.by_class.iter().all(|&n| n > 0), "{:?}", g.by_class);
+}
+
+// ---------------------------------------------------------------------
+// CLI surface
+// ---------------------------------------------------------------------
+
+#[test]
+fn cli_serve_reports_per_class_rows() {
+    let out = cli()
+        .args([
+            "serve", "--synthetic", "--arbiter", "wrr", "--classes",
+            "gold:weight=3:slo=100,free:slo=100", "--clients", "2", "--requests", "10",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("arbiter wrr"), "{text}");
+    assert!(text.contains("class gold"), "{text}");
+    assert!(text.contains("class free"), "{text}");
+    assert!(text.contains("attainment"), "{text}");
+}
+
+#[test]
+fn cli_rejects_unknown_arbiter() {
+    let out = cli()
+        .args(["serve", "--synthetic", "--arbiter", "lifo"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown arbiter"), "{err}");
+}
+
+#[test]
+fn cli_rejects_malformed_classes() {
+    let out = cli()
+        .args(["serve", "--synthetic", "--classes", "gold:weight=zero"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("bad weight"), "{err}");
+
+    let out = cli()
+        .args(["serve", "--synthetic", "--classes", "gold:karat=24"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("unknown class token"), "{err}");
+}

@@ -12,6 +12,7 @@
 //! binaries cannot race on process state.
 
 use cook::config::{SimConfig, StrategyKind};
+use cook::control::arbiter::{parse_classes, ArbiterKind};
 use cook::control::traffic::ArrivalProcess;
 use cook::gpu::Sim;
 use cook::util::AppId;
@@ -241,6 +242,52 @@ fn env_default_run_matches_pinned_threads() {
     let mut pinned = Sim::new(cfg(), programs());
     pinned.run_with_sim_threads(1);
     assert_eq!(full_hash(&ambient), full_hash(&pinned));
+}
+
+#[test]
+fn arbiter_fleet_identical_across_thread_counts() {
+    // QoS arbitration must stay inside the shard-partition contract:
+    // classes are dealt from GLOBAL app indices by the parent (like
+    // arrival and fault schedules), so a WRR/EDF/Credit fleet is
+    // bit-identical at every pool size. A sub-sim that regenerated
+    // classes from its local indices would scramble class membership on
+    // every shard but shard 0 and fail here.
+    let classes = || parse_classes("gold:weight=3:deadline=2,free:deadline=9").unwrap();
+    for arbiter in [ArbiterKind::Wrr, ArbiterKind::Edf, ArbiterKind::Credit] {
+        for num_gpus in [2usize, 4] {
+            let cfg = || {
+                looping_fleet_cfg(StrategyKind::Synced, num_gpus, 31)
+                    .with_arbiter(arbiter)
+                    .with_classes(classes())
+            };
+            let seq = hash_at_threads(cfg(), 6, 1);
+            for threads in [2usize, 4, 8] {
+                assert_eq!(
+                    seq,
+                    hash_at_threads(cfg(), 6, threads),
+                    "{arbiter:?} x{num_gpus}: {threads} threads changed the run"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fifo_arbiter_with_classes_matches_the_default_engine() {
+    // Pure refactor pin, simulator side: a FIFO run with tenant classes
+    // declared must be bit-identical to the untouched default engine —
+    // the arbiter only re-orders grants for non-FIFO policies.
+    for num_gpus in [1usize, 3] {
+        let plain = hash_at_threads(looping_fleet_cfg(StrategyKind::Worker, num_gpus, 37), 6, 2);
+        let classed = hash_at_threads(
+            looping_fleet_cfg(StrategyKind::Worker, num_gpus, 37)
+                .with_arbiter(ArbiterKind::Fifo)
+                .with_classes(parse_classes("gold:weight=9,free").unwrap()),
+            6,
+            2,
+        );
+        assert_eq!(plain, classed, "FIFO with classes diverged at {num_gpus} GPUs");
+    }
 }
 
 #[test]
