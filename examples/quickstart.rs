@@ -11,6 +11,8 @@
 
 use cook::apps::Program;
 use cook::config::{SimConfig, StrategyKind};
+use cook::control::arbiter::parse_classes;
+use cook::control::concurrency::ConcurrencyMode;
 use cook::cudart::{Grid, KernelDesc};
 use cook::gpu::Sim;
 use cook::hooks::generate_standard;
@@ -41,6 +43,26 @@ fn main() -> anyhow::Result<()> {
         let max = net.iter().copied().fold(1.0, f64::max);
         println!(
             "strategy {strategy:<8} cross-app overlaps={:<4} worst NET={max:.2}x",
+            sim.trace.cross_app_kernel_overlaps(),
+        );
+    }
+
+    // --- 2b. concurrency modes beyond the exclusive gate -----------------
+    // The same contended pair under each device-level sharing mode
+    // (DESIGN.md §14): cook/streams arbitrate temporally (no cross-app
+    // overlap), mps/mig co-run the apps on disjoint SM banks.
+    for mode in ["cook", "mps:2", "mig:2", "streams"] {
+        let cfg = SimConfig::default()
+            .with_strategy(StrategyKind::None)
+            .with_seed(1)
+            .with_classes(parse_classes("a,b").map_err(anyhow::Error::msg)?)
+            .with_concurrency(mode.parse::<ConcurrencyMode>().map_err(anyhow::Error::msg)?);
+        let mut sim = Sim::new(cfg, vec![app(), app()]);
+        sim.run();
+        let net = net_per_kernel(&sim.trace, AppId(0));
+        let max = net.iter().copied().fold(1.0, f64::max);
+        println!(
+            "mode {mode:<8} cross-app overlaps={:<4} worst NET={max:.2}x",
             sim.trace.cross_app_kernel_overlaps(),
         );
     }

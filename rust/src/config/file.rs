@@ -74,6 +74,7 @@ fn set_key(cfg: &mut SimConfig, key: &str, v: &str) -> Result<(), String> {
         "faults" => cfg.faults = v.parse()?,
         "arbiter" => cfg.arbiter = v.parse()?,
         "classes" => cfg.classes = crate::control::arbiter::parse_classes(v)?,
+        "concurrency" => cfg.concurrency = v.parse()?,
         "arrival_queue_cap" => {
             let c: usize = parse(key, v)?;
             if c == 0 {
@@ -135,6 +136,7 @@ pub const KEYS: &[&str] = &[
     "faults",
     "arbiter",
     "classes",
+    "concurrency",
     "timing.launch_overhead_ns",
     "timing.memcpy_call_extra_ns",
     "timing.sync_wakeup_ns",
@@ -224,6 +226,7 @@ mod tests {
                 "faults" => "error:p=0.01",
                 "arbiter" => "wrr",
                 "classes" => "gold:weight=2,free",
+                "concurrency" => "mps:2",
                 _ => "1",
             };
             set_key(&mut cfg, key, v).unwrap_or_else(|e| panic!("{key}: {e}"));
@@ -269,6 +272,18 @@ mod tests {
         assert!(apply_overrides(&mut cfg, "classes = gold:weight=zero").is_err());
         apply_overrides(&mut cfg, "classes = none").unwrap();
         assert!(cfg.classes.is_empty());
+    }
+
+    #[test]
+    fn concurrency_key_parses_and_validates() {
+        use crate::control::concurrency::ConcurrencyMode;
+        let mut cfg = SimConfig::default();
+        apply_overrides(&mut cfg, "concurrency = mig:3\n").unwrap();
+        assert_eq!(cfg.concurrency, ConcurrencyMode::Mig { slices: 3 });
+        assert!(apply_overrides(&mut cfg, "concurrency = smp").is_err());
+        assert!(apply_overrides(&mut cfg, "concurrency = mps:0").is_err());
+        apply_overrides(&mut cfg, "concurrency = cook").unwrap();
+        assert!(cfg.concurrency.is_cook());
     }
 
     #[test]

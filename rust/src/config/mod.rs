@@ -13,6 +13,7 @@ pub use strategy::StrategyKind;
 pub use timing::TimingConfig;
 
 use crate::control::arbiter::{ArbiterKind, TenantClass};
+use crate::control::concurrency::ConcurrencyMode;
 use crate::control::fault::FaultSpec;
 use crate::control::traffic::ArrivalProcess;
 
@@ -59,6 +60,13 @@ pub struct SimConfig {
     /// agree on which class starves under overload. Empty (the
     /// default): every app is class 0 and arbitration is degenerate.
     pub classes: Vec<TenantClass>,
+    /// What may run on each shard concurrently (DESIGN.md §14): `Cook`
+    /// (the default) is the paper's exclusive serialized access,
+    /// bit-identical to the pre-refactor engine; `mps:<quota>` shares
+    /// SM banks spatially, `mig:<slices>` hard-partitions SM banks and
+    /// L2 per tenant class, `streams` schedules by class priority with
+    /// preemption only at kernel boundaries.
+    pub concurrency: ConcurrencyMode,
 }
 
 impl Default for SimConfig {
@@ -75,6 +83,7 @@ impl Default for SimConfig {
             faults: FaultSpec::default(),
             arbiter: ArbiterKind::Fifo,
             classes: Vec::new(),
+            concurrency: ConcurrencyMode::Cook,
         }
     }
 }
@@ -124,6 +133,11 @@ impl SimConfig {
         self.classes = classes;
         self
     }
+
+    pub fn with_concurrency(mut self, mode: ConcurrencyMode) -> Self {
+        self.concurrency = mode;
+        self
+    }
 }
 
 #[cfg(test)]
@@ -150,7 +164,8 @@ mod tests {
             .with_arrival_queue_cap(16)
             .with_faults("hang:period=100:ms=5".parse().unwrap())
             .with_arbiter(ArbiterKind::Wrr)
-            .with_classes(crate::control::arbiter::parse_classes("gold:weight=3,free").unwrap());
+            .with_classes(crate::control::arbiter::parse_classes("gold:weight=3,free").unwrap())
+            .with_concurrency(ConcurrencyMode::Mps { quota: 2 });
         assert_eq!(cfg.strategy, StrategyKind::Worker);
         assert_eq!(cfg.seed, 9);
         assert_eq!(cfg.horizon_ns, 123);
@@ -161,6 +176,7 @@ mod tests {
         assert_eq!(cfg.arbiter, ArbiterKind::Wrr);
         assert_eq!(cfg.classes.len(), 2);
         assert_eq!(cfg.classes[0].weight, 3);
+        assert_eq!(cfg.concurrency, ConcurrencyMode::Mps { quota: 2 });
     }
 
     #[test]
@@ -175,5 +191,14 @@ mod tests {
         let cfg = SimConfig::default();
         assert_eq!(cfg.arrivals, ArrivalProcess::ClosedLoop);
         assert!(!cfg.arrivals.is_open_loop());
+    }
+
+    #[test]
+    fn default_concurrency_is_cook() {
+        // The golden traces are pinned against this: the default mode
+        // must stay the paper's exclusive gate.
+        let cfg = SimConfig::default();
+        assert_eq!(cfg.concurrency, ConcurrencyMode::Cook);
+        assert!(cfg.concurrency.is_cook());
     }
 }

@@ -1,0 +1,367 @@
+//! Pluggable GPU concurrency modes (ISSUE 9, DESIGN.md §14).
+//!
+//! The paper's thesis is *serialized* access: one `GPU_LOCK` holder at a
+//! time. Real deployments instead pick MPS spatial sharing, MIG hard
+//! partitions, or priority streams — the mechanisms the related
+//! characterization papers enumerate. This module extracts the
+//! serialization assumption, hard-coded in four layers at once
+//! (`gate`, `lock`, `gpu::engine` dispatch, `serving` burst
+//! bracketing), into one [`ConcurrencyMode`] value threaded through all
+//! of them:
+//!
+//! * **`cook`** (default) — the paper: exactly one holder, FIFO gate.
+//!   Bit-identical to the pre-refactor engine and gate; the golden
+//!   traces pin this.
+//! * **`mps:<quota>`** — spatial sharing: up to `quota` concurrent
+//!   holders, each restricted to a contiguous SM bank (1/quota of the
+//!   device); L2 and copy engines stay shared.
+//! * **`mig:<slices>`** — hard partitions: `slices` independent
+//!   capacity-1 gates, one per tenant-class slice; SM banks *and* L2
+//!   are split so classes never share either.
+//! * **`streams`** — priority streams: no admission bound, temporal
+//!   scheduling by class priority with preemption only at kernel
+//!   boundaries (no mid-batch freeze).
+//!
+//! The live counterpart is [`ModeGate`]: a thin router over one or more
+//! [`GpuGate`]s that keeps the single-gate API so the serving loops are
+//! mode-oblivious.
+
+use crate::control::arbiter::{ArbiterKind, TenantClass};
+use crate::control::gate::{GateGrant, GateStats, GpuGate};
+use std::fmt;
+use std::str::FromStr;
+use std::time::Duration;
+
+/// What may run on the device concurrently. See the module docs for the
+/// semantics of each mode; [`ConcurrencyMode::Cook`] is the default and
+/// is bit-identical to the pre-refactor engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ConcurrencyMode {
+    /// Exclusive serialized access through the FIFO gate (the paper).
+    #[default]
+    Cook,
+    /// MPS-style spatial sharing: up to `quota` concurrent clients,
+    /// each on its own SM bank.
+    Mps { quota: usize },
+    /// MIG-style hard partitioning: `slices` isolated slices, one per
+    /// tenant class (`class % slices`), with split SM banks and L2.
+    Mig { slices: usize },
+    /// Priority streams: unbounded admission, class-priority temporal
+    /// scheduling, preemption only at kernel boundaries.
+    Streams,
+}
+
+impl ConcurrencyMode {
+    /// Does this mode co-schedule clients spatially (concurrent SM
+    /// banks) rather than time-slicing one active context?
+    pub fn spatial(&self) -> bool {
+        matches!(self, ConcurrencyMode::Mps { .. } | ConcurrencyMode::Mig { .. })
+    }
+
+    pub fn is_cook(&self) -> bool {
+        matches!(self, ConcurrencyMode::Cook)
+    }
+
+    /// Capacity of the simulator's per-shard `GpuLock` semaphore under
+    /// this mode (how many gated clients may hold it at once).
+    pub fn sim_lock_capacity(&self) -> u32 {
+        match self {
+            ConcurrencyMode::Cook | ConcurrencyMode::Streams => 1,
+            ConcurrencyMode::Mps { quota } => (*quota).max(1) as u32,
+            ConcurrencyMode::Mig { slices } => (*slices).max(1) as u32,
+        }
+    }
+
+    /// Concurrent-holder capacity of each live admission gate. `mig`
+    /// partitions are capacity-1 *each* (see
+    /// [`ConcurrencyMode::partitions`]); `streams` admission is
+    /// unbounded — priority acts at the device, not the door.
+    pub fn live_capacity(&self) -> usize {
+        match self {
+            ConcurrencyMode::Cook | ConcurrencyMode::Mig { .. } => 1,
+            ConcurrencyMode::Mps { quota } => (*quota).max(1),
+            ConcurrencyMode::Streams => usize::MAX,
+        }
+    }
+
+    /// How many independent admission gates (hard partitions) the mode
+    /// needs: `mig` gets one per slice, everyone else shares one.
+    pub fn partitions(&self) -> usize {
+        match self {
+            ConcurrencyMode::Mig { slices } => (*slices).max(1),
+            _ => 1,
+        }
+    }
+
+    /// How many ways the L2 is split. Only `mig` partitions the cache;
+    /// `cook`/`streams` serialize and `mps` shares it whole.
+    pub fn l2_slices(&self) -> usize {
+        self.partitions()
+    }
+}
+
+impl fmt::Display for ConcurrencyMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConcurrencyMode::Cook => write!(f, "cook"),
+            ConcurrencyMode::Mps { quota } => write!(f, "mps:{quota}"),
+            ConcurrencyMode::Mig { slices } => write!(f, "mig:{slices}"),
+            ConcurrencyMode::Streams => write!(f, "streams"),
+        }
+    }
+}
+
+impl FromStr for ConcurrencyMode {
+    type Err = String;
+
+    /// `cook`, `mps[:quota]`, `mig[:slices]`, `streams` (quota/slices
+    /// default to 2 — the smallest non-degenerate split).
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let (head, arg) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        let parse_n = |what: &str| -> Result<usize, String> {
+            match arg {
+                None => Ok(2),
+                Some(a) => match a.parse::<usize>() {
+                    Ok(n) if n >= 1 => Ok(n),
+                    _ => Err(format!("bad {what} '{a}' in concurrency mode '{s}'")),
+                },
+            }
+        };
+        match head {
+            "cook" if arg.is_none() => Ok(ConcurrencyMode::Cook),
+            "streams" if arg.is_none() => Ok(ConcurrencyMode::Streams),
+            "mps" => Ok(ConcurrencyMode::Mps { quota: parse_n("quota")? }),
+            "mig" => Ok(ConcurrencyMode::Mig { slices: parse_n("slice count")? }),
+            _ => Err(format!(
+                "unknown concurrency mode '{s}' (want cook|mps[:quota]|mig[:slices]|streams)"
+            )),
+        }
+    }
+}
+
+/// Mode-defined admission over one or more [`GpuGate`]s, keeping the
+/// single-gate API so the serving loops never branch on the mode:
+///
+/// * `cook` — one capacity-1 gate, bit-identical to the plain
+///   [`GpuGate`] (same FIFO pick-0 short-circuit, same histograms);
+/// * `mps:<q>` — one capacity-`q` gate (semaphore-like multi-holder);
+/// * `streams` — one unbounded gate (admission never blocks);
+/// * `mig:<s>` — `s` capacity-1 gates; a class-`c` client is routed to
+///   partition `c % s`, so tenant classes never share an admission
+///   queue (or, in the simulator, an SM bank or L2 slice).
+///
+/// Lease revocation composes per ticket: each grant belongs to exactly
+/// one inner gate, and the watchdog revokes exactly that ticket —
+/// concurrent holders of a multi-holder gate are untouched.
+#[derive(Debug)]
+pub struct ModeGate {
+    mode: ConcurrencyMode,
+    gates: Vec<GpuGate>,
+}
+
+impl ModeGate {
+    pub fn new(
+        mode: ConcurrencyMode,
+        arbiter: ArbiterKind,
+        classes: &[TenantClass],
+        lease: Option<Duration>,
+    ) -> Self {
+        let gates = (0..mode.partitions())
+            .map(|_| GpuGate::with_capacity_config(mode.live_capacity(), arbiter, classes, lease))
+            .collect();
+        Self { mode, gates }
+    }
+
+    pub fn mode(&self) -> ConcurrencyMode {
+        self.mode
+    }
+
+    /// The configured lease, if any (same on every partition).
+    pub fn lease(&self) -> Option<Duration> {
+        self.gates[0].lease()
+    }
+
+    /// The partition gate serving tenant `class` — the single routing
+    /// rule (`class % partitions`, degenerate for every mode but mig).
+    fn gate_for(&self, class: usize) -> &GpuGate {
+        &self.gates[class % self.gates.len()]
+    }
+
+    /// Block until admitted as tenant `class` (class 0 for
+    /// [`ModeGate::acquire`]); the grant is tied to the class's
+    /// partition gate and releases on drop like any [`GateGrant`].
+    pub fn acquire_class(&self, class: usize) -> GateGrant<'_> {
+        self.gate_for(class).acquire_class(class)
+    }
+
+    pub fn acquire(&self) -> GateGrant<'_> {
+        self.acquire_class(0)
+    }
+
+    /// Run `f` under the class's partition gate.
+    pub fn with_class<T>(&self, class: usize, f: impl FnOnce() -> T) -> T {
+        self.gate_for(class).with_class(class, f)
+    }
+
+    /// Release an admission (explicit form of dropping the grant).
+    pub fn release(&self, grant: GateGrant<'_>) {
+        drop(grant);
+    }
+
+    /// Merged statistics across partitions, stamped with the mode label
+    /// and the *current* concurrent-holder count so multi-holder grants
+    /// are debuggable from serve output (ISSUE 9 satellite).
+    pub fn stats(&self) -> GateStats {
+        let mut out = GateStats::default();
+        for g in &self.gates {
+            out.merge(&g.stats());
+        }
+        out.mode = self.mode.to_string();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    #[test]
+    fn mode_parse_and_display_round_trip() {
+        for s in ["cook", "mps:2", "mps:4", "mig:2", "mig:3", "streams"] {
+            let m: ConcurrencyMode = s.parse().unwrap();
+            assert_eq!(m.to_string(), s, "round trip");
+        }
+        assert_eq!("mps".parse::<ConcurrencyMode>().unwrap(), ConcurrencyMode::Mps { quota: 2 });
+        assert_eq!("mig".parse::<ConcurrencyMode>().unwrap(), ConcurrencyMode::Mig { slices: 2 });
+        assert_eq!(ConcurrencyMode::default(), ConcurrencyMode::Cook);
+        for bad in ["", "mps:0", "mig:x", "cook:1", "streams:2", "smp"] {
+            assert!(bad.parse::<ConcurrencyMode>().is_err(), "'{bad}' must not parse");
+        }
+    }
+
+    #[test]
+    fn mode_capacity_table() {
+        assert_eq!(ConcurrencyMode::Cook.live_capacity(), 1);
+        assert_eq!(ConcurrencyMode::Mps { quota: 3 }.live_capacity(), 3);
+        assert_eq!(ConcurrencyMode::Mig { slices: 4 }.live_capacity(), 1);
+        assert_eq!(ConcurrencyMode::Mig { slices: 4 }.partitions(), 4);
+        assert_eq!(ConcurrencyMode::Streams.live_capacity(), usize::MAX);
+        assert!(ConcurrencyMode::Mps { quota: 2 }.spatial());
+        assert!(ConcurrencyMode::Mig { slices: 2 }.spatial());
+        assert!(!ConcurrencyMode::Cook.spatial());
+        assert!(!ConcurrencyMode::Streams.spatial());
+        assert_eq!(ConcurrencyMode::Mig { slices: 3 }.l2_slices(), 3);
+        assert_eq!(ConcurrencyMode::Mps { quota: 3 }.l2_slices(), 1);
+    }
+
+    #[test]
+    fn cook_mode_gate_serialises_like_the_plain_gate() {
+        let gate = Arc::new(ModeGate::new(ConcurrencyMode::Cook, ArbiterKind::Fifo, &[], None));
+        let inside = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let (gate, inside, peak) =
+                    (Arc::clone(&gate), Arc::clone(&inside), Arc::clone(&peak));
+                s.spawn(move || {
+                    for _ in 0..10 {
+                        gate.with_class(0, || {
+                            let now = inside.fetch_add(1, Ordering::SeqCst) + 1;
+                            peak.fetch_max(now, Ordering::SeqCst);
+                            std::thread::sleep(std::time::Duration::from_micros(20));
+                            inside.fetch_sub(1, Ordering::SeqCst);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(peak.load(Ordering::SeqCst), 1, "cook must admit one at a time");
+        let s = gate.stats();
+        assert_eq!(s.grants(), 40);
+        assert_eq!(s.mode, "cook");
+        assert!(s.render().contains("gate mode: cook"), "{}", s.render());
+    }
+
+    #[test]
+    fn mps_mode_gate_admits_up_to_the_quota() {
+        let gate =
+            Arc::new(ModeGate::new(ConcurrencyMode::Mps { quota: 2 }, ArbiterKind::Fifo, &[], None));
+        let inside = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let (gate, inside, peak) =
+                    (Arc::clone(&gate), Arc::clone(&inside), Arc::clone(&peak));
+                s.spawn(move || {
+                    for _ in 0..10 {
+                        gate.with_class(0, || {
+                            let now = inside.fetch_add(1, Ordering::SeqCst) + 1;
+                            peak.fetch_max(now, Ordering::SeqCst);
+                            std::thread::sleep(std::time::Duration::from_micros(200));
+                            inside.fetch_sub(1, Ordering::SeqCst);
+                        });
+                    }
+                });
+            }
+        });
+        let peak = peak.load(Ordering::SeqCst);
+        assert!(peak <= 2, "mps:2 admitted {peak} concurrent holders");
+        assert!(peak == 2, "contended mps:2 should reach its quota (got {peak})");
+        assert_eq!(gate.stats().grants(), 40);
+    }
+
+    #[test]
+    fn mig_routes_classes_to_disjoint_partitions() {
+        // Same class serializes; different classes proceed concurrently
+        // (each partition is its own capacity-1 gate).
+        let gate =
+            Arc::new(ModeGate::new(ConcurrencyMode::Mig { slices: 2 }, ArbiterKind::Fifo, &[], None));
+        let a = gate.acquire_class(0);
+        // Class 1 lives on the other partition: must admit immediately
+        // even while class 0 holds.
+        let b = gate.acquire_class(1);
+        gate.release(b);
+        gate.release(a);
+        let s = gate.stats();
+        assert_eq!(s.grants(), 2);
+        assert_eq!(s.mode, "mig:2");
+        // Same-class critical sections stay mutually exclusive.
+        let inside = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                let (gate, inside, peak) =
+                    (Arc::clone(&gate), Arc::clone(&inside), Arc::clone(&peak));
+                s.spawn(move || {
+                    for _ in 0..10 {
+                        gate.with_class(0, || {
+                            let now = inside.fetch_add(1, Ordering::SeqCst) + 1;
+                            peak.fetch_max(now, Ordering::SeqCst);
+                            std::thread::sleep(std::time::Duration::from_micros(20));
+                            inside.fetch_sub(1, Ordering::SeqCst);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(peak.load(Ordering::SeqCst), 1, "one partition must still serialize");
+    }
+
+    #[test]
+    fn streams_admission_never_blocks() {
+        let gate = ModeGate::new(ConcurrencyMode::Streams, ArbiterKind::Fifo, &[], None);
+        let grants: Vec<_> = (0..8).map(|i| gate.acquire_class(i % 2)).collect();
+        assert_eq!(grants.len(), 8, "unbounded admission");
+        let s = gate.stats();
+        assert_eq!(s.holders_now, 8, "all 8 concurrently held");
+        assert!(s.render().contains("holders now 8"), "{}", s.render());
+        drop(grants);
+        assert_eq!(gate.stats().holders_now, 0);
+        assert_eq!(gate.stats().grants(), 8);
+    }
+}

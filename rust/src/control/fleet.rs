@@ -64,7 +64,8 @@ use crate::control::arbiter::{class_of, ArbiterKind, CreditBank, CreditSnapshot}
 use crate::control::fault::{
     panic_msg, Breaker, FaultReport, HealthSnapshot, ShardHealth,
 };
-use crate::control::gate::{GateStats, GpuGate};
+use crate::control::concurrency::{ConcurrencyMode, ModeGate};
+use crate::control::gate::GateStats;
 use crate::control::policy::AccessPolicy;
 use crate::control::serving::{
     admit, build_class_reports, build_latency_stats, fold_open_outs, make_gate, offered_rate_hz,
@@ -332,6 +333,8 @@ pub struct ShardReport {
 #[derive(Debug)]
 pub struct FleetReport {
     pub strategy: StrategyKind,
+    /// Concurrency mode every shard was admitted under (DESIGN.md §14).
+    pub concurrency: ConcurrencyMode,
     pub placement: Placement,
     pub clients: usize,
     pub requests_per_client: usize,
@@ -403,6 +406,10 @@ impl FleetReport {
             self.latency_p(0.99),
             self.latency.max(),
         );
+        // Cook output stays byte-identical to the pre-refactor render.
+        if !self.concurrency.is_cook() {
+            out.push_str(&format!("\n  concurrency {}", self.concurrency));
+        }
         for s in &self.shards {
             match &s.report {
                 Some(r) => out.push_str(&format!(
@@ -618,6 +625,7 @@ pub fn serve_fleet(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result<Fleet
     latency.seal();
     Ok(FleetReport {
         strategy: base.strategy,
+        concurrency: base.concurrency,
         placement: spec.placement,
         clients: base.clients,
         requests_per_client: base.requests,
@@ -655,7 +663,7 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
     let router = ShardRouter::new(active, spec.placement);
     let queues: Vec<AdmissionQueue<Pending>> =
         (0..active).map(|_| AdmissionQueue::new(base.traffic.queue_cap)).collect();
-    let gates: Vec<Option<GpuGate>> = (0..active).map(|_| make_gate(base, policy)).collect();
+    let gates: Vec<Option<ModeGate>> = (0..active).map(|_| make_gate(base, policy)).collect();
     // Per-shard circuit breakers. A shard whose boot-crash clause fires
     // starts the run ejected ("the process died"); after the breaker's
     // cooldown a probe request re-admits it — the self-healing loop of
@@ -966,6 +974,7 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
             clients: workers_of_shard[shard],
             report: Some(ServeReport {
                 strategy: base.strategy,
+                concurrency: base.concurrency,
                 clients: workers_of_shard[shard],
                 requests_per_client: base.requests,
                 batch: base.batch,
@@ -1009,6 +1018,7 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
     let fleet_fault = (tolerate || !fleet_fault.is_empty()).then_some(fleet_fault);
     Ok(FleetReport {
         strategy: base.strategy,
+        concurrency: base.concurrency,
         placement: spec.placement,
         clients: base.clients,
         requests_per_client: base.requests,

@@ -50,13 +50,19 @@ struct GateState {
     next_ticket: u64,
     /// The ticket the arbiter picked to run next: set when a release (or
     /// revocation) hands the gate off, consumed when that waiter admits
-    /// itself. `None` while someone holds the gate or the gate is idle.
+    /// itself. `None` while the gate is full or idle. At most one baton
+    /// is in flight even for a multi-holder gate: the admitting waiter
+    /// chain-issues the next one while spare capacity remains.
     baton: Option<u64>,
-    /// The admitted ticket and its grant time, while someone holds the
-    /// gate. `None` between handoffs — and after a lease revocation,
-    /// which is how a revoked grant's Drop knows not to hand off a
-    /// second time.
-    holder: Option<(u64, Instant)>,
+    /// Admitted tickets and their grant times, in admission order. At
+    /// most [`GateState::capacity`] entries. A revoked ticket is removed
+    /// here at revocation, which is how a revoked grant's Drop knows not
+    /// to hand off a second time.
+    holders: Vec<(u64, Instant)>,
+    /// Concurrent-holder bound. 1 = the pre-refactor exclusive gate
+    /// (cook mode); the [`crate::control::concurrency::ConcurrencyMode`]
+    /// picks larger values for mps/streams.
+    capacity: usize,
     /// Parked waiters in ticket order, each with its own condvar. A
     /// release wakes exactly the waiter the arbiter picked — one futex
     /// wake per grant — instead of `notify_all` on one shared condvar
@@ -73,9 +79,9 @@ struct GateState {
 
 /// Pick the next grantee among the parked waiters (arbiter order), hand
 /// it the baton, and return its condvar for the wake-up. `None` when
-/// nobody waits. The caller must have cleared the holder first.
+/// nobody waits. The caller must have freed a holder slot first.
 fn issue_baton(st: &mut GateState) -> Option<Arc<Condvar>> {
-    debug_assert!(st.holder.is_none(), "baton issued while held");
+    debug_assert!(st.holders.len() < st.capacity, "baton issued while full");
     debug_assert!(st.baton.is_none(), "baton issued twice");
     if st.waiters.is_empty() {
         return None;
@@ -116,6 +122,13 @@ pub struct GateStats {
     /// Grants issued per tenant class (index = class). Single-class
     /// gates keep this at length <= 1 and reports omit it.
     pub by_class: Vec<u64>,
+    /// The concurrency-mode label this gate admits under ("cook",
+    /// "mps:2", ...). Stamped by [`crate::control::concurrency::ModeGate`];
+    /// empty on a bare gate, and the render omits the line then.
+    pub mode: String,
+    /// Concurrent holders at snapshot time (summed across partitions by
+    /// merge) — the multi-holder debuggability counter (ISSUE 9).
+    pub holders_now: u64,
 }
 
 impl GateStats {
@@ -135,6 +148,10 @@ impl GateStats {
         for (c, n) in other.by_class.iter().enumerate() {
             self.by_class[c] += n;
         }
+        self.holders_now += other.holders_now;
+        if self.mode.is_empty() {
+            self.mode = other.mode.clone();
+        }
     }
 
     /// Two-line human rendering (serving reports); extra lines appear
@@ -145,6 +162,12 @@ impl GateStats {
             self.wait.render_ms(),
             self.hold.render_ms()
         );
+        if !self.mode.is_empty() {
+            out.push_str(&format!(
+                "\ngate mode: {} (holders now {})",
+                self.mode, self.holders_now
+            ));
+        }
         if self.revocations > 0 {
             out.push_str(&format!(
                 "\ngate revocations: {} (overstay {})",
@@ -179,7 +202,7 @@ impl GateGrant<'_> {
     /// the request failed and lets the health breaker see it).
     pub fn is_revoked(&self) -> bool {
         let st = lock_recover(&self.gate.state);
-        !matches!(st.holder, Some((t, _)) if t == self.ticket)
+        !st.holders.iter().any(|&(t, _)| t == self.ticket)
     }
 }
 
@@ -193,30 +216,37 @@ impl Drop for GateGrant<'_> {
         // during unwinding.)
         let next = {
             let mut st = lock_recover(&self.gate.state);
-            match st.holder {
-                // Normal release: we still hold the gate. Record the
-                // hold, clear the holder, and hand off. (A revoked
+            match st.holders.iter().position(|&(t, _)| t == self.ticket) {
+                // Normal release: our ticket still holds a slot. Record
+                // the hold, free the slot, and hand off. (A revoked
                 // grant's hold was already recorded at revocation time —
                 // exactly one hold entry per grant either way, so
                 // per-class stats can never double-count.)
-                Some((t, _)) if t == self.ticket => {
+                Some(pos) => {
                     lock_recover(&self.gate.stats)
                         .hold
                         .record(self.granted_at.elapsed().as_nanos().min(u64::MAX as u128)
                             as Nanos);
-                    st.holder = None;
+                    st.holders.remove(pos);
                     // Waking outside the critical section avoids the
                     // hurry-up-and-wait pattern where the woken thread
                     // immediately blocks on the mutex the waker still
                     // holds. No lost wakeup either way: the baton was
                     // published under the lock, and the waiter re-checks
-                    // it under the same lock around every wait.
-                    issue_baton(&mut st)
+                    // it under the same lock around every wait. On a
+                    // multi-holder gate a concurrent release may already
+                    // have a baton in flight; the admitting waiter
+                    // chain-issues the next one, so one baton suffices.
+                    if st.baton.is_none() {
+                        issue_baton(&mut st)
+                    } else {
+                        None
+                    }
                 }
                 // The watchdog revoked us while we overstayed: the queue
                 // already moved past our ticket (possibly several grants
                 // ago). Touch nothing.
-                _ => None,
+                None => None,
             }
         };
         if let Some(cv) = next {
@@ -271,8 +301,22 @@ impl GpuGate {
     }
 
     /// The fully-configured form: an arbitration policy over `classes`,
-    /// with an optional lease watchdog.
+    /// with an optional lease watchdog. Capacity 1 — the pre-refactor
+    /// exclusive gate.
     pub fn with_config(
+        arbiter: ArbiterKind,
+        classes: &[TenantClass],
+        lease: Option<Duration>,
+    ) -> Self {
+        Self::with_capacity_config(1, arbiter, classes, lease)
+    }
+
+    /// A gate admitting up to `capacity` concurrent holders (semaphore
+    /// shape) under an arbitration policy — the mps/streams admission of
+    /// [`crate::control::concurrency::ModeGate`]. `capacity == 1` is
+    /// bit-identical to [`GpuGate::with_config`].
+    pub fn with_capacity_config(
+        capacity: usize,
         arbiter: ArbiterKind,
         classes: &[TenantClass],
         lease: Option<Duration>,
@@ -281,7 +325,8 @@ impl GpuGate {
             state: Mutex::new(GateState {
                 next_ticket: 0,
                 baton: None,
-                holder: None,
+                holders: Vec::new(),
+                capacity: capacity.max(1),
                 waiters: VecDeque::new(),
                 arbiter: make_arbiter(arbiter, classes),
             }),
@@ -334,12 +379,14 @@ impl GpuGate {
         let mut st = lock_recover(&self.state);
         let ticket = st.next_ticket;
         st.next_ticket += 1;
-        if st.holder.is_none() && st.baton.is_none() && st.waiters.is_empty() {
-            // Idle gate: admit immediately (no arbitration possible with
-            // nobody else in sight, but the grant still counts toward
-            // the class's share).
+        if st.holders.len() < st.capacity && st.baton.is_none() && st.waiters.is_empty() {
+            // Spare capacity and nobody queued: admit immediately (no
+            // arbitration possible with nobody else in sight, but the
+            // grant still counts toward the class's share). On the
+            // capacity-1 gate this is exactly the pre-refactor idle
+            // fast path.
             let granted_at = Instant::now();
-            st.holder = Some((ticket, granted_at));
+            st.holders.push((ticket, granted_at));
             st.arbiter.on_grant(class);
             drop(st);
             self.record_admit(class, arrived.elapsed());
@@ -361,16 +408,27 @@ impl GpuGate {
                 st = cv.wait(st).unwrap_or_else(PoisonError::into_inner);
                 continue;
             };
-            match st.holder {
-                Some((_, since)) if since.elapsed() >= lease => {
+            // The oldest grant is the watchdog's suspect: on a
+            // multi-holder gate only the longest-held ticket can have
+            // overstayed the lease first.
+            let oldest = st
+                .holders
+                .iter()
+                .enumerate()
+                .min_by_key(|&(_, &(_, at))| at)
+                .map(|(pos, &(_, at))| (pos, at));
+            match oldest {
+                Some((pos, since)) if since.elapsed() >= lease => {
                     // Revoke the overstaying holder. Its hold ends here:
                     // the histogram entry is recorded at revocation —
                     // one entry per grant even if the revoked grant is
                     // never dropped, and no post-revocation inflation of
                     // the hold time (the latent double-accounting ISSUE 8
-                    // closes).
+                    // closes). Exactly that ticket loses its slot;
+                    // concurrent holders of a multi-holder gate are
+                    // untouched.
                     let held = since.elapsed();
-                    st.holder = None;
+                    st.holders.remove(pos);
                     let lag = held.saturating_sub(lease);
                     {
                         let mut stats = lock_recover(&self.stats);
@@ -381,11 +439,14 @@ impl GpuGate {
                             .record(lag.as_nanos().min(u64::MAX as u128) as Nanos);
                     }
                     // The revoker need not be the arbiter's pick: hand
-                    // the gate to whoever is (unless it is us — the loop
-                    // condition takes care of that case).
-                    if let Some(next) = issue_baton(&mut st) {
-                        if st.baton != Some(ticket) {
-                            next.notify_one();
+                    // the freed slot to whoever is (unless it is us — the
+                    // loop condition takes care of that case). A baton
+                    // already in flight keeps its claim; never issue two.
+                    if st.baton.is_none() {
+                        if let Some(next) = issue_baton(&mut st) {
+                            if st.baton != Some(ticket) {
+                                next.notify_one();
+                            }
                         }
                     }
                 }
@@ -417,8 +478,20 @@ impl GpuGate {
             st.waiters.remove(pos);
         }
         let granted_at = Instant::now();
-        st.holder = Some((ticket, granted_at));
+        st.holders.push((ticket, granted_at));
+        // Chain-wake: if slots remain (several releases landed while one
+        // baton was in flight, or capacity opened under us), hand the
+        // next baton on before entering the critical section. Never
+        // fires on the capacity-1 gate — admission fills it.
+        let chain = if st.holders.len() < st.capacity && !st.waiters.is_empty() {
+            issue_baton(&mut st)
+        } else {
+            None
+        };
         drop(st);
+        if let Some(cv) = chain {
+            cv.notify_one();
+        }
         self.record_admit(class, arrived.elapsed());
         GateGrant { gate: self, granted_at, ticket }
     }
@@ -455,9 +528,17 @@ impl GpuGate {
         out
     }
 
-    /// Snapshot of the wait/hold statistics so far.
+    /// The concurrent-holder bound (1 on the pre-refactor gate).
+    pub fn capacity(&self) -> usize {
+        lock_recover(&self.state).capacity
+    }
+
+    /// Snapshot of the wait/hold statistics so far, including the
+    /// instantaneous holder count.
     pub fn stats(&self) -> GateStats {
-        lock_recover(&self.stats).clone()
+        let mut s = lock_recover(&self.stats).clone();
+        s.holders_now = lock_recover(&self.state).holders.len() as u64;
+        s
     }
 }
 
@@ -797,6 +878,85 @@ mod tests {
         let s = gate.stats();
         assert_eq!(s.by_class, vec![3, 1], "per-class grant counts");
         assert!(s.render().contains("by class"), "{}", s.render());
+    }
+
+    #[test]
+    fn capacity_two_admits_two_and_queues_the_third() {
+        // ISSUE 9: the capacity-N gate is a fair semaphore. Two grants
+        // fast-path in; the third parks until a slot frees, then admits
+        // in ticket order.
+        let gate = Arc::new(GpuGate::with_capacity_config(2, ArbiterKind::Fifo, &[], None));
+        let a = gate.acquire();
+        let b = gate.acquire();
+        assert_eq!(gate.stats().holders_now, 2);
+        let third = {
+            let gate = Arc::clone(&gate);
+            std::thread::spawn(move || gate.with(|| 9))
+        };
+        // The third waiter must genuinely queue behind the full gate.
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(lock_recover(&gate.state).waiters.len(), 1);
+        gate.release(a);
+        assert_eq!(third.join().unwrap(), 9);
+        gate.release(b);
+        let s = gate.stats();
+        assert_eq!(s.grants(), 3);
+        assert_eq!(s.wait.count(), 3);
+        assert_eq!(s.holders_now, 0);
+        assert!(lock_recover(&gate.state).waiters.is_empty());
+    }
+
+    #[test]
+    fn capacity_gate_chain_wakes_through_multiple_free_slots() {
+        // Two holders release while waiters are parked: the single
+        // baton plus the admit-time chain-wake must drain both waiters
+        // (a lost second wakeup would hang this test).
+        let gate = Arc::new(GpuGate::with_capacity_config(2, ArbiterKind::Fifo, &[], None));
+        let a = gate.acquire();
+        let b = gate.acquire();
+        let mut handles = Vec::new();
+        for _ in 0..2 {
+            let gate = Arc::clone(&gate);
+            handles.push(std::thread::spawn(move || gate.with(|| ())));
+        }
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(lock_recover(&gate.state).waiters.len(), 2);
+        // Free both slots back-to-back: only one baton is in flight; the
+        // first admitted waiter must chain the second.
+        gate.release(a);
+        gate.release(b);
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(gate.stats().grants(), 4);
+    }
+
+    #[test]
+    fn revocation_on_a_multi_holder_gate_revokes_exactly_one_ticket() {
+        // ISSUE 9 tentpole law: revoking a multi-holder grant revokes
+        // exactly that ticket — the concurrent holder keeps its slot.
+        let gate = Arc::new(GpuGate::with_capacity_config(
+            2,
+            ArbiterKind::Fifo,
+            &[],
+            Some(std::time::Duration::from_millis(20)),
+        ));
+        let hung = gate.acquire(); // oldest: the watchdog's suspect
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        let live = gate.acquire();
+        let waiter = {
+            let gate = Arc::clone(&gate);
+            std::thread::spawn(move || gate.with(|| 7))
+        };
+        // The parked waiter revokes only the overstayed oldest grant.
+        assert_eq!(waiter.join().unwrap(), 7);
+        assert!(hung.is_revoked(), "the hung holder must lose its ticket");
+        assert!(!live.is_revoked(), "the concurrent holder must keep its ticket");
+        let s = gate.stats();
+        assert_eq!(s.revocations, 1);
+        drop(hung);
+        gate.release(live);
+        assert_eq!(gate.stats().grants(), 3, "one hold entry per grant, revoked included");
     }
 
     #[test]

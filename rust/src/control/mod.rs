@@ -19,9 +19,15 @@
 //! extracts the grant-ordering decision behind a pluggable [`Arbiter`]
 //! trait — FIFO (golden-pinned), weighted round-robin, credit-based
 //! admission backpressure, earliest-deadline-first — shared by the live
-//! gate and the simulator's lock wake path (DESIGN.md §13).
+//! gate and the simulator's lock wake path (DESIGN.md §13). The
+//! [`concurrency`] module extracts the serialization *assumption*
+//! itself: a [`ConcurrencyMode`] (`cook|mps|mig|streams`) decides what
+//! may run concurrently in both interpreters — the exclusive COOK gate,
+//! MPS spatial sharing, MIG hard partitions, or priority streams
+//! (DESIGN.md §14).
 
 pub mod arbiter;
+pub mod concurrency;
 pub mod fault;
 pub mod fleet;
 pub mod gate;
@@ -35,6 +41,7 @@ pub use arbiter::{
     class_of, make_arbiter, parse_classes, render_classes, Arbiter, ArbiterKind, CreditBank,
     CreditSnapshot, TenantClass, Waiter,
 };
+pub use concurrency::{ConcurrencyMode, ModeGate};
 pub use fault::{
     panic_msg, Breaker, FaultPlan, FaultReport, FaultSpec, FaultyBackend, HealthSnapshot,
     HealthState, RequestTag, RetryPolicy, ShardHealth,

@@ -15,7 +15,10 @@
 //!   thread (Alg. 3), and the PTB baseline falls back to an SM-share
 //!   *simulation* (each client is slowed to its `1/clients` share, since
 //!   a CPU-side runtime has no real SM pinning);
-//! * admits through the FIFO-fair [`GpuGate`], which records wait/hold
+//! * admits through the mode-defined [`ModeGate`] (the FIFO-fair
+//!   [`GpuGate`](crate::control::gate::GpuGate) under the default `cook`
+//!   mode; multi-holder or partitioned admission under
+//!   `mps`/`mig`/`streams` — DESIGN.md §14), recording wait/hold
 //!   histograms surfaced in the report;
 //! * supports **request batching** (`batch > 1` amortises one gate
 //!   admission over a burst of requests);
@@ -29,7 +32,8 @@
 use crate::config::StrategyKind;
 use crate::control::arbiter::{class_of, ArbiterKind, CreditBank, CreditSnapshot, TenantClass};
 use crate::control::fault::{panic_msg, FaultPlan, FaultReport, RequestTag, RetryPolicy};
-use crate::control::gate::{GateStats, GpuGate};
+use crate::control::concurrency::{ConcurrencyMode, ModeGate};
+use crate::control::gate::GateStats;
 use crate::control::policy::{AccessPolicy, Admission};
 use crate::control::traffic::{
     AdmissionQueue, ShedPolicy, TrafficReport, TrafficSpec,
@@ -299,6 +303,11 @@ pub struct ServeSpec {
     /// simulator applies to application indices, which is what makes
     /// sim-vs-serving starvation rankings comparable.
     pub classes: Vec<TenantClass>,
+    /// Concurrency mode (`--concurrency`, DESIGN.md §14): how many
+    /// clients the admission gate lets hold the device at once. `Cook`
+    /// (the default) is the paper's exclusive FIFO gate, bit-identical
+    /// to the pre-refactor serving path.
+    pub concurrency: ConcurrencyMode,
 }
 
 impl ServeSpec {
@@ -316,6 +325,7 @@ impl ServeSpec {
             shard: 0,
             arbiter: ArbiterKind::Fifo,
             classes: Vec::new(),
+            concurrency: ConcurrencyMode::Cook,
         }
     }
 
@@ -371,6 +381,11 @@ impl ServeSpec {
 
     pub fn with_classes(mut self, classes: Vec<TenantClass>) -> Self {
         self.classes = classes;
+        self
+    }
+
+    pub fn with_concurrency(mut self, mode: ConcurrencyMode) -> Self {
+        self.concurrency = mode;
         self
     }
 
@@ -506,6 +521,8 @@ pub(crate) fn build_class_reports(
 #[derive(Debug)]
 pub struct ServeReport {
     pub strategy: StrategyKind,
+    /// Concurrency mode the run was admitted under (DESIGN.md §14).
+    pub concurrency: ConcurrencyMode,
     pub clients: usize,
     pub requests_per_client: usize,
     pub batch: usize,
@@ -564,6 +581,12 @@ impl ServeReport {
             self.latency_p(0.99),
             self.latency.max(),
         );
+        // Non-default concurrency is worth a line even for ungated
+        // strategies (gated runs also carry it in the gate stats); cook
+        // output stays byte-identical to the pre-refactor render.
+        if !self.concurrency.is_cook() {
+            out.push_str(&format!("\n  concurrency {}", self.concurrency));
+        }
         if self.per_payload.len() > 1 {
             for p in &self.per_payload {
                 out.push_str(&format!(
@@ -761,6 +784,7 @@ pub fn serve(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<ServeReport
     );
     Ok(ServeReport {
         strategy: spec.strategy,
+        concurrency: spec.concurrency,
         clients: spec.clients,
         requests_per_client: spec.requests,
         batch: spec.batch,
@@ -775,13 +799,17 @@ pub fn serve(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<ServeReport
     })
 }
 
-/// The shard's gate for a run: leased (watchdog-armed) when the spec
-/// asks for it, plain otherwise; None for ungated strategies.
-pub(crate) fn make_gate(spec: &ServeSpec, policy: AccessPolicy) -> Option<GpuGate> {
+/// The shard's gate for a run: the spec's concurrency mode decides the
+/// admission shape (capacity-1 FIFO for `cook`, multi-holder for
+/// `mps`/`streams`, per-class partitions for `mig`); leased
+/// (watchdog-armed) when the spec asks for it; None for ungated
+/// strategies.
+pub(crate) fn make_gate(spec: &ServeSpec, policy: AccessPolicy) -> Option<ModeGate> {
     if !policy.gated() {
         return None;
     }
-    Some(GpuGate::with_config(
+    Some(ModeGate::new(
+        spec.concurrency,
         spec.arbiter,
         &spec.classes,
         spec.lease_ms.map(Duration::from_millis),
@@ -866,7 +894,7 @@ fn run_client(
     slot: usize,
     class: usize,
     rp: &ResolvedPayload,
-    gate: Option<&GpuGate>,
+    gate: Option<&ModeGate>,
 ) -> Result<(Vec<Sample>, FaultReport)> {
     // With a fault plan active, terminal request failures are expected
     // outcomes: count them (the report carries them) instead of failing
@@ -982,7 +1010,7 @@ fn stream_client(
     slot: usize,
     class: usize,
     rp: &ResolvedPayload,
-    gate: Option<&GpuGate>,
+    gate: Option<&ModeGate>,
     blocking: bool,
 ) -> Result<(Vec<Sample>, FaultReport)> {
     // Bounded pipeline: a real driver stream has finite depth, so the
@@ -1066,7 +1094,7 @@ fn run_stream(
     spec: &ServeSpec,
     backend: &dyn ServeBackend,
     class: usize,
-    gate: Option<&GpuGate>,
+    gate: Option<&ModeGate>,
     rx: mpsc::Receiver<StreamJob>,
     done_tx: mpsc::Sender<()>,
 ) -> Result<(Vec<Sample>, FaultReport)> {
@@ -1238,7 +1266,7 @@ pub(crate) struct OpenWorkerCtx<'a> {
     pub backend: &'a dyn ServeBackend,
     pub resolved: &'a [ResolvedPayload],
     pub queue: &'a AdmissionQueue<Pending>,
-    pub gate: Option<&'a GpuGate>,
+    pub gate: Option<&'a ModeGate>,
     pub batch: usize,
     pub timeout: Option<Duration>,
     pub share: f64,
@@ -1676,6 +1704,7 @@ fn serve_open_loop(spec: &ServeSpec, backend: &dyn ServeBackend) -> Result<Serve
         build_latency_stats(o.samples, &spec.payloads, spec.exact_quantiles);
     Ok(ServeReport {
         strategy: spec.strategy,
+        concurrency: spec.concurrency,
         clients: spec.clients,
         requests_per_client: spec.requests,
         batch: spec.batch,
@@ -1794,6 +1823,7 @@ mod tests {
         // vectors and was biased one rank high on exact multiples.
         let empty = ServeReport {
             strategy: StrategyKind::None,
+            concurrency: ConcurrencyMode::Cook,
             clients: 1,
             requests_per_client: 1,
             batch: 1,

@@ -11,6 +11,7 @@ use crate::apps::host::{HostPhase, HostState};
 use crate::apps::program::{CompiledStep, Program, RepeatMode};
 use crate::config::SimConfig;
 use crate::control::arbiter::{class_of, make_arbiter, Arbiter, Waiter};
+use crate::control::concurrency::ConcurrencyMode;
 use crate::control::lock::{GpuLock, LockClient};
 use crate::control::policy::{AccessPolicy, Admission, Arbitration, OrderedOpRule};
 use crate::control::worker::{WorkerPhase, WorkerState};
@@ -266,8 +267,11 @@ pub struct Sim {
     /// (slot, uid) and a batch's shard is derived from its ctx, so the
     /// event shape is identical at any fleet size.
     batches: BatchSlab,
-    /// Per-shard L2 caches.
-    l2: Vec<L2State>,
+    /// Per-shard L2 caches, split into slices: `l2[shard][slice]`.
+    /// One full-capacity slice everywhere except `mig:<s>`, which
+    /// hard-partitions the array per tenant class (slice = class % s),
+    /// so co-runners in different classes can never evict each other.
+    l2: Vec<Vec<L2State>>,
     /// Per-context timestamp of last device activity (stall exposure),
     /// indexed by ctx id; `None` = never active.
     last_activity: Vec<Option<Nanos>>,
@@ -417,9 +421,23 @@ impl Sim {
                     .collect()
             })
             .collect();
-        Self {
+        // `mig:<s>` hard-partitions each shard's L2 into `s` equal
+        // slices; every other mode keeps one full-capacity slice, so
+        // the cook path touches the exact same cache object as before.
+        let l2_slices = cfg.concurrency.l2_slices();
+        // How many contexts each shard's `GPU_LOCK` may grant at once:
+        // 1 for cook/streams (the paper's exclusive semaphore), the
+        // quota/slice count for mps/mig spatial co-running.
+        let lock_capacity = cfg.concurrency.sim_lock_capacity();
+        let mut sim = Self {
             policy,
-            l2: (0..num_gpus).map(|_| L2State::new(cfg.platform.l2_bytes)).collect(),
+            l2: (0..num_gpus)
+                .map(|_| {
+                    (0..l2_slices)
+                        .map(|_| L2State::new(cfg.platform.l2_bytes / l2_slices))
+                        .collect()
+                })
+                .collect(),
             sms: vec![vec![SmState::default(); num_sms]; num_gpus],
             rng_exec: root.child(0x45584543), // "EXEC"
             rng_stall: root.child(0x5354414c), // "STAL"
@@ -434,7 +452,9 @@ impl Sim {
             ctxs,
             apps,
             workers,
-            locks: (0..num_gpus).map(|_| GpuLock::new()).collect(),
+            locks: (0..num_gpus)
+                .map(|_| GpuLock::with_count(lock_capacity))
+                .collect(),
             gpus: (0..num_gpus).map(|_| GpuExec::default()).collect(),
             batches: BatchSlab::default(),
             last_activity: vec![None; n],
@@ -451,6 +471,51 @@ impl Sim {
             pending_fault_ns: vec![0; n],
             faults_injected: vec![0; n],
             fleet_programs: (num_gpus > 1).then_some(programs),
+        };
+        // Mode-driven SM banking (mps/mig) overrides the policy masks;
+        // cook/streams leave them untouched.
+        sim.recompute_concurrency_masks();
+        sim
+    }
+
+    /// Re-derive the SM masks the concurrency mode imposes (DESIGN.md
+    /// §14). `mps:<q>` pins each application to the SM bank of its
+    /// shard-local rank (`rank % q`) — spatial sharing with a quota,
+    /// the simulator's model of MPS active-thread percentages. `mig:<s>`
+    /// pins each application to the bank of its tenant-class slice
+    /// (`class % s`) — a hard partition that follows the GLOBAL class
+    /// identity, which is why the sharded runner must call this again
+    /// after dealing `class_of_app` from the parent (thread-count
+    /// invariance depends on it). SM `i` belongs to bank `i * k /
+    /// num_sms`, the same proportional split PTB uses, so every bank is
+    /// non-empty whenever `k <= num_sms`. `cook`/`streams` keep the
+    /// policy-derived masks untouched.
+    fn recompute_concurrency_masks(&mut self) {
+        let num_sms = self.cfg.platform.num_sms;
+        let k = match self.cfg.concurrency {
+            ConcurrencyMode::Mps { quota } => quota,
+            ConcurrencyMode::Mig { slices } => slices,
+            ConcurrencyMode::Cook | ConcurrencyMode::Streams => return,
+        }
+        .clamp(1, num_sms);
+        for i in 0..self.sm_mask.len() {
+            let bank = match self.cfg.concurrency {
+                ConcurrencyMode::Mps { .. } => {
+                    // Shard-local rank: position of app i among the apps
+                    // placed on its shard. Identical in the parent and in
+                    // a sub-sim (round-robin dealing preserves order).
+                    let rank = self.shard_of_ctx[..i]
+                        .iter()
+                        .filter(|&&s| s == self.shard_of_ctx[i])
+                        .count();
+                    rank % k
+                }
+                ConcurrencyMode::Mig { .. } => self.class_of_app[i] % k,
+                _ => unreachable!(),
+            };
+            for sm in 0..num_sms {
+                self.sm_mask[i][sm] = sm * k / num_sms == bank;
+            }
         }
     }
 
@@ -562,6 +627,10 @@ impl Sim {
                 // view — thread-count invariance depends on it.
                 sub.fault_schedule[j] = std::mem::take(&mut self.fault_schedule[g]);
             }
+            // `mig` SM banks follow the GLOBAL class identity dealt just
+            // above; re-derive the masks the sub-sim computed from its
+            // local (scrambled) view. No-op for cook/streams.
+            sub.recompute_concurrency_masks();
             subs.push((shard, sub));
         }
         // Sub-sims are embarrassingly parallel: no shared mutable state,
@@ -1561,7 +1630,13 @@ impl Sim {
         if self.gpus[shard].switching {
             return changed;
         }
-        let spatial = self.policy.arbitration() == Arbitration::Spatial;
+        // Spatial co-running comes from the policy (PTB) *or* the
+        // concurrency mode (mps/mig banks): either way, every runnable
+        // context dispatches onto its own SM bank with no temporal
+        // arbitration.
+        let spatial = self.policy.arbitration() == Arbitration::Spatial
+            || self.cfg.concurrency.spatial();
+        let streams = self.cfg.concurrency == ConcurrencyMode::Streams;
         let runnable = self.runnable_ctxs(shard);
         if runnable.is_empty() {
             return changed;
@@ -1580,6 +1655,21 @@ impl Sim {
             .map(|c| runnable.contains(c))
             .unwrap_or(false);
         if !active_has_work {
+            if streams {
+                // Kernel-boundary preemption: the outgoing context keeps
+                // the device until its in-flight batches drain (no
+                // mid-batch freeze), then the highest-priority runnable
+                // context takes over. `batch_done` marks `D_GPU`, so the
+                // pump re-runs exactly at the boundary.
+                if let Some(active) = self.gpus[shard].active_ctx {
+                    if self.batches.iter().any(|b| b.ctx == active) {
+                        return changed;
+                    }
+                }
+                let next = self.priority_pick(&runnable);
+                changed |= self.begin_switch(shard, next);
+                return changed;
+            }
             // Pick the next runnable context round-robin and switch.
             let next = runnable.nth(self.gpus[shard].rr_next % runnable.len());
             self.gpus[shard].rr_next = self.gpus[shard].rr_next.wrapping_add(1);
@@ -1587,6 +1677,22 @@ impl Sim {
             return changed;
         }
         let active = self.gpus[shard].active_ctx.unwrap();
+        if streams {
+            // Class-priority scheduling at kernel boundaries only: a
+            // higher-priority context displaces the active one exactly
+            // when the active context has nothing in flight. No quantum
+            // is ever armed — streams never freeze a batch mid-kernel.
+            let best = self.priority_pick(&runnable);
+            if best != active
+                && self.stream_priority(best) < self.stream_priority(active)
+                && !self.batches.iter().any(|b| b.ctx == active)
+            {
+                changed |= self.begin_switch(shard, best);
+                return changed;
+            }
+            changed |= self.dispatch_blocks(shard, active);
+            return changed;
+        }
         // Arm the preemption quantum while others are waiting.
         if runnable.len() > 1 && !self.gpus[shard].quantum_armed {
             self.gpus[shard].quantum_armed = true;
@@ -1691,6 +1797,22 @@ impl Sim {
         self.gpus[shard].active_ctx = None;
     }
 
+    /// Streams-mode priority of a context: its tenant class (lower =
+    /// more urgent), the same `class_of` identity every other layer
+    /// uses, so "high-priority stream" and "gold tenant" are one notion.
+    fn stream_priority(&self, ctx: CtxId) -> usize {
+        self.class_of_app[ctx.0]
+    }
+
+    /// The highest-priority runnable context (lowest tenant class, FIFO
+    /// tie-break on context id — `RunnableSet` iterates in ctx order).
+    fn priority_pick(&self, runnable: &RunnableSet) -> CtxId {
+        (0..runnable.len())
+            .map(|i| runnable.nth(i))
+            .min_by_key(|c| (self.stream_priority(*c), c.0))
+            .expect("priority_pick on an empty runnable set")
+    }
+
     fn quantum_expire(&mut self, shard: usize, gen: u64) {
         if gen != self.gpus[shard].quantum_gen || !self.gpus[shard].quantum_armed {
             return;
@@ -1767,8 +1889,12 @@ impl Sim {
                     OpKind::Kernel(k) => k.l2_footprint_bytes,
                     _ => 0,
                 };
-                let cold_frac =
-                    if footprint > 0 { self.l2[shard].touch(ctx, footprint) } else { 0.0 };
+                let cold_frac = if footprint > 0 {
+                    let slice = self.l2_slice_of_ctx(ctx);
+                    self.l2[shard][slice].touch(ctx, footprint)
+                } else {
+                    0.0
+                };
                 let jit = self.rng_exec.jitter(self.cfg.timing.jitter_amp);
                 let tail = if self.rng_exec.chance(self.cfg.timing.inherent_tail_prob) {
                     self.rng_exec.pareto(1.0, self.cfg.timing.inherent_tail_cap)
@@ -1894,8 +2020,10 @@ impl Sim {
         let jit = self.rng_exec.jitter(self.cfg.timing.jitter_amp);
         let dur = (self.cfg.timing.copy_duration_ns(bytes) as f64 * jit) as Nanos;
         self.ops[op.0 as usize].started_at = Some(self.now);
-        // Copies stream through the L2, polluting it (§VII-A effects).
-        self.l2[shard].pollute(bytes.min(self.cfg.platform.l2_bytes / 2));
+        // Copies stream through the L2, polluting it (§VII-A effects) —
+        // only the copying context's own slice under `mig` partitioning.
+        let slice = self.l2_slice_of_ctx(self.ops[op.0 as usize].ctx);
+        self.l2[shard][slice].pollute(bytes.min(self.cfg.platform.l2_bytes / 2));
         self.gpus[shard].copy_current = Some(op);
         self.gpus[shard].copy_gen += 1;
         self.events.push(
@@ -2013,6 +2141,35 @@ impl Sim {
             return false;
         }
         true
+    }
+
+    /// L2 slice serving `ctx` on its shard: slice 0 everywhere except
+    /// `mig:<s>`, where the context's tenant class picks its partition.
+    #[inline]
+    fn l2_slice_of_ctx(&self, ctx: CtxId) -> usize {
+        let k = self.l2[0].len();
+        if k == 1 { 0 } else { self.class_of_app[ctx.0] % k }
+    }
+
+    /// How many L2 slices each shard's cache is split into (1 unless
+    /// `mig` partitioning is active). Exposed for isolation tests.
+    pub fn l2_slice_count(&self) -> usize {
+        self.l2[0].len()
+    }
+
+    /// The L2 slice application `app` is pinned to (tenant-class slice
+    /// under `mig`, slice 0 otherwise). Exposed for isolation tests.
+    pub fn l2_slice_of_app(&self, app: AppId) -> usize {
+        self.l2_slice_of_ctx(self.apps[app.0].ctx)
+    }
+
+    /// The SMs application `app` may dispatch onto (its shard-local
+    /// bank). Exposed for isolation tests: `mig` banks of different
+    /// tenant classes must be disjoint.
+    pub fn sm_bank_of_app(&self, app: AppId) -> Vec<usize> {
+        (0..self.cfg.platform.num_sms)
+            .filter(|&sm| self.sm_mask[app.0][sm])
+            .collect()
     }
 
     /// Inferences-per-second input: completion timestamps per app.

@@ -8,6 +8,8 @@ use super::parallel::parallel_map;
 use super::runner::{run_spec, RunResult};
 use super::spec::{Bench, ExperimentSpec, Isol};
 use crate::config::{SimConfig, StrategyKind};
+use crate::control::arbiter::parse_classes;
+use crate::control::concurrency::ConcurrencyMode;
 use crate::control::traffic::ArrivalProcess;
 use crate::gpu::Sim;
 use crate::hooks::{loc_report, LocReport};
@@ -325,6 +327,128 @@ pub fn saturation_figure(seed: u64) -> (String, Vec<LoadPoint>) {
     (out, points)
 }
 
+/// One concurrency-mode point of the isolation figure.
+#[derive(Debug, Clone)]
+pub struct IsolationRow {
+    pub mode: ConcurrencyMode,
+    /// Sum of the per-app IPS over the measurement window.
+    pub aggregate_ips: f64,
+    /// Pooled inter-completion gaps (both apps), ms.
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Variability: p99/p50 of the pooled gaps. COOK buys a tight
+    /// spread by serialising; the sharing modes trade spread for
+    /// aggregate throughput — each mode is one point on that frontier.
+    pub spread: f64,
+    /// Iteration gaps measured (after warmup).
+    pub completed: usize,
+}
+
+/// All four concurrency modes, in the order the figure tabulates them.
+pub const ISOLATION_MODES: [ConcurrencyMode; 4] = [
+    ConcurrencyMode::Cook,
+    ConcurrencyMode::Mps { quota: 2 },
+    ConcurrencyMode::Mig { slices: 2 },
+    ConcurrencyMode::Streams,
+];
+
+/// Isolation-vs-throughput figure (beyond the paper, DESIGN.md §14): the
+/// same 2-application contended onnx_dna workload under each concurrency
+/// mode, plotting iteration-time variability (p99/p50 of the pooled
+/// inter-completion gaps) against aggregate IPS. `cook` runs the paper's
+/// serialised `synced` strategy — predictable but paying lock handoffs
+/// and context switches; `mps`/`mig` co-run spatially on split SM banks
+/// (`mig` also splits the L2 per tenant class); `streams` time-slices by
+/// class priority with kernel-boundary preemption. Two tenant classes
+/// (`a`, `b`) map one per app, so `mig`/`streams` exercise their
+/// class-routing paths. Modes are independent sims fanned out across
+/// cores, deterministic in (mode, seed).
+pub fn isolation_figure(seed: u64) -> (String, Vec<IsolationRow>) {
+    isolation_figure_for(seed, &ISOLATION_MODES)
+}
+
+/// Single-mode (or subset) variant backing `--concurrency` on
+/// `cook experiment isolation`.
+pub fn isolation_figure_for(
+    seed: u64,
+    modes: &[ConcurrencyMode],
+) -> (String, Vec<IsolationRow>) {
+    const APPS: usize = 2;
+    let protocol = Bench::OnnxDna.protocol();
+    let rows = parallel_map(modes.to_vec(), move |mode| {
+        // cook is the paper's serialised access: the synced strategy's
+        // gate. The sharing modes are device-level mechanisms and run
+        // ungated — the mode itself decides what co-runs.
+        let strategy =
+            if mode.is_cook() { StrategyKind::Synced } else { StrategyKind::None };
+        let cfg = SimConfig::default()
+            .with_strategy(strategy)
+            .with_seed(seed)
+            .with_horizon_ns(protocol.warmup_ns + protocol.window_ns)
+            .with_classes(parse_classes("a,b").expect("static class spec"))
+            .with_concurrency(mode);
+        let programs = (0..APPS).map(|_| Bench::OnnxDna.program()).collect();
+        let mut sim = Sim::new(cfg, programs);
+        sim.run();
+        let aggregate_ips: f64 = (0..APPS)
+            .map(|a| {
+                ips_with_warmup(
+                    sim.completions(AppId(a)),
+                    protocol.warmup_ns,
+                    protocol.window_ns,
+                )
+            })
+            .sum();
+        // Variability input: inter-completion gaps per app (the gap IS
+        // the iteration time under a closed loop), pooled across apps.
+        let mut gaps_ms: Vec<f64> = Vec::new();
+        for a in 0..APPS {
+            let cs: Vec<u64> = sim
+                .completions(AppId(a))
+                .iter()
+                .copied()
+                .filter(|&t| t >= protocol.warmup_ns)
+                .collect();
+            gaps_ms.extend(cs.windows(2).map(|w| (w[1] - w[0]) as f64 / 1e6));
+        }
+        gaps_ms.sort_by(f64::total_cmp);
+        let q = |p: f64| if gaps_ms.is_empty() { 0.0 } else { quantile_sorted(&gaps_ms, p) };
+        let (p50_ms, p99_ms) = (q(0.50), q(0.99));
+        IsolationRow {
+            mode,
+            aggregate_ips,
+            p50_ms,
+            p99_ms,
+            spread: if p50_ms > 0.0 { p99_ms / p50_ms } else { 0.0 },
+            completed: gaps_ms.len(),
+        }
+    });
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "== Isolation vs throughput: onnx_dna x {APPS} apps per concurrency \
+         mode (DESIGN.md §14) =="
+    );
+    let _ = writeln!(
+        out,
+        "{:<9} {:>11} {:>9} {:>9} {:>9} {:>7}",
+        "mode", "agg IPS", "p50 ms", "p99 ms", "p99/p50", "iters"
+    );
+    for r in &rows {
+        let _ = writeln!(
+            out,
+            "{:<9} {:>11.1} {:>9.2} {:>9.2} {:>8.2}x {:>7}",
+            r.mode.to_string(),
+            r.aggregate_ips,
+            r.p50_ms,
+            r.p99_ms,
+            r.spread,
+            r.completed
+        );
+    }
+    (out, rows)
+}
+
 /// Persist a figure's CSV series under `dir`.
 pub fn write_net_csv(dir: &Path, bench: Bench, results: &[RunResult]) -> std::io::Result<()> {
     std::fs::create_dir_all(dir)?;
@@ -394,6 +518,40 @@ mod tests {
         );
         assert!(lo.completed > 0 && hi.completed > 0);
         assert!(text.contains("offered load"), "{text}");
+    }
+
+    #[test]
+    fn isolation_figure_has_one_distinct_point_per_mode() {
+        let (text, rows) = isolation_figure(0);
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert!(r.aggregate_ips > 0.0, "{}: no throughput", r.mode);
+            assert!(r.completed > 0, "{}: no iterations measured", r.mode);
+            assert!(text.contains(&r.mode.to_string()), "{text}");
+        }
+        // Each mode must land on its own point of the variability-vs-IPS
+        // frontier (the sharing mechanisms are genuinely different, so
+        // identical numbers mean a mode is not wired through).
+        for i in 0..rows.len() {
+            for j in (i + 1)..rows.len() {
+                assert!(
+                    rows[i].aggregate_ips != rows[j].aggregate_ips
+                        || rows[i].p99_ms != rows[j].p99_ms,
+                    "{} and {} landed on the same point",
+                    rows[i].mode,
+                    rows[j].mode
+                );
+            }
+        }
+        // Spatial co-running removes the serialisation overheads (lock
+        // handoffs, context switches), so mps must not lose to cook.
+        let ips_of = |m: ConcurrencyMode| {
+            rows.iter().find(|r| r.mode == m).unwrap().aggregate_ips
+        };
+        assert!(
+            ips_of(ConcurrencyMode::Mps { quota: 2 }) >= ips_of(ConcurrencyMode::Cook),
+            "mps must match or beat cook on aggregate IPS"
+        );
     }
 
     #[test]

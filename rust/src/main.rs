@@ -20,6 +20,7 @@
 use anyhow::{anyhow, bail, Context, Result};
 use cook::config::StrategyKind;
 use cook::control::arbiter::{parse_classes, ArbiterKind, TenantClass};
+use cook::control::concurrency::ConcurrencyMode;
 use cook::control::fault::{FaultPlan, FaultSpec, FaultyBackend, RetryPolicy};
 use cook::control::fleet::{serve_fleet, FleetSpec, Placement};
 use cook::control::serving::{serve, ManifestBackend, ServeBackend, ServeSpec, SyntheticBackend};
@@ -79,7 +80,7 @@ fn print_usage() {
          \n\
          commands:\n\
          \x20 run <bench-isol-strategy> [--seed N]      simulate one configuration\n\
-         \x20 experiment <fig9|fig10|fig11|table1|table2|fleet|load|all> [--seed N] [--out DIR]\n\
+         \x20 experiment <fig9|fig10|fig11|table1|table2|fleet|load|isolation|all> [--seed N] [--out DIR]\n\
          \x20 chronogram <bench-isol-strategy> [--seed N] [--rows N]\n\
          \x20 hookgen --strategy <s> [--out DIR]        generate the hook library\n\
          \x20 symbols [--unknown]                       list libcudart exported symbols\n\
@@ -92,6 +93,7 @@ fn print_usage() {
          \x20       [--load-sweep R[,R...]] [--exact-quantiles]\n\
          \x20       [--faults SPEC] [--retries N] [--lease-ms MS]\n\
          \x20       [--arbiter fifo|wrr|credit|edf] [--classes SPEC]\n\
+         \x20       [--concurrency cook|mps[:quota]|mig[:slices]|streams]\n\
          \x20       serve payload inferences through the access-control layer\n\
          \x20       (--sweep tabulates all strategies; --synthetic needs no artifacts;\n\
          \x20        --shards N routes clients across a fleet of per-GPU gates;\n\
@@ -108,7 +110,11 @@ fn print_usage() {
          \x20        QoS tenant classes, e.g.\n\
          \x20        'gold:weight=3:slo=20,free:credits=8:deadline=40' —\n\
          \x20        clients/requests map to classes round-robin and the report\n\
-         \x20        adds per-class latency/goodput/SLO attainment)\n\
+         \x20        adds per-class latency/goodput/SLO attainment;\n\
+         \x20        --concurrency picks what may hold the device at once:\n\
+         \x20        cook = exclusive FIFO gate (default, the paper), mps:<q> =\n\
+         \x20        q concurrent holders, mig:<s> = s per-class partitions,\n\
+         \x20        streams = unbounded admission, class-priority device)\n\
          \n\
          global options:\n\
          \x20 --sim-threads N   thread cap for the shard-parallel fleet engine\n\
@@ -176,6 +182,11 @@ fn cmd_experiment(rest: &[String]) -> Result<()> {
     let which = rest.first().map(|s| s.as_str()).unwrap_or("all");
     let seed = seed_of(rest);
     let out_dir = flag(rest, "--out").map(PathBuf::from);
+    // `--concurrency` narrows the isolation figure to one mode (the
+    // full figure sweeps all four).
+    let concurrency: Option<ConcurrencyMode> = flag(rest, "--concurrency")
+        .map(|s| s.parse().map_err(|e: String| anyhow!(e)))
+        .transpose()?;
     let mut emitted = String::new();
     let run_one = |name: &str, emitted: &mut String| -> Result<()> {
         let t0 = Instant::now();
@@ -187,6 +198,10 @@ fn cmd_experiment(rest: &[String]) -> Result<()> {
             "table2" => figures::loc_table().0,
             "fleet" => figures::shard_scaling_figure(seed).0,
             "load" => figures::saturation_figure(seed).0,
+            "isolation" => match concurrency {
+                Some(mode) => figures::isolation_figure_for(seed, &[mode]).0,
+                None => figures::isolation_figure(seed).0,
+            },
             other => bail!("unknown experiment '{other}'"),
         };
         println!("{text}");
@@ -196,7 +211,7 @@ fn cmd_experiment(rest: &[String]) -> Result<()> {
         Ok(())
     };
     if which == "all" {
-        for name in ["fig9", "fig10", "fig11", "table1", "table2", "fleet", "load"] {
+        for name in ["fig9", "fig10", "fig11", "table1", "table2", "fleet", "load", "isolation"] {
             run_one(name, &mut emitted)?;
         }
     } else {
@@ -371,6 +386,12 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
     let classes: Vec<TenantClass> = parse_classes(flag(rest, "--classes").unwrap_or(""))
         .map_err(|e: String| anyhow!(e))?;
 
+    // Concurrency mode (ISSUE 9): what may hold the device at once.
+    let concurrency: ConcurrencyMode = flag(rest, "--concurrency")
+        .unwrap_or("cook")
+        .parse()
+        .map_err(|e: String| anyhow!(e))?;
+
     // Robustness knobs (ISSUE 7): fault injection, retries, gate leases.
     let fault_spec: FaultSpec = flag(rest, "--faults")
         .unwrap_or("")
@@ -421,7 +442,11 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .with_traffic(traffic)
         .with_exact_quantiles(exact_quantiles)
         .with_arbiter(arbiter)
-        .with_classes(classes.clone());
+        .with_classes(classes.clone())
+        .with_concurrency(concurrency);
+    if !concurrency.is_cook() {
+        println!("concurrency {concurrency}: mode-defined admission (DESIGN.md §14)");
+    }
     if !classes.is_empty() {
         println!(
             "arbiter {arbiter}: {} tenant classes ({})",

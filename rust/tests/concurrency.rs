@@ -1,0 +1,373 @@
+//! Concurrency-mode suite (ISSUE 9, DESIGN.md §14).
+//!
+//! The contract pinned here, layer by layer:
+//!
+//! * **cook is the paper** — the default mode is `Cook` and a run under
+//!   it is bit-identical to a run that never mentions concurrency at
+//!   all (the golden-trace suite pins the absolute values; this suite
+//!   pins the equivalence).
+//! * **mig partitions** — tenant classes never share an SM bank or an
+//!   L2 slice, in the masks and in the executed block trace.
+//! * **mps pays nothing for sharing** — on a contended 2-app workload
+//!   spatial co-running completes at least as much work as cook's
+//!   serialised access (it drops the lock handoffs and context
+//!   switches).
+//! * **streams preempt only at kernel boundaries** — a streams trace
+//!   contains zero resumed (mid-kernel frozen) blocks, and the
+//!   higher-priority class gets at least its peer's throughput.
+//! * **every mode is thread-count invariant** — `COOK_SIM_THREADS` is a
+//!   pure throughput knob for sharing modes exactly as it is for cook.
+//! * **the live gate obeys the same mode** — multi-holder admission up
+//!   to the quota, and the lease watchdog revokes exactly the hung
+//!   ticket of a multi-holder grant.
+
+use cook::config::{SimConfig, StrategyKind};
+use cook::control::arbiter::{parse_classes, ArbiterKind};
+use cook::control::concurrency::{ConcurrencyMode, ModeGate};
+use cook::gpu::Sim;
+use cook::util::AppId;
+use std::collections::BTreeSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+// ---------------------------------------------------------------------
+// stable hashing (FNV-1a 64, same scheme as the golden_trace suite)
+// ---------------------------------------------------------------------
+
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf29ce484222325)
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        for &x in b {
+            self.0 ^= x as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+    fn bool(&mut self, v: bool) {
+        self.bytes(&[v as u8]);
+    }
+}
+
+/// Hash everything observable about a finished run (trace tables,
+/// completions, arrival report, placement) — the same coverage the
+/// fleet-parallel suite uses.
+fn full_hash(sim: &Sim) -> u64 {
+    let mut h = Fnv::new();
+    let t = &sim.trace;
+    h.usize(t.ops.len());
+    for r in &t.ops {
+        h.u64(r.op.0);
+        h.usize(r.app.0);
+        h.bytes(t.sym_name(r.sym).as_bytes());
+        h.bool(r.is_kernel);
+        h.bool(r.is_copy);
+        h.u64(r.enqueued_at);
+        h.u64(r.started_at);
+        h.u64(r.completed_at);
+        h.usize(r.burst);
+    }
+    h.usize(t.blocks.len());
+    for b in &t.blocks {
+        h.u64(b.op.0);
+        h.usize(b.app.0);
+        h.usize(b.sm.0);
+        h.u64(b.blocks as u64);
+        h.u64(b.start);
+        h.u64(b.end);
+        h.bool(b.resumed);
+    }
+    h.usize(t.switches.len());
+    for s in &t.switches {
+        h.u64(s.at);
+        h.u64(s.from.map(|c| c.0 as u64 + 1).unwrap_or(0));
+        h.usize(s.to.0);
+        h.u64(s.cost_ns);
+    }
+    h.usize(t.stalls.len());
+    for s in &t.stalls {
+        h.u64(s.op.0);
+        h.u64(s.at);
+        h.u64(s.duration_ns);
+    }
+    for a in 0..sim.apps.len() {
+        let app = AppId(a);
+        let comps = sim.completions(app);
+        h.usize(comps.len());
+        for &c in comps {
+            h.u64(c);
+        }
+        let lat = sim.arrival_latencies(app);
+        h.usize(lat.len());
+        for &l in lat {
+            h.u64(l);
+        }
+        let (offered, shed) = sim.arrival_counts(app);
+        h.usize(offered);
+        h.usize(shed);
+        h.usize(sim.shard_of(app));
+    }
+    h.bool(sim.horizon_reached());
+    h.0
+}
+
+fn cfg(strategy: StrategyKind, mode: ConcurrencyMode, seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::default()
+        .with_strategy(strategy)
+        .with_seed(seed)
+        .with_classes(parse_classes("a,b").unwrap())
+        .with_concurrency(mode);
+    cfg.horizon_ns = 150_000_000;
+    cfg
+}
+
+fn run_apps(cfg: SimConfig, apps: usize, threads: usize) -> Sim {
+    let programs = (0..apps).map(|_| cook::apps::dna::program()).collect();
+    let mut sim = Sim::new(cfg, programs);
+    sim.run_with_sim_threads(threads);
+    assert!(!sim.trace.ops.is_empty(), "degenerate run");
+    sim
+}
+
+// ---------------------------------------------------------------------
+// cook: the refactor is invisible
+// ---------------------------------------------------------------------
+
+#[test]
+fn cook_is_the_default_and_changes_nothing() {
+    // A run that never mentions concurrency at all must be bit-identical
+    // to one that explicitly asks for cook: the golden traces (which
+    // predate the ConcurrencyMode refactor) pin the absolute values,
+    // this pins the equivalence — including classes and a fleet.
+    for (strategy, gpus) in
+        [(StrategyKind::Synced, 1usize), (StrategyKind::Worker, 2), (StrategyKind::None, 1)]
+    {
+        let mut plain = SimConfig::default().with_strategy(strategy).with_seed(7);
+        plain.horizon_ns = 150_000_000;
+        plain.num_gpus = gpus;
+        assert!(plain.concurrency.is_cook(), "default mode must be cook");
+        let explicit = plain.clone().with_concurrency(ConcurrencyMode::Cook);
+        assert_eq!(
+            full_hash(&run_apps(plain, 4, 2)),
+            full_hash(&run_apps(explicit, 4, 2)),
+            "{strategy} x{gpus}: explicit cook diverged from the default engine"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// mig: hard partitions
+// ---------------------------------------------------------------------
+
+#[test]
+fn mig_classes_never_share_sm_banks_or_l2_slices() {
+    // 4 apps, 2 classes (app i -> class i % 2), mig:2 on one GPU: the
+    // two classes must own disjoint SM banks and distinct L2 slices —
+    // in the configured masks AND in the executed block trace.
+    let sim = run_apps(cfg(StrategyKind::None, ConcurrencyMode::Mig { slices: 2 }, 5), 4, 1);
+    assert_eq!(sim.l2_slice_count(), 2, "mig:2 must split the L2 in two");
+    let class_of = |a: usize| a % 2;
+    // Mask-level: banks of different classes are disjoint, same class
+    // shares one bank, and no bank is empty.
+    let banks: Vec<BTreeSet<usize>> =
+        (0..4).map(|a| sim.sm_bank_of_app(AppId(a)).into_iter().collect()).collect();
+    for a in 0..4 {
+        assert!(!banks[a].is_empty(), "app {a} has an empty SM bank");
+        assert_eq!(
+            sim.l2_slice_of_app(AppId(a)),
+            class_of(a),
+            "app {a} on the wrong L2 slice"
+        );
+        for b in (a + 1)..4 {
+            if class_of(a) == class_of(b) {
+                assert_eq!(banks[a], banks[b], "same class, different banks ({a},{b})");
+            } else {
+                assert!(
+                    banks[a].is_disjoint(&banks[b]),
+                    "classes share SMs: app {a} {:?} vs app {b} {:?}",
+                    banks[a],
+                    banks[b]
+                );
+            }
+        }
+    }
+    // Trace-level: every executed block landed inside its class's bank.
+    let mut used: Vec<BTreeSet<usize>> = vec![BTreeSet::new(), BTreeSet::new()];
+    for b in &sim.trace.blocks {
+        used[class_of(b.app.0)].insert(b.sm.0);
+        assert!(
+            banks[b.app.0].contains(&b.sm.0),
+            "app {} executed outside its bank (sm {})",
+            b.app.0,
+            b.sm.0
+        );
+    }
+    assert!(
+        used[0].is_disjoint(&used[1]),
+        "executed blocks of the two classes shared SMs: {used:?}"
+    );
+    assert!(!used[0].is_empty() && !used[1].is_empty(), "a class never ran");
+}
+
+// ---------------------------------------------------------------------
+// mps: sharing beats serialising
+// ---------------------------------------------------------------------
+
+#[test]
+fn mps_aggregate_completions_match_or_beat_cook_under_contention() {
+    // 2 apps contending for one GPU. Cook serialises through the synced
+    // strategy's lock (handoffs, wakeups, context switches); mps:2
+    // co-runs the apps on half-device SM banks with none of those
+    // overheads — its aggregate completed work must not be lower.
+    let cook = run_apps(cfg(StrategyKind::Synced, ConcurrencyMode::Cook, 13), 2, 1);
+    let mps = run_apps(cfg(StrategyKind::None, ConcurrencyMode::Mps { quota: 2 }, 13), 2, 1);
+    let total = |s: &Sim| (0..2).map(|a| s.completions(AppId(a)).len()).sum::<usize>();
+    let (c, m) = (total(&cook), total(&mps));
+    assert!(c > 0 && m > 0, "degenerate contention run (cook={c}, mps={m})");
+    assert!(m >= c, "mps completed less than cook under contention ({m} < {c})");
+    // And the sharing really is spatial: the two apps own disjoint banks.
+    let (a, b): (BTreeSet<usize>, BTreeSet<usize>) = (
+        mps.sm_bank_of_app(AppId(0)).into_iter().collect(),
+        mps.sm_bank_of_app(AppId(1)).into_iter().collect(),
+    );
+    assert!(a.is_disjoint(&b) && !a.is_empty() && !b.is_empty());
+}
+
+// ---------------------------------------------------------------------
+// streams: kernel-boundary preemption
+// ---------------------------------------------------------------------
+
+#[test]
+fn streams_never_freeze_a_batch_mid_kernel() {
+    // Streams preempt only at kernel boundaries: no batch is ever
+    // frozen mid-execution, so the trace must contain zero resumed
+    // blocks — while the class-priority schedule still switches contexts
+    // and the high-priority class (class 0 = `a`) keeps at least its
+    // peer's throughput.
+    let sim = run_apps(cfg(StrategyKind::None, ConcurrencyMode::Streams, 19), 2, 1);
+    let resumed = sim.trace.blocks.iter().filter(|b| b.resumed).count();
+    assert_eq!(resumed, 0, "streams froze {resumed} batches mid-kernel");
+    assert!(!sim.trace.switches.is_empty(), "streams never scheduled a switch");
+    let hi = sim.completions(AppId(0)).len();
+    let lo = sim.completions(AppId(1)).len();
+    assert!(hi > 0, "high-priority stream starved");
+    assert!(
+        hi >= lo,
+        "priority inverted: class a completed {hi}, class b completed {lo}"
+    );
+    // The same workload under cook's quantum-sliced temporal scheduling
+    // is the contrast: it may freeze batches at quantum expiry; streams
+    // structurally cannot.
+    let cook = run_apps(cfg(StrategyKind::None, ConcurrencyMode::Cook, 19), 2, 1);
+    assert!(
+        !cook.trace.blocks.is_empty() && !sim.trace.blocks.is_empty(),
+        "degenerate streams-vs-cook comparison"
+    );
+}
+
+// ---------------------------------------------------------------------
+// every mode: the thread knob is pure throughput
+// ---------------------------------------------------------------------
+
+#[test]
+fn all_modes_identical_across_thread_counts() {
+    // mig is the regression target: its masks follow GLOBAL tenant
+    // classes, which the sharded runner deals from the parent — a
+    // sub-sim recomputing them from local indices diverges here.
+    for mode in [
+        ConcurrencyMode::Cook,
+        ConcurrencyMode::Mps { quota: 2 },
+        ConcurrencyMode::Mig { slices: 2 },
+        ConcurrencyMode::Streams,
+    ] {
+        let mk = || {
+            let mut c = cfg(StrategyKind::Synced, mode, 43);
+            c.num_gpus = 2;
+            c
+        };
+        let seq = full_hash(&run_apps(mk(), 4, 1));
+        for threads in [2usize, 4, 8] {
+            assert_eq!(
+                seq,
+                full_hash(&run_apps(mk(), 4, threads)),
+                "{mode}: {threads} threads changed the run"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// the live gate: mode-defined admission
+// ---------------------------------------------------------------------
+
+#[test]
+fn live_mps_gate_admits_the_quota_and_cook_admits_one() {
+    for (mode, expect_peak) in
+        [(ConcurrencyMode::Cook, 1usize), (ConcurrencyMode::Mps { quota: 3 }, 3)]
+    {
+        let gate = Arc::new(ModeGate::new(mode, ArbiterKind::Fifo, &[], None));
+        let inside = Arc::new(AtomicUsize::new(0));
+        let peak = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..6 {
+                let (gate, inside, peak) =
+                    (Arc::clone(&gate), Arc::clone(&inside), Arc::clone(&peak));
+                s.spawn(move || {
+                    for _ in 0..20 {
+                        let grant = gate.acquire_class(0);
+                        let now = inside.fetch_add(1, Ordering::SeqCst) + 1;
+                        peak.fetch_max(now, Ordering::SeqCst);
+                        std::thread::sleep(Duration::from_micros(200));
+                        inside.fetch_sub(1, Ordering::SeqCst);
+                        gate.release(grant);
+                    }
+                });
+            }
+        });
+        let peak = peak.load(Ordering::SeqCst);
+        assert!(
+            peak <= expect_peak,
+            "{mode}: {peak} concurrent holders exceeded the cap {expect_peak}"
+        );
+        assert_eq!(gate.stats().grants(), 120, "{mode}: grant accounting");
+    }
+}
+
+#[test]
+fn live_lease_revokes_exactly_the_hung_ticket_of_a_multi_holder_grant() {
+    // Two concurrent holders under mps:2 with a short lease; one hangs,
+    // one keeps working. The watchdog must revoke exactly the hung
+    // ticket: the live holder's grant stays valid and the waiter gets
+    // the freed slot.
+    let gate =
+        ModeGate::new(ConcurrencyMode::Mps { quota: 2 }, ArbiterKind::Fifo, &[], Some(
+            Duration::from_millis(30),
+        ));
+    let hung = gate.acquire_class(0);
+    std::thread::sleep(Duration::from_millis(5));
+    let live = gate.acquire_class(0);
+    // Full gate: this third acquire waits, arms the watchdog, and gets
+    // the slot freed by revoking the OLDEST (hung) holder.
+    let third = gate.acquire_class(0);
+    assert!(hung.is_revoked(), "the hung ticket must be revoked");
+    assert!(!live.is_revoked(), "the live co-holder must keep its grant");
+    assert!(!third.is_revoked());
+    let stats = gate.stats();
+    assert_eq!(stats.revocations, 1, "exactly one ticket revoked");
+    assert!(stats.mode.starts_with("mps"), "stats must carry the mode");
+    drop(hung);
+    drop(live);
+    drop(third);
+    // One hold entry per grant (the revoked one was recorded at
+    // revocation time, the live ones at drop).
+    assert_eq!(gate.stats().grants(), 3);
+}
