@@ -75,6 +75,9 @@ fn set_key(cfg: &mut SimConfig, key: &str, v: &str) -> Result<(), String> {
         "arbiter" => cfg.arbiter = v.parse()?,
         "classes" => cfg.classes = crate::control::arbiter::parse_classes(v)?,
         "concurrency" => cfg.concurrency = v.parse()?,
+        "autoscale" => {
+            cfg.autoscale = if v == "none" { None } else { Some(v.parse()?) };
+        }
         "arrival_queue_cap" => {
             let c: usize = parse(key, v)?;
             if c == 0 {
@@ -137,6 +140,7 @@ pub const KEYS: &[&str] = &[
     "arbiter",
     "classes",
     "concurrency",
+    "autoscale",
     "timing.launch_overhead_ns",
     "timing.memcpy_call_extra_ns",
     "timing.sync_wakeup_ns",
@@ -227,6 +231,7 @@ mod tests {
                 "arbiter" => "wrr",
                 "classes" => "gold:weight=2,free",
                 "concurrency" => "mps:2",
+                "autoscale" => "1..4",
                 _ => "1",
             };
             set_key(&mut cfg, key, v).unwrap_or_else(|e| panic!("{key}: {e}"));
@@ -284,6 +289,19 @@ mod tests {
         assert!(apply_overrides(&mut cfg, "concurrency = mps:0").is_err());
         apply_overrides(&mut cfg, "concurrency = cook").unwrap();
         assert!(cfg.concurrency.is_cook());
+    }
+
+    #[test]
+    fn autoscale_key_parses_and_validates() {
+        use crate::control::elastic::AutoscaleSpec;
+        let mut cfg = SimConfig::default();
+        apply_overrides(&mut cfg, "autoscale = 1..4\n").unwrap();
+        assert_eq!(cfg.autoscale, Some(AutoscaleSpec { min: 1, max: 4 }));
+        assert!(apply_overrides(&mut cfg, "autoscale = 4..1").is_err());
+        assert!(apply_overrides(&mut cfg, "autoscale = 0..2").is_err());
+        assert!(apply_overrides(&mut cfg, "autoscale = wide").is_err());
+        apply_overrides(&mut cfg, "autoscale = none").unwrap();
+        assert_eq!(cfg.autoscale, None);
     }
 
     #[test]

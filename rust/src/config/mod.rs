@@ -67,6 +67,13 @@ pub struct SimConfig {
     /// L2 per tenant class, `streams` schedules by class priority with
     /// preemption only at kernel boundaries.
     pub concurrency: ConcurrencyMode,
+    /// Mirrored elastic-controller bounds (DESIGN.md §15): under
+    /// open-loop arrivals, the active-shard count follows a
+    /// deterministic pre-partition timeline derived from the arrival
+    /// schedule ([`crate::control::elastic::plan_windows`]), with
+    /// `ScaleDue` events marking each transition. `None` (the default)
+    /// keeps every trace bit-identical to the fixed-fleet engine.
+    pub autoscale: Option<crate::control::elastic::AutoscaleSpec>,
 }
 
 impl Default for SimConfig {
@@ -84,6 +91,7 @@ impl Default for SimConfig {
             arbiter: ArbiterKind::Fifo,
             classes: Vec::new(),
             concurrency: ConcurrencyMode::Cook,
+            autoscale: None,
         }
     }
 }
@@ -138,6 +146,11 @@ impl SimConfig {
         self.concurrency = mode;
         self
     }
+
+    pub fn with_autoscale(mut self, auto: crate::control::elastic::AutoscaleSpec) -> Self {
+        self.autoscale = Some(auto);
+        self
+    }
 }
 
 #[cfg(test)]
@@ -165,7 +178,8 @@ mod tests {
             .with_faults("hang:period=100:ms=5".parse().unwrap())
             .with_arbiter(ArbiterKind::Wrr)
             .with_classes(crate::control::arbiter::parse_classes("gold:weight=3,free").unwrap())
-            .with_concurrency(ConcurrencyMode::Mps { quota: 2 });
+            .with_concurrency(ConcurrencyMode::Mps { quota: 2 })
+            .with_autoscale("1..4".parse().unwrap());
         assert_eq!(cfg.strategy, StrategyKind::Worker);
         assert_eq!(cfg.seed, 9);
         assert_eq!(cfg.horizon_ns, 123);
@@ -177,6 +191,17 @@ mod tests {
         assert_eq!(cfg.classes.len(), 2);
         assert_eq!(cfg.classes[0].weight, 3);
         assert_eq!(cfg.concurrency, ConcurrencyMode::Mps { quota: 2 });
+        assert_eq!(
+            cfg.autoscale,
+            Some(crate::control::elastic::AutoscaleSpec { min: 1, max: 4 })
+        );
+    }
+
+    #[test]
+    fn default_autoscale_is_off() {
+        // Golden traces are pinned against the fixed fleet: autoscale
+        // must stay opt-in.
+        assert_eq!(SimConfig::default().autoscale, None);
     }
 
     #[test]

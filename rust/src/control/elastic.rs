@@ -1,0 +1,1268 @@
+//! Elastic fleet: SLO-driven autoscaling with drain-then-retire scale
+//! events and work stealing (ROADMAP item 2, DESIGN.md §15).
+//!
+//! A fixed fleet (`--shards N`) is sized once at startup, so the bursty
+//! and diurnal arrival shapes either over-provision or shed. This module
+//! adds a **fleet controller** thread that watches the per-shard signals
+//! the fleet already emits — admission-queue occupancy, a windowed SLO
+//! attainment derived from worker completions, and each shard's
+//! [`ShardHealth`] state — and scales the live fleet between
+//! `--autoscale min..max` at runtime:
+//!
+//! * **Hot-add** (`scale-up`): a dormant shard slot gets a fresh gate +
+//!   policy + worker pool, spawned into the *same* `thread::scope` as
+//!   the boot-time shards (nested scoped spawn), warmed exactly like
+//!   them, and immediately eligible for routing.
+//! * **Drain-then-retire** (`scale-down`): routing stops first (the slot
+//!   leaves the ACTIVE state), then the shard's [`AdmissionQueue`] is
+//!   closed and drained — leftovers are re-queued onto live shards with
+//!   [`ShardRouter::transfer`] keeping depth accounting honest — and
+//!   only after the last worker exits is the gate dropped. The
+//!   conservation law `offered == completed + shed + timed_out + failed`
+//!   therefore holds through every scale event, including a scale-down
+//!   racing a boot-crash ejection (DESIGN.md §12).
+//! * **Work stealing**: an idle worker whose own queue stays empty past
+//!   a short patience window pulls a batch from the *deepest* other
+//!   ACTIVE shard (skipping Ejected/Probing shards — they are drained,
+//!   never stolen from) and runs it through its own accounting context,
+//!   with per-request attribution moved via `transfer`.
+//!
+//! The same controller policy is mirrored deterministically in the
+//! simulator ([`plan_windows`]): window counts are computed from the
+//! arrival schedule before partitioning, so fleets stay bit-identical
+//! across `COOK_SIM_THREADS`.
+//!
+//! Fixed fleets (`autoscale: None`) never enter this module — their
+//! output stays byte-identical to the pre-elastic code.
+
+use crate::control::arbiter::{class_of, ArbiterKind, CreditBank};
+use crate::control::concurrency::ModeGate;
+use crate::control::fault::{panic_msg, FaultReport, HealthState, ShardHealth};
+use crate::control::fleet::{FleetReport, FleetSpec, ShardReport, ShardRouter};
+use crate::control::gate::GateStats;
+use crate::control::policy::AccessPolicy;
+use crate::control::serving::{
+    admit, build_class_reports, build_latency_stats, drain_failed, fold_open_outs, make_gate,
+    offered_rate_hz, process_burst, warm_up, OpenWorkerCtx, OpenWorkerOut, Pending,
+    ResolvedPayload, ServeBackend, ServeReport, ServeSpec,
+};
+use crate::control::traffic::{AdmissionQueue, ShedPolicy, TrafficReport};
+use crate::metrics::stats::LatencyStats;
+use crate::util::lock_recover;
+use anyhow::{anyhow, Result};
+use std::panic::AssertUnwindSafe;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicBool, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Mutex, PoisonError};
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------
+// spec
+// ---------------------------------------------------------------------
+
+/// Autoscaling bounds: the fleet holds between `min` and `max` live
+/// shards. Parsed from `--autoscale MIN..MAX`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AutoscaleSpec {
+    /// Live-shard floor (the boot-time fleet size; >= 1).
+    pub min: usize,
+    /// Live-shard ceiling (the pre-allocated slot pool).
+    pub max: usize,
+}
+
+impl AutoscaleSpec {
+    pub fn validate(&self) -> Result<(), String> {
+        if self.min == 0 {
+            return Err("autoscale min must be >= 1 (a fleet cannot scale to zero)".into());
+        }
+        if self.min > self.max {
+            return Err(format!(
+                "autoscale min ({}) must be <= max ({})",
+                self.min, self.max
+            ));
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for AutoscaleSpec {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, String> {
+        let (lo, hi) = s
+            .split_once("..")
+            .ok_or_else(|| format!("autoscale wants MIN..MAX (e.g. 1..4), got {s:?}"))?;
+        let min: usize =
+            lo.trim().parse().map_err(|_| format!("autoscale min {:?} is not a count", lo))?;
+        let max: usize =
+            hi.trim().parse().map_err(|_| format!("autoscale max {:?} is not a count", hi))?;
+        let spec = Self { min, max };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+impl std::fmt::Display for AutoscaleSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}..{}", self.min, self.max)
+    }
+}
+
+// ---------------------------------------------------------------------
+// events & report
+// ---------------------------------------------------------------------
+
+/// One controller decision, timestamped from the run's start.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScaleEvent {
+    /// Hot-add: `shard` spawned; the fleet now runs `active` shards.
+    Up { at_ms: f64, shard: usize, active: usize },
+    /// Drain-then-retire completed: `shard` drained (re-queueing
+    /// `requeued` leftovers onto live shards) and its gate was dropped;
+    /// the fleet now runs `active` shards.
+    Retire { at_ms: f64, shard: usize, active: usize, requeued: usize },
+    /// Pressure persisted with every slot already live: the fleet is
+    /// saturated at `max` and degrades by shedding/queueing instead of
+    /// growing (logged once per saturation episode).
+    Saturated { at_ms: f64 },
+}
+
+/// What the elastic controller did over one run.
+#[derive(Debug, Clone)]
+pub struct ElasticReport {
+    pub min: usize,
+    pub max: usize,
+    /// Shards live at t0 (= `min`).
+    pub started: usize,
+    /// Shards live when the run ended.
+    pub final_active: usize,
+    pub peak_active: usize,
+    pub scale_ups: usize,
+    pub retires: usize,
+    /// Leftover requests re-queued onto live shards by retirements.
+    pub requeued: usize,
+    /// Stolen bursts / stolen requests (work stealing).
+    pub steals: usize,
+    pub stolen: usize,
+    pub events: Vec<ScaleEvent>,
+}
+
+impl ElasticReport {
+    /// Render the controller's story. The summary line always names both
+    /// transition kinds ("scale-up", "drain-then-retire") so smoke greps
+    /// stay stable even on runs with zero events.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "elastic: autoscale {}..{}, shards {} -> {} (peak {}); \
+             scale-up x{}, drain-then-retire x{} ({} requeued); \
+             steals {} bursts / {} requests",
+            self.min,
+            self.max,
+            self.started,
+            self.final_active,
+            self.peak_active,
+            self.scale_ups,
+            self.retires,
+            self.requeued,
+            self.steals,
+            self.stolen,
+        );
+        for e in &self.events {
+            match e {
+                ScaleEvent::Up { at_ms, shard, active } => {
+                    out.push_str(&format!(
+                        "\nscale-up: shard {shard} spawned at {at_ms:.1} ms (active {active})"
+                    ));
+                }
+                ScaleEvent::Retire { at_ms, shard, active, requeued } => {
+                    out.push_str(&format!(
+                        "\ndrain-then-retire: shard {shard} drained at {at_ms:.1} ms \
+                         (active {active}, requeued {requeued})"
+                    ));
+                }
+                ScaleEvent::Saturated { at_ms } => {
+                    out.push_str(&format!(
+                        "\nsaturated at max ({}) at {at_ms:.1} ms: degrading via \
+                         queueing/shedding, not growth",
+                        self.max
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// controller policy constants
+// ---------------------------------------------------------------------
+
+/// Controller sampling period. Short against any realistic run length,
+/// long against a queue-lock hold.
+const TICK: Duration = Duration::from_millis(4);
+/// How long an idle worker waits on its own queue before stealing.
+const STEAL_PATIENCE: Duration = Duration::from_millis(1);
+/// Mean queue occupancy that reads as pressure (scale up).
+const HIGH_OCC: f64 = 0.5;
+/// Mean queue occupancy low enough to consider retiring a shard.
+const LOW_OCC: f64 = 0.10;
+/// Consecutive low-occupancy ticks before a retirement (hysteresis).
+const LOW_TICKS_TO_RETIRE: u32 = 3;
+/// Windowed SLO attainment the controller defends, percent.
+const SLO_TARGET_PCT: f64 = 90.0;
+
+// Shard slot lifecycle. Transitions only move forward:
+// DORMANT -> ACTIVE -> DRAINING -> RETIRED (an AdmissionQueue cannot
+// reopen, so a retired slot is never reused — scale-up takes the next
+// DORMANT slot instead).
+const DORMANT: u8 = 0;
+const ACTIVE: u8 = 1;
+const DRAINING: u8 = 2;
+const RETIRED: u8 = 3;
+
+// ---------------------------------------------------------------------
+// sim mirror
+// ---------------------------------------------------------------------
+
+/// Deterministic mirror of the controller policy for the simulator: map
+/// per-window arrival counts onto an active-shard count per window,
+/// clamped to `[min, max]`, with the same asymmetry as the live
+/// controller — scale-up reacts immediately, scale-down waits for two
+/// consecutive lower-demand windows (hysteresis). Pure integer
+/// arithmetic on the pre-partition schedule, so every
+/// `COOK_SIM_THREADS` setting sees the identical timeline.
+pub fn plan_windows(counts: &[usize], min: usize, max: usize) -> Vec<usize> {
+    let min = min.max(1);
+    let max = max.max(min);
+    if counts.is_empty() || max == min {
+        return vec![min; counts.len()];
+    }
+    let lo = *counts.iter().min().expect("non-empty");
+    let hi = *counts.iter().max().expect("non-empty");
+    let span = (hi - lo).max(1);
+    let mut active = min;
+    let mut below = 0u32;
+    counts
+        .iter()
+        .map(|&c| {
+            // Linear demand map with round-half-up, pinned to integers.
+            let desired = min + ((c - lo) * (max - min) + span / 2) / span;
+            if desired > active {
+                active = desired;
+                below = 0;
+            } else if desired < active {
+                below += 1;
+                if below >= 2 {
+                    active = desired;
+                    below = 0;
+                }
+            } else {
+                below = 0;
+            }
+            active
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------
+// shard slots
+// ---------------------------------------------------------------------
+
+/// Runtime state of one pre-allocated shard slot.
+struct ShardSlot {
+    state: AtomicU8,
+    /// The shard's gate while live. The controller `take()`s and drops
+    /// it at retirement — after sealing its stats — so "drop the gate"
+    /// is literal: the Arc's last reference dies with the slot.
+    gate: Mutex<Option<Arc<ModeGate>>>,
+    /// Gate statistics sealed at retirement (the live gate is gone).
+    sealed_stats: Mutex<Option<GateStats>>,
+    live_workers: AtomicUsize,
+    /// Completion counters feeding the controller's windowed SLO signal.
+    completed: AtomicUsize,
+    within_slo: AtomicUsize,
+    /// Boot-crash message (PR 7 fault clause), if the slot crashed when
+    /// it was activated.
+    boot_err: Mutex<Option<String>>,
+}
+
+impl ShardSlot {
+    fn new() -> Self {
+        Self {
+            state: AtomicU8::new(DORMANT),
+            gate: Mutex::new(None),
+            sealed_stats: Mutex::new(None),
+            live_workers: AtomicUsize::new(0),
+            completed: AtomicUsize::new(0),
+            within_slo: AtomicUsize::new(0),
+            boot_err: Mutex::new(None),
+        }
+    }
+
+    fn state(&self) -> u8 {
+        self.state.load(Ordering::Acquire)
+    }
+}
+
+/// Everything the generator, workers, and controller share. Declared
+/// before the `thread::scope` so hot-added workers (spawned from the
+/// controller thread, inside the scope) can borrow it for `'env`.
+struct ElasticCtx<'a> {
+    base: &'a ServeSpec,
+    backend: &'a dyn ServeBackend,
+    resolved: &'a [ResolvedPayload],
+    policy: AccessPolicy,
+    router: &'a ShardRouter,
+    queues: &'a [AdmissionQueue<Pending>],
+    slots: &'a [ShardSlot],
+    healths: &'a [ShardHealth],
+    routed: &'a [AtomicUsize],
+    credits: Option<&'a CreditBank>,
+    done: &'a [Box<dyn Fn() + Sync + 'a>],
+    requeue: &'a [Box<dyn Fn(Pending) -> bool + Sync + 'a>],
+    outs: &'a Mutex<Vec<(usize, OpenWorkerOut)>>,
+    steals: &'a AtomicUsize,
+    stolen: &'a AtomicUsize,
+    shed: &'a AtomicUsize,
+    /// Workers per shard (every slot gets the same pool size).
+    wps: usize,
+    /// Tenant-class count (0 = unclassed).
+    k: usize,
+    timeout: Option<Duration>,
+    tolerate: bool,
+    slo_ms: f64,
+    batch: usize,
+}
+
+impl ElasticCtx<'_> {
+    fn is_active(&self, shard: usize) -> bool {
+        self.slots[shard].state() == ACTIVE
+    }
+
+    fn active_shards(&self) -> Vec<usize> {
+        (0..self.slots.len()).filter(|&s| self.is_active(s)).collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+// workers
+// ---------------------------------------------------------------------
+
+/// Spawn one shard's gate + worker pool into the scope. Called at boot
+/// (with the warm barrier) and by the controller at hot-add (without —
+/// a hot-added shard warms up before touching its queue, but nobody
+/// waits for it; the fleet keeps serving).
+fn activate_shard<'scope, 'env>(
+    s: &'scope std::thread::Scope<'scope, 'env>,
+    ec: &'env ElasticCtx<'env>,
+    shard: usize,
+    warm: Option<&'env Barrier>,
+) {
+    let slot = &ec.slots[shard];
+    // A hot-added shard is a fresh process in the paper's terms: the
+    // boot-crash fault clause applies to it exactly as at t0.
+    if let Some(plan) = ec.backend.fault_plan() {
+        if let Err(p) = std::panic::catch_unwind(AssertUnwindSafe(|| plan.check_boot(shard))) {
+            ec.healths[shard].on_panic();
+            *lock_recover(&slot.boot_err) = Some(panic_msg(p));
+        }
+    }
+    let gate = make_gate(ec.base, ec.policy).map(Arc::new);
+    *lock_recover(&slot.gate) = gate.clone();
+    slot.live_workers.store(ec.wps, Ordering::Release);
+    // ACTIVE last: the generator may route here the instant this flips.
+    slot.state.store(ACTIVE, Ordering::Release);
+    for w in 0..ec.wps {
+        let client = shard * ec.wps + w;
+        let gate = gate.clone();
+        s.spawn(move || {
+            let ctx = OpenWorkerCtx {
+                backend: ec.backend,
+                resolved: ec.resolved,
+                queue: &ec.queues[shard],
+                gate: gate.as_deref(),
+                batch: ec.batch,
+                timeout: ec.timeout,
+                share: ec.policy.sm_share(ec.wps),
+                client,
+                shard,
+                retry: ec.base.retry,
+                tolerate: ec.tolerate,
+                done: Some(&*ec.done[shard]),
+                health: Some(&ec.healths[shard]),
+                requeue: Some(&*ec.requeue[shard]),
+                credits: ec.credits,
+                classes: ec.k,
+            };
+            let out = elastic_worker(&ctx, ec, warm);
+            lock_recover(ec.outs).push((shard, out));
+            ec.slots[shard].live_workers.fetch_sub(1, Ordering::Release);
+        });
+    }
+}
+
+/// Record a burst's newly-completed samples into the worker's shard
+/// slot (the controller's windowed SLO signal).
+fn publish(ec: &ElasticCtx<'_>, shard: usize, out: &OpenWorkerOut, n0: usize) {
+    let newly = &out.samples[n0..];
+    if newly.is_empty() {
+        return;
+    }
+    let ok = newly.iter().filter(|(_, ms)| *ms <= ec.slo_ms).count();
+    ec.slots[shard].completed.fetch_add(newly.len(), Ordering::Relaxed);
+    ec.slots[shard].within_slo.fetch_add(ok, Ordering::Relaxed);
+}
+
+/// Deepest ACTIVE shard (queue length > 0) other than the thief.
+/// Ejected/Probing shards are skipped: they are being drained by their
+/// own workers and health probes — stealing from them would starve the
+/// probe path. `state()` is a pure read (unlike `accepting()`, which
+/// consumes probe slots).
+fn steal_victim(ec: &ElasticCtx<'_>, thief: usize) -> Option<usize> {
+    (0..ec.slots.len())
+        .filter(|&x| x != thief && ec.is_active(x))
+        .filter(|&x| {
+            !matches!(ec.healths[x].state(), HealthState::Ejected | HealthState::Probing)
+        })
+        .map(|x| (ec.queues[x].len(), x))
+        .filter(|&(len, _)| len > 0)
+        .max_by_key(|&(len, x)| (len, usize::MAX - x))
+        .map(|(_, x)| x)
+}
+
+/// Move one request's accounting from shard `from` to shard `to`
+/// (steal or re-queue): per-shard offered counts and router depth
+/// follow the request, so `offered == completed + ...` holds per shard
+/// as well as fleet-wide.
+fn move_attribution(ec: &ElasticCtx<'_>, from: usize, to: usize) {
+    let _ = ec.routed[from].fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
+        d.checked_sub(1)
+    });
+    ec.routed[to].fetch_add(1, Ordering::Relaxed);
+    ec.router.transfer(from, to);
+}
+
+/// The elastic open-loop worker: like
+/// [`open_worker`](crate::control::serving) but with a bounded wait on
+/// its own queue followed by a steal attempt against the deepest other
+/// shard. Stolen bursts run through this worker's own ctx, so their
+/// accounting (queue delay, timeout shed, samples, credits) is
+/// identical to locally-routed work.
+fn elastic_worker(
+    ctx: &OpenWorkerCtx<'_>,
+    ec: &ElasticCtx<'_>,
+    warm: Option<&Barrier>,
+) -> OpenWorkerOut {
+    let mut out = OpenWorkerOut::default();
+    let exec = match ctx.backend.executor() {
+        Ok(e) => Some(e),
+        Err(e) => {
+            out.error = Some(e);
+            None
+        }
+    };
+    if let Some(exec) = &exec {
+        if let Some(e) = warm_up(ctx, &**exec) {
+            out.error = Some(e);
+        }
+    }
+    if let Some(w) = warm {
+        w.wait();
+    }
+    let Some(exec) = exec.filter(|_| out.error.is_none()) else {
+        drain_failed(ctx, &mut out);
+        return out;
+    };
+    loop {
+        let burst = ctx.queue.pop_batch_timeout(ctx.batch.max(1), STEAL_PATIENCE);
+        if !burst.is_empty() {
+            let n0 = out.samples.len();
+            process_burst(ctx, &**exec, burst, &mut out);
+            publish(ec, ctx.shard, &out, n0);
+            continue;
+        }
+        if ctx.queue.is_closed() && ctx.queue.is_empty() {
+            break;
+        }
+        // Idle past patience: steal a burst from the deepest live shard.
+        let Some(victim) = steal_victim(ec, ctx.shard) else { continue };
+        let stolen = ec.queues[victim].try_pop_batch(ctx.batch.max(1));
+        if stolen.is_empty() {
+            continue; // lost the race to the victim's own workers
+        }
+        for _ in &stolen {
+            move_attribution(ec, victim, ctx.shard);
+        }
+        ec.steals.fetch_add(1, Ordering::Relaxed);
+        ec.stolen.fetch_add(stolen.len(), Ordering::Relaxed);
+        let n0 = out.samples.len();
+        process_burst(ctx, &**exec, stolen, &mut out);
+        publish(ec, ctx.shard, &out, n0);
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// controller
+// ---------------------------------------------------------------------
+
+/// Drain-then-retire one shard. Ordering is the §15 contract:
+/// 1. state -> DRAINING (the generator stops routing here);
+/// 2. close the queue (producers mid-push wake and divert);
+/// 3. drain leftovers, re-queueing each onto a live shard (or shedding
+///    it with full credit/depth accounting when nobody will take it);
+/// 4. wait for the worker pool to exit;
+/// 5. seal the gate's stats, then drop the gate — the slot's Arc is the
+///    last reference, so the gate dies here, never mid-request;
+/// 6. state -> RETIRED.
+///
+/// Returns how many leftovers were re-queued.
+fn retire_shard(ec: &ElasticCtx<'_>, victim: usize) -> usize {
+    let slot = &ec.slots[victim];
+    slot.state.store(DRAINING, Ordering::Release);
+    ec.queues[victim].close();
+    let mut requeued = 0usize;
+    loop {
+        let leftovers = ec.queues[victim].try_pop_batch(ec.batch.max(16));
+        if leftovers.is_empty() {
+            // The victim's own workers drain concurrently; empty here
+            // plus closed means nothing more will ever appear.
+            if ec.queues[victim].is_empty() {
+                break;
+            }
+            continue;
+        }
+        for p in leftovers {
+            if requeue_leftover(ec, victim, p) {
+                requeued += 1;
+            }
+        }
+    }
+    while slot.live_workers.load(Ordering::Acquire) > 0 {
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    let gate = lock_recover(&slot.gate).take();
+    if let Some(g) = &gate {
+        *lock_recover(&slot.sealed_stats) = Some(g.stats());
+    }
+    drop(gate);
+    slot.state.store(RETIRED, Ordering::Release);
+    requeued
+}
+
+/// Re-home one drained leftover onto a live shard: first a non-blocking
+/// sweep over ACTIVE accepting shards (shallowest first), then one
+/// blocking push against the shallowest ACTIVE shard. Returns false —
+/// after accounting the request as shed, with its credit returned and
+/// the victim's depth released — when no live shard would take it
+/// (e.g. the whole fleet is retiring at end of run). `push_blocking`
+/// consumes the request even on failure, so the shed accounting here is
+/// what keeps the conservation law intact.
+fn requeue_leftover(ec: &ElasticCtx<'_>, from: usize, p: Pending) -> bool {
+    let class = p.class;
+    let mut order: Vec<usize> =
+        (0..ec.slots.len()).filter(|&x| x != from && ec.is_active(x)).collect();
+    order.sort_by_key(|&x| (ec.queues[x].len(), x));
+    let mut pending = Some(p);
+    for &to in &order {
+        if !ec.healths[to].accepting() {
+            continue;
+        }
+        match ec.queues[to].try_push(pending.take().unwrap()) {
+            Ok(()) => {
+                move_attribution(ec, from, to);
+                return true;
+            }
+            Err(back) => pending = Some(back),
+        }
+    }
+    if let Some(&to) = order.first() {
+        if ec.queues[to].push_blocking(pending.take().unwrap()) {
+            move_attribution(ec, from, to);
+            return true;
+        }
+    }
+    // Nobody took it (and a failed push_blocking already dropped it):
+    // account it as shed so offered == completed + shed + ... holds.
+    if let Some(b) = ec.credits {
+        b.put(class);
+    }
+    ec.shed.fetch_add(1, Ordering::Relaxed);
+    let _ = ec.routed[from].fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
+        d.checked_sub(1)
+    });
+    ec.router.complete(from);
+    false
+}
+
+/// The fleet controller loop: every [`TICK`] it reads queue occupancy
+/// and the windowed SLO attainment, scales up under pressure (hot-add
+/// into the shared scope), retires the highest-numbered quiet shard
+/// after [`LOW_TICKS_TO_RETIRE`] calm ticks — but never the last
+/// Healthy one — and logs a saturation event when pressure persists at
+/// `max` (graceful degradation: the fleet queues/sheds instead of
+/// growing).
+fn run_controller<'scope, 'env>(
+    s: &'scope std::thread::Scope<'scope, 'env>,
+    ec: &'env ElasticCtx<'env>,
+    auto: AutoscaleSpec,
+    events: &'env Mutex<Vec<ScaleEvent>>,
+    stopping: &'env AtomicBool,
+    t0: Instant,
+) {
+    let cap = ec.base.traffic.queue_cap;
+    let mut low_ticks = 0u32;
+    let mut saturated_logged = false;
+    let (mut prev_done, mut prev_ok) = (0usize, 0usize);
+    while !stopping.load(Ordering::Acquire) {
+        std::thread::sleep(TICK);
+        let active = ec.active_shards();
+        if active.is_empty() {
+            continue;
+        }
+        let lens: Vec<usize> = active.iter().map(|&x| ec.queues[x].len()).collect();
+        let any_full = lens.iter().any(|&l| l >= cap);
+        let occ = lens.iter().sum::<usize>() as f64 / (active.len() * cap) as f64;
+        // Windowed SLO attainment: completions since the last tick,
+        // summed over every slot (stolen work publishes on the thief).
+        let done_now: usize =
+            ec.slots.iter().map(|sl| sl.completed.load(Ordering::Relaxed)).sum();
+        let ok_now: usize =
+            ec.slots.iter().map(|sl| sl.within_slo.load(Ordering::Relaxed)).sum();
+        let (wd, wo) = (done_now - prev_done, ok_now - prev_ok);
+        (prev_done, prev_ok) = (done_now, ok_now);
+        let slo_ok = wd == 0 || (wo as f64) * 100.0 >= (wd as f64) * SLO_TARGET_PCT;
+        let pressure = any_full || occ >= HIGH_OCC || (!slo_ok && occ > 0.0);
+        if pressure {
+            low_ticks = 0;
+            let next = (0..ec.slots.len()).find(|&x| ec.slots[x].state() == DORMANT);
+            match next {
+                Some(shard) => {
+                    activate_shard(s, ec, shard, None);
+                    saturated_logged = false;
+                    lock_recover(events).push(ScaleEvent::Up {
+                        at_ms: t0.elapsed().as_secs_f64() * 1e3,
+                        shard,
+                        active: active.len() + 1,
+                    });
+                }
+                None if !saturated_logged => {
+                    saturated_logged = true;
+                    lock_recover(events).push(ScaleEvent::Saturated {
+                        at_ms: t0.elapsed().as_secs_f64() * 1e3,
+                    });
+                }
+                None => {}
+            }
+        } else if occ <= LOW_OCC && slo_ok && active.len() > auto.min {
+            low_ticks += 1;
+            if low_ticks >= LOW_TICKS_TO_RETIRE {
+                low_ticks = 0;
+                let healthy = active
+                    .iter()
+                    .filter(|&&x| ec.healths[x].state() == HealthState::Healthy)
+                    .count();
+                // Highest-numbered candidate first; skip the last
+                // Healthy shard — retiring it would leave the fleet with
+                // only ejected/probing capacity.
+                let victim = active.iter().rev().copied().find(|&x| {
+                    !(ec.healths[x].state() == HealthState::Healthy && healthy <= 1)
+                });
+                if let Some(v) = victim {
+                    let requeued = retire_shard(ec, v);
+                    saturated_logged = false;
+                    lock_recover(events).push(ScaleEvent::Retire {
+                        at_ms: t0.elapsed().as_secs_f64() * 1e3,
+                        shard: v,
+                        active: active.len() - 1,
+                        requeued,
+                    });
+                }
+            }
+        } else {
+            low_ticks = 0;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// the elastic serve loop
+// ---------------------------------------------------------------------
+
+/// Open-loop fleet serving with runtime scaling. Reached from
+/// [`serve_fleet`](crate::control::fleet::serve_fleet) when
+/// `FleetSpec::autoscale` is set (validation already pinned open-loop
+/// arrivals and `shards == autoscale.max`). The fleet pre-allocates
+/// `max` shard slots (queue, breaker, depth counter), boots `min` of
+/// them, and lets the controller thread hot-add or drain-then-retire
+/// the rest while the generator paces arrivals.
+pub fn serve_fleet_elastic(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result<FleetReport> {
+    let base = &spec.base;
+    let auto = spec.autoscale.expect("serve_fleet dispatches here only with autoscale set");
+    let policy = AccessPolicy::new(base.strategy);
+    let tolerate = backend.fault_plan().is_some();
+    let resolved: Vec<ResolvedPayload> =
+        base.payloads.iter().map(|p| backend.resolve(p)).collect::<Result<_>>()?;
+    let max = spec.shards; // == auto.max (validated)
+    // Every slot gets the same worker-pool size; the *fleet's* pool
+    // grows and shrinks with the active shard count.
+    let wps = base.clients.div_ceil(max).max(1);
+    let router = ShardRouter::new(max, spec.placement);
+    let queues: Vec<AdmissionQueue<Pending>> =
+        (0..max).map(|_| AdmissionQueue::new(base.traffic.queue_cap)).collect();
+    let slots: Vec<ShardSlot> = (0..max).map(|_| ShardSlot::new()).collect();
+    let healths: Vec<ShardHealth> = (0..max).map(|_| ShardHealth::new(spec.breaker)).collect();
+    let routed: Vec<AtomicUsize> = (0..max).map(|_| AtomicUsize::new(0)).collect();
+    let timeout = match base.traffic.shed {
+        ShedPolicy::Timeout { ms } => Some(Duration::from_millis(ms)),
+        _ => None,
+    };
+    let total = base.clients * base.requests;
+    let offsets = base.traffic.arrivals.schedule_n(total, base.traffic.seed);
+    let k = base.classes.len();
+    let credits = (base.arbiter == ArbiterKind::Credit).then(|| {
+        CreditBank::new(
+            &base.classes,
+            u32::try_from(base.traffic.queue_cap).unwrap_or(u32::MAX),
+        )
+    });
+    let shed = AtomicUsize::new(0);
+    let steals = AtomicUsize::new(0);
+    let stolen = AtomicUsize::new(0);
+    let outs: Mutex<Vec<(usize, OpenWorkerOut)>> = Mutex::new(Vec::new());
+    let events: Mutex<Vec<ScaleEvent>> = Mutex::new(Vec::new());
+    let stopping = AtomicBool::new(false);
+    // Boot-time warm barrier: the min shards' workers plus the
+    // generator. Hot-added shards warm without a barrier.
+    let warm = Barrier::new(auto.min * wps + 1);
+    let router_ref = &router;
+    let done: Vec<Box<dyn Fn() + Sync + '_>> = (0..max)
+        .map(|s| Box::new(move || router_ref.complete(s)) as Box<dyn Fn() + Sync + '_>)
+        .collect();
+    // Worker re-route hooks (failure path): like the fixed fleet's, but
+    // only ACTIVE slots are candidates — a draining shard must not
+    // receive new work, and a dormant one has no workers.
+    let (queues_ref, healths_ref, routed_ref, slots_ref) = (&queues, &healths, &routed, &slots);
+    let requeue: Vec<Box<dyn Fn(Pending) -> bool + Sync + '_>> = (0..max)
+        .map(|from| {
+            Box::new(move |p: Pending| {
+                let mut order: Vec<usize> = (0..max)
+                    .filter(|&x| x != from && slots_ref[x].state() == ACTIVE)
+                    .collect();
+                order.sort_by_key(|&x| (queues_ref[x].len(), x));
+                let mut pending = Some(p);
+                for to in order {
+                    if !healths_ref[to].accepting() {
+                        continue;
+                    }
+                    match queues_ref[to].try_push(pending.take().unwrap()) {
+                        Ok(()) => {
+                            let _ = routed_ref[from].fetch_update(
+                                Ordering::Relaxed,
+                                Ordering::Relaxed,
+                                |d| d.checked_sub(1),
+                            );
+                            routed_ref[to].fetch_add(1, Ordering::Relaxed);
+                            router_ref.transfer(from, to);
+                            return true;
+                        }
+                        Err(back) => pending = Some(back),
+                    }
+                }
+                false
+            }) as Box<dyn Fn(Pending) -> bool + Sync + '_>
+        })
+        .collect();
+    let ec = ElasticCtx {
+        base,
+        backend,
+        resolved: &resolved,
+        policy,
+        router: &router,
+        queues: &queues,
+        slots: &slots,
+        healths: &healths,
+        routed: &routed,
+        credits: credits.as_ref(),
+        done: &done,
+        requeue: &requeue,
+        outs: &outs,
+        steals: &steals,
+        stolen: &stolen,
+        shed: &shed,
+        wps,
+        k,
+        timeout,
+        tolerate,
+        slo_ms: base.traffic.slo_ms,
+        batch: base.batch,
+    };
+    let ec = &ec;
+
+    let t0 = std::thread::scope(|s| {
+        for shard in 0..auto.min {
+            activate_shard(s, ec, shard, Some(&warm));
+        }
+        warm.wait();
+        let t0 = Instant::now();
+        let (events_ref, stopping_ref) = (&events, &stopping);
+        let ctrl = s.spawn(move || run_controller(s, ec, auto, events_ref, stopping_ref, t0));
+        for (seq, &off) in offsets.iter().enumerate() {
+            let arrival_at = t0 + Duration::from_nanos(off);
+            let now = Instant::now();
+            if arrival_at > now {
+                std::thread::sleep(arrival_at - now);
+            }
+            let slot = seq % resolved.len();
+            let class = class_of(seq, k);
+            // Credit admission before routing, as in the fixed fleet.
+            let granted = match (credits.as_ref(), base.traffic.shed) {
+                (None, _) => true,
+                (Some(b), ShedPolicy::Block) => {
+                    b.take_blocking(class);
+                    true
+                }
+                (Some(b), ShedPolicy::Reject) => b.try_take(class),
+                (Some(b), ShedPolicy::Timeout { ms }) => {
+                    b.take_timeout(class, Duration::from_millis(ms))
+                }
+            };
+            if !granted {
+                shed.fetch_add(1, Ordering::Relaxed);
+                continue;
+            }
+            // The router places over the whole slot pool (its depths
+            // track the live fleet via transfer/complete); a pick that
+            // lands on a dormant or draining slot diverts immediately.
+            let primary = router.route(slot);
+            let mut pending = Some(Pending { slot, seq, arrival_at, attempt: 0, class });
+            let mut placed: Option<usize> = None;
+            if ec.is_active(primary) && healths[primary].accepting() {
+                match queues[primary].try_push(pending.take().unwrap()) {
+                    Ok(()) => placed = Some(primary),
+                    Err(back) => pending = Some(back),
+                }
+            }
+            if placed.is_none() {
+                let mut order: Vec<usize> =
+                    (0..max).filter(|&x| x != primary && ec.is_active(x)).collect();
+                order.sort_by_key(|&x| (queues[x].len(), x));
+                for cand in order {
+                    if !healths[cand].accepting() {
+                        continue;
+                    }
+                    match queues[cand].try_push(pending.take().unwrap()) {
+                        Ok(()) => {
+                            placed = Some(cand);
+                            break;
+                        }
+                        Err(back) => pending = Some(back),
+                    }
+                }
+            }
+            match placed {
+                Some(sh) => {
+                    routed[sh].fetch_add(1, Ordering::Relaxed);
+                    if sh != primary {
+                        router.transfer(primary, sh);
+                    }
+                }
+                None => {
+                    // Every live shard full (or none accepting): the
+                    // shed policy decides, against the shallowest live
+                    // shard — the routed-to slot must have workers, and
+                    // `primary` may be dormant here.
+                    let fb = (0..max)
+                        .filter(|&x| ec.is_active(x))
+                        .min_by_key(|&x| (queues[x].len(), x));
+                    let admitted = fb.is_some_and(|fb| {
+                        admit(&queues[fb], pending.take().unwrap(), base.traffic.shed)
+                            .then(|| {
+                                routed[fb].fetch_add(1, Ordering::Relaxed);
+                                if fb != primary {
+                                    router.transfer(primary, fb);
+                                }
+                            })
+                            .is_some()
+                    });
+                    if !admitted {
+                        // Not placed anywhere (a closed queue during a
+                        // racing retirement drops a blocking push):
+                        // account the arrival as shed.
+                        if let Some(b) = credits.as_ref() {
+                            b.put(class);
+                        }
+                        shed.fetch_add(1, Ordering::Relaxed);
+                        router.complete(primary);
+                    }
+                }
+            }
+        }
+        stopping.store(true, Ordering::Release);
+        let _ = ctrl.join();
+        for q in &queues {
+            q.close();
+        }
+        t0
+        // Implicit scope join: every worker drains its closed queue
+        // and exits before `scope` returns.
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // ------------------------------------------------------ assembly --
+    let outs = std::mem::take(&mut *lock_recover(&outs));
+    let mut per_shard: Vec<Vec<OpenWorkerOut>> = (0..max).map(|_| Vec::new()).collect();
+    for (shard, out) in outs {
+        per_shard[shard].push(out);
+    }
+    let events = std::mem::take(&mut *lock_recover(&events));
+    let (mut cur, mut peak) = (auto.min, auto.min);
+    let (mut ups, mut retires, mut requeued_total) = (0usize, 0usize, 0usize);
+    for e in &events {
+        match e {
+            ScaleEvent::Up { .. } => {
+                cur += 1;
+                peak = peak.max(cur);
+                ups += 1;
+            }
+            ScaleEvent::Retire { requeued, .. } => {
+                cur = cur.saturating_sub(1);
+                retires += 1;
+                requeued_total += requeued;
+            }
+            ScaleEvent::Saturated { .. } => {}
+        }
+    }
+    let final_active = (0..max).filter(|&x| slots[x].state() == ACTIVE).count();
+    let elastic = ElasticReport {
+        min: auto.min,
+        max: auto.max,
+        started: auto.min,
+        final_active,
+        peak_active: peak,
+        scale_ups: ups,
+        retires,
+        requeued: requeued_total,
+        steals: steals.load(Ordering::Relaxed),
+        stolen: stolen.load(Ordering::Relaxed),
+        events,
+    };
+
+    let mut shards_out = Vec::with_capacity(max);
+    let mut fleet_latency = LatencyStats::new(base.exact_quantiles);
+    let mut fleet_gate: Option<GateStats> = None;
+    let mut fleet_traffic: Option<TrafficReport> = None;
+    let mut fleet_fault = FaultReport::default();
+    let mut fleet_class_samples: Vec<(usize, f64)> = Vec::new();
+    let span_s = offsets.last().map(|&l| l as f64 / 1e9).unwrap_or(0.0);
+    for shard in 0..max {
+        if slots[shard].state() == DORMANT {
+            // Never activated: an idle slot, not a shard that served.
+            shards_out.push(ShardReport {
+                shard,
+                clients: 0,
+                report: None,
+                error: None,
+                health: None,
+            });
+            continue;
+        }
+        let o = fold_open_outs(std::mem::take(&mut per_shard[shard]), base.traffic.slo_ms);
+        let mut shard_err = lock_recover(&slots[shard].boot_err).take();
+        if let Some(e) = o.error {
+            if !tolerate {
+                return Err(anyhow!("shard {shard}: {e}"));
+            }
+            shard_err.get_or_insert(e.to_string());
+        }
+        let (queue_delay, timed_out, within_slo) = (o.queue_delay, o.timed_out, o.within_slo);
+        let completed = o.samples.len();
+        let (latency, per_payload) =
+            build_latency_stats(o.samples, &base.payloads, base.exact_quantiles);
+        fleet_latency.merge(&latency);
+        let shard_classes = build_class_reports(
+            &base.classes,
+            o.class_samples.clone(),
+            &[],
+            base.traffic.slo_ms,
+            base.exact_quantiles,
+        );
+        fleet_class_samples.extend(o.class_samples);
+        // A retired shard's stats were sealed when its gate was dropped;
+        // a shard still live at shutdown reports from the gate itself.
+        let gate_stats = lock_recover(&slots[shard].sealed_stats)
+            .take()
+            .or_else(|| lock_recover(&slots[shard].gate).as_ref().map(|g| g.stats()));
+        if let Some(g) = &gate_stats {
+            match &mut fleet_gate {
+                Some(merged) => merged.merge(g),
+                None => fleet_gate = Some(g.clone()),
+            }
+        }
+        let mut fault = o.fault;
+        if let Some(plan) = backend.fault_plan() {
+            fault.injected.merge(&plan.counts_for(shard));
+        }
+        if let Some(g) = &gate_stats {
+            fault.revocations += g.revocations;
+        }
+        let health = healths[shard].snapshot();
+        fault.ejections += health.ejections;
+        fault.reinstatements += health.reinstatements;
+        for ms in healths[shard].drain_recoveries_ms() {
+            fault.recover_ms.record(ms);
+        }
+        fleet_fault.merge(&fault);
+        let shard_offered = routed[shard].load(Ordering::Relaxed);
+        let shard_traffic = TrafficReport {
+            arrivals: base.traffic.arrivals,
+            queue_cap: base.traffic.queue_cap,
+            shed_policy: base.traffic.shed,
+            slo_ms: base.traffic.slo_ms,
+            offered: shard_offered,
+            completed,
+            shed: 0,
+            timed_out,
+            failed: o.failed,
+            retried: fault.retried,
+            within_slo,
+            queue_delay,
+            offered_rate_hz: if span_s > 0.0 { shard_offered as f64 / span_s } else { 0.0 },
+        };
+        match &mut fleet_traffic {
+            Some(merged) => merged.merge(&shard_traffic),
+            None => fleet_traffic = Some(shard_traffic.clone()),
+        }
+        shards_out.push(ShardReport {
+            shard,
+            clients: wps,
+            report: Some(ServeReport {
+                strategy: base.strategy,
+                concurrency: base.concurrency,
+                clients: wps,
+                requests_per_client: base.requests,
+                batch: base.batch,
+                wall_s,
+                latency,
+                per_payload,
+                classes: shard_classes,
+                gate: gate_stats,
+                credits: None,
+                traffic: Some(shard_traffic),
+                fault: (tolerate || !fault.is_empty()).then_some(fault),
+            }),
+            error: shard_err,
+            health: Some(health),
+        });
+    }
+    if let Some(t) = &mut fleet_traffic {
+        t.offered = total;
+        t.shed = shed.load(Ordering::Relaxed);
+        t.offered_rate_hz = offered_rate_hz(&offsets);
+    }
+    fleet_latency.seal();
+    let mut fleet_offered_by_class = vec![0usize; k];
+    if k > 0 {
+        for seq in 0..total {
+            fleet_offered_by_class[class_of(seq, k)] += 1;
+        }
+    }
+    let fleet_classes = build_class_reports(
+        &base.classes,
+        fleet_class_samples,
+        &fleet_offered_by_class,
+        base.traffic.slo_ms,
+        base.exact_quantiles,
+    );
+    let fleet_fault = (tolerate || !fleet_fault.is_empty()).then_some(fleet_fault);
+    Ok(FleetReport {
+        strategy: base.strategy,
+        concurrency: base.concurrency,
+        placement: spec.placement,
+        clients: base.clients,
+        requests_per_client: base.requests,
+        batch: base.batch,
+        wall_s,
+        latency: fleet_latency,
+        shards: shards_out,
+        classes: fleet_classes,
+        gate: fleet_gate,
+        credits: credits.map(|b| b.snapshot()),
+        traffic: fleet_traffic,
+        fault: fleet_fault,
+        elastic: Some(elastic),
+    })
+}
+
+// ---------------------------------------------------------------------
+// tests
+// ---------------------------------------------------------------------
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StrategyKind;
+    use crate::control::fleet::{serve_fleet, Placement};
+    use crate::control::serving::SyntheticBackend;
+    use crate::control::traffic::{ArrivalProcess, TrafficSpec};
+
+    // ------------------------------------------------------- spec --
+
+    #[test]
+    fn autoscale_parse_roundtrip() {
+        let a: AutoscaleSpec = "1..4".parse().unwrap();
+        assert_eq!(a, AutoscaleSpec { min: 1, max: 4 });
+        assert_eq!(a.to_string().parse::<AutoscaleSpec>().unwrap(), a);
+        let b: AutoscaleSpec = " 2 .. 2 ".trim().parse().unwrap();
+        assert_eq!(b, AutoscaleSpec { min: 2, max: 2 });
+    }
+
+    #[test]
+    fn autoscale_rejects_malformed_and_inverted_bounds() {
+        for bad in ["", "3", "x..y", "4..1", "0..2", "..", "1.."] {
+            assert!(bad.parse::<AutoscaleSpec>().is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    // ----------------------------------------------- sim mirror --
+
+    #[test]
+    fn plan_windows_stays_within_bounds_and_tracks_demand() {
+        let counts = [0, 0, 10, 50, 100, 100, 40, 5, 0, 0];
+        let plan = plan_windows(&counts, 1, 4);
+        assert_eq!(plan.len(), counts.len());
+        assert!(plan.iter().all(|&a| (1..=4).contains(&a)), "{plan:?}");
+        assert_eq!(plan[0], 1, "starts at min");
+        assert_eq!(plan[4], 4, "peaks at max under peak demand");
+    }
+
+    #[test]
+    fn plan_windows_scales_up_immediately_but_down_with_hysteresis() {
+        let counts = [0, 100, 0, 0, 0];
+        let plan = plan_windows(&counts, 1, 4);
+        assert_eq!(plan[1], 4, "scale-up reacts in the same window");
+        // One low window is not enough to shrink...
+        assert_eq!(plan[2], 4, "hysteresis holds the first low window");
+        // ...two consecutive low windows are.
+        assert_eq!(plan[3], 1, "second low window retires");
+    }
+
+    #[test]
+    fn plan_windows_degenerate_ranges() {
+        assert_eq!(plan_windows(&[], 1, 4), Vec::<usize>::new());
+        assert_eq!(plan_windows(&[7, 7, 7], 2, 2), vec![2, 2, 2]);
+        // Flat demand maps to min (span clamps to 1, offsets are zero).
+        assert_eq!(plan_windows(&[5, 5, 5], 1, 4), vec![1, 1, 1]);
+    }
+
+    // -------------------------------------------------- report --
+
+    #[test]
+    fn render_names_both_transitions_even_with_zero_events() {
+        let r = ElasticReport {
+            min: 1,
+            max: 4,
+            started: 1,
+            final_active: 1,
+            peak_active: 1,
+            scale_ups: 0,
+            retires: 0,
+            requeued: 0,
+            steals: 0,
+            stolen: 0,
+            events: Vec::new(),
+        };
+        let s = r.render();
+        assert!(s.contains("scale-up"), "{s}");
+        assert!(s.contains("drain-then-retire"), "{s}");
+    }
+
+    #[test]
+    fn render_lists_events_in_order() {
+        let r = ElasticReport {
+            min: 1,
+            max: 2,
+            started: 1,
+            final_active: 1,
+            peak_active: 2,
+            scale_ups: 1,
+            retires: 1,
+            requeued: 3,
+            steals: 0,
+            stolen: 0,
+            events: vec![
+                ScaleEvent::Up { at_ms: 1.0, shard: 1, active: 2 },
+                ScaleEvent::Saturated { at_ms: 2.0 },
+                ScaleEvent::Retire { at_ms: 9.0, shard: 1, active: 1, requeued: 3 },
+            ],
+        };
+        let s = r.render();
+        let up = s.find("shard 1 spawned").expect("up line");
+        let sat = s.find("saturated at max").expect("saturated line");
+        let down = s.find("shard 1 drained").expect("retire line");
+        assert!(up < sat && sat < down, "{s}");
+    }
+
+    // ------------------------------------------------ end to end --
+
+    fn open_spec(rate_hz: f64, seed: u64) -> ServeSpec {
+        ServeSpec::new(StrategyKind::Worker, "dna")
+            .with_clients(4)
+            .with_requests(25)
+            .with_traffic(TrafficSpec {
+                arrivals: ArrivalProcess::Poisson { rate_hz },
+                queue_cap: 8,
+                shed: ShedPolicy::Block,
+                slo_ms: 1e9,
+                seed,
+            })
+    }
+
+    #[test]
+    fn elastic_fleet_conserves_and_reports() {
+        let spec = FleetSpec::new(open_spec(4_000.0, 7), 4, Placement::RoundRobin)
+            .with_autoscale("1..4".parse().unwrap());
+        let r = serve_fleet(&spec, &SyntheticBackend::new(40)).unwrap();
+        let t = r.traffic.as_ref().expect("open loop emits traffic");
+        assert!(
+            t.accounted(),
+            "conservation violated: offered {} completed {} shed {} timed_out {} failed {}",
+            t.offered,
+            t.completed,
+            t.shed,
+            t.timed_out,
+            t.failed
+        );
+        let e = r.elastic.as_ref().expect("elastic report present");
+        assert_eq!((e.min, e.max, e.started), (1, 4, 1));
+        assert!(e.final_active >= 1 && e.peak_active <= 4);
+        let s = r.render();
+        assert!(s.contains("scale-up") && s.contains("drain-then-retire"), "{s}");
+    }
+
+    #[test]
+    fn pinned_fleet_min_equals_max_never_scales() {
+        let spec = FleetSpec::new(open_spec(2_000.0, 3), 2, Placement::RoundRobin)
+            .with_autoscale("2..2".parse().unwrap());
+        let r = serve_fleet(&spec, &SyntheticBackend::new(40)).unwrap();
+        let e = r.elastic.as_ref().expect("elastic report present");
+        assert_eq!(e.scale_ups, 0, "no dormant slot to add");
+        assert_eq!(e.retires, 0, "min == max cannot retire");
+        assert_eq!(e.final_active, 2);
+        assert!(r.traffic.as_ref().unwrap().accounted());
+    }
+
+    #[test]
+    fn autoscale_requires_open_loop_and_matching_slot_pool() {
+        let closed = ServeSpec::new(StrategyKind::Worker, "dna").with_clients(2).with_requests(2);
+        let spec = FleetSpec::new(closed, 4, Placement::RoundRobin)
+            .with_autoscale("1..4".parse().unwrap());
+        let err = serve_fleet(&spec, &SyntheticBackend::new(20)).unwrap_err().to_string();
+        assert!(err.contains("open-loop"), "{err}");
+
+        let spec = FleetSpec::new(open_spec(1_000.0, 1), 3, Placement::RoundRobin)
+            .with_autoscale("1..4".parse().unwrap());
+        let err = serve_fleet(&spec, &SyntheticBackend::new(20)).unwrap_err().to_string();
+        assert!(err.contains("slot pool"), "{err}");
+    }
+}

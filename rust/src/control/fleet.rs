@@ -256,17 +256,31 @@ impl ShardRouter {
     }
 
     /// Work routed to `shard` finished: release its depth unit.
+    ///
+    /// The decrement is checked, never wrapping: a `complete` without a
+    /// matching `route`/`transfer` (the signature of a steal racing a
+    /// completion with broken bookkeeping) saturates at zero in release
+    /// builds — an advisory counter must stay advisory, not poison the
+    /// `LeastLoaded` scan with a ~`usize::MAX` depth — and trips a
+    /// `debug_assert` in debug builds so the bug is loud where tests run.
     pub fn complete(&self, shard: usize) {
-        let _ = self.depths[shard].fetch_update(
+        let balanced = self.depths[shard].fetch_update(
             Ordering::Relaxed,
             Ordering::Relaxed,
             |d| d.checked_sub(1),
+        );
+        debug_assert!(
+            balanced.is_ok(),
+            "router depth underflow on shard {shard}: complete without a matching route"
         );
     }
 
     /// Move one routed unit from `from` to `to`: the open-loop dispatcher
     /// diverts a request when the routed shard's admission queue is full,
-    /// and the depth accounting must follow it.
+    /// a worker steals a burst from a deeper shard, or a retiring shard's
+    /// backlog is requeued — and the depth accounting must follow it.
+    /// Checked like [`ShardRouter::complete`]: the `from` decrement
+    /// asserts in debug builds and saturates in release.
     pub fn transfer(&self, from: usize, to: usize) {
         if from == to {
             return;
@@ -291,11 +305,16 @@ pub struct FleetSpec {
     /// Circuit-breaker thresholds applied per shard (open-loop fleets;
     /// DESIGN.md §12).
     pub breaker: Breaker,
+    /// Elastic autoscaling bounds (DESIGN.md §15). `None` (the default)
+    /// keeps the fixed-size fleet path byte-identical to the pre-elastic
+    /// code; `Some` hands the run to `control::elastic`, with `shards`
+    /// as the slot pool (= `autoscale.max`).
+    pub autoscale: Option<crate::control::elastic::AutoscaleSpec>,
 }
 
 impl FleetSpec {
     pub fn new(base: ServeSpec, shards: usize, placement: Placement) -> Self {
-        Self { base, shards, placement, breaker: Breaker::default() }
+        Self { base, shards, placement, breaker: Breaker::default(), autoscale: None }
     }
 
     /// Override the per-shard circuit-breaker thresholds.
@@ -304,9 +323,33 @@ impl FleetSpec {
         self
     }
 
+    /// Enable elastic autoscaling between `auto.min` and `auto.max`
+    /// live shards (open-loop arrivals only; `shards` must equal
+    /// `auto.max` — the fleet pre-allocates one slot per possible shard).
+    pub fn with_autoscale(mut self, auto: crate::control::elastic::AutoscaleSpec) -> Self {
+        self.autoscale = Some(auto);
+        self
+    }
+
     fn validate(&self) -> Result<()> {
         if self.shards == 0 {
             return Err(anyhow!("a fleet needs at least one shard"));
+        }
+        if let Some(auto) = &self.autoscale {
+            auto.validate().map_err(|e| anyhow!(e))?;
+            if auto.max != self.shards {
+                return Err(anyhow!(
+                    "autoscale max ({}) must equal the fleet's shard slot pool ({})",
+                    auto.max,
+                    self.shards
+                ));
+            }
+            if !self.base.traffic.arrivals.is_open_loop() {
+                return Err(anyhow!(
+                    "autoscale needs open-loop arrivals (--arrivals poisson|bursty|ramp): \
+                     closed-loop fleets have no admission queues to scale against"
+                ));
+            }
         }
         Ok(())
     }
@@ -364,6 +407,9 @@ pub struct FleetReport {
     /// Fault/recovery accounting merged across shards (Some whenever a
     /// fault plan was active or the watchdog/breakers fired).
     pub fault: Option<FaultReport>,
+    /// Scale-event accounting (Some only for autoscaled runs;
+    /// DESIGN.md §15).
+    pub elastic: Option<crate::control::elastic::ElasticReport>,
 }
 
 impl FleetReport {
@@ -472,6 +518,12 @@ impl FleetReport {
                 }
             }
         }
+        if let Some(e) = &self.elastic {
+            for line in e.render().lines() {
+                out.push_str("\n  ");
+                out.push_str(line);
+            }
+        }
         out
     }
 }
@@ -493,6 +545,13 @@ pub fn serve_fleet(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result<Fleet
     spec.validate()?;
     let base = &spec.base;
     base.validate()?;
+    if spec.autoscale.is_some() {
+        // Elastic fleets own their whole serve loop (hot-add,
+        // drain-then-retire, stealing); validate() already pinned the
+        // open-loop requirement. Fixed fleets never enter this path, so
+        // their output stays byte-identical.
+        return crate::control::elastic::serve_fleet_elastic(spec, backend);
+    }
     if base.traffic.arrivals.is_open_loop() {
         return serve_fleet_open_loop(spec, backend);
     }
@@ -638,6 +697,7 @@ pub fn serve_fleet(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result<Fleet
         credits: None,
         traffic: None,
         fault,
+        elastic: None,
     })
 }
 
@@ -1031,6 +1091,7 @@ fn serve_fleet_open_loop(spec: &FleetSpec, backend: &dyn ServeBackend) -> Result
         credits: credits.map(|b| b.snapshot()),
         traffic: fleet_traffic,
         fault: fleet_fault,
+        elastic: None,
     })
 }
 
@@ -1113,10 +1174,45 @@ mod tests {
     }
 
     #[test]
-    fn completes_saturate_at_zero() {
+    #[cfg_attr(debug_assertions, should_panic(expected = "underflow"))]
+    fn unmatched_complete_is_loud_in_debug_and_saturates_in_release() {
+        // Satellite of ISSUE 10: an unmatched complete (a steal racing a
+        // completion with broken bookkeeping) must never wrap the
+        // advisory depth to ~usize::MAX. Debug builds assert; release
+        // builds saturate at zero and keep balancing.
         let r = ShardRouter::new(2, Placement::LeastLoaded);
-        r.complete(0); // nothing routed: must not underflow
+        r.complete(0); // nothing routed
         assert_eq!(r.depth(0), 0);
+    }
+
+    #[test]
+    fn depth_conserved_under_concurrent_route_transfer_complete() {
+        // Property (ISSUE 10): every route is balanced by exactly one
+        // complete, possibly after a chain of transfers (divert at
+        // admission, steal, retire-requeue). Hammered from 4 threads the
+        // depths must return to zero — no unit lost, none double-freed.
+        let r = &ShardRouter::new(4, Placement::RoundRobin);
+        std::thread::scope(|s| {
+            for t in 0..4usize {
+                s.spawn(move || {
+                    for i in 0..2_000usize {
+                        let shard = r.route((t * 31 + i) % 7);
+                        if i % 3 == 0 {
+                            // Steal path: the unit moves shards, then
+                            // completes where it landed.
+                            let to = (shard + 1 + i % 3) % 4;
+                            r.transfer(shard, to);
+                            r.complete(to);
+                        } else {
+                            r.complete(shard);
+                        }
+                    }
+                });
+            }
+        });
+        for shard in 0..4 {
+            assert_eq!(r.depth(shard), 0, "shard {shard} depth not conserved");
+        }
     }
 
     #[test]

@@ -24,10 +24,15 @@
 //! itself: a [`ConcurrencyMode`] (`cook|mps|mig|streams`) decides what
 //! may run concurrently in both interpreters — the exclusive COOK gate,
 //! MPS spatial sharing, MIG hard partitions, or priority streams
-//! (DESIGN.md §14).
+//! (DESIGN.md §14). The [`elastic`] module makes the fleet's *size*
+//! dynamic: an SLO-driven controller hot-adds shards under pressure and
+//! retires quiet ones drain-first, with idle workers stealing from the
+//! deepest live queue, while the conservation law holds through every
+//! scale event (DESIGN.md §15).
 
 pub mod arbiter;
 pub mod concurrency;
+pub mod elastic;
 pub mod fault;
 pub mod fleet;
 pub mod gate;
@@ -42,6 +47,9 @@ pub use arbiter::{
     CreditSnapshot, TenantClass, Waiter,
 };
 pub use concurrency::{ConcurrencyMode, ModeGate};
+pub use elastic::{
+    plan_windows, serve_fleet_elastic, AutoscaleSpec, ElasticReport, ScaleEvent,
+};
 pub use fault::{
     panic_msg, Breaker, FaultPlan, FaultReport, FaultSpec, FaultyBackend, HealthSnapshot,
     HealthState, RequestTag, RetryPolicy, ShardHealth,

@@ -1334,6 +1334,126 @@ impl OpenWorkerCtx<'_> {
     }
 }
 
+/// Warm-up (first-use compile) outside the recorded window, through the
+/// gate so grant accounting matches the closed loop. Returns the error,
+/// if any (an infrastructure failure, never a per-request one). Shared
+/// by [`open_worker`] and the elastic worker
+/// (`control::elastic`) so hot-added shards warm exactly like boot-time
+/// ones.
+pub(crate) fn warm_up(ctx: &OpenWorkerCtx<'_>, exec: &dyn PayloadExecutor) -> Option<anyhow::Error> {
+    let rp = &ctx.resolved[ctx.client % ctx.resolved.len()];
+    let warmed = match ctx.gate {
+        Some(g) => g.with_class(class_of(ctx.client, ctx.classes), || {
+            exec.execute(rp.index, &rp.base_inputs)
+        }),
+        None => exec.execute(rp.index, &rp.base_inputs),
+    };
+    warmed.and_then(|r| check_out(rp, &r)).err()
+}
+
+/// Unhealthy drain: count everything still queued as failed (settling
+/// each request's credit) so blocking/timeout producers can never
+/// deadlock on a dead worker.
+pub(crate) fn drain_failed(ctx: &OpenWorkerCtx<'_>, out: &mut OpenWorkerOut) {
+    loop {
+        let dropped = ctx.queue.pop_batch(ctx.batch.max(1));
+        if dropped.is_empty() {
+            return;
+        }
+        out.failed += dropped.len();
+        for p in dropped {
+            ctx.settle(p.class);
+        }
+    }
+}
+
+/// Process one dequeued burst end to end: dequeue-side accounting
+/// (queue-delay histogram, timeout shedding), one gate grant covering
+/// the survivors, execution, then retries after the grant is released.
+/// Shared by [`open_worker`] and the elastic worker — a stolen burst
+/// runs through the *thief's* ctx, so its accounting is identical to a
+/// locally-routed one (DESIGN.md §15).
+pub(crate) fn process_burst(
+    ctx: &OpenWorkerCtx<'_>,
+    exec: &dyn PayloadExecutor,
+    burst: Vec<Pending>,
+    out: &mut OpenWorkerOut,
+) {
+    // Dequeue-side accounting happens HERE, before any gate wait:
+    // the queue-delay histogram measures arrival-to-dequeue only
+    // (the gate wait has its own histogram), and the timeout policy
+    // judges a request's age at dequeue — never acquiring a grant
+    // just to drop an already-expired burst.
+    let mut ready = Vec::with_capacity(burst.len());
+    for p in burst {
+        let qd = p.arrival_at.elapsed();
+        out.queue_delay.record(qd.as_nanos().min(u64::MAX as u128) as u64);
+        if ctx.timeout.is_some_and(|t| qd > t) {
+            out.timed_out += 1;
+            ctx.settle(p.class);
+        } else {
+            ready.push(p);
+        }
+    }
+    if ready.is_empty() {
+        return;
+    }
+    // One grant covers the whole burst; it rides under the class of
+    // the burst's head request (bursts can be class-mixed — the
+    // per-request class still drives samples and credits).
+    let grant = ctx.gate.map(|g| g.acquire_class(ready[0].class));
+    // Failures collected here retry after the grant is gone.
+    let mut retry_later: Vec<(Pending, ExecFailure)> = Vec::new();
+    for p in ready {
+        let rp = &ctx.resolved[p.slot];
+        let mut inputs = rp.base_inputs.clone();
+        perturb(&mut inputs, p.seq, p.seq);
+        let tag = RequestTag {
+            shard: ctx.shard,
+            slot: p.slot,
+            seq: p.seq as u64,
+            attempt: p.attempt,
+        };
+        let t = Instant::now();
+        match execute_attempt(exec, rp, &inputs, tag) {
+            Ok(()) => {
+                if ctx.share < 1.0 {
+                    // PTB SM-share simulation (see run_client).
+                    std::thread::sleep(t.elapsed().mul_f64(1.0 / ctx.share - 1.0));
+                }
+                let ms = p.arrival_at.elapsed().as_secs_f64() * 1e3;
+                out.samples.push((p.slot, ms));
+                if ctx.classes > 0 {
+                    out.class_samples.push((p.class, ms));
+                }
+                if p.attempt > 0 {
+                    // A re-routed request completing here closes its
+                    // recovery (measured from arrival — the original
+                    // failure instant stayed on the other shard).
+                    out.fault.record_recovery(ms);
+                }
+                ctx.on_success();
+                ctx.settle(p.class);
+            }
+            Err(fail) => {
+                out.fault.record_failure(t.elapsed().as_secs_f64() * 1e3);
+                ctx.on_failure(fail.panicked);
+                retry_later.push((p, fail));
+            }
+        }
+    }
+    // A revoked grant means *we* overstayed the lease (a hung or
+    // injected-slow request): the watchdog quarantined us, so the
+    // breaker takes a hit too.
+    if grant.as_ref().is_some_and(|g| g.is_revoked()) {
+        ctx.on_failure(false);
+    }
+    drop(grant);
+    for (p, fail) in retry_later {
+        retry_pending(ctx, exec, p, fail, out);
+    }
+}
+
 /// An open-loop serving worker: drains an [`AdmissionQueue`], admitting
 /// bursts of up to `batch` requests per gate grant. An erroring worker
 /// keeps draining (so blocking producers can never wedge) and reports
@@ -1351,16 +1471,7 @@ pub(crate) fn open_worker(ctx: &OpenWorkerCtx<'_>, warm: &Barrier) -> OpenWorker
         }
     };
     if let Some(exec) = &exec {
-        // Warm-up (first-use compile) outside the recorded window,
-        // through the gate so grant accounting matches the closed loop.
-        let rp = &ctx.resolved[ctx.client % ctx.resolved.len()];
-        let warmed = match ctx.gate {
-            Some(g) => g.with_class(class_of(ctx.client, ctx.classes), || {
-                exec.execute(rp.index, &rp.base_inputs)
-            }),
-            None => exec.execute(rp.index, &rp.base_inputs),
-        };
-        if let Err(e) = warmed.and_then(|r| check_out(rp, &r)) {
+        if let Some(e) = warm_up(ctx, &**exec) {
             out.error = Some(e);
         }
     }
@@ -1369,16 +1480,8 @@ pub(crate) fn open_worker(ctx: &OpenWorkerCtx<'_>, warm: &Barrier) -> OpenWorker
     warm.wait();
     let Some(exec) = exec.filter(|_| out.error.is_none()) else {
         // Unhealthy: drain so blocking/timeout pushes cannot deadlock.
-        loop {
-            let dropped = ctx.queue.pop_batch(ctx.batch.max(1));
-            if dropped.is_empty() {
-                return out;
-            }
-            out.failed += dropped.len();
-            for p in dropped {
-                ctx.settle(p.class);
-            }
-        }
+        drain_failed(ctx, &mut out);
+        return out;
     };
     loop {
         // Burst collection: block for the first request, then take
@@ -1388,79 +1491,7 @@ pub(crate) fn open_worker(ctx: &OpenWorkerCtx<'_>, warm: &Barrier) -> OpenWorker
         if burst.is_empty() {
             break; // closed and drained
         }
-        // Dequeue-side accounting happens HERE, before any gate wait:
-        // the queue-delay histogram measures arrival-to-dequeue only
-        // (the gate wait has its own histogram), and the timeout policy
-        // judges a request's age at dequeue — never acquiring a grant
-        // just to drop an already-expired burst.
-        let mut ready = Vec::with_capacity(burst.len());
-        for p in burst {
-            let qd = p.arrival_at.elapsed();
-            out.queue_delay.record(qd.as_nanos().min(u64::MAX as u128) as u64);
-            if ctx.timeout.is_some_and(|t| qd > t) {
-                out.timed_out += 1;
-                ctx.settle(p.class);
-            } else {
-                ready.push(p);
-            }
-        }
-        if ready.is_empty() {
-            continue;
-        }
-        // One grant covers the whole burst; it rides under the class of
-        // the burst's head request (bursts can be class-mixed — the
-        // per-request class still drives samples and credits).
-        let grant = ctx.gate.map(|g| g.acquire_class(ready[0].class));
-        // Failures collected here retry after the grant is gone.
-        let mut retry_later: Vec<(Pending, ExecFailure)> = Vec::new();
-        for p in ready {
-            let rp = &ctx.resolved[p.slot];
-            let mut inputs = rp.base_inputs.clone();
-            perturb(&mut inputs, p.seq, p.seq);
-            let tag = RequestTag {
-                shard: ctx.shard,
-                slot: p.slot,
-                seq: p.seq as u64,
-                attempt: p.attempt,
-            };
-            let t = Instant::now();
-            match execute_attempt(&**exec, rp, &inputs, tag) {
-                Ok(()) => {
-                    if ctx.share < 1.0 {
-                        // PTB SM-share simulation (see run_client).
-                        std::thread::sleep(t.elapsed().mul_f64(1.0 / ctx.share - 1.0));
-                    }
-                    let ms = p.arrival_at.elapsed().as_secs_f64() * 1e3;
-                    out.samples.push((p.slot, ms));
-                    if ctx.classes > 0 {
-                        out.class_samples.push((p.class, ms));
-                    }
-                    if p.attempt > 0 {
-                        // A re-routed request completing here closes its
-                        // recovery (measured from arrival — the original
-                        // failure instant stayed on the other shard).
-                        out.fault.record_recovery(ms);
-                    }
-                    ctx.on_success();
-                    ctx.settle(p.class);
-                }
-                Err(fail) => {
-                    out.fault.record_failure(t.elapsed().as_secs_f64() * 1e3);
-                    ctx.on_failure(fail.panicked);
-                    retry_later.push((p, fail));
-                }
-            }
-        }
-        // A revoked grant means *we* overstayed the lease (a hung or
-        // injected-slow request): the watchdog quarantined us, so the
-        // breaker takes a hit too.
-        if grant.as_ref().is_some_and(|g| g.is_revoked()) {
-            ctx.on_failure(false);
-        }
-        drop(grant);
-        for (p, fail) in retry_later {
-            retry_pending(ctx, &**exec, p, fail, &mut out);
-        }
+        process_burst(ctx, &**exec, burst, &mut out);
     }
     out
 }

@@ -480,6 +480,69 @@ impl<T> AdmissionQueue<T> {
         item
     }
 
+    /// Non-blocking batched dequeue: take up to `max` items that are
+    /// already waiting, never sleeping. This is the work-stealing
+    /// primitive — a thief drains a burst from a *victim's* queue without
+    /// ever parking on it (DESIGN.md §15). An empty vec means
+    /// empty-right-now, closed or not; the caller decides what idleness
+    /// means. Producers get one `not_full` wake per item removed, same
+    /// as [`AdmissionQueue::pop_batch`].
+    pub fn try_pop_batch(&self, max: usize) -> Vec<T> {
+        assert!(max >= 1, "try_pop_batch needs max >= 1");
+        let mut st = lock_recover(&self.state);
+        let take = st.q.len().min(max);
+        let batch: Vec<T> = st.q.drain(..take).collect();
+        drop(st);
+        for _ in 0..take {
+            self.not_full.notify_one();
+        }
+        batch
+    }
+
+    /// Batched dequeue with bounded patience: like
+    /// [`AdmissionQueue::pop_batch`], but gives up after `patience` with
+    /// an empty vec while the queue is still open — the elastic worker's
+    /// idle detector (an idle worker goes stealing instead of parking on
+    /// its own queue forever). Distinguish "idle" from "end of stream"
+    /// via [`AdmissionQueue::is_closed`] + [`AdmissionQueue::is_empty`]:
+    /// the close-then-drain conservation contract of `pop_batch` is
+    /// unchanged (the state mutex serialises a racing close).
+    pub fn pop_batch_timeout(&self, max: usize, patience: Duration) -> Vec<T> {
+        assert!(max >= 1, "pop_batch_timeout needs max >= 1");
+        let deadline = std::time::Instant::now() + patience;
+        let mut st = lock_recover(&self.state);
+        loop {
+            if !st.q.is_empty() {
+                let take = st.q.len().min(max);
+                let batch: Vec<T> = st.q.drain(..take).collect();
+                drop(st);
+                for _ in 0..take {
+                    self.not_full.notify_one();
+                }
+                return batch;
+            }
+            if st.closed {
+                return Vec::new();
+            }
+            let now = std::time::Instant::now();
+            let Some(left) = deadline.checked_duration_since(now).filter(|d| !d.is_zero())
+            else {
+                return Vec::new();
+            };
+            let (guard, _timed_out) = self
+                .not_empty
+                .wait_timeout(st, left)
+                .unwrap_or_else(PoisonError::into_inner);
+            st = guard;
+        }
+    }
+
+    /// Has [`AdmissionQueue::close`] been called? (The backlog may still
+    /// be draining: end-of-stream is closed **and** empty.)
+    pub fn is_closed(&self) -> bool {
+        lock_recover(&self.state).closed
+    }
+
     /// End of stream: wake every blocked producer and consumer.
     pub fn close(&self) {
         lock_recover(&self.state).closed = true;
@@ -837,6 +900,67 @@ mod tests {
             let got = consumer.join().unwrap();
             assert_eq!(got, admitted, "trial {trial}: items lost or reordered");
         }
+    }
+
+    #[test]
+    fn try_pop_batch_never_blocks_and_takes_a_prefix() {
+        let q = AdmissionQueue::new(8);
+        assert!(q.try_pop_batch(4).is_empty(), "empty queue: empty vec, no park");
+        for i in 0..5 {
+            q.try_push(i).unwrap();
+        }
+        assert_eq!(q.try_pop_batch(3), vec![0, 1, 2], "FIFO prefix, capped at max");
+        assert_eq!(q.try_pop_batch(10), vec![3, 4]);
+        q.close();
+        assert!(q.try_pop_batch(4).is_empty(), "closed + drained: still empty");
+    }
+
+    #[test]
+    fn try_pop_batch_wakes_blocked_producers() {
+        let q = std::sync::Arc::new(AdmissionQueue::new(2));
+        q.try_push(0).unwrap();
+        q.try_push(1).unwrap();
+        let q2 = std::sync::Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.push_blocking(2));
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(q.try_pop_batch(2), vec![0, 1], "steal drains the backlog");
+        assert!(h.join().unwrap(), "the steal's not_full wakes must free the producer");
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn pop_batch_timeout_distinguishes_idle_from_end_of_stream() {
+        let q = AdmissionQueue::new(4);
+        let t0 = std::time::Instant::now();
+        assert!(
+            q.pop_batch_timeout(4, Duration::from_millis(10)).is_empty(),
+            "idle: gives up after patience"
+        );
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+        assert!(!q.is_closed(), "timeout does not end the stream");
+        q.try_push(7).unwrap();
+        assert_eq!(q.pop_batch_timeout(4, Duration::from_millis(50)), vec![7]);
+        q.try_push(8).unwrap();
+        q.close();
+        assert!(q.is_closed());
+        assert_eq!(
+            q.pop_batch_timeout(4, Duration::from_millis(50)),
+            vec![8],
+            "backlog still drains after close"
+        );
+        assert!(q.pop_batch_timeout(4, Duration::from_millis(1)).is_empty());
+        assert!(q.is_closed() && q.is_empty(), "closed + drained = end of stream");
+    }
+
+    #[test]
+    fn pop_batch_timeout_wakes_on_push() {
+        let q = std::sync::Arc::new(AdmissionQueue::new(4));
+        let q2 = std::sync::Arc::clone(&q);
+        let h =
+            std::thread::spawn(move || q2.pop_batch_timeout(4, Duration::from_millis(500)));
+        std::thread::sleep(Duration::from_millis(20));
+        q.try_push(42).unwrap();
+        assert_eq!(h.join().unwrap(), vec![42], "wakes on the first item, not the deadline");
     }
 
     // ----------------------------------------------------------- report --

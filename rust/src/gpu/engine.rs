@@ -308,6 +308,22 @@ pub struct Sim {
     pending_fault_ns: Vec<Nanos>,
     /// Fault injections fired per app.
     faults_injected: Vec<usize>,
+    /// Mirrored autoscale timeline (`SimConfig::autoscale`): the
+    /// active-shard count per policy window, `(window start, active)`.
+    /// Computed pre-partition from the GLOBAL arrival stream (like the
+    /// arrival and fault schedules), so the fleet's scale story is a
+    /// pure function of (config, seed) at any `COOK_SIM_THREADS`.
+    /// Empty unless autoscale is set on an open-loop run.
+    scale_timeline: Vec<(Nanos, usize)>,
+    /// Per-shard scheduled scale transitions, turned into `ScaleDue`
+    /// events at the start of `run` and popped in order as they fire
+    /// (the sharded runner deals these from the parent, like faults).
+    scale_transitions: Vec<std::collections::VecDeque<(Nanos, usize)>>,
+    /// Per-shard fired transitions `(t, new active count)` — the
+    /// observability log `ScaleDue` appends to. Nothing else in the
+    /// engine reads it, which is what keeps `autoscale: None` traces
+    /// bit-identical to the fixed-fleet engine.
+    scale_log: Vec<Vec<(Nanos, usize)>>,
     /// Source programs retained for the shard partitioner (`num_gpus > 1`
     /// only): `run` re-compiles each shard's subset into an independent
     /// sub-simulation. `None` for single-GPU runs and after a fleet run.
@@ -321,6 +337,67 @@ pub struct Sim {
 /// other shard makes (each shard's seed mixes only the root seed and
 /// its own index).
 const SHARD_SEED_TAG: u64 = 0x5348_4152_0000_0000;
+
+/// Policy windows the mirrored autoscaler evaluates over the horizon
+/// (the `cook experiment autoscale` figure plots one row per window).
+pub const SCALE_WINDOWS: usize = 16;
+
+/// Build the autoscale timeline: bucket the global arrival stream into
+/// [`SCALE_WINDOWS`] equal windows and map the per-window counts onto
+/// an active-shard count via the deterministic controller mirror
+/// ([`crate::control::elastic::plan_windows`]). Bounds clamp to the
+/// fleet's shard count so the timeline can never name a shard the sim
+/// does not have.
+fn plan_scale_timeline(
+    stream: &[Nanos],
+    horizon_ns: Nanos,
+    auto: crate::control::elastic::AutoscaleSpec,
+    num_gpus: usize,
+) -> Vec<(Nanos, usize)> {
+    let w = (horizon_ns / SCALE_WINDOWS as Nanos).max(1);
+    let mut counts = vec![0usize; SCALE_WINDOWS];
+    for &t in stream {
+        counts[((t / w) as usize).min(SCALE_WINDOWS - 1)] += 1;
+    }
+    let plan = crate::control::elastic::plan_windows(
+        &counts,
+        auto.min.min(num_gpus),
+        auto.max.min(num_gpus),
+    );
+    plan.into_iter().enumerate().map(|(i, a)| (i as Nanos * w, a)).collect()
+}
+
+/// Active-shard count at time `t` per a non-empty timeline (the entry
+/// in force: last window starting at or before `t`).
+fn active_at(timeline: &[(Nanos, usize)], t: Nanos) -> usize {
+    let i = timeline.partition_point(|&(ts, _)| ts <= t);
+    timeline[i.saturating_sub(1)].1
+}
+
+/// Collapse a timeline into per-shard transition deques: a change from
+/// `a` to `b` active shards at `t` touches exactly the shards in
+/// `min(a,b)..max(a,b)` (the ones that go live or start draining), each
+/// of which gets one `(t, b)` entry — the schedule behind its
+/// `ScaleDue` events.
+fn transitions_of(
+    timeline: &[(Nanos, usize)],
+    num_gpus: usize,
+) -> Vec<std::collections::VecDeque<(Nanos, usize)>> {
+    let mut out = vec![std::collections::VecDeque::new(); num_gpus];
+    let Some(&(_, first)) = timeline.first() else {
+        return out;
+    };
+    let mut prev = first;
+    for &(t, a) in &timeline[1..] {
+        if a != prev {
+            for s in a.min(prev)..a.max(prev) {
+                out[s].push_back((t, a));
+            }
+            prev = a;
+        }
+    }
+    out
+}
 
 impl Sim {
     /// Build a simulator running `programs`, one application per program,
@@ -384,16 +461,33 @@ impl Sim {
         let serving_apps: Vec<usize> = (0..n)
             .filter(|&i| apps[i].program.repeat == RepeatMode::LoopUntilHorizon)
             .collect();
+        let mut scale_timeline: Vec<(Nanos, usize)> = Vec::new();
         if open_loop && !serving_apps.is_empty() {
-            for (k, t) in cfg
-                .arrivals
-                .schedule_until(cfg.horizon_ns, cfg.seed)
-                .into_iter()
-                .enumerate()
-            {
-                arrival_schedule[serving_apps[k % serving_apps.len()]].push(t);
+            let stream = cfg.arrivals.schedule_until(cfg.horizon_ns, cfg.seed);
+            if let Some(auto) = cfg.autoscale {
+                scale_timeline = plan_scale_timeline(&stream, cfg.horizon_ns, auto, num_gpus);
+            }
+            for (k, t) in stream.into_iter().enumerate() {
+                // Deal each arrival over the serving apps whose shard is
+                // live at its arrival time (the mirrored controller's
+                // window timeline). Without autoscale the timeline is
+                // empty and the dealing is the historical
+                // `k % serving_apps` — byte-for-byte.
+                let live: Vec<usize> = if scale_timeline.is_empty() {
+                    Vec::new()
+                } else {
+                    let active = active_at(&scale_timeline, t);
+                    serving_apps
+                        .iter()
+                        .copied()
+                        .filter(|&a| shard_of_ctx[a] < active)
+                        .collect()
+                };
+                let pool = if live.is_empty() { &serving_apps } else { &live };
+                arrival_schedule[pool[k % pool.len()]].push(t);
             }
         }
+        let scale_transitions = transitions_of(&scale_timeline, num_gpus);
         // Seeded kernel-hang injections (`SimConfig::faults`, DESIGN.md
         // §12): a per-app schedule of (fire time, extra ns), a pure
         // function of (spec, app, shard, horizon, seed) — the simulator
@@ -470,6 +564,9 @@ impl Sim {
             fault_schedule,
             pending_fault_ns: vec![0; n],
             faults_injected: vec![0; n],
+            scale_timeline,
+            scale_transitions,
+            scale_log: vec![Vec::new(); num_gpus],
             fleet_programs: (num_gpus > 1).then_some(programs),
         };
         // Mode-driven SM banking (mps/mig) overrides the policy masks;
@@ -545,6 +642,18 @@ impl Sim {
         (0..self.num_gpus())
             .map(|s| self.trace.cross_app_kernel_overlaps_among(&self.shard_apps(s)))
             .collect()
+    }
+
+    /// The mirrored autoscale timeline `(window start, active shards)`.
+    /// Empty unless `SimConfig::autoscale` is set on an open-loop run.
+    pub fn scale_timeline(&self) -> &[(Nanos, usize)] {
+        &self.scale_timeline
+    }
+
+    /// Scale transitions that fired on `shard`, in time order, as
+    /// `(t, new active count)` — filled by `ScaleDue` events.
+    pub fn scale_log(&self, shard: usize) -> &[(Nanos, usize)] {
+        &self.scale_log[shard]
     }
 
     #[inline]
@@ -627,6 +736,10 @@ impl Sim {
                 // view — thread-count invariance depends on it.
                 sub.fault_schedule[j] = std::mem::take(&mut self.fault_schedule[g]);
             }
+            // The mirrored scale timeline is a per-SHARD schedule: hand
+            // this shard its slice of the parent's pre-partition plan
+            // (the sub-sim computed a degenerate single-shard one).
+            sub.scale_transitions[0] = std::mem::take(&mut self.scale_transitions[shard]);
             // `mig` SM banks follow the GLOBAL class identity dealt just
             // above; re-derive the masks the sub-sim computed from its
             // local (scrambled) view. No-op for cook/streams.
@@ -711,6 +824,7 @@ impl Sim {
             });
         }
         self.locks[shard] = std::mem::take(&mut sub.locks).into_iter().next().unwrap();
+        self.scale_log[shard] = std::mem::take(&mut sub.scale_log[0]);
         self.now = self.now.max(sub.now);
         self.horizon_reached |= sub.horizon_reached;
     }
@@ -734,6 +848,13 @@ impl Sim {
         for i in 0..self.fault_schedule.len() {
             for &(t, _) in self.fault_schedule[i].iter() {
                 self.events.push(t, Event::FaultDue(AppId(i)));
+            }
+        }
+        // Mirrored scale transitions are scheduled up front too; each
+        // ScaleDue pops its shard's front entry (sorted by fire time).
+        for s in 0..self.scale_transitions.len() {
+            for &(t, _) in self.scale_transitions[s].iter() {
+                self.events.push(t, Event::ScaleDue { shard: s as u32 });
             }
         }
         for i in 0..self.apps.len() {
@@ -813,6 +934,7 @@ impl Sim {
             Event::LockWake { shard } => self.lock_wake(shard as usize),
             Event::ArrivalDue(app) => self.arrival_due(app),
             Event::FaultDue(app) => self.fault_due(app),
+            Event::ScaleDue { shard } => self.scale_due(shard),
             Event::Horizon => unreachable!("handled in run()"),
         }
     }
@@ -827,6 +949,17 @@ impl Sim {
             self.pending_fault_ns[app.0] += extra;
             self.faults_injected[app.0] += 1;
             self.mark(D_GPU);
+        }
+    }
+
+    /// A mirrored scale transition reaches this shard: record it in the
+    /// scale log. Pure observability — arrivals were already dealt
+    /// against the timeline in `new`, and nothing is marked dirty, so
+    /// `autoscale: None` traces stay bit-identical to the fixed-fleet
+    /// engine and the log is invariant under `COOK_SIM_THREADS`.
+    fn scale_due(&mut self, shard: u32) {
+        if let Some(entry) = self.scale_transitions[shard as usize].pop_front() {
+            self.scale_log[shard as usize].push(entry);
         }
     }
 

@@ -77,6 +77,13 @@ pub enum Event {
     /// stretched by the scheduled extra nanoseconds, mirroring the live
     /// `FaultyExecutor` hang (DESIGN.md §12).
     FaultDue(AppId),
+    /// A scheduled fleet scale transition reaches one shard
+    /// (`SimConfig::autoscale`): the mirrored elastic controller's
+    /// pre-partition timeline says the active-shard count changes here.
+    /// Pure observability — the handler records the transition in the
+    /// scale log and changes no other sim state, which is what keeps
+    /// `autoscale: None` runs bit-identical to pre-elastic traces.
+    ScaleDue { shard: u32 },
     /// End of the measurement horizon.
     Horizon,
 }

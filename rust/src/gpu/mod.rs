@@ -12,7 +12,7 @@ pub mod engine;
 pub mod event;
 pub mod sm;
 
-pub use engine::Sim;
+pub use engine::{Sim, SCALE_WINDOWS};
 
 #[cfg(test)]
 mod engine_tests;

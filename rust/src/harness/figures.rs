@@ -449,6 +449,95 @@ pub fn isolation_figure_for(
     (out, rows)
 }
 
+/// One controller window of the autoscale figure.
+#[derive(Debug, Clone)]
+pub struct AutoscalePoint {
+    pub window: usize,
+    /// Window start, virtual milliseconds.
+    pub start_ms: f64,
+    /// Arrivals offered during the window (all apps).
+    pub offered: usize,
+    /// Active shards the mirrored controller planned for the window.
+    pub active_shards: usize,
+    /// Iterations completed during the window (all apps).
+    pub completed: usize,
+}
+
+/// Autoscale section (beyond the paper): a 4-shard fleet of onnx_dna
+/// apps under bursty open-loop arrivals with the mirrored elastic
+/// controller (`autoscale 1..4`, DESIGN.md §15). One row per controller
+/// window shows the active-shard count chasing the burst envelope:
+/// scale-up inside the on-phase, drain-then-retire after the hysteresis
+/// delay in the off-phase. The live counterpart is
+/// `cook serve --autoscale 1..4 --arrivals bursty:...`.
+pub fn autoscale_figure(seed: u64) -> (String, Vec<AutoscalePoint>) {
+    use crate::gpu::SCALE_WINDOWS;
+    const APPS: usize = 4;
+    const FLEET: usize = 4;
+    const HORIZON_NS: u64 = 2_000_000_000;
+    let arrivals = ArrivalProcess::Bursty { rate_hz: 800.0, on_ms: 250, off_ms: 250 };
+    let cfg = SimConfig::default()
+        .with_strategy(StrategyKind::Worker)
+        .with_seed(seed)
+        .with_horizon_ns(HORIZON_NS)
+        .with_num_gpus(FLEET)
+        .with_arrivals(arrivals)
+        .with_arrival_queue_cap(64)
+        .with_autoscale("1..4".parse().expect("static autoscale spec"));
+    let programs = (0..APPS).map(|_| Bench::OnnxDna.program()).collect();
+    let mut sim = Sim::new(cfg, programs);
+    sim.run();
+    // Re-derive the per-window offered counts from the same seeded
+    // stream the engine dealt (pure function of (arrivals, seed)), and
+    // bucket completions over the identical window grid.
+    let w = (HORIZON_NS / SCALE_WINDOWS as u64).max(1);
+    let bucket = |t: u64| ((t / w) as usize).min(SCALE_WINDOWS - 1);
+    let mut offered = vec![0usize; SCALE_WINDOWS];
+    for t in arrivals.schedule_until(HORIZON_NS, seed) {
+        offered[bucket(t)] += 1;
+    }
+    let mut completed = vec![0usize; SCALE_WINDOWS];
+    for a in 0..APPS {
+        for &t in sim.completions(AppId(a)) {
+            completed[bucket(t)] += 1;
+        }
+    }
+    let timeline = sim.scale_timeline();
+    let points: Vec<AutoscalePoint> = (0..SCALE_WINDOWS)
+        .map(|i| AutoscalePoint {
+            window: i,
+            start_ms: (i as u64 * w) as f64 / 1e6,
+            offered: offered[i],
+            active_shards: timeline.get(i).map_or(1, |&(_, a)| a),
+            completed: completed[i],
+        })
+        .collect();
+    let mut out = String::new();
+    let _ = writeln!(
+        out,
+        "== Elastic autoscale: onnx_dna x {APPS} apps, worker strategy, \
+         bursty arrivals, autoscale 1..{FLEET} =="
+    );
+    let _ = writeln!(
+        out,
+        "{:<7} {:>9} {:>9} {:>9} {:>7}  {}",
+        "window", "start ms", "offered", "done", "shards", "active"
+    );
+    for p in &points {
+        let _ = writeln!(
+            out,
+            "{:<7} {:>9.0} {:>9} {:>9} {:>7}  {}",
+            p.window,
+            p.start_ms,
+            p.offered,
+            p.completed,
+            p.active_shards,
+            "#".repeat(p.active_shards)
+        );
+    }
+    (out, points)
+}
+
 /// Persist a figure's CSV series under `dir`.
 pub fn write_net_csv(dir: &Path, bench: Bench, results: &[RunResult]) -> std::io::Result<()> {
     std::fs::create_dir_all(dir)?;
@@ -552,6 +641,30 @@ mod tests {
             ips_of(ConcurrencyMode::Mps { quota: 2 }) >= ips_of(ConcurrencyMode::Cook),
             "mps must match or beat cook on aggregate IPS"
         );
+    }
+
+    #[test]
+    fn autoscale_figure_chases_the_burst_envelope() {
+        let (text, points) = autoscale_figure(0);
+        assert_eq!(points.len(), crate::gpu::SCALE_WINDOWS);
+        for p in &points {
+            assert!(
+                (1..=4).contains(&p.active_shards),
+                "window {}: active shards {} outside 1..4",
+                p.window,
+                p.active_shards
+            );
+        }
+        // The controller must actually move: full fleet inside the
+        // bursts, scaled down (after hysteresis) in the quiet phases.
+        assert!(points.iter().any(|p| p.active_shards == 4), "never scaled up: {text}");
+        assert!(points.iter().any(|p| p.active_shards < 4), "never scaled down: {text}");
+        // Scale-up is immediate: the busiest window runs the full fleet.
+        let busiest = points.iter().max_by_key(|p| p.offered).unwrap();
+        assert_eq!(busiest.active_shards, 4, "busiest window under-provisioned");
+        assert!(points.iter().map(|p| p.offered).sum::<usize>() > 0);
+        assert!(points.iter().map(|p| p.completed).sum::<usize>() > 0);
+        assert!(text.contains("autoscale 1..4"), "{text}");
     }
 
     #[test]

@@ -15,7 +15,10 @@
 //!   (any manifest payload, all five strategies, optional batching)
 //!   through the access-control policy layer; `--shards N` routes the
 //!   clients across a fleet of per-GPU gates (`control::fleet`), and
-//!   `--shard-sweep` tabulates throughput scaling across fleet sizes.
+//!   `--shard-sweep` tabulates throughput scaling across fleet sizes;
+//!   `--autoscale MIN..MAX` hands the fleet to the elastic controller
+//!   (`control::elastic`): SLO-driven scale-up, drain-then-retire
+//!   scale-down, and work stealing (DESIGN.md §15).
 
 use anyhow::{anyhow, bail, Context, Result};
 use cook::config::StrategyKind;
@@ -80,7 +83,7 @@ fn print_usage() {
          \n\
          commands:\n\
          \x20 run <bench-isol-strategy> [--seed N]      simulate one configuration\n\
-         \x20 experiment <fig9|fig10|fig11|table1|table2|fleet|load|isolation|all> [--seed N] [--out DIR]\n\
+         \x20 experiment <fig9|fig10|fig11|table1|table2|fleet|load|isolation|autoscale|all> [--seed N] [--out DIR]\n\
          \x20 chronogram <bench-isol-strategy> [--seed N] [--rows N]\n\
          \x20 hookgen --strategy <s> [--out DIR]        generate the hook library\n\
          \x20 symbols [--unknown]                       list libcudart exported symbols\n\
@@ -88,6 +91,7 @@ fn print_usage() {
          \x20 serve [--strategy s] [--payload p[,p]] [--clients N] [--requests N]\n\
          \x20       [--batch N] [--sweep] [--synthetic]\n\
          \x20       [--shards N] [--placement rr|least-loaded|affinity] [--shard-sweep N[,N]]\n\
+         \x20       [--autoscale MIN..MAX]\n\
          \x20       [--arrivals closed|poisson:R|bursty:R@ON/OFF|ramp:A-B]\n\
          \x20       [--queue-cap N] [--shed block|reject|timeout:MS] [--slo-ms X]\n\
          \x20       [--load-sweep R[,R...]] [--exact-quantiles]\n\
@@ -114,7 +118,11 @@ fn print_usage() {
          \x20        --concurrency picks what may hold the device at once:\n\
          \x20        cook = exclusive FIFO gate (default, the paper), mps:<q> =\n\
          \x20        q concurrent holders, mig:<s> = s per-class partitions,\n\
-         \x20        streams = unbounded admission, class-priority device)\n\
+         \x20        streams = unbounded admission, class-priority device;\n\
+         \x20        --autoscale MIN..MAX runs the elastic fleet controller:\n\
+         \x20        needs open-loop --arrivals, hot-adds shards under pressure\n\
+         \x20        up to MAX slots, retires quiet ones drain-first down to MIN,\n\
+         \x20        and reports every scale event)\n\
          \n\
          global options:\n\
          \x20 --sim-threads N   thread cap for the shard-parallel fleet engine\n\
@@ -198,6 +206,7 @@ fn cmd_experiment(rest: &[String]) -> Result<()> {
             "table2" => figures::loc_table().0,
             "fleet" => figures::shard_scaling_figure(seed).0,
             "load" => figures::saturation_figure(seed).0,
+            "autoscale" => figures::autoscale_figure(seed).0,
             "isolation" => match concurrency {
                 Some(mode) => figures::isolation_figure_for(seed, &[mode]).0,
                 None => figures::isolation_figure(seed).0,
@@ -211,7 +220,10 @@ fn cmd_experiment(rest: &[String]) -> Result<()> {
         Ok(())
     };
     if which == "all" {
-        for name in ["fig9", "fig10", "fig11", "table1", "table2", "fleet", "load", "isolation"] {
+        for name in [
+            "fig9", "fig10", "fig11", "table1", "table2", "fleet", "load", "isolation",
+            "autoscale",
+        ] {
             run_one(name, &mut emitted)?;
         }
     } else {
@@ -335,6 +347,12 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .unwrap_or("rr")
         .parse()
         .map_err(|e: String| anyhow!(e))?;
+    // Elastic fleet (ISSUE 10): controller bounds. The shard slot pool
+    // is the upper bound; `--shards` may pin it explicitly, otherwise it
+    // follows MAX.
+    let autoscale: Option<cook::control::elastic::AutoscaleSpec> = flag(rest, "--autoscale")
+        .map(|s| s.parse().map_err(|e: String| anyhow!(e)))
+        .transpose()?;
     let shard_sweep: Option<Vec<usize>> = match flag(rest, "--shard-sweep") {
         Some(list) => Some(
             list.split(',')
@@ -472,6 +490,9 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         if load_sweep_rates.is_some() {
             bail!("--sweep and --load-sweep are separate axes; pick one");
         }
+        if autoscale.is_some() {
+            bail!("--sweep runs fixed single-shard fleets; drop --autoscale");
+        }
         let (text, _) = serve_sweep(&base, backend.as_ref())?;
         print!("{text}");
         return Ok(());
@@ -482,6 +503,22 @@ fn cmd_serve(rest: &[String]) -> Result<()> {
         .map_err(|e: String| anyhow!(e))?;
     let mut spec = base;
     spec.strategy = strategy;
+    if let Some(auto) = autoscale {
+        if load_sweep_rates.is_some() || shard_sweep.is_some() {
+            bail!("--autoscale is its own fleet axis; drop --load-sweep/--shard-sweep");
+        }
+        // Slot pool defaults to the controller's upper bound; an explicit
+        // --shards must match it (FleetSpec::validate says why).
+        let slots = if flag(rest, "--shards").is_some() { shards } else { auto.max };
+        println!(
+            "strategy {strategy}: elastic fleet {auto} over {slots} shard slots \
+             (SLO-driven scale-up, drain-then-retire scale-down, work stealing)"
+        );
+        let fleet = FleetSpec::new(spec, slots, placement).with_autoscale(auto);
+        let report = serve_fleet(&fleet, backend.as_ref())?;
+        println!("{}", report.render());
+        return Ok(());
+    }
     if let Some(rates) = load_sweep_rates {
         if shards > 1 || shard_sweep.is_some() {
             bail!("--load-sweep measures one shard; drop --shards/--shard-sweep");

@@ -1,0 +1,369 @@
+//! Elastic fleet integration (ISSUE 10): the SLO-driven autoscaler, its
+//! drain-then-retire scale events, and the deterministic simulator
+//! mirror, exercised end-to-end.
+//!
+//! Pinned contracts:
+//! * the conservation law `offered == completed + shed + timed_out +
+//!   failed` holds through every scale event, with faults injected and
+//!   at every worker/sim thread count;
+//! * the sim mirror (`SimConfig::autoscale`) is **bit-identical** across
+//!   `COOK_SIM_THREADS ∈ {1, 2, 4, 8}`, including the `ScaleDue` log;
+//! * a pinned controller (`min == max == num_gpus`) is bit-identical to
+//!   no controller at all, so fixed fleets cannot drift;
+//! * a shard that boot-crashes while being hot-added degrades that
+//!   shard, not the fleet (satellite: scale-event chaos regression).
+
+use cook::config::{SimConfig, StrategyKind};
+use cook::control::fault::{FaultPlan, FaultyBackend, RetryPolicy};
+use cook::control::fleet::{serve_fleet, FleetSpec, Placement};
+use cook::control::serving::{ServeSpec, SyntheticBackend};
+use cook::control::traffic::{ArrivalProcess, ShedPolicy, TrafficSpec};
+use cook::gpu::Sim;
+use cook::util::AppId;
+use std::process::Command;
+use std::sync::Arc;
+
+fn cli() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_cook"))
+}
+
+// ---------------------------------------------------------------------
+// stable hashing (FNV-1a 64, same scheme as the fleet_parallel suite,
+// extended with the autoscale observables)
+// ---------------------------------------------------------------------
+
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Self {
+        Fnv(0xcbf29ce484222325)
+    }
+    fn bytes(&mut self, b: &[u8]) {
+        for &x in b {
+            self.0 ^= x as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+    fn usize(&mut self, v: usize) {
+        self.u64(v as u64);
+    }
+    fn bool(&mut self, v: bool) {
+        self.bytes(&[v as u8]);
+    }
+}
+
+/// Hash every observable of a finished run, *including* the autoscale
+/// timeline and the per-shard `ScaleDue` log, so a scale-event ordering
+/// bug cannot hide behind an unchanged kernel trace.
+fn full_hash(sim: &Sim, num_gpus: usize) -> u64 {
+    let mut h = Fnv::new();
+    let t = &sim.trace;
+    h.usize(t.ops.len());
+    for r in &t.ops {
+        h.u64(r.op.0);
+        h.usize(r.app.0);
+        h.bytes(t.sym_name(r.sym).as_bytes());
+        h.bool(r.is_kernel);
+        h.u64(r.enqueued_at);
+        h.u64(r.started_at);
+        h.u64(r.completed_at);
+    }
+    h.usize(t.switches.len());
+    for s in &t.switches {
+        h.u64(s.at);
+        h.usize(s.to.0);
+    }
+    h.usize(t.stalls.len());
+    for s in &t.stalls {
+        h.u64(s.op.0);
+        h.u64(s.at);
+        h.u64(s.duration_ns);
+    }
+    for a in 0..sim.apps.len() {
+        let app = AppId(a);
+        let comps = sim.completions(app);
+        h.usize(comps.len());
+        for &c in comps {
+            h.u64(c);
+        }
+        let lat = sim.arrival_latencies(app);
+        h.usize(lat.len());
+        for &l in lat {
+            h.u64(l);
+        }
+        let (offered, shed) = sim.arrival_counts(app);
+        h.usize(offered);
+        h.usize(shed);
+    }
+    for &(ts, a) in sim.scale_timeline() {
+        h.u64(ts);
+        h.usize(a);
+    }
+    for shard in 0..num_gpus {
+        let log = sim.scale_log(shard);
+        h.usize(log.len());
+        for &(ts, a) in log {
+            h.u64(ts);
+            h.usize(a);
+        }
+    }
+    h.bool(sim.horizon_reached());
+    h.0
+}
+
+fn elastic_sim_cfg(autoscale: Option<&str>, seed: u64) -> SimConfig {
+    let mut cfg = SimConfig::default()
+        .with_strategy(StrategyKind::Worker)
+        .with_seed(seed)
+        .with_num_gpus(4)
+        .with_arrivals(ArrivalProcess::Bursty { rate_hz: 3_000.0, on_ms: 20, off_ms: 20 })
+        .with_arrival_queue_cap(8);
+    cfg.horizon_ns = 150_000_000;
+    if let Some(a) = autoscale {
+        cfg = cfg.with_autoscale(a.parse().unwrap());
+    }
+    cfg
+}
+
+fn hash_at_threads(cfg: SimConfig, apps: usize, threads: usize) -> u64 {
+    let num_gpus = cfg.num_gpus;
+    let programs = (0..apps).map(|_| cook::apps::dna::program()).collect();
+    let mut sim = Sim::new(cfg, programs);
+    sim.run_with_sim_threads(threads);
+    assert!(!sim.trace.ops.is_empty(), "degenerate run");
+    full_hash(&sim, num_gpus)
+}
+
+// ---------------------------------------------------------------------
+// sim mirror determinism
+// ---------------------------------------------------------------------
+
+#[test]
+fn autoscaled_sim_is_bit_identical_across_sim_thread_counts() {
+    let reference = hash_at_threads(elastic_sim_cfg(Some("1..4"), 5), 8, 1);
+    for threads in [2, 4, 8] {
+        let h = hash_at_threads(elastic_sim_cfg(Some("1..4"), 5), 8, threads);
+        assert_eq!(
+            h, reference,
+            "autoscaled fleet trace drifted at COOK_SIM_THREADS={threads}"
+        );
+    }
+}
+
+#[test]
+fn autoscaled_sim_plans_transitions_and_logs_them() {
+    let cfg = elastic_sim_cfg(Some("1..4"), 5);
+    let num_gpus = cfg.num_gpus;
+    let programs = (0..8).map(|_| cook::apps::dna::program()).collect();
+    let mut sim = Sim::new(cfg, programs);
+    sim.run();
+    let timeline = sim.scale_timeline();
+    assert_eq!(timeline.len(), cook::gpu::SCALE_WINDOWS);
+    assert!(
+        timeline.iter().all(|&(_, a)| (1..=4).contains(&a)),
+        "active counts out of bounds: {timeline:?}"
+    );
+    // Bursty on/off demand must actually move the mirrored controller.
+    let transitions = timeline.windows(2).filter(|w| w[0].1 != w[1].1).count();
+    assert!(transitions > 0, "20ms bursts never moved the plan: {timeline:?}");
+    // Every planned transition was delivered as a ScaleDue event on the
+    // shards it touches (the log replays the timeline's change points).
+    let logged: usize = (0..num_gpus).map(|s| sim.scale_log(s).len()).sum();
+    let touched: usize = timeline
+        .windows(2)
+        .filter(|w| w[0].1 != w[1].1)
+        .map(|w| w[0].1.abs_diff(w[1].1))
+        .sum();
+    assert_eq!(logged, touched, "ScaleDue delivery diverged from the plan");
+}
+
+#[test]
+fn pinned_autoscale_is_bit_identical_to_no_autoscale() {
+    // min == max == num_gpus: the timeline is constant, no ScaleDue
+    // fires, and arrival dealing degenerates to the historical
+    // round-robin — so the trace must match `autoscale = None` exactly.
+    // This is the fixed-fleet no-drift guard in executable form.
+    let fixed = hash_at_threads(elastic_sim_cfg(None, 9), 8, 2);
+    let pinned = hash_at_threads(elastic_sim_cfg(Some("4..4"), 9), 8, 2);
+    // The hashes differ only in the timeline section, which is present
+    // for the pinned run; compare the underlying observables instead.
+    let cfg_a = elastic_sim_cfg(None, 9);
+    let cfg_b = elastic_sim_cfg(Some("4..4"), 9);
+    let programs = |n: usize| (0..n).map(|_| cook::apps::dna::program()).collect::<Vec<_>>();
+    let (mut sa, mut sb) = (Sim::new(cfg_a, programs(8)), Sim::new(cfg_b, programs(8)));
+    sa.run_with_sim_threads(2);
+    sb.run_with_sim_threads(2);
+    assert_eq!(sa.trace.ops.len(), sb.trace.ops.len());
+    for (ra, rb) in sa.trace.ops.iter().zip(sb.trace.ops.iter()) {
+        assert_eq!(
+            (ra.op.0, ra.app.0, ra.started_at, ra.completed_at),
+            (rb.op.0, rb.app.0, rb.started_at, rb.completed_at),
+            "pinned autoscale perturbed the kernel trace"
+        );
+    }
+    for a in 0..8 {
+        assert_eq!(sa.completions(AppId(a)), sb.completions(AppId(a)));
+        assert_eq!(sa.arrival_latencies(AppId(a)), sb.arrival_latencies(AppId(a)));
+        assert_eq!(sa.arrival_counts(AppId(a)), sb.arrival_counts(AppId(a)));
+    }
+    assert!(sb.scale_log(0).is_empty(), "constant timeline must not fire ScaleDue");
+    // And both runs must individually be thread-count stable.
+    assert_eq!(fixed, hash_at_threads(elastic_sim_cfg(None, 9), 8, 8));
+    assert_eq!(pinned, hash_at_threads(elastic_sim_cfg(Some("4..4"), 9), 8, 8));
+}
+
+// ---------------------------------------------------------------------
+// live elastic fleet: conservation under chaos + scale events
+// ---------------------------------------------------------------------
+
+fn bursty_spec(seed: u64) -> ServeSpec {
+    ServeSpec::new(StrategyKind::Worker, "dna")
+        .with_clients(6)
+        .with_requests(30)
+        .with_traffic(TrafficSpec {
+            arrivals: ArrivalProcess::Bursty { rate_hz: 8_000.0, on_ms: 4, off_ms: 4 },
+            queue_cap: 8,
+            shed: ShedPolicy::Block,
+            slo_ms: 1_000.0,
+            seed,
+        })
+}
+
+fn chaos_backend(spec: &str, seed: u64) -> FaultyBackend<SyntheticBackend> {
+    let plan = Arc::new(FaultPlan::new(spec.parse().unwrap(), seed));
+    FaultyBackend::new(SyntheticBackend::new(200), plan)
+}
+
+/// The tentpole law, under the nastiest combination the PR adds: bursty
+/// arrivals, a background error rate with retries, and runtime scale
+/// events — every offered request must still be accounted for.
+fn chaos_elastic_ledger(seed: u64) -> (usize, bool) {
+    let base = bursty_spec(seed)
+        .with_retry(RetryPolicy { budget: 2, base_ms: 0.1, cap_ms: 1.0, seed });
+    let fleet = FleetSpec::new(base, 3, Placement::RoundRobin)
+        .with_autoscale("1..3".parse().unwrap());
+    let backend = chaos_backend("error:p=0.05", seed);
+    let r = serve_fleet(&fleet, &backend).unwrap();
+    let t = r.traffic.as_ref().expect("open-loop fleet must report traffic");
+    assert!(
+        t.accounted(),
+        "conservation through scale events: offered {} completed {} shed {} \
+         timed_out {} failed {}",
+        t.offered,
+        t.completed,
+        t.shed,
+        t.timed_out,
+        t.failed
+    );
+    let e = r.elastic.as_ref().expect("autoscaled run must report scale events");
+    assert_eq!((e.min, e.max, e.started), (1, 3, 1));
+    assert!(e.peak_active <= 3 && e.final_active >= 1);
+    assert_eq!(e.scale_ups as i64 - e.retires as i64, e.final_active as i64 - 1);
+    let f = r.fault.as_ref().expect("faulted run must carry a FaultReport");
+    assert!(f.injected.errors > 0, "5% of 180+ attempts must error");
+    (t.offered, t.accounted())
+}
+
+#[test]
+fn chaos_elastic_fleet_conserves_at_every_thread_count() {
+    // COOK_THREADS / COOK_SIM_THREADS are throughput knobs everywhere in
+    // the codebase; scale events must not make elastic the exception.
+    // (Scale timing is wall-clock, so event *counts* may differ across
+    // settings — the ledger law and the offered total may not.)
+    std::env::set_var("COOK_THREADS", "1");
+    std::env::set_var("COOK_SIM_THREADS", "1");
+    let (offered_a, ok_a) = chaos_elastic_ledger(13);
+    std::env::set_var("COOK_THREADS", "4");
+    std::env::set_var("COOK_SIM_THREADS", "4");
+    let (offered_b, ok_b) = chaos_elastic_ledger(13);
+    std::env::remove_var("COOK_THREADS");
+    std::env::remove_var("COOK_SIM_THREADS");
+    assert!(ok_a && ok_b);
+    assert_eq!(offered_a, 180, "offered total is spec-determined");
+    assert_eq!(offered_a, offered_b, "offered load drifted across thread counts");
+}
+
+#[test]
+fn boot_crash_during_scale_up_degrades_the_shard_not_the_fleet() {
+    // Satellite regression: overload forces a hot-add of shard 1, whose
+    // boot-crash clause fires exactly as it would at t0. The fleet must
+    // keep serving through shard 0, record the crash on shard 1, and
+    // close the ledger. 20k req/s against ~5k/s of capacity keeps the
+    // queue pinned at its cap, so the first controller tick scales up.
+    let base = ServeSpec::new(StrategyKind::Worker, "dna")
+        .with_clients(4)
+        .with_requests(25)
+        .with_traffic(TrafficSpec {
+            arrivals: ArrivalProcess::Poisson { rate_hz: 20_000.0 },
+            queue_cap: 8,
+            shed: ShedPolicy::Block,
+            slo_ms: 1_000.0,
+            seed: 21,
+        });
+    let fleet = FleetSpec::new(base, 2, Placement::RoundRobin)
+        .with_autoscale("1..2".parse().unwrap());
+    let backend = chaos_backend("crash:shard=1", 21);
+    let r = serve_fleet(&fleet, &backend).unwrap();
+
+    let t = r.traffic.as_ref().unwrap();
+    assert_eq!(t.offered, 100);
+    assert!(t.accounted(), "conservation with a crashed hot-add: {t:?}");
+
+    let e = r.elastic.as_ref().unwrap();
+    assert!(e.scale_ups >= 1, "overload must force a hot-add: {e:?}");
+    let f = r.fault.as_ref().unwrap();
+    assert_eq!(f.injected.crashes, 1, "shard 1 boot-crashes exactly once");
+
+    // Shard 0 stayed clean; the crash is pinned to the hot-added shard.
+    assert!(r.shards[0].error.is_none(), "{:?}", r.shards[0].error);
+    let msg = r.shards[1].error.as_ref().expect("hot-add boot crash must be recorded");
+    assert!(msg.contains("boot crash"), "{msg}");
+    assert!(e.final_active >= 1, "the last healthy shard must never retire");
+}
+
+// ---------------------------------------------------------------------
+// CLI smoke (mirrors the CI autoscale step)
+// ---------------------------------------------------------------------
+
+#[test]
+fn cli_autoscale_smoke_reports_scale_events() {
+    let out = cli()
+        .args([
+            "serve", "--synthetic", "--autoscale", "1..3", "--arrivals", "poisson:6000",
+            "--clients", "3", "--requests", "30", "--queue-cap", "8",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("elastic fleet 1..3"), "{text}");
+    // The report names both transition kinds even when an event count is
+    // zero — this is what the CI grep pins.
+    assert!(text.contains("scale-up"), "{text}");
+    assert!(text.contains("drain-then-retire"), "{text}");
+}
+
+#[test]
+fn cli_rejects_inverted_autoscale_and_closed_loop() {
+    let out = cli().args(["serve", "--synthetic", "--autoscale", "4..1"]).output().unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("min"), "{err}");
+
+    let out = cli().args(["serve", "--synthetic", "--autoscale", "1..2"]).output().unwrap();
+    assert!(!out.status.success(), "closed-loop autoscale must be rejected");
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("open-loop"), "{err}");
+}
+
+#[test]
+fn cli_experiment_autoscale_renders_the_window_table() {
+    let out = cli().args(["experiment", "autoscale"]).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("Elastic autoscale"), "{text}");
+    assert!(text.contains("shards"), "{text}");
+}
